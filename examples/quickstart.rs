@@ -1,0 +1,86 @@
+//! Quickstart: the whole stack in ~60 seconds.
+//!
+//! 1. runs the paper's 3-D parallel matmul (Algorithm 1) on a 2×2×2 cube
+//!    and checks it against the dense product;
+//! 2. trains a tiny transformer for 20 steps under 3-D parallelism and
+//!    prints the falling loss;
+//! 3. if `artifacts/` exists (`make artifacts`), executes an AOT-compiled
+//!    JAX+Pallas program through the PJRT runtime from Rust and checks it
+//!    against the native kernel.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cubic::comm::NetModel;
+use cubic::config::{CubicConfig, ModelConfig, TrainConfig};
+use cubic::dist::{Dirs, Layout3D};
+use cubic::engine::run_training;
+use cubic::parallel::threed::{mm_nn, Ctx3D};
+use cubic::rng::Xoshiro256;
+use cubic::spmd::run_spmd;
+use cubic::tensor::Tensor;
+use cubic::topology::{Cube, Parallelism};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. Algorithm 1 on a 2×2×2 cube ------------------------------
+    println!("== 3-D parallel matmul (paper Algorithm 1) on 8 ranks ==");
+    let p = 2;
+    let cube = Cube::new(p);
+    let dirs = Dirs::canonical();
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let a = Tensor::randn(&[64, 128], 1.0, &mut rng);
+    let b = Tensor::randn(&[128, 64], 1.0, &mut rng);
+    let c_ref = a.matmul(&b);
+    let a_shards = Layout3D::input(dirs).scatter(&cube, &a);
+    let b_shards = Layout3D::weight(dirs).scatter(&cube, &b);
+    let out = run_spmd(8, NetModel::longhorn_v100(), move |rank, ep| {
+        let ctx = Ctx3D::new(Cube::new(p), rank);
+        mm_nn(ep, &ctx, &a_shards[rank], &b_shards[rank], dirs)
+    });
+    let c = Layout3D::output(dirs).gather(&cube, &out, 64, 64);
+    println!("   max |dist - dense| = {:.2e}", c.max_abs_diff(&c_ref));
+    assert!(c.max_abs_diff(&c_ref) < 1e-3);
+
+    // --- 2. Train a tiny model with 3-D parallelism ------------------
+    println!("\n== tiny transformer, 3-D parallel training (8 ranks) ==");
+    let cfg = CubicConfig {
+        model: ModelConfig::tiny(),
+        train: TrainConfig { steps: 20, lr: 2e-3, warmup: 4, ..Default::default() },
+        parallelism: Parallelism::ThreeD,
+        edge: 2,
+        artifacts_dir: String::new(),
+    };
+    let report = run_training(&cfg, NetModel::longhorn_v100())?;
+    println!(
+        "   loss: {:.3} -> {:.3} over {} steps ({:.2} virtual ms/step)",
+        report.losses[0],
+        report.losses.last().unwrap(),
+        report.losses.len(),
+        1e3 * report.avg_step_virtual
+    );
+    assert!(report.losses.last().unwrap() < &report.losses[0]);
+
+    // --- 3. Execute an AOT artifact through PJRT ----------------------
+    println!("\n== PJRT: run an AOT-compiled JAX+Pallas kernel from Rust ==");
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        let rt = cubic::runtime::Runtime::load(dir)?;
+        let name = rt
+            .manifest
+            .names()
+            .into_iter()
+            .find(|n| n.starts_with("mm_nn_"))
+            .expect("bundle has matmul artifacts");
+        let e = rt.manifest.get(&name).unwrap().clone();
+        let x = Tensor::randn(&e.in_shapes[0], 1.0, &mut rng);
+        let y = Tensor::randn(&e.in_shapes[1], 1.0, &mut rng);
+        let got = rt.handle().execute(&name, &[x.clone(), y.clone()])?;
+        let diff = got.max_abs_diff(&x.matmul(&y));
+        println!("   {name}: PJRT vs native max diff = {diff:.2e}");
+        assert!(diff < 1e-3);
+    } else {
+        println!("   (artifacts/ not built — run `make artifacts` to enable this step)");
+    }
+
+    println!("\nquickstart OK");
+    Ok(())
+}

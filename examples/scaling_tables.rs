@@ -1,0 +1,21 @@
+//! Regenerate BOTH of the paper's evaluation tables in one run (the same
+//! code paths as `cargo bench --bench table1_weak_scaling` / `table2_...`,
+//! packaged as an example for the impatient).
+//!
+//! Run: `cargo run --release --example scaling_tables`
+
+use cubic::bench::{render, run_rows, strong_scaling_speedups, table1_rows, table2_rows};
+use cubic::comm::NetModel;
+
+fn main() {
+    let net = NetModel::longhorn_v100();
+    eprintln!("running Table 1 rows (weak scaling) on the virtual cluster...");
+    let t1 = run_rows(&table1_rows(), &net);
+    println!("{}\n", render("Paper Table 1 — weak scaling", &t1));
+
+    eprintln!("running Table 2 rows (strong scaling)...");
+    let t2 = run_rows(&table2_rows(), &net);
+    println!("{}", render("Paper Table 2 — strong scaling", &t2));
+    let (s1, s2) = strong_scaling_speedups(&t2);
+    println!("\n3-D speedup at 64 GPUs: {s1:.2}x vs 1-D (paper 2.32x), {s2:.2}x vs 2-D (paper 1.57x)");
+}

@@ -1,0 +1,178 @@
+"""AOT bridge: lower the L2 JAX programs to HLO *text* artifacts for the
+Rust PJRT runtime.
+
+Run once at build time (``make artifacts``); Python never runs at train
+time. Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``artifacts/``:
+
+* ``<entry>.hlo.txt``  — one per shape-specialized program
+* ``manifest.tsv``     — ``name  path  in_shapes  out_shape`` rows, parsed
+  by ``cubic::runtime::Manifest``
+
+Entry set = the shard primitives at every shape the distributed schedules
+of the configured model touch, plus the fused ``block_seq`` transformer
+block for the Seq reference path. Shapes are derived from the same model
+configs the Rust side uses (keep `CONFIGS` in sync with `cubic::config`).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as l2
+
+# Keep in sync with cubic::config::ModelConfig presets (rust/src/config).
+CONFIGS = {
+    # name: (batch, seq, hidden, heads, ffn, cube edge p)
+    "tiny": (4, 16, 64, 4, 256, 2),
+    "charlm": (8, 32, 128, 4, 512, 2),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _fmt_shape(s) -> str:
+    return "x".join(str(d) for d in s.shape)
+
+
+def matmul_entries(batch, seq, hidden, heads, ffn, p):
+    """Every (form, m, k, n) the 3-D schedule (fwd+bwd) and the Seq path
+    touch for this config. m×k · k×n etc.; see parallel/threed.rs."""
+    rows = batch * seq
+    rp, hp, fp = rows // p, hidden // p, ffn // p
+    shapes = set()
+    # 3-D forward local products (Algorithm 1): gathered (·/p) blocks.
+    for (m, k, n) in [
+        (rp, hp, 3 * hp),   # qkv
+        (rp, hp, hp),       # attn out proj
+        (rp, hp, fp),       # fc1
+        (rp, fp, hp),       # fc2
+    ]:
+        shapes.add(("nn", m, k, n))
+        # Backward (Algorithm 2): dA = dC·Bᵀ (NT), dB = Aᵀ·dC (TN).
+        shapes.add(("nt", m, n, k))
+        shapes.add(("tn", k, m, n))
+    # Seq reference path: full-size products.
+    for (m, k, n) in [
+        (rows, hidden, 3 * hidden),
+        (rows, hidden, hidden),
+        (rows, hidden, ffn),
+        (rows, ffn, hidden),
+    ]:
+        shapes.add(("nn", m, k, n))
+        shapes.add(("nt", m, n, k))
+        shapes.add(("tn", k, m, n))
+    return sorted(shapes)
+
+
+def build_entries(cfg_name):
+    """Yield (entry_name, jitted_fn, example_args)."""
+    batch, seq, hidden, heads, ffn, p = CONFIGS[cfg_name]
+    rows = batch * seq
+
+    for (form, m, k, n) in matmul_entries(batch, seq, hidden, heads, ffn, p):
+        fn = {
+            "nn": l2.shard_matmul_nn,
+            "nt": l2.shard_matmul_nt,
+            "tn": l2.shard_matmul_tn,
+        }[form]
+        if form == "nn":
+            args = (_spec(m, k), _spec(k, n))
+        elif form == "nt":
+            args = (_spec(m, k), _spec(n, k))
+        else:  # tn: (k, m)ᵀ · (k, n)
+            args = (_spec(k, m), _spec(k, n))
+        yield f"mm_{form}_{m}x{k}x{n}", jax.jit(fn), args
+
+    # Fused epilogues at the 3-D shard shape (input layout rows R/p²).
+    shard_rows = rows // (p * p)
+    yield (
+        f"bias_gelu_{shard_rows}x{ffn // p}",
+        jax.jit(l2.shard_bias_gelu),
+        (_spec(shard_rows, ffn // p), _spec(ffn // p)),
+    )
+    yield (
+        f"bias_gelu_{rows}x{ffn}",
+        jax.jit(l2.shard_bias_gelu),
+        (_spec(rows, ffn), _spec(ffn)),
+    )
+    yield (
+        f"layernorm_{rows}x{hidden}",
+        jax.jit(l2.shard_layernorm),
+        (_spec(rows, hidden), _spec(hidden), _spec(hidden)),
+    )
+    # Fused whole-block forward for the Seq reference path.
+    import functools
+
+    block = functools.partial(l2.transformer_block, n_heads=heads, seq=seq)
+    params = [
+        _spec(hidden), _spec(hidden),
+        _spec(hidden, 3 * hidden), _spec(3 * hidden),
+        _spec(hidden, hidden), _spec(hidden),
+        _spec(hidden), _spec(hidden),
+        _spec(hidden, ffn), _spec(ffn),
+        _spec(ffn, hidden), _spec(hidden),
+    ]
+    yield (
+        f"block_seq_{rows}x{hidden}",
+        jax.jit(block),
+        (_spec(rows, hidden), *params),
+    )
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--configs", default="tiny,charlm",
+        help="comma-separated subset of: " + ",".join(CONFIGS),
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_rows = []
+    seen = set()
+    for cfg in args.configs.split(","):
+        for name, fn, example in build_entries(cfg):
+            if name in seen:
+                continue
+            seen.add(name)
+            lowered = fn.lower(*example)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            in_shapes = ",".join(_fmt_shape(s) for s in example)
+            out_shape = _fmt_shape(jax.eval_shape(fn, *example))
+            manifest_rows.append(f"{name}\t{fname}\t{in_shapes}\t{out_shape}")
+            print(f"  {name}: {len(text)} chars")
+
+    manifest = os.path.join(args.out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_rows) + "\n")
+    print(f"wrote {len(manifest_rows)} artifacts + {manifest}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

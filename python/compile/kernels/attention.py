@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused causal attention for one head.
+
+The paper's implementation computes attention with separate batched GEMMs
+and a masked softmax (PyTorch). The TPU adaptation fuses the whole
+`softmax(QKᵀ/√d + causal_mask)·V` for a sequence tile into one kernel so
+the (seq, seq) score matrix lives only in VMEM — the flash-attention-style
+restructuring of the same math (DESIGN.md §Hardware-Adaptation).
+
+Grid: one program instance per (sequence) — each instance holds Q, K, V
+tiles of a full head and materializes scores only as a VMEM temporary.
+``interpret=True`` as everywhere (see matmul.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[...]  # (s, d)
+    k = k_ref[...]
+    v = v_ref[...]
+    s = q.shape[0]
+    scores = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale  # (s, s)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(cols <= rows, scores, -1e9)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("seq",))
+def causal_attention(q, k, v, seq: int):
+    """Fused causal attention over stacked sequences.
+
+    q, k, v: (n_seqs·seq, head_dim) — row blocks of `seq` rows are
+    independent sequences (exactly the layout the Rust coordinator feeds).
+    Returns the same shape.
+    """
+    total, d = q.shape
+    assert total % seq == 0, f"rows {total} not a multiple of seq {seq}"
+    n_seqs = total // seq
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(n_seqs,),
+        in_specs=[
+            pl.BlockSpec((seq, d), lambda i: (i, 0)),
+            pl.BlockSpec((seq, d), lambda i: (i, 0)),
+            pl.BlockSpec((seq, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((seq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((total, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)

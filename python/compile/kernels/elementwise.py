@@ -1,0 +1,123 @@
+"""L1 Pallas kernels: fused elementwise / row-wise ops.
+
+These kernels fuse what the paper's PyTorch implementation ran as separate
+CUDA kernels (bias add, GeLU, layernorm statistics, softmax) into single
+VMEM-resident passes — the TPU analogue of kernel fusion: one HBM read and
+one HBM write per activation tile (DESIGN.md §Hardware-Adaptation).
+
+All row-tiled: the grid walks blocks of rows; each program instance holds a
+(block_rows, cols) tile in VMEM and does the full row-wise computation
+locally, so row reductions (layernorm mean/var, softmax max/sum) never leave
+the tile. ``interpret=True`` throughout (see matmul.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def _row_block(rows: int, pref: int = 256) -> int:
+    b = min(rows, pref)
+    while rows % b != 0:
+        b -= 1
+    return b
+
+
+def _gelu(x):
+    x3 = x * x * x
+    return 0.5 * x * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (x + 0.044715 * x3)))
+
+
+def _bias_gelu_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = _gelu(x_ref[...] + b_ref[...])
+
+
+@jax.jit
+def bias_gelu(x, b):
+    """gelu(x + b) — the fused epilogue of the MLP's first linear layer."""
+    m, n = x.shape
+    bm = _row_block(m)
+    return pl.pallas_call(
+        _bias_gelu_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, b.reshape(1, -1))
+
+
+def _gelu_kernel(x_ref, o_ref):
+    o_ref[...] = _gelu(x_ref[...])
+
+
+@jax.jit
+def gelu(x):
+    """Standalone tanh-GeLU tile kernel."""
+    m, n = x.shape
+    bm = _row_block(m)
+    return pl.pallas_call(
+        _gelu_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = xhat * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """Fused row layernorm + affine: stats, normalize, scale, shift in one
+    VMEM pass."""
+    m, n = x.shape
+    bm = _row_block(m)
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, gamma.reshape(1, -1), beta.reshape(1, -1))
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@jax.jit
+def softmax(x):
+    """Row softmax with the max/sum reductions kept inside the tile."""
+    m, n = x.shape
+    bm = _row_block(m)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x)

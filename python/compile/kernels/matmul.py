@@ -1,0 +1,145 @@
+"""L1 Pallas kernel: blocked matrix multiplication (NN / NT / TN forms).
+
+This is the per-device compute hot-spot of the whole system — the role
+cuBLAS GEMM plays on the paper's V100s. The TPU adaptation (DESIGN.md
+§Hardware-Adaptation): tile the output into MXU-shaped blocks held in VMEM,
+loop the contraction dimension through the grid so each (bm, bk)·(bk, bn)
+partial product streams HBM→VMEM exactly once, and accumulate in f32 in the
+VMEM-resident output block.
+
+Always lowered with ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO which runs on
+any backend. On a real TPU the identical kernel source compiles to an MXU
+pipeline; the perf estimate for that path lives in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= pref (MXU-aligned when possible)."""
+    b = min(dim, pref)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, bm: int = 128, bn: int = 128, bk: int = 128):
+    """C = X @ Y with a (bm, bn) output block resident in VMEM and the K
+    dimension innermost in the grid (sequential accumulation)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _mm_nt_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        # contract x dim 1 with y dim 1  (C = X · Yᵀ)
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_nt(x, y, bm: int = 128, bn: int = 128, bk: int = 128):
+    """C = X @ Yᵀ for X:(m,k), Y:(n,k) — both operands stream row-major."""
+    m, k = x.shape
+    n, k2 = y.shape
+    assert k == k2
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_nt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _mm_tn_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        y_ref[...],
+        # contract x dim 0 with y dim 0  (C = Xᵀ · Y)
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_tn(x, y, bm: int = 128, bn: int = 128, bk: int = 128):
+    """C = Xᵀ @ Y for X:(k,m), Y:(k,n)."""
+    k, m = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_tn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step: X block + Y block + f32 accumulator.
+
+    Used by the §Perf analysis to confirm the default 128³ tiling fits the
+    16 MiB/core VMEM budget with double-buffering headroom.
+    """
+    return dtype_bytes * (bm * bk + bk * bn) + 4 * bm * bn

@@ -1,0 +1,95 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth the L1 kernels are pytest-checked against
+(``python/tests/test_kernels.py``) and the semantics the Rust tensor library
+mirrors. Nothing here is ever lowered into an artifact — reference only.
+"""
+
+import jax.numpy as jnp
+
+SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def matmul(x, y):
+    """C = X @ Y in f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def matmul_nt(x, y):
+    """C = X @ Y.T."""
+    return jnp.matmul(x, y.T, preferred_element_type=jnp.float32)
+
+
+def matmul_tn(x, y):
+    """C = X.T @ Y."""
+    return jnp.matmul(x.T, y, preferred_element_type=jnp.float32)
+
+
+def gelu(x):
+    """Tanh-approximation GeLU (BERT/Megatron variant) — matches
+    `cubic::ops::gelu` bit-for-bit in f32 up to transcendental rounding."""
+    x3 = x * x * x
+    return 0.5 * x * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (x + 0.044715 * x3)))
+
+
+def bias_gelu(x, b):
+    """gelu(x + b) with a broadcast row-vector bias."""
+    return gelu(x + b[None, :])
+
+
+def linear(x, w, b):
+    """x @ w + b."""
+    return matmul(x, w) + b[None, :]
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """Row-wise layernorm over the last dim with affine params."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    xhat = (x - mean) / jnp.sqrt(var + eps)
+    return xhat * gamma[None, :] + beta[None, :]
+
+
+def softmax(x):
+    """Numerically-stable row softmax."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def causal_attention(q, k, v):
+    """Single-head causal attention over one sequence.
+
+    q, k, v: (seq, head_dim). Returns (seq, head_dim).
+    """
+    s, d = q.shape
+    scores = matmul_nt(q, k) / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e9)
+    return matmul(softmax(scores), v)
+
+
+def transformer_block(x, params, n_heads, eps=1e-5):
+    """Single-device reference transformer block (pre-LN, causal).
+
+    x: (seq, hidden). ``params`` is the dict produced by
+    `compile.model.init_block_params`.
+    """
+    s, h = x.shape
+    hd = h // n_heads
+
+    ln1 = layernorm(x, params["ln1_g"], params["ln1_b"], eps)
+    qkv = linear(ln1, params["w_qkv"], params["b_qkv"])  # (s, 3h)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    heads = []
+    for i in range(n_heads):
+        sl = slice(i * hd, (i + 1) * hd)
+        heads.append(causal_attention(q[:, sl], k[:, sl], v[:, sl]))
+    attn = jnp.concatenate(heads, axis=-1)  # (s, h)
+    x = x + linear(attn, params["w_proj"], params["b_proj"])
+
+    ln2 = layernorm(x, params["ln2_g"], params["ln2_b"], eps)
+    hmid = bias_gelu(matmul(ln2, params["w_fc1"]), params["b_fc1"])
+    x = x + linear(hmid, params["w_fc2"], params["b_fc2"])
+    return x

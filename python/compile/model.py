@@ -1,0 +1,113 @@
+"""L2: JAX per-shard compute graphs, composed from the L1 Pallas kernels.
+
+These are the programs the Rust coordinator executes through PJRT at train
+time. They come in two flavours:
+
+* **Shard primitives** — the local compute between collectives of the
+  1-D/2-D/3-D schedules (`matmul` forms, fused `bias_gelu`, `layernorm`,
+  fused `causal_attention`). The coordinator stitches these together with
+  its own collectives, exactly as the paper stitches cuBLAS GEMMs with NCCL.
+* **`transformer_block`** — a whole fused single-shard transformer block
+  (pre-LN, causal), used by the Seq reference path and the quickstart
+  example, and as the parity check between the Rust model and the JAX model.
+
+Everything is shape-specialized at AOT time by `compile.aot`; nothing here
+runs at train time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import attention, elementwise, matmul
+
+
+def init_block_params(key, hidden: int, ffn: int):
+    """Initialize one transformer block's parameters (for tests/AOT example
+    inputs). Returns a dict of jnp arrays; layout matches the Rust model."""
+    import jax
+
+    ks = jax.random.split(key, 4)
+    std = 0.02
+    return {
+        "ln1_g": jnp.ones((hidden,), jnp.float32),
+        "ln1_b": jnp.zeros((hidden,), jnp.float32),
+        "w_qkv": std * jax.random.normal(ks[0], (hidden, 3 * hidden), jnp.float32),
+        "b_qkv": jnp.zeros((3 * hidden,), jnp.float32),
+        "w_proj": std * jax.random.normal(ks[1], (hidden, hidden), jnp.float32),
+        "b_proj": jnp.zeros((hidden,), jnp.float32),
+        "ln2_g": jnp.ones((hidden,), jnp.float32),
+        "ln2_b": jnp.zeros((hidden,), jnp.float32),
+        "w_fc1": std * jax.random.normal(ks[2], (hidden, ffn), jnp.float32),
+        "b_fc1": jnp.zeros((ffn,), jnp.float32),
+        "w_fc2": std * jax.random.normal(ks[3], (ffn, hidden), jnp.float32),
+        "b_fc2": jnp.zeros((hidden,), jnp.float32),
+    }
+
+
+PARAM_ORDER = (
+    "ln1_g", "ln1_b", "w_qkv", "b_qkv", "w_proj", "b_proj",
+    "ln2_g", "ln2_b", "w_fc1", "b_fc1", "w_fc2", "b_fc2",
+)
+
+
+def transformer_block(x, *flat_params, n_heads: int, seq: int, eps: float = 1e-5):
+    """Fused single-shard transformer block forward (pre-LN, causal).
+
+    x: (n_seqs·seq, hidden) — stacked sequences, the Rust engine's row
+    layout. ``flat_params`` follow ``PARAM_ORDER`` (positional so the
+    exported HLO has a stable parameter signature for the Rust runtime).
+    """
+    p = dict(zip(PARAM_ORDER, flat_params))
+    rows, h = x.shape
+    hd = h // n_heads
+
+    ln1 = elementwise.layernorm(x, p["ln1_g"], p["ln1_b"], eps=eps)
+    qkv = matmul.matmul(ln1, p["w_qkv"]) + p["b_qkv"][None, :]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    heads = []
+    for i in range(n_heads):
+        sl = slice(i * hd, (i + 1) * hd)
+        heads.append(attention.causal_attention(q[:, sl], k[:, sl], v[:, sl], seq))
+    attn = jnp.concatenate(heads, axis=-1)
+
+    x = x + matmul.matmul(attn, p["w_proj"]) + p["b_proj"][None, :]
+
+    ln2 = elementwise.layernorm(x, p["ln2_g"], p["ln2_b"], eps=eps)
+    hmid = elementwise.bias_gelu(matmul.matmul(ln2, p["w_fc1"]), p["b_fc1"])
+    x = x + matmul.matmul(hmid, p["w_fc2"]) + p["b_fc2"][None, :]
+    return x
+
+
+# ---------------------------------------------------------------------
+# Shard primitives — the exact local steps of the distributed schedules.
+# Thin wrappers so aot.py can enumerate them by name.
+# ---------------------------------------------------------------------
+
+def shard_matmul_nn(a, b):
+    """Local step 3 of Algorithm 1 (and SUMMA's inner product)."""
+    return matmul.matmul(a, b)
+
+
+def shard_matmul_nt(a, b):
+    """Local product of Algorithms 2/3 (`Ċ·Bᵀ`, `A·Bᵀ`)."""
+    return matmul.matmul_nt(a, b)
+
+
+def shard_matmul_tn(a, b):
+    """Local product of Algorithms 2/5 (`Aᵀ·Ċ`, `Aᵀ·B`)."""
+    return matmul.matmul_tn(a, b)
+
+
+def shard_bias_gelu(x, b):
+    """Fused MLP epilogue on the activation shard."""
+    return elementwise.bias_gelu(x, b)
+
+
+def shard_layernorm(x, g, b):
+    """Local layernorm on a shard that holds complete rows (Seq/1-D)."""
+    return elementwise.layernorm(x, g, b)
+
+
+def shard_attention(q, k, v, *, seq: int):
+    """Fused per-head causal attention on local sequences."""
+    return attention.causal_attention(q, k, v, seq)

@@ -1,0 +1,148 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and block sizes for the matmuls) so the kernels
+are exercised across ragged/odd dimensions, not just the MXU-friendly ones.
+This is the core correctness signal for the compile path — if these pass,
+the HLO artifacts the Rust runtime executes compute the right numbers.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, elementwise, matmul, ref
+
+DIMS = st.integers(min_value=1, max_value=96)
+SMALL_DIMS = st.integers(min_value=1, max_value=32)
+
+
+def randn(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def assert_close(got, want, atol=1e-4, rtol=1e-4):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=atol, rtol=rtol)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31))
+    def test_nn_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = randn(rng, m, k), randn(rng, k, n)
+        assert_close(matmul.matmul(x, y), ref.matmul(x, y), atol=1e-3, rtol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31))
+    def test_nt_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = randn(rng, m, k), randn(rng, n, k)
+        assert_close(matmul.matmul_nt(x, y), ref.matmul_nt(x, y), atol=1e-3, rtol=1e-3)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31))
+    def test_tn_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, y = randn(rng, k, m), randn(rng, k, n)
+        assert_close(matmul.matmul_tn(x, y), ref.matmul_tn(x, y), atol=1e-3, rtol=1e-3)
+
+    @pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (128, 128, 128)])
+    def test_block_size_invariance(self, bm, bn, bk):
+        """Result must not depend on the VMEM tiling."""
+        rng = np.random.default_rng(7)
+        x, y = randn(rng, 64, 48), randn(rng, 48, 32)
+        want = ref.matmul(x, y)
+        assert_close(matmul.matmul(x, y, bm=bm, bn=bn, bk=bk), want, atol=1e-3)
+
+    def test_identity(self):
+        x = jnp.eye(16, dtype=jnp.float32)
+        y = jnp.arange(16 * 8, dtype=jnp.float32).reshape(16, 8)
+        assert_close(matmul.matmul(x, y), y)
+
+    def test_vmem_budget_of_default_tiling(self):
+        """Default 128³ tiles must fit the 16 MiB/core VMEM with
+        double-buffering headroom (DESIGN.md §Perf)."""
+        per_step = matmul.vmem_bytes(128, 128, 128)
+        assert 2 * per_step < 16 * 1024 * 1024
+
+
+class TestElementwise:
+    @settings(max_examples=20, deadline=None)
+    @given(m=DIMS, n=DIMS, seed=st.integers(0, 2**31))
+    def test_gelu(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        x = randn(rng, m, n)
+        assert_close(elementwise.gelu(x), ref.gelu(x), atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=DIMS, n=DIMS, seed=st.integers(0, 2**31))
+    def test_bias_gelu(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        x, b = randn(rng, m, n), randn(rng, n)
+        assert_close(elementwise.bias_gelu(x, b), ref.bias_gelu(x, b), atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=DIMS, n=st.integers(2, 96), seed=st.integers(0, 2**31))
+    def test_layernorm(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        x, g, b = randn(rng, m, n), randn(rng, n), randn(rng, n)
+        assert_close(
+            elementwise.layernorm(x, g, b), ref.layernorm(x, g, b), atol=1e-4, rtol=1e-3
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(m=DIMS, n=DIMS, seed=st.integers(0, 2**31))
+    def test_softmax(self, m, n, seed):
+        rng = np.random.default_rng(seed)
+        x = randn(rng, m, n)
+        got = elementwise.softmax(x)
+        assert_close(got, ref.softmax(x), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(got).sum(axis=-1), 1.0, atol=1e-5)
+
+    def test_layernorm_rows_are_normalized(self):
+        rng = np.random.default_rng(3)
+        x = randn(rng, 8, 64)
+        y = np.asarray(
+            elementwise.layernorm(x, jnp.ones(64), jnp.zeros(64))
+        )
+        np.testing.assert_allclose(y.mean(axis=-1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(y.std(axis=-1), 1.0, atol=1e-2)
+
+
+class TestAttention:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seq=st.sampled_from([1, 2, 4, 8, 16]),
+        d=SMALL_DIMS,
+        nseq=st.integers(1, 3),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref_per_sequence(self, seq, d, nseq, seed):
+        rng = np.random.default_rng(seed)
+        q = randn(rng, nseq * seq, d)
+        k = randn(rng, nseq * seq, d)
+        v = randn(rng, nseq * seq, d)
+        got = attention.causal_attention(q, k, v, seq)
+        for i in range(nseq):
+            sl = slice(i * seq, (i + 1) * seq)
+            want = ref.causal_attention(q[sl], k[sl], v[sl])
+            assert_close(got[sl], want, atol=1e-4, rtol=1e-3)
+
+    def test_causality(self):
+        """Changing future tokens must not affect earlier outputs."""
+        rng = np.random.default_rng(11)
+        seq, d = 8, 4
+        q, k, v = randn(rng, seq, d), randn(rng, seq, d), randn(rng, seq, d)
+        base = np.asarray(attention.causal_attention(q, k, v, seq))
+        k2 = k.at[-1].set(99.0)
+        v2 = v.at[-1].set(-99.0)
+        pert = np.asarray(attention.causal_attention(q, k2, v2, seq))
+        np.testing.assert_allclose(base[:-1], pert[:-1], atol=1e-5)
+
+    def test_first_token_attends_only_to_itself(self):
+        rng = np.random.default_rng(12)
+        seq, d = 4, 8
+        q, k, v = randn(rng, seq, d), randn(rng, seq, d), randn(rng, seq, d)
+        out = np.asarray(attention.causal_attention(q, k, v, seq))
+        np.testing.assert_allclose(out[0], np.asarray(v)[0], atol=1e-5)

@@ -1,0 +1,78 @@
+"""L2 correctness: the kernel-composed transformer block vs the pure-jnp
+reference, plus shape checks on the shard primitives."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as l2
+from compile.kernels import ref
+
+
+def test_transformer_block_matches_ref():
+    key = jax.random.PRNGKey(0)
+    hidden, ffn, heads, seq, nseq = 32, 64, 4, 8, 2
+    params = l2.init_block_params(key, hidden, ffn)
+    x = jax.random.normal(jax.random.PRNGKey(1), (nseq * seq, hidden), jnp.float32)
+
+    flat = [params[k] for k in l2.PARAM_ORDER]
+    got = l2.transformer_block(x, *flat, n_heads=heads, seq=seq)
+
+    # Reference treats each sequence independently.
+    want = jnp.concatenate(
+        [
+            ref.transformer_block(x[i * seq:(i + 1) * seq], params, heads)
+            for i in range(nseq)
+        ],
+        axis=0,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=1e-3)
+
+
+def test_block_is_jittable_and_shape_stable():
+    key = jax.random.PRNGKey(2)
+    hidden, ffn, heads, seq = 16, 32, 2, 4
+    params = l2.init_block_params(key, hidden, ffn)
+    flat = [params[k] for k in l2.PARAM_ORDER]
+    block = jax.jit(functools.partial(l2.transformer_block, n_heads=heads, seq=seq))
+    x = jnp.zeros((seq, hidden), jnp.float32)
+    y = block(x, *flat)
+    assert y.shape == x.shape
+    assert y.dtype == jnp.float32
+
+
+def test_shard_primitives_shapes():
+    a = jnp.zeros((8, 16), jnp.float32)
+    b = jnp.zeros((16, 4), jnp.float32)
+    assert l2.shard_matmul_nn(a, b).shape == (8, 4)
+    assert l2.shard_matmul_nt(a, jnp.zeros((4, 16))).shape == (8, 4)
+    assert l2.shard_matmul_tn(jnp.zeros((16, 8)), b).shape == (8, 4)
+    assert l2.shard_bias_gelu(a, jnp.zeros(16)).shape == (8, 16)
+    assert l2.shard_layernorm(a, jnp.ones(16), jnp.zeros(16)).shape == (8, 16)
+    q = jnp.zeros((8, 4), jnp.float32)
+    assert l2.shard_attention(q, q, q, seq=4).shape == (8, 4)
+
+
+def test_grad_through_ref_block_is_finite():
+    """Gradients flow through the reference block (the math the Rust
+    hand-written backward mirrors) and are finite and non-trivial.
+
+    Note: the Pallas kernels themselves are forward-only (interpret-mode
+    pallas_call has no VJP); the backward pass is owned by the Rust
+    coordinator, which is verified against dense numerics in rust tests."""
+    key = jax.random.PRNGKey(3)
+    hidden, ffn, heads, seq = 16, 32, 2, 4
+    params = l2.init_block_params(key, hidden, ffn)
+    x = jax.random.normal(jax.random.PRNGKey(4), (seq, hidden), jnp.float32)
+
+    def loss(x, params):
+        return jnp.sum(ref.transformer_block(x, params, heads) ** 2)
+
+    gx = jax.grad(loss)(x, params)
+    gp = jax.grad(lambda p: loss(x, p))(params)
+    assert bool(jnp.all(jnp.isfinite(gx)))
+    assert float(jnp.max(jnp.abs(gx))) > 0.0
+    for name, g in gp.items():
+        assert bool(jnp.all(jnp.isfinite(g))), name

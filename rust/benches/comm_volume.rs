@@ -1,0 +1,48 @@
+//! Ablation bench for the paper's §3.1.2 bandwidth/latency claims: per-rank
+//! communication volume of one transformer layer (fwd+bwd) under each
+//! parallelism as P grows — measured from the engine's traffic ledger, not
+//! computed from formulas (the formulas are unit-tested against the ledger
+//! in `costmodel`).
+//!
+//! Expected shape: 1-D volume is ~flat in P (all-reduces of full
+//! activations); 2-D shrinks ~1/q; 3-D shrinks ~1/p² = O(P^{-2/3}).
+//!
+//! Run: `cargo bench --bench comm_volume`
+
+use cubic::comm::NetModel;
+use cubic::config::ModelConfig;
+use cubic::engine::time_core_step;
+use cubic::metrics::{fmt_bytes, Table};
+use cubic::topology::Parallelism;
+
+fn main() {
+    let mut t = Table::new(&[
+        "Approach", "# GPUs", "bytes/rank (fwd+bwd)", "inter-node share", "latency (msgs/rank)",
+    ]);
+    let cfg = ModelConfig { layers: 1, ..ModelConfig::paper(4096, 16) };
+    let cases = [
+        (Parallelism::OneD, 8usize),
+        (Parallelism::OneD, 64),
+        (Parallelism::TwoD, 3), // 9 GPUs
+        (Parallelism::TwoD, 8), // 64
+        (Parallelism::ThreeD, 2), // 8
+        (Parallelism::ThreeD, 4), // 64
+    ];
+    for (par, edge) in cases {
+        let world = par.world_size(edge);
+        let timing = time_core_step(&cfg, par, edge, NetModel::longhorn_v100()).unwrap();
+        let per_rank = timing.metrics.total_bytes / world as u64;
+        let inter = timing.metrics.inter_node_bytes as f64
+            / timing.metrics.total_bytes.max(1) as f64;
+        t.row(&[
+            par.name().to_string(),
+            world.to_string(),
+            fmt_bytes(per_rank),
+            format!("{:.0}%", 100.0 * inter),
+            (timing.metrics.messages / world as u64).to_string(),
+        ]);
+    }
+    println!("## §3.1.2 — per-rank communication volume, one layer fwd+bwd\n");
+    println!("{}", t.to_markdown());
+    println!("\nPaper claims: 3-D bandwidth O(P^-2/3), latency O(log p); 1-D volume flat in P.");
+}

@@ -1,0 +1,96 @@
+//! Host-side performance microbenches (§Perf of EXPERIMENTS.md): wall-clock
+//! throughput of the hot paths — the blocked matmul kernels, the collective
+//! engine, and the phantom-mode scheduling overhead that bounds how fast
+//! the table benches can sweep configurations.
+//!
+//! Run: `cargo bench --bench microbench`
+
+use cubic::collectives::all_reduce;
+use cubic::comm::NetModel;
+use cubic::metrics::Stopwatch;
+use cubic::rng::Xoshiro256;
+use cubic::spmd::run_spmd;
+use cubic::tensor::{matmul_flops, Tensor};
+
+fn bench_matmul(label: &str, m: usize, k: usize, n: usize, iters: usize) {
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+    // Warm-up.
+    let mut sink = a.matmul(&b).at2(0, 0);
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        sink += a.matmul(&b).at2(0, 0);
+    }
+    let secs = sw.seconds();
+    let gflops = (iters as f64 * 2.0 * m as f64 * k as f64 * n as f64) / secs / 1e9;
+    println!("matmul_nn {label}: {gflops:.2} GF/s  ({:.3} ms/iter, sink {sink:.1})", 1e3 * secs / iters as f64);
+}
+
+fn bench_matmul_nt(m: usize, k: usize, n: usize, iters: usize) {
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let b = Tensor::randn(&[n, k], 1.0, &mut rng);
+    let mut sink = 0.0;
+    let sw = Stopwatch::start();
+    for _ in 0..iters {
+        sink += a.matmul_nt(&b).at2(0, 0);
+    }
+    let secs = sw.seconds();
+    let gflops = (iters as f64 * 2.0 * m as f64 * k as f64 * n as f64) / secs / 1e9;
+    println!("matmul_nt {m}x{k}x{n}: {gflops:.2} GF/s (sink {sink:.1})");
+}
+
+fn bench_collectives(world: usize, elems: usize, iters: usize) {
+    let sw = Stopwatch::start();
+    let its = iters;
+    run_spmd(world, NetModel::zero(), move |rank, ep| {
+        let group: Vec<usize> = (0..world).collect();
+        let t = Tensor::full(&[elems], rank as f32);
+        for _ in 0..its {
+            let _ = all_reduce(ep, &group, &t);
+        }
+    });
+    let secs = sw.seconds();
+    let gb = (iters * world * elems * 4) as f64 / 1e9;
+    println!(
+        "all_reduce world={world} n={elems}: {:.3} ms/op, {:.2} GB/s aggregate",
+        1e3 * secs / iters as f64,
+        gb / secs
+    );
+}
+
+fn bench_phantom_overhead() {
+    // Per-op cost of the phantom scheduling path: 8-rank 3-D matmul.
+    use cubic::dist::Dirs;
+    use cubic::parallel::threed::{mm_nn, Ctx3D};
+    use cubic::topology::Cube;
+    let iters = 200usize;
+    let sw = Stopwatch::start();
+    run_spmd(8, NetModel::longhorn_v100(), move |rank, ep| {
+        let ctx = Ctx3D::new(Cube::new(2), rank);
+        let a = Tensor::phantom(&[1024, 2048]);
+        let b = Tensor::phantom(&[2048, 1024]);
+        for _ in 0..iters {
+            let _ = mm_nn(ep, &ctx, &a, &b, Dirs::canonical());
+        }
+    });
+    let secs = sw.seconds();
+    println!(
+        "phantom mm_nn (8 ranks): {:.1} µs/op/rank",
+        1e6 * secs / iters as f64
+    );
+}
+
+fn main() {
+    println!("## Host microbenchmarks (wall-clock)\n");
+    cubic::tensor::reset_flop_counter();
+    bench_matmul("256x256x256", 256, 256, 256, 20);
+    bench_matmul("512x512x512", 512, 512, 512, 4);
+    bench_matmul("128x1024x128", 128, 1024, 128, 20);
+    bench_matmul_nt(256, 256, 256, 20);
+    bench_collectives(4, 1 << 16, 50);
+    bench_collectives(8, 1 << 16, 50);
+    bench_phantom_overhead();
+    let _ = matmul_flops();
+}

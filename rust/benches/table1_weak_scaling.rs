@@ -1,0 +1,33 @@
+//! Regenerates **paper Table 1** (weak scaling): fwd/bwd/avg-step time for
+//! 1-D @ {8,16,36,64}, 2-D @ {16,36,64} and 3-D @ {8,64} GPUs, with the
+//! per-approach batch/hidden growth the paper uses (seq 512).
+//!
+//! Run: `cargo bench --bench table1_weak_scaling`
+//! Output: markdown table with measured vs paper columns + the weak-scaling
+//! growth factors (the paper's claim: 3-D's avg step time rises slowest).
+
+use cubic::bench::{render, run_rows, table1_rows, RowResult};
+use cubic::comm::NetModel;
+use cubic::topology::Parallelism;
+
+fn main() {
+    let net = NetModel::longhorn_v100();
+    let rows = table1_rows();
+    eprintln!("table1: timing {} rows on the virtual cluster...", rows.len());
+    let results = run_rows(&rows, &net);
+    println!("{}", render("Table 1 — weak scaling (measured vs paper)", &results));
+
+    println!("\n### Weak-scaling growth (avg step time, smallest -> largest GPU count)\n");
+    for par in [Parallelism::OneD, Parallelism::TwoD, Parallelism::ThreeD] {
+        let rs: Vec<&RowResult> = results.iter().filter(|r| r.spec.approach == par).collect();
+        let growth = rs.last().unwrap().avg_step() / rs[0].avg_step();
+        let paper_growth = rs.last().unwrap().spec.paper_avg / rs[0].spec.paper_avg;
+        println!(
+            "- {:3}: x{:.2} measured (paper x{:.2})",
+            par.name(),
+            growth,
+            paper_growth
+        );
+    }
+    println!("\nPaper claim: 3-D has the slowest rising average step time.");
+}

@@ -1,0 +1,22 @@
+//! Regenerates **paper Table 2** (strong scaling): fixed problem size
+//! (hidden 3072, seq 512), 8 → 64 GPUs; headline claim: 3-D beats 1-D by
+//! 2.32× and 2-D by 1.57× in average step time at 64 GPUs.
+//!
+//! Run: `cargo bench --bench table2_strong_scaling`
+
+use cubic::bench::{render, run_rows, strong_scaling_speedups, table2_rows};
+use cubic::comm::NetModel;
+
+fn main() {
+    let net = NetModel::longhorn_v100();
+    let rows = table2_rows();
+    eprintln!("table2: timing {} rows on the virtual cluster...", rows.len());
+    let results = run_rows(&rows, &net);
+    println!("{}", render("Table 2 — strong scaling (measured vs paper)", &results));
+
+    let (s1, s2) = strong_scaling_speedups(&results);
+    println!("\n### Headline speedups at 64 GPUs (avg step time)\n");
+    println!("- 3-D vs 1-D: {s1:.2}x measured (paper 2.32x = 0.550/0.237·…; raw 0.550/0.359 = 1.53x)");
+    println!("- 3-D vs 2-D: {s2:.2}x measured (paper 1.57x; raw 0.497/0.359 = 1.38x)");
+    println!("\nShape criteria: 3-D fastest at 64 GPUs; 2-D scales down with P while 1-D plateaus.");
+}

@@ -1,0 +1,203 @@
+//! Benchmark library: the paper's Tables 1–2 row specifications and the
+//! shared runner used by both `cargo bench` targets and the `cubic bench-*`
+//! CLI subcommands.
+//!
+//! Every row runs [`crate::engine::time_core_step`] — one forward+backward
+//! of the Transformer core in phantom mode on the virtual-clock cluster
+//! calibrated to the paper's testbed ([`NetModel::longhorn_v100`]) — and
+//! prints measured values next to the paper's, so shape fidelity (who wins,
+//! by what factor, where the crossovers sit) is visible at a glance.
+//!
+//! Absolute numbers are *not* expected to match the paper: the authors
+//! timed an unspecified stack of layers for an unspecified iteration count
+//! on real V100s; we time `LAYERS` layers once on an α-β model. Ratios
+//! within each table are the reproduction target (EXPERIMENTS.md).
+
+use crate::comm::NetModel;
+use crate::config::ModelConfig;
+use crate::engine::{time_core_step, CoreTiming};
+use crate::metrics::{fmt_s, Table};
+use crate::topology::Parallelism;
+
+/// Layer count used by all table rows ("the consecutive Transformer
+/// layers"); ratios are invariant to this choice.
+pub const LAYERS: usize = 4;
+
+/// One table row: the paper's configuration and its reported numbers.
+#[derive(Clone, Debug)]
+pub struct RowSpec {
+    pub approach: Parallelism,
+    pub gpus: usize,
+    pub edge: usize,
+    pub batch: usize,
+    pub hidden: usize,
+    pub paper_fwd: f64,
+    pub paper_bwd: f64,
+    pub paper_avg: f64,
+}
+
+impl RowSpec {
+    pub fn model(&self) -> ModelConfig {
+        ModelConfig {
+            layers: LAYERS,
+            ..ModelConfig::paper(self.hidden, self.batch)
+        }
+    }
+}
+
+/// Paper Table 1 (weak scaling): per-approach batch/hidden grow with GPUs.
+pub fn table1_rows() -> Vec<RowSpec> {
+    use Parallelism::*;
+    let r = |approach, gpus, edge, batch, hidden, pf, pb, pa| RowSpec {
+        approach, gpus, edge, batch, hidden,
+        paper_fwd: pf, paper_bwd: pb, paper_avg: pa,
+    };
+    vec![
+        r(OneD, 8, 8, 60, 2048, 4.759, 15.676, 0.341),
+        r(OneD, 16, 16, 60, 4096, 12.488, 30.894, 0.723),
+        r(OneD, 36, 36, 40, 6120, 13.515, 31.822, 1.133),
+        r(OneD, 64, 64, 30, 8192, 13.915, 32.890, 1.560),
+        r(TwoD, 16, 4, 192, 4096, 33.860, 101.981, 0.708),
+        r(TwoD, 36, 6, 288, 6120, 54.760, 165.850, 0.766),
+        r(TwoD, 64, 8, 384, 8192, 99.419, 304.707, 1.052),
+        r(ThreeD, 8, 2, 192, 2048, 30.096, 81.212, 0.580),
+        r(ThreeD, 64, 4, 384, 8192, 79.349, 125.037, 0.672),
+    ]
+}
+
+/// Paper Table 2 (strong scaling): fixed problem (hidden 3072), 8→64 GPUs.
+pub fn table2_rows() -> Vec<RowSpec> {
+    use Parallelism::*;
+    let r = |approach, gpus, edge, batch, pf, pb, pa| RowSpec {
+        approach, gpus, edge, batch, hidden: 3072,
+        paper_fwd: pf, paper_bwd: pb, paper_avg: pa,
+    };
+    vec![
+        r(OneD, 8, 8, 12, 1.470, 5.699, 0.597),
+        r(OneD, 16, 16, 12, 1.371, 5.152, 0.544),
+        r(OneD, 36, 36, 12, 1.455, 5.414, 0.572),
+        r(OneD, 64, 64, 12, 1.433, 5.167, 0.550),
+        r(TwoD, 16, 4, 24, 4.680, 13.698, 0.766),
+        r(TwoD, 36, 6, 24, 3.900, 11.433, 0.639),
+        r(TwoD, 64, 8, 24, 3.007, 8.920, 0.497),
+        r(ThreeD, 8, 2, 24, 3.249, 9.120, 0.515),
+        r(ThreeD, 64, 4, 24, 2.494, 6.129, 0.359),
+    ]
+}
+
+/// Measured results for one row.
+#[derive(Clone, Debug)]
+pub struct RowResult {
+    pub spec: RowSpec,
+    pub timing: CoreTiming,
+}
+
+impl RowResult {
+    pub fn avg_step(&self) -> f64 {
+        self.timing.avg_step_time(self.spec.batch)
+    }
+}
+
+/// Run every row of a table on the calibrated network model.
+pub fn run_rows(rows: &[RowSpec], net: &NetModel) -> Vec<RowResult> {
+    rows.iter()
+        .map(|spec| {
+            let timing = time_core_step(&spec.model(), spec.approach, spec.edge, net.clone())
+                .expect("timing run failed");
+            RowResult { spec: spec.clone(), timing }
+        })
+        .collect()
+}
+
+/// Render results as a paper-style markdown table with the paper's numbers
+/// alongside.
+pub fn render(title: &str, results: &[RowResult]) -> String {
+    let mut t = Table::new(&[
+        "Approach", "# GPUs", "Batch", "Hidden",
+        "Fwd (s)", "Bwd (s)", "Avg step (s)", "Paper avg (s)",
+    ]);
+    for r in results {
+        t.row(&[
+            r.spec.approach.name().to_string(),
+            r.spec.gpus.to_string(),
+            r.spec.batch.to_string(),
+            r.spec.hidden.to_string(),
+            fmt_s(r.timing.forward_s),
+            fmt_s(r.timing.backward_s),
+            format!("{:.4}", r.avg_step()),
+            format!("{:.3}", r.spec.paper_avg),
+        ]);
+    }
+    format!("## {title}\n\n{}", t.to_markdown())
+}
+
+/// The paper's headline: 3-D speedup over 1-D and 2-D at 64 GPUs in the
+/// strong-scaling table. Returns `(speedup_vs_1d, speedup_vs_2d)`.
+pub fn strong_scaling_speedups(results: &[RowResult]) -> (f64, f64) {
+    let avg = |par: Parallelism| {
+        results
+            .iter()
+            .find(|r| r.spec.approach == par && r.spec.gpus == 64)
+            .map(|r| r.avg_step())
+            .expect("missing 64-GPU row")
+    };
+    let d3 = avg(Parallelism::ThreeD);
+    (avg(Parallelism::OneD) / d3, avg(Parallelism::TwoD) / d3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_specs_match_paper_values() {
+        let t1 = table1_rows();
+        assert_eq!(t1.len(), 9);
+        assert_eq!(t1[0].paper_avg, 0.341);
+        assert_eq!(t1[8].hidden, 8192);
+        let t2 = table2_rows();
+        assert_eq!(t2.len(), 9);
+        // Paper headline: 0.550/0.359 = 2.32x? No — the paper compares
+        // 1-D's *best* 64-GPU step (0.550) vs 3-D (0.359)... actually
+        // 0.550/0.359 ≈ 1.53 and 0.497/0.359 ≈ 1.38; the 2.32X/1.57X
+        // quoted in the abstract uses different normalization (per-sample
+        // at equal batch: 1-D runs batch 12, 2/3-D batch 24). Eq. 6
+        // already divides by batch, so per-sequence: 1-D 0.550 vs 3-D
+        // 0.359·... — we simply pin the raw table values here.
+        assert_eq!(t2[3].paper_avg, 0.550);
+        assert_eq!(t2[8].paper_avg, 0.359);
+    }
+
+    #[test]
+    fn weak_scaling_3d_rises_slowest() {
+        // Cheap smoke on a scaled-down variant of Table 1 (hidden/seq
+        // reduced 4x to keep test time tiny; ratios preserved).
+        let net = NetModel::longhorn_v100();
+        let shrink = |mut r: RowSpec| {
+            r.hidden /= 4;
+            r
+        };
+        let rows: Vec<RowSpec> = table1_rows().into_iter().map(shrink).collect();
+        let results = run_rows(&rows, &net);
+        let growth = |par: Parallelism| {
+            let rs: Vec<&RowResult> =
+                results.iter().filter(|r| r.spec.approach == par).collect();
+            rs.last().unwrap().avg_step() / rs[0].avg_step()
+        };
+        let g1 = growth(Parallelism::OneD);
+        let g3 = growth(Parallelism::ThreeD);
+        assert!(
+            g3 < g1,
+            "3-D avg-step growth {g3} should be below 1-D {g1}"
+        );
+    }
+
+    #[test]
+    fn strong_scaling_3d_wins_at_64() {
+        let net = NetModel::longhorn_v100();
+        let results = run_rows(&table2_rows(), &net);
+        let (s1, s2) = strong_scaling_speedups(&results);
+        assert!(s1 > 1.0, "3-D should beat 1-D at 64 GPUs (got {s1})");
+        assert!(s2 > 1.0, "3-D should beat 2-D at 64 GPUs (got {s2})");
+    }
+}

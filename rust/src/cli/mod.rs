@@ -1,0 +1,124 @@
+//! Minimal command-line argument parser (no `clap` offline): positional
+//! subcommand + `--key value` / `--flag` options, with typed accessors and
+//! unknown-option detection.
+
+use std::collections::HashMap;
+
+/// Parsed arguments: one optional subcommand + options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.command = Some(it.next().unwrap());
+            }
+        }
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument {a:?}"));
+            };
+            if key.is_empty() {
+                return Err("empty option name".into());
+            }
+            // --key=value or --key value or bare flag
+            if let Some((k, v)) = key.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                out.options.insert(key.to_string(), it.next().unwrap());
+            } else {
+                out.flags.push(key.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.options.get(key).cloned()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Options/flags that were never queried — typo detection.
+    pub fn unknown(&self) -> Vec<String> {
+        let seen = self.consumed.borrow();
+        self.options
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--steps", "50", "--lr=0.01", "--verbose"]);
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 50);
+        assert!((a.get_f64("lr", 0.0).unwrap() - 0.01).abs() < 1e-12);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert!(a.unknown().is_empty());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["bench"]);
+        assert_eq!(a.get_usize("steps", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn unknown_options_are_reported() {
+        let a = parse(&["train", "--stepz", "50"]);
+        let _ = a.get_usize("steps", 0);
+        assert_eq!(a.unknown(), vec!["stepz".to_string()]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["x", "--steps", "abc"]);
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn positional_after_flags_rejected() {
+        assert!(Args::parse(["--a".to_string(), "--b".to_string(), "oops".to_string()].into_iter()).is_ok());
+        assert!(Args::parse(["cmd".to_string(), "stray".to_string()].into_iter()).is_err());
+    }
+}

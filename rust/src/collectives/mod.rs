@@ -1,0 +1,621 @@
+//! Collective communication over rank groups.
+//!
+//! These are *real* message-passing implementations — ring all-gather, ring
+//! reduce-scatter, binomial-tree broadcast/reduce — not analytic stand-ins.
+//! They run on the [`crate::comm`] transport, so every call both moves the
+//! actual shard data (materialized mode) and advances the virtual clocks by
+//! the α-β cost of exactly the hops the algorithm performs (both modes).
+//!
+//! Cost shapes (group size `g`, payload `n` bytes, uniform link):
+//! * ring all-gather / reduce-scatter: `(g−1)·α + (g−1)/g · n_total/β`
+//! * all-reduce (RS + AG):             `2·((g−1)·α + (g−1)/g · n/β)`
+//! * binomial broadcast / reduce:      `⌈log₂ g⌉ · (α + n/β)`
+//!
+//! The paper's Algorithms 1–8 are built from these plus local matmuls.
+//!
+//! Every function takes the *ordered* group (as produced by
+//! [`crate::topology`]) and requires `group[my_pos] == ep.rank()`. Groups of
+//! size 1 are no-ops that return immediately — important because the 3-D
+//! algorithms degenerate gracefully at `p = 1`.
+
+use crate::comm::Endpoint;
+use crate::tensor::Tensor;
+
+fn my_pos_checked(ep: &Endpoint, group: &[usize]) -> usize {
+    let pos = group
+        .iter()
+        .position(|&r| r == ep.rank())
+        .unwrap_or_else(|| panic!("rank {} is not in group {:?}", ep.rank(), group));
+    pos
+}
+
+/// Ring all-gather: every rank contributes `mine`; returns all `g`
+/// contributions in group order (position `k` of the result came from
+/// `group[k]`). Contributions may differ in shape across ranks.
+pub fn all_gather(ep: &mut Endpoint, group: &[usize], mine: &Tensor) -> Vec<Tensor> {
+    let g = group.len();
+    let pos = my_pos_checked(ep, group);
+    if g == 1 {
+        return vec![mine.clone()];
+    }
+    let tag = ep.next_collective_tag(group);
+    let next = group[(pos + 1) % g];
+    let prev = group[(pos + g - 1) % g];
+    let mut parts: Vec<Option<Tensor>> = vec![None; g];
+    parts[pos] = Some(mine.clone());
+    // At step s we forward the chunk that originated at (pos - s) mod g.
+    // Each step's duration is floored at the ring's bottleneck link (the
+    // pipelined-wavefront bound; see Endpoint::ring_worst_hop).
+    let worst = ep.ring_worst_hop(group, mine.nominal_bytes());
+    let mut outgoing = mine.clone();
+    for s in 0..g - 1 {
+        let start = ep.clock;
+        ep.send(next, (s as u64) << 48 | tag, &outgoing);
+        let incoming = ep.recv(prev, (s as u64) << 48 | tag);
+        ep.apply_step_floor(start, worst);
+        let origin = (pos + g - 1 - s) % g;
+        parts[origin] = Some(incoming.clone());
+        outgoing = incoming;
+    }
+    parts.into_iter().map(|p| p.unwrap()).collect()
+}
+
+/// Ring reduce-scatter: `contrib[k]` is this rank's addend destined for
+/// `group[k]`; returns the fully reduced chunk owned by this rank
+/// (`Σ_ranks contrib[my_pos]`). All ranks must pass shape-consistent chunks.
+pub fn reduce_scatter(ep: &mut Endpoint, group: &[usize], contrib: Vec<Tensor>) -> Tensor {
+    let g = group.len();
+    assert_eq!(contrib.len(), g, "reduce_scatter needs one chunk per group member");
+    let pos = my_pos_checked(ep, group);
+    if g == 1 {
+        return contrib.into_iter().next().unwrap();
+    }
+    let tag = ep.next_collective_tag(group);
+    let next = group[(pos + 1) % g];
+    let prev = group[(pos + g - 1) % g];
+    let chunks = contrib;
+    // Standard ring: at step s, send the partial for destination
+    // (pos − s − 1) mod g to `next`; receive the partial for
+    // (pos − s − 2) mod g from `prev` and fold in our own contribution.
+    // After g−1 steps the chunk for `pos` is complete here (derivation:
+    // the partial received at the final step has passed through every other
+    // rank exactly once).
+    let worst = ep.ring_worst_hop(group, chunks[0].nominal_bytes());
+    let mut acc: Option<Tensor> = None;
+    for s in 0..g - 1 {
+        let send_dst = (pos + g - s - 1) % g; // destination index of outgoing partial
+        let outgoing = if s == 0 {
+            chunks[send_dst].clone()
+        } else {
+            acc.take().unwrap()
+        };
+        let start = ep.clock;
+        ep.send(next, (s as u64) << 48 | tag, &outgoing);
+        let incoming = ep.recv(prev, (s as u64) << 48 | tag);
+        ep.apply_step_floor(start, worst);
+        let dst = (pos + 2 * g - s - 2) % g;
+        let mut folded = incoming;
+        folded.add_assign(&chunks[dst]);
+        // Charge the elementwise add (one pass over the chunk).
+        ep.charge_memop(folded.nominal_bytes() as f64);
+        acc = Some(folded);
+    }
+    acc.unwrap()
+}
+
+/// All-reduce = ring reduce-scatter + ring all-gather on row-chunks of the
+/// flattened tensor (chunks padded up to a multiple of `g` elements).
+pub fn all_reduce(ep: &mut Endpoint, group: &[usize], t: &Tensor) -> Tensor {
+    let g = group.len();
+    if g == 1 {
+        return t.clone();
+    }
+    let n = t.numel();
+    let chunk = n.div_ceil(g);
+    let padded = chunk * g;
+    // Split (with zero padding) into g flat chunks.
+    let contrib: Vec<Tensor> = if let Some(d) = t.try_data() {
+        (0..g)
+            .map(|k| {
+                let lo = k * chunk;
+                let hi = ((k + 1) * chunk).min(n);
+                let mut v = vec![0.0f32; chunk];
+                if lo < n {
+                    v[..hi - lo].copy_from_slice(&d[lo..hi]);
+                }
+                Tensor::from_vec(&[chunk], v)
+            })
+            .collect()
+    } else {
+        (0..g).map(|_| Tensor::phantom(&[chunk])).collect()
+    };
+    let mine = reduce_scatter(ep, group, contrib);
+    let parts = all_gather(ep, group, &mine);
+    if parts.iter().any(|p| p.is_phantom()) {
+        return Tensor::phantom(t.shape());
+    }
+    let mut flat = Vec::with_capacity(padded);
+    for p in &parts {
+        flat.extend_from_slice(p.data());
+    }
+    flat.truncate(n);
+    Tensor::from_vec(t.shape(), flat)
+}
+
+/// Binomial-tree broadcast from `group[root_pos]`. The root passes
+/// `Some(tensor)`; everyone else passes `None` and gets the tensor back.
+pub fn broadcast(
+    ep: &mut Endpoint,
+    group: &[usize],
+    root_pos: usize,
+    t: Option<Tensor>,
+) -> Tensor {
+    let g = group.len();
+    let pos = my_pos_checked(ep, group);
+    if g == 1 {
+        return t.expect("root must supply the tensor");
+    }
+    let tag = ep.next_collective_tag(group);
+    // Rotate so the root is virtual position 0.
+    let vpos = (pos + g - root_pos) % g;
+    let mut have: Option<Tensor> = if vpos == 0 {
+        Some(t.expect("root must supply the tensor"))
+    } else {
+        assert!(t.is_none(), "non-root rank must pass None to broadcast");
+        None
+    };
+    // Round r: ranks with vpos < 2^r that own the data send to vpos + 2^r.
+    let mut span = 1usize;
+    while span < g {
+        if vpos < span {
+            let peer = vpos + span;
+            if peer < g {
+                let dst = group[(peer + root_pos) % g];
+                ep.send(dst, tag, have.as_ref().unwrap());
+            }
+        } else if vpos < 2 * span && have.is_none() {
+            let peer = vpos - span;
+            let src = group[(peer + root_pos) % g];
+            have = Some(ep.recv(src, tag));
+        }
+        span *= 2;
+    }
+    have.unwrap()
+}
+
+/// Binomial-tree reduce to `group[root_pos]`: returns `Some(sum)` at the
+/// root, `None` elsewhere.
+pub fn reduce(
+    ep: &mut Endpoint,
+    group: &[usize],
+    root_pos: usize,
+    t: &Tensor,
+) -> Option<Tensor> {
+    let g = group.len();
+    let pos = my_pos_checked(ep, group);
+    if g == 1 {
+        return Some(t.clone());
+    }
+    let tag = ep.next_collective_tag(group);
+    let vpos = (pos + g - root_pos) % g;
+    let mut acc = t.clone();
+    // Bottom-up binomial tree: at round `step` the active ranks are the
+    // multiples of `step`; those at odd multiples send their partial to
+    // `vpos − step` (an even multiple, still active this round) and leave.
+    // Nobody ever sends to a rank that has already left the collective —
+    // the property that makes this safe against endpoint teardown races.
+    let mut step = 1usize;
+    while step < g {
+        if vpos % (2 * step) == step {
+            let peer = vpos - step;
+            let dst = group[(peer + root_pos) % g];
+            ep.send(dst, tag, &acc);
+            return None; // partial handed up the tree; done
+        }
+        // vpos % (2*step) == 0: receive from vpos + step if it exists.
+        let peer = vpos + step;
+        if peer < g {
+            let src = group[(peer + root_pos) % g];
+            let incoming = ep.recv(src, tag);
+            acc.add_assign(&incoming);
+            ep.charge_memop(acc.nominal_bytes() as f64);
+        }
+        step *= 2;
+    }
+    Some(acc)
+}
+
+/// Bandwidth-optimal broadcast for large payloads of a shape every rank
+/// already knows (SUMMA panels, bias chunks): scatter-then-all-gather, the
+/// NCCL large-message algorithm. Cost ≈ `2·(g−1)/g · n/β` instead of the
+/// binomial tree's `⌈log₂g⌉ · n/β`. The root's egress serialization during
+/// the scatter phase is charged to its virtual clock.
+pub fn broadcast_bw(
+    ep: &mut Endpoint,
+    group: &[usize],
+    root_pos: usize,
+    t: Option<Tensor>,
+    shape: &[usize],
+) -> Tensor {
+    let g = group.len();
+    let pos = my_pos_checked(ep, group);
+    if g == 1 {
+        return t.expect("root must supply the tensor");
+    }
+    let n: usize = shape.iter().product();
+    let chunk = n.div_ceil(g);
+    let tag = ep.next_collective_tag(group);
+    // Scatter phase: root splits into g padded chunks and sends each member
+    // its chunk (egress serialized on the root's clock).
+    let mine = if pos == root_pos {
+        let t = t.expect("root must supply the tensor");
+        assert_eq!(t.shape(), shape, "broadcast_bw shape mismatch");
+        let chunks: Vec<Tensor> = match t.try_data() {
+            Some(d) => (0..g)
+                .map(|k| {
+                    let lo = k * chunk;
+                    let hi = ((k + 1) * chunk).min(n);
+                    let mut v = vec![0.0f32; chunk];
+                    if lo < n {
+                        v[..hi - lo].copy_from_slice(&d[lo..hi]);
+                    }
+                    Tensor::from_vec(&[chunk], v)
+                })
+                .collect(),
+            None => (0..g).map(|_| Tensor::phantom(&[chunk])).collect(),
+        };
+        for (k, &dst) in group.iter().enumerate() {
+            if k != root_pos {
+                // Egress serialization: the k-th chunk leaves after k−1
+                // previous ones.
+                let cost = ep.net().hop_cost(ep.rank(), dst, chunk * 4)
+                    - ep.net().hop_cost(ep.rank(), dst, 0);
+                ep.clock += cost.max(0.0);
+                ep.send(dst, tag, &chunks[k]);
+            }
+        }
+        chunks[root_pos].clone()
+    } else {
+        assert!(t.is_none(), "non-root must pass None to broadcast_bw");
+        ep.recv(group[root_pos], tag)
+    };
+    // All-gather phase reassembles the full payload everywhere.
+    let parts = all_gather(ep, group, &mine);
+    if parts.iter().any(|p| p.is_phantom()) {
+        return Tensor::phantom(shape);
+    }
+    let mut flat = Vec::with_capacity(chunk * g);
+    for p in &parts {
+        flat.extend_from_slice(p.data());
+    }
+    flat.truncate(n);
+    Tensor::from_vec(shape, flat)
+}
+
+/// Bandwidth-optimal reduce for large payloads: ring reduce-scatter then a
+/// chunk gather to the root (cost ≈ `2·n/β` vs the tree's `log₂g·n/β`).
+pub fn reduce_bw(
+    ep: &mut Endpoint,
+    group: &[usize],
+    root_pos: usize,
+    t: &Tensor,
+) -> Option<Tensor> {
+    let g = group.len();
+    let pos = my_pos_checked(ep, group);
+    if g == 1 {
+        return Some(t.clone());
+    }
+    let n = t.numel();
+    let chunk = n.div_ceil(g);
+    let contrib: Vec<Tensor> = match t.try_data() {
+        Some(d) => (0..g)
+            .map(|k| {
+                let lo = k * chunk;
+                let hi = ((k + 1) * chunk).min(n);
+                let mut v = vec![0.0f32; chunk];
+                if lo < n {
+                    v[..hi - lo].copy_from_slice(&d[lo..hi]);
+                }
+                Tensor::from_vec(&[chunk], v)
+            })
+            .collect(),
+        None => (0..g).map(|_| Tensor::phantom(&[chunk])).collect(),
+    };
+    let mine = reduce_scatter(ep, group, contrib);
+    let parts = gather(ep, group, root_pos, &mine)?;
+    if parts.iter().any(|p| p.is_phantom()) {
+        return Some(Tensor::phantom(t.shape()));
+    }
+    let mut flat = Vec::with_capacity(chunk * g);
+    for p in &parts {
+        flat.extend_from_slice(p.data());
+    }
+    flat.truncate(n);
+    Some(Tensor::from_vec(t.shape(), flat))
+}
+
+/// Gather all contributions to `group[root_pos]` (returns `Some(parts)` in
+/// group order at the root, `None` elsewhere). Linear algorithm — gather is
+/// only used on control paths (global assembly for checkpoints/tests), never
+/// in the training step.
+pub fn gather(
+    ep: &mut Endpoint,
+    group: &[usize],
+    root_pos: usize,
+    mine: &Tensor,
+) -> Option<Vec<Tensor>> {
+    let g = group.len();
+    let pos = my_pos_checked(ep, group);
+    if g == 1 {
+        return Some(vec![mine.clone()]);
+    }
+    let tag = ep.next_collective_tag(group);
+    if pos == root_pos {
+        let mut parts: Vec<Option<Tensor>> = vec![None; g];
+        parts[pos] = Some(mine.clone());
+        for (k, &src) in group.iter().enumerate() {
+            if k != root_pos {
+                parts[k] = Some(ep.recv(src, tag));
+            }
+        }
+        Some(parts.into_iter().map(|p| p.unwrap()).collect())
+    } else {
+        ep.send(group[root_pos], tag, mine);
+        None
+    }
+}
+
+/// Scatter `parts` (present at the root only, group order) so member `k`
+/// receives `parts[k]`. Control-path counterpart of `gather`.
+pub fn scatter(
+    ep: &mut Endpoint,
+    group: &[usize],
+    root_pos: usize,
+    parts: Option<Vec<Tensor>>,
+) -> Tensor {
+    let g = group.len();
+    let pos = my_pos_checked(ep, group);
+    if g == 1 {
+        return parts.expect("root must supply parts").into_iter().next().unwrap();
+    }
+    let tag = ep.next_collective_tag(group);
+    if pos == root_pos {
+        let parts = parts.expect("root must supply parts");
+        assert_eq!(parts.len(), g);
+        for (k, &dst) in group.iter().enumerate() {
+            if k != root_pos {
+                ep.send(dst, tag, &parts[k]);
+            }
+        }
+        parts[root_pos].clone()
+    } else {
+        assert!(parts.is_none());
+        ep.recv(group[root_pos], tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+    use crate::spmd::run_spmd;
+
+    #[test]
+    fn all_gather_collects_in_group_order() {
+        let out = run_spmd(4, NetModel::zero(), |rank, ep| {
+            let mine = Tensor::from_vec(&[1], vec![rank as f32]);
+            let parts = all_gather(ep, &[0, 1, 2, 3], &mine);
+            parts.iter().map(|p| p.data()[0]).collect::<Vec<_>>()
+        });
+        for r in out {
+            assert_eq!(r, vec![0.0, 1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn all_gather_on_subgroup() {
+        let out = run_spmd(4, NetModel::zero(), |rank, ep| {
+            // Two disjoint groups {0,2} and {1,3} run concurrently.
+            let group = if rank % 2 == 0 { vec![0, 2] } else { vec![1, 3] };
+            let mine = Tensor::from_vec(&[1], vec![rank as f32 * 10.0]);
+            let parts = all_gather(ep, &group, &mine);
+            parts.iter().map(|p| p.data()[0]).collect::<Vec<_>>()
+        });
+        assert_eq!(out[0], vec![0.0, 20.0]);
+        assert_eq!(out[2], vec![0.0, 20.0]);
+        assert_eq!(out[1], vec![10.0, 30.0]);
+        assert_eq!(out[3], vec![10.0, 30.0]);
+    }
+
+    #[test]
+    fn reduce_scatter_sums_per_destination() {
+        let out = run_spmd(3, NetModel::zero(), |rank, ep| {
+            // contrib[k] = rank + k*100 — destination k should end with
+            // sum_r (r + k*100) = 3 + 300k... wait: 0+1+2 = 3.
+            let contrib = (0..3)
+                .map(|k| Tensor::from_vec(&[2], vec![(rank + k * 100) as f32; 2]))
+                .collect();
+            let got = reduce_scatter(ep, &[0, 1, 2], contrib);
+            got.data()[0]
+        });
+        assert_eq!(out[0], 3.0); // 0+1+2
+        assert_eq!(out[1], 303.0); // 100*3 + 3
+        assert_eq!(out[2], 603.0);
+    }
+
+    #[test]
+    fn all_reduce_matches_local_sum() {
+        for n in [1usize, 2, 3, 5] {
+            let out = run_spmd(n, NetModel::zero(), move |rank, ep| {
+                let group: Vec<usize> = (0..ep.world_size()).collect();
+                // numel = 7, deliberately not divisible by most group sizes.
+                let t = Tensor::from_vec(&[7], (0..7).map(|i| (rank * 7 + i) as f32).collect());
+                all_reduce(ep, &group, &t)
+            });
+            let expected: Vec<f32> = (0..7)
+                .map(|i| (0..n).map(|r| (r * 7 + i) as f32).sum())
+                .collect();
+            for r in &out {
+                assert_eq!(r.data(), &expected[..], "world size {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for root in 0..4 {
+            let out = run_spmd(4, NetModel::zero(), move |rank, ep| {
+                let t = (rank == root).then(|| Tensor::from_vec(&[3], vec![root as f32; 3]));
+                broadcast(ep, &[0, 1, 2, 3], root, t)
+            });
+            for r in out {
+                assert_eq!(r.data(), &[root as f32; 3]);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_to_root_sums() {
+        for root in 0..3 {
+            let out = run_spmd(3, NetModel::zero(), move |rank, ep| {
+                let t = Tensor::from_vec(&[2], vec![rank as f32 + 1.0; 2]);
+                reduce(ep, &[0, 1, 2], root, &t)
+            });
+            for (rank, r) in out.iter().enumerate() {
+                if rank == root {
+                    assert_eq!(r.as_ref().unwrap().data(), &[6.0, 6.0]);
+                } else {
+                    assert!(r.is_none());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_round_trip() {
+        let out = run_spmd(3, NetModel::zero(), |rank, ep| {
+            let mine = Tensor::from_vec(&[1], vec![rank as f32]);
+            let gathered = gather(ep, &[0, 1, 2], 1, &mine);
+            // Root re-scatters reversed.
+            let parts = gathered.map(|mut g| {
+                g.reverse();
+                g
+            });
+            let back = scatter(ep, &[0, 1, 2], 1, parts);
+            back.data()[0]
+        });
+        assert_eq!(out, vec![2.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn phantom_all_reduce_keeps_shape_and_charges_bytes() {
+        let out = run_spmd(4, NetModel::flat(1e-6, 1e9, f64::INFINITY), |_, ep| {
+            let group: Vec<usize> = (0..4).collect();
+            let t = Tensor::phantom(&[256, 256]);
+            let r = all_reduce(ep, &group, &t);
+            (r.is_phantom(), r.shape().to_vec(), ep.clock, ep.stats.bytes_sent)
+        });
+        for (ph, shape, clock, bytes) in out {
+            assert!(ph);
+            assert_eq!(shape, vec![256, 256]);
+            // Ring all-reduce sends 2*(g-1) chunks of n/g bytes each.
+            let n = 256 * 256 * 4u64;
+            assert_eq!(bytes, 2 * 3 * (n / 4));
+            // Virtual clock advanced: 6 hops of (alpha + chunk/beta).
+            let chunk = (n / 4) as f64;
+            let expect = 6.0 * (1e-6 + chunk / 1e9);
+            assert!((clock - expect).abs() < expect * 0.01, "clock {clock} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn clocks_converge_after_all_reduce() {
+        // Ranks start with wildly different clocks; after an all-reduce the
+        // slowest participant dominates everyone (within one ring traversal).
+        let out = run_spmd(4, NetModel::flat(1e-6, 1e12, f64::INFINITY), |rank, ep| {
+            ep.clock = rank as f64; // rank 3 is 3 virtual seconds behind
+            let t = Tensor::zeros(&[64]);
+            let _ = all_reduce(ep, &(0..4).collect::<Vec<_>>(), &t);
+            ep.clock
+        });
+        for c in out {
+            assert!(c >= 3.0, "clock {c} should be dominated by slowest rank");
+        }
+    }
+
+    #[test]
+    fn singleton_groups_are_noops() {
+        let out = run_spmd(1, NetModel::zero(), |_, ep| {
+            let t = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+            let ag = all_gather(ep, &[0], &t);
+            let rs = reduce_scatter(ep, &[0], vec![t.clone()]);
+            let ar = all_reduce(ep, &[0], &t);
+            let bc = broadcast(ep, &[0], 0, Some(t.clone()));
+            (ag.len(), rs, ar, bc, ep.stats.messages_sent)
+        });
+        let (n, rs, ar, bc, sent) = &out[0];
+        assert_eq!(*n, 1);
+        assert_eq!(rs.data(), &[1.0, 2.0]);
+        assert_eq!(ar.data(), &[1.0, 2.0]);
+        assert_eq!(bc.data(), &[1.0, 2.0]);
+        assert_eq!(*sent, 0);
+    }
+}
+
+#[cfg(test)]
+mod reduce_tree_tests {
+    use super::*;
+    use crate::comm::NetModel;
+    use crate::spmd::run_spmd;
+
+    #[test]
+    fn reduce_correct_for_all_group_sizes_and_roots() {
+        // The g >= 4 regression: the old top-down tree silently dropped
+        // contributions from ranks like vpos 3 (g=4) and stranded their
+        // messages at exited peers. Sweep sizes incl. non-powers-of-two.
+        for g in 2..=9usize {
+            for root in [0, g / 2, g - 1] {
+                let out = run_spmd(g, NetModel::zero(), move |rank, ep| {
+                    let group: Vec<usize> = (0..g).collect();
+                    let t = Tensor::from_vec(&[2], vec![(rank + 1) as f32; 2]);
+                    reduce(ep, &group, root, &t)
+                });
+                let expect = (g * (g + 1) / 2) as f32;
+                for (rank, r) in out.iter().enumerate() {
+                    if rank == root {
+                        let v = r.as_ref().expect("root must get the sum");
+                        assert_eq!(v.data(), &[expect, expect], "g={g} root={root}");
+                    } else {
+                        assert!(r.is_none(), "g={g} root={root} rank={rank}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_leaves_no_stranded_messages() {
+        // After a reduce, a barrier + fresh collective must see clean
+        // mailboxes: run many reduces back-to-back on the same group and
+        // verify each result (a stranded message would corrupt none — tags
+        // differ — but this exercises the stash hygiene end to end).
+        let g = 8usize;
+        let out = run_spmd(g, NetModel::zero(), move |rank, ep| {
+            let group: Vec<usize> = (0..g).collect();
+            let mut results = Vec::new();
+            for round in 0..20u32 {
+                let t = Tensor::from_vec(&[1], vec![(rank as u32 * 100 + round) as f32]);
+                if let Some(sum) = reduce(ep, &group, (round as usize) % g, &t) {
+                    results.push((round, sum.data()[0]));
+                }
+            }
+            results
+        });
+        for per_rank in out {
+            for (round, got) in per_rank {
+                let expect: f32 = (0..g).map(|r| (r as u32 * 100 + round) as f32).sum();
+                assert_eq!(got, expect, "round {round}");
+            }
+        }
+    }
+}

@@ -1,0 +1,485 @@
+//! In-process communication substrate (the NCCL replacement).
+//!
+//! Every "device" in `cubic` is a worker thread holding an [`Endpoint`]:
+//! an mpsc mailbox, a clone of every other rank's sender, a **virtual
+//! clock**, and a traffic ledger. Messages carry the sender's clock; a
+//! receive advances the receiver's clock to
+//! `max(own, sender_at_send + hop_cost)`, where `hop_cost = α + bytes/β`
+//! comes from the hierarchical [`NetModel`] (NVLink-class links inside a
+//! node, InfiniBand across nodes — matching the paper's TACC Longhorn
+//! testbed with 4 GPUs per node).
+//!
+//! This is how `cubic` reproduces 64-GPU timing on a 1-core host: the
+//! collective algorithms in [`crate::collectives`] are *real* message-passing
+//! implementations (ring all-gather, ring reduce-scatter, binomial-tree
+//! broadcast), and the virtual time of the full schedule emerges from clock
+//! piggybacking — the same way a discrete-event simulator would compute it,
+//! but on the actual production code path. See DESIGN.md §1 and §5.
+
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+/// Hierarchical α-β network + device compute model.
+///
+/// Defaults are calibrated to the paper's testbed (TACC Longhorn):
+/// V100 GPUs, NVLink2 inside a 4-GPU node, EDR InfiniBand (100 Gb/s)
+/// across nodes. See `costmodel::calibration` for how κ was fitted.
+#[derive(Clone, Debug)]
+pub struct NetModel {
+    /// Per-message latency within a node (s).
+    pub alpha_intra: f64,
+    /// Bandwidth within a node (bytes/s). NVLink2 ~ 150 GB/s effective.
+    pub beta_intra: f64,
+    /// Per-message latency across nodes (s).
+    pub alpha_inter: f64,
+    /// Bandwidth across nodes (bytes/s). EDR IB ~ 12.5 GB/s, de-rated.
+    pub beta_inter: f64,
+    /// Ranks packed per node (Longhorn: 4 V100 per node).
+    pub ranks_per_node: usize,
+    /// Fixed per-collective launch overhead (framework + kernel launch;
+    /// ~tens of µs for 2021 PyTorch/NCCL). Charged once per collective.
+    pub coll_overhead: f64,
+    /// Effective device matmul throughput (flop/s) = κ · peak.
+    pub flops_rate: f64,
+    /// Effective device memory bandwidth (bytes/s) for elementwise ops.
+    pub mem_bw: f64,
+}
+
+impl NetModel {
+    /// Paper-testbed calibration (V100 + NVLink2 + EDR IB).
+    pub fn longhorn_v100() -> Self {
+        NetModel {
+            alpha_intra: 6.0e-6,
+            beta_intra: 130.0e9,
+            alpha_inter: 18.0e-6,
+            beta_inter: 10.0e9,
+            ranks_per_node: 4,
+            coll_overhead: 60.0e-6,
+            // κ ≈ 0.30 of 31.4 TF/s fp32-with-tensor-core-accumulate mix the
+            // paper's PyTorch fp32 path achieves; fitted in costmodel tests.
+            flops_rate: 9.5e12,
+            mem_bw: 750.0e9,
+        }
+    }
+
+    /// A uniform (flat) network — useful for unit tests where hierarchy
+    /// effects would obscure the algebra.
+    pub fn flat(alpha: f64, beta: f64, flops_rate: f64) -> Self {
+        NetModel {
+            alpha_intra: alpha,
+            beta_intra: beta,
+            alpha_inter: alpha,
+            beta_inter: beta,
+            ranks_per_node: usize::MAX,
+            coll_overhead: 0.0,
+            flops_rate,
+            mem_bw: f64::INFINITY,
+        }
+    }
+
+    /// Zero-cost model: virtual clocks never advance. Used by correctness
+    /// tests that only care about numerics.
+    pub fn zero() -> Self {
+        Self::flat(0.0, f64::INFINITY, f64::INFINITY)
+    }
+
+    pub fn node_of(&self, rank: usize) -> usize {
+        if self.ranks_per_node == usize::MAX {
+            0
+        } else {
+            rank / self.ranks_per_node
+        }
+    }
+
+    /// Time for one point-to-point hop of `bytes` from `src` to `dst`.
+    pub fn hop_cost(&self, src: usize, dst: usize, bytes: usize) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        if self.node_of(src) == self.node_of(dst) {
+            self.alpha_intra + bytes as f64 / self.beta_intra
+        } else {
+            self.alpha_inter + bytes as f64 / self.beta_inter
+        }
+    }
+
+    /// Time to execute `flops` floating point operations on one device.
+    pub fn compute_cost(&self, flops: f64) -> f64 {
+        if self.flops_rate.is_infinite() {
+            0.0
+        } else {
+            flops / self.flops_rate
+        }
+    }
+
+    /// Time for a memory-bound elementwise pass over `bytes`.
+    pub fn memop_cost(&self, bytes: f64) -> f64 {
+        if self.mem_bw.is_infinite() {
+            0.0
+        } else {
+            bytes / self.mem_bw
+        }
+    }
+}
+
+/// A tagged message between ranks. The payload is a [`Tensor`] so phantom
+/// shards flow through the transport exactly like materialized ones (the
+/// ledger charges `nominal_bytes` either way).
+struct Message {
+    src: usize,
+    tag: u64,
+    /// Sender's virtual clock at the moment of send.
+    clock: f64,
+    payload: Tensor,
+}
+
+/// Per-endpoint traffic statistics; merged across ranks by the engine.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    pub messages_sent: u64,
+    pub bytes_sent: u64,
+    /// Bytes that crossed a node boundary (the expensive kind).
+    pub inter_node_bytes: u64,
+    /// Virtual seconds spent waiting on communication (recv-side).
+    pub comm_time: f64,
+    /// Virtual seconds spent in local compute charges.
+    pub compute_time: f64,
+}
+
+impl CommStats {
+    pub fn merge(&mut self, other: &CommStats) {
+        self.messages_sent += other.messages_sent;
+        self.bytes_sent += other.bytes_sent;
+        self.inter_node_bytes += other.inter_node_bytes;
+        self.comm_time = self.comm_time.max(other.comm_time);
+        self.compute_time = self.compute_time.max(other.compute_time);
+    }
+}
+
+/// Global monotonically increasing id so distinct [`World`]s never share
+/// tags even if a test reuses ranks.
+static WORLD_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Factory for a fully connected group of [`Endpoint`]s.
+pub struct World {
+    senders: Vec<Sender<Message>>,
+    receivers: Vec<Option<Receiver<Message>>>,
+    net: Arc<NetModel>,
+    barrier: Arc<Barrier>,
+    world_id: u64,
+}
+
+impl World {
+    pub fn new(size: usize, net: NetModel) -> Self {
+        let mut senders = Vec::with_capacity(size);
+        let mut receivers = Vec::with_capacity(size);
+        for _ in 0..size {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(Some(rx));
+        }
+        World {
+            senders,
+            receivers,
+            net: Arc::new(net),
+            barrier: Arc::new(Barrier::new(size)),
+            world_id: WORLD_ID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Take the endpoint for `rank`. Each rank may be taken exactly once;
+    /// the endpoint is then moved into its worker thread.
+    pub fn endpoint(&mut self, rank: usize) -> Endpoint {
+        let rx = self.receivers[rank]
+            .take()
+            .expect("endpoint already taken for this rank");
+        Endpoint {
+            rank,
+            rx,
+            tx: self.senders.clone(),
+            net: self.net.clone(),
+            barrier: self.barrier.clone(),
+            clock: 0.0,
+            stats: CommStats::default(),
+            stash: HashMap::new(),
+            group_seqs: HashMap::new(),
+            world_id: self.world_id,
+        }
+    }
+
+    /// Take all endpoints at once (rank order).
+    pub fn endpoints(mut self) -> Vec<Endpoint> {
+        (0..self.size()).map(|r| self.endpoint(r)).collect()
+    }
+}
+
+/// One rank's view of the world: mailbox, peers, virtual clock, ledger.
+pub struct Endpoint {
+    rank: usize,
+    rx: Receiver<Message>,
+    tx: Vec<Sender<Message>>,
+    net: Arc<NetModel>,
+    barrier: Arc<Barrier>,
+    /// Virtual time (seconds) at this rank.
+    pub clock: f64,
+    pub stats: CommStats,
+    /// Out-of-order arrivals parked until someone asks for them.
+    stash: HashMap<(usize, u64), Vec<Message>>,
+    /// Per-*group* collective sequence numbers, keyed by a hash of the
+    /// ordered group membership (see `next_collective_tag`).
+    group_seqs: HashMap<u64, u64>,
+    world_id: u64,
+}
+
+impl Endpoint {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.tx.len()
+    }
+
+    pub fn net(&self) -> &NetModel {
+        &self.net
+    }
+
+    /// Fresh tag for the next collective this rank runs on `group`.
+    ///
+    /// Tags are sequenced **per group**, not per rank: all members of a
+    /// group execute the same program order of collectives *on that group*
+    /// (SPMD), so their per-group counters — and therefore the tags — always
+    /// agree, even when other groups this rank belongs to have run a
+    /// different number of collectives (e.g. the diagonal-only
+    /// reduce-scatter of Algorithm 8). Messages from a neighbour that has
+    /// raced ahead are disambiguated by tag and stashed.
+    ///
+    /// Layout: `[group-hash:28][seq:20]` in the low 48 bits; ring/tree
+    /// algorithms may use bits 48+ for step indices.
+    pub fn next_collective_tag(&mut self, group: &[usize]) -> u64 {
+        // Per-collective launch overhead (see NetModel::coll_overhead).
+        let oh = self.net.coll_overhead;
+        if oh > 0.0 {
+            self.clock += oh;
+            self.stats.comm_time += oh;
+        }
+        // FNV-1a over the ordered membership, world id mixed in.
+        let mut h: u64 = 0xcbf29ce484222325 ^ self.world_id;
+        for &r in group {
+            h ^= r as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^= group.len() as u64;
+        h = h.wrapping_mul(0x100000001b3);
+        let key = h;
+        let seq = self.group_seqs.entry(key).or_insert(0);
+        *seq += 1;
+        ((h & 0x0FFF_FFF0_0000_0000) >> 16) | (*seq & 0xFFFFF)
+    }
+
+    /// Send `t` to `dst` with `tag`, charging the ledger. The payload clone
+    /// is cheap for phantom tensors (shape only), which is what the
+    /// paper-scale benches run.
+    pub fn send(&mut self, dst: usize, tag: u64, t: &Tensor) {
+        let bytes = t.nominal_bytes();
+        self.stats.messages_sent += 1;
+        self.stats.bytes_sent += bytes as u64;
+        if self.net.node_of(self.rank) != self.net.node_of(dst) {
+            self.stats.inter_node_bytes += bytes as u64;
+        }
+        let msg = Message {
+            src: self.rank,
+            tag,
+            clock: self.clock,
+            payload: t.clone(),
+        };
+        // A send can only fail if the peer's receiver was dropped, which
+        // means the worker panicked; propagate as a panic here too so the
+        // engine's join sees it.
+        self.tx[dst]
+            .send(msg)
+            .unwrap_or_else(|_| panic!("rank {} cannot reach rank {dst} (worker died)", self.rank));
+    }
+
+    /// Blocking receive of the message `(src, tag)`; other arrivals are
+    /// stashed. Advances the virtual clock by the α-β hop cost.
+    pub fn recv(&mut self, src: usize, tag: u64) -> Tensor {
+        let msg = loop {
+            if let Some(q) = self.stash.get_mut(&(src, tag)) {
+                if !q.is_empty() {
+                    let m = q.remove(0);
+                    if q.is_empty() {
+                        self.stash.remove(&(src, tag));
+                    }
+                    break m;
+                }
+            }
+            let m = self
+                .rx
+                .recv()
+                .expect("transport closed while waiting for message");
+            if m.src == src && m.tag == tag {
+                break m;
+            }
+            self.stash.entry((m.src, m.tag)).or_default().push(m);
+        };
+        let bytes = msg.payload.nominal_bytes();
+        let hop = self.net.hop_cost(src, self.rank, bytes);
+        let arrive = msg.clock + hop;
+        if arrive > self.clock {
+            self.stats.comm_time += arrive - self.clock;
+            self.clock = arrive;
+        }
+        msg.payload
+    }
+
+    /// Worst (slowest) link cost of one ring step over `group` for a
+    /// payload of `bytes` — the wavefront bound of a pipelined ring on a
+    /// hierarchical network (every chunk crosses every link, so sustained
+    /// ring throughput is set by the bottleneck link, exactly as in NCCL).
+    pub fn ring_worst_hop(&self, group: &[usize], bytes: usize) -> f64 {
+        let g = group.len();
+        (0..g)
+            .map(|i| self.net.hop_cost(group[i], group[(i + 1) % g], bytes))
+            .fold(0.0, f64::max)
+    }
+
+    /// Clamp the clock to at least `start + floor_cost` — used by ring
+    /// algorithms to enforce the bottleneck-link wavefront per step.
+    pub fn apply_step_floor(&mut self, start: f64, floor_cost: f64) {
+        let floor = start + floor_cost;
+        if floor > self.clock {
+            self.stats.comm_time += floor - self.clock;
+            self.clock = floor;
+        }
+    }
+
+    /// Charge local matmul/elementwise compute time to the virtual clock.
+    pub fn charge_flops(&mut self, flops: f64) {
+        let t = self.net.compute_cost(flops);
+        self.clock += t;
+        self.stats.compute_time += t;
+    }
+
+    /// Charge a memory-bound pass over `bytes` to the virtual clock.
+    pub fn charge_memop(&mut self, bytes: f64) {
+        let t = self.net.memop_cost(bytes);
+        self.clock += t;
+        self.stats.compute_time += t;
+    }
+
+    /// Real (thread) barrier across the whole world. Does not touch virtual
+    /// clocks — use a collective for that.
+    pub fn barrier_wait(&self) {
+        self.barrier.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn p2p_send_recv_carries_data_and_clock() {
+        let mut world = World::new(2, NetModel::flat(1e-6, 1e9, f64::INFINITY));
+        let mut e0 = world.endpoint(0);
+        let mut e1 = world.endpoint(1);
+        let h = thread::spawn(move || {
+            e0.clock = 5.0;
+            let t = Tensor::from_vec(&[2], vec![1.0, 2.0]);
+            e0.send(1, 7, &t);
+            e0.stats.clone()
+        });
+        let got = e1.recv(0, 7);
+        assert_eq!(got.data(), &[1.0, 2.0]);
+        // clock = sender(5.0) + alpha(1e-6) + 8 bytes / 1e9
+        assert!((e1.clock - (5.0 + 1e-6 + 8.0 / 1e9)).abs() < 1e-12);
+        let s = h.join().unwrap();
+        assert_eq!(s.messages_sent, 1);
+        assert_eq!(s.bytes_sent, 8);
+    }
+
+    #[test]
+    fn out_of_order_messages_are_stashed() {
+        let mut world = World::new(2, NetModel::zero());
+        let mut e0 = world.endpoint(0);
+        let mut e1 = world.endpoint(1);
+        let h = thread::spawn(move || {
+            e0.send(1, 100, &Tensor::from_vec(&[1], vec![1.0]));
+            e0.send(1, 101, &Tensor::from_vec(&[1], vec![2.0]));
+            e0.send(1, 102, &Tensor::from_vec(&[1], vec![3.0]));
+        });
+        // Receive in reverse order.
+        assert_eq!(e1.recv(0, 102).data(), &[3.0]);
+        assert_eq!(e1.recv(0, 101).data(), &[2.0]);
+        assert_eq!(e1.recv(0, 100).data(), &[1.0]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn inter_node_traffic_is_accounted() {
+        let mut net = NetModel::flat(0.0, 1e9, f64::INFINITY);
+        net.ranks_per_node = 2; // ranks {0,1} node 0, {2,3} node 1
+        let mut world = World::new(4, net);
+        let mut e0 = world.endpoint(0);
+        let mut e2 = world.endpoint(2);
+        let h = thread::spawn(move || {
+            e0.send(2, 1, &Tensor::zeros(&[4]));
+            e0.stats.clone()
+        });
+        let _ = e2.recv(0, 1);
+        let s = h.join().unwrap();
+        assert_eq!(s.inter_node_bytes, 16);
+    }
+
+    #[test]
+    fn hop_cost_hierarchy() {
+        let mut net = NetModel::longhorn_v100();
+        net.ranks_per_node = 4;
+        let intra = net.hop_cost(0, 1, 1 << 20);
+        let inter = net.hop_cost(0, 4, 1 << 20);
+        assert!(inter > intra * 5.0, "inter {inter} should dwarf intra {intra}");
+        assert_eq!(net.hop_cost(3, 3, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn phantom_payloads_charge_nominal_bytes() {
+        let mut world = World::new(2, NetModel::flat(0.0, 1e6, f64::INFINITY));
+        let mut e0 = world.endpoint(0);
+        let mut e1 = world.endpoint(1);
+        let h = thread::spawn(move || {
+            e0.send(1, 9, &Tensor::phantom(&[1000]));
+            e0.stats.clone()
+        });
+        let got = e1.recv(0, 9);
+        assert!(got.is_phantom());
+        // 4000 bytes at 1e6 B/s = 4ms of virtual time.
+        assert!((e1.clock - 4e-3).abs() < 1e-9);
+        assert_eq!(h.join().unwrap().bytes_sent, 4000);
+    }
+
+    #[test]
+    fn charge_flops_advances_clock() {
+        let mut world = World::new(1, NetModel::flat(0.0, 1e9, 1e12));
+        let mut e = world.endpoint(0);
+        e.charge_flops(2e12);
+        assert!((e.clock - 2.0).abs() < 1e-12);
+        assert!((e.stats.compute_time - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "already taken")]
+    fn endpoint_cannot_be_taken_twice() {
+        let mut world = World::new(2, NetModel::zero());
+        let _a = world.endpoint(0);
+        let _b = world.endpoint(0);
+    }
+}

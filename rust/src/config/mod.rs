@@ -1,0 +1,383 @@
+//! Configuration system: typed configs + a minimal TOML-subset parser.
+//!
+//! The offline crate set has no `serde`/`toml`, so `cubic` ships its own
+//! small parser covering the subset real configs need: `[section]` headers,
+//! `key = value` with integers, floats, booleans and quoted strings, `#`
+//! comments. See `examples/configs/*.toml` for the on-disk format.
+
+use crate::topology::Parallelism;
+use std::fmt;
+
+pub mod toml;
+
+/// Transformer model hyper-parameters.
+///
+/// Divisibility requirements (asserted by `validate`): attention stays
+/// node-local in every parallelism iff `batch % p² == 0` and
+/// `heads % p == 0` for 3-D (resp. `q`/`P` for 2-D/1-D) — the same
+/// constraints Colossal-AI's 3-D layers impose.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub hidden: usize,
+    /// MLP inner width (the paper uses 4·hidden).
+    pub ffn: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub eps: f32,
+}
+
+impl ModelConfig {
+    /// Tiny config used by unit/integration tests and the quickstart
+    /// example. Kept in sync with `CONFIGS["tiny"]` in python/compile/aot.py.
+    pub fn tiny() -> Self {
+        ModelConfig {
+            vocab: 64,
+            hidden: 64,
+            ffn: 256,
+            heads: 4,
+            layers: 2,
+            seq: 16,
+            batch: 4,
+            eps: 1e-5,
+        }
+    }
+
+    /// The e2e char-LM training config (python CONFIGS["charlm"]).
+    pub fn charlm() -> Self {
+        ModelConfig {
+            vocab: 96,
+            hidden: 128,
+            ffn: 512,
+            heads: 4,
+            layers: 4,
+            seq: 32,
+            batch: 8,
+            eps: 1e-5,
+        }
+    }
+
+    /// ~100M-parameter configuration (GPT-2-small-ish) used by the e2e
+    /// example's `--model large` composition check.
+    pub fn large100m() -> Self {
+        ModelConfig {
+            vocab: 50304,
+            hidden: 768,
+            ffn: 3072,
+            heads: 12,
+            layers: 12,
+            seq: 256,
+            batch: 4,
+            eps: 1e-5,
+        }
+    }
+
+    /// Paper Table 1/2 shape (hidden/batch vary per row; seq fixed at 512).
+    pub fn paper(hidden: usize, batch: usize) -> Self {
+        ModelConfig {
+            vocab: 51200,
+            hidden,
+            ffn: 4 * hidden,
+            heads: hidden / 64, // 64-dim heads, Megatron convention
+            layers: 1,          // tables report per-layer-stack time; see benches
+            seq: 512,
+            batch,
+            eps: 1e-5,
+        }
+    }
+
+    /// Total parameter count of the transformer core (blocks only).
+    pub fn core_params(&self) -> usize {
+        let h = self.hidden;
+        let f = self.ffn;
+        // per block: 2 LN (2h each) + qkv (3h² + 3h) + proj (h² + h)
+        //          + fc1 (h·f + f) + fc2 (f·h + h)
+        self.layers * (4 * h + 3 * h * h + 3 * h + h * h + h + h * f + f + f * h + h)
+    }
+
+    /// Total parameters including embedding, position table and LM head.
+    pub fn total_params(&self) -> usize {
+        self.core_params()
+            + self.vocab * self.hidden // embedding
+            + self.seq * self.hidden // positions
+            + self.vocab * self.hidden // head
+    }
+
+    /// Check divisibility constraints for running under `par` at `edge`.
+    pub fn validate(&self, par: Parallelism, edge: usize) -> Result<(), String> {
+        let p = edge;
+        match par {
+            Parallelism::Seq => Ok(()),
+            Parallelism::OneD => {
+                if self.heads % p != 0 {
+                    return Err(format!("heads {} % P {} != 0", self.heads, p));
+                }
+                if self.ffn % p != 0 || self.hidden % p != 0 {
+                    return Err(format!("hidden/ffn must divide P {}", p));
+                }
+                Ok(())
+            }
+            Parallelism::TwoD => {
+                if self.batch % p != 0 {
+                    return Err(format!("batch {} % q {} != 0", self.batch, p));
+                }
+                if self.heads % p != 0 {
+                    return Err(format!("heads {} % q {} != 0", self.heads, p));
+                }
+                if self.hidden % (p * p) != 0 || self.ffn % (p * p) != 0 {
+                    return Err(format!("hidden/ffn must divide q² = {}", p * p));
+                }
+                Ok(())
+            }
+            Parallelism::ThreeD => {
+                if self.batch % (p * p) != 0 {
+                    return Err(format!("batch {} % p² {} != 0", self.batch, p * p));
+                }
+                if self.heads % p != 0 {
+                    return Err(format!("heads {} % p {} != 0", self.heads, p));
+                }
+                if self.hidden % (p * p) != 0 || self.ffn % (p * p) != 0 {
+                    return Err(format!("hidden/ffn must divide p² = {}", p * p));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Training loop hyper-parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    /// Linear warmup steps before cosine decay.
+    pub warmup: usize,
+    pub seed: u64,
+    pub optimizer: OptimizerKind,
+    pub adam_beta1: f32,
+    pub adam_beta2: f32,
+    pub weight_decay: f32,
+    pub grad_clip: f32,
+    pub log_every: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Adam,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 100,
+            lr: 3e-3,
+            warmup: 20,
+            seed: 42,
+            optimizer: OptimizerKind::Adam,
+            adam_beta1: 0.9,
+            adam_beta2: 0.999,
+            weight_decay: 0.0,
+            grad_clip: 1.0,
+            log_every: 10,
+        }
+    }
+}
+
+/// Top-level config: model + parallelism + training + runtime.
+#[derive(Clone, Debug)]
+pub struct CubicConfig {
+    pub model: ModelConfig,
+    pub train: TrainConfig,
+    pub parallelism: Parallelism,
+    pub edge: usize,
+    /// Artifacts directory for the PJRT runtime (empty = native only).
+    pub artifacts_dir: String,
+}
+
+impl Default for CubicConfig {
+    fn default() -> Self {
+        CubicConfig {
+            model: ModelConfig::tiny(),
+            train: TrainConfig::default(),
+            parallelism: Parallelism::ThreeD,
+            edge: 2,
+            artifacts_dir: String::new(),
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl CubicConfig {
+    /// Load from a TOML-subset file (see module docs / examples/configs).
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("cannot read {path}: {e}")))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self, ConfigError> {
+        let doc = toml::parse(text).map_err(ConfigError)?;
+        let mut cfg = CubicConfig::default();
+
+        if let Some(preset) = doc.get_str("model", "preset") {
+            cfg.model = match preset.as_str() {
+                "tiny" => ModelConfig::tiny(),
+                "charlm" => ModelConfig::charlm(),
+                "large100m" => ModelConfig::large100m(),
+                other => return Err(ConfigError(format!("unknown model preset {other:?}"))),
+            };
+        }
+        macro_rules! set_usize {
+            ($section:literal, $key:literal, $field:expr) => {
+                if let Some(v) = doc.get_int($section, $key) {
+                    $field = v as usize;
+                }
+            };
+        }
+        set_usize!("model", "vocab", cfg.model.vocab);
+        set_usize!("model", "hidden", cfg.model.hidden);
+        set_usize!("model", "ffn", cfg.model.ffn);
+        set_usize!("model", "heads", cfg.model.heads);
+        set_usize!("model", "layers", cfg.model.layers);
+        set_usize!("model", "seq", cfg.model.seq);
+        set_usize!("model", "batch", cfg.model.batch);
+
+        if let Some(p) = doc.get_str("parallel", "kind") {
+            cfg.parallelism = Parallelism::parse(&p)
+                .ok_or_else(|| ConfigError(format!("unknown parallelism {p:?}")))?;
+        }
+        set_usize!("parallel", "edge", cfg.edge);
+
+        set_usize!("train", "steps", cfg.train.steps);
+        set_usize!("train", "warmup", cfg.train.warmup);
+        set_usize!("train", "log_every", cfg.train.log_every);
+        if let Some(v) = doc.get_float("train", "lr") {
+            cfg.train.lr = v as f32;
+        }
+        if let Some(v) = doc.get_float("train", "grad_clip") {
+            cfg.train.grad_clip = v as f32;
+        }
+        if let Some(v) = doc.get_float("train", "weight_decay") {
+            cfg.train.weight_decay = v as f32;
+        }
+        if let Some(v) = doc.get_int("train", "seed") {
+            cfg.train.seed = v as u64;
+        }
+        if let Some(o) = doc.get_str("train", "optimizer") {
+            cfg.train.optimizer = match o.as_str() {
+                "sgd" => OptimizerKind::Sgd,
+                "adam" => OptimizerKind::Adam,
+                other => return Err(ConfigError(format!("unknown optimizer {other:?}"))),
+            };
+        }
+        if let Some(d) = doc.get_str("runtime", "artifacts_dir") {
+            cfg.artifacts_dir = d;
+        }
+        cfg.model
+            .validate(cfg.parallelism, cfg.edge)
+            .map_err(ConfigError)?;
+        Ok(cfg)
+    }
+}
+
+/// One-line human description for log headers.
+pub fn describe(cfg: &CubicConfig) -> String {
+    format!(
+        "{} x{} ({} ranks), hidden={} layers={} seq={} batch={} (~{:.1}M params)",
+        cfg.parallelism.name(),
+        cfg.edge,
+        cfg.parallelism.world_size(cfg.edge),
+        cfg.model.hidden,
+        cfg.model.layers,
+        cfg.model.seq,
+        cfg.model.batch,
+        cfg.model.total_params() as f64 / 1e6,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_under_their_parallelisms() {
+        assert!(ModelConfig::tiny().validate(Parallelism::ThreeD, 2).is_ok());
+        assert!(ModelConfig::tiny().validate(Parallelism::TwoD, 2).is_ok());
+        assert!(ModelConfig::tiny().validate(Parallelism::OneD, 4).is_ok());
+        assert!(ModelConfig::charlm().validate(Parallelism::ThreeD, 2).is_ok());
+        assert!(ModelConfig::large100m().validate(Parallelism::ThreeD, 2).is_ok());
+    }
+
+    #[test]
+    fn invalid_divisibility_is_rejected() {
+        let mut m = ModelConfig::tiny();
+        m.batch = 3; // not divisible by p² = 4
+        assert!(m.validate(Parallelism::ThreeD, 2).is_err());
+        m.batch = 4;
+        m.heads = 3;
+        assert!(m.validate(Parallelism::ThreeD, 2).is_err());
+    }
+
+    #[test]
+    fn param_counts_are_sane() {
+        let m = ModelConfig::large100m();
+        let total = m.total_params();
+        // GPT-2-small ballpark with vocab 50k and untied head.
+        assert!(total > 80_000_000 && total < 200_000_000, "{total}");
+    }
+
+    #[test]
+    fn full_toml_round_trip() {
+        let text = r#"
+# cubic run config
+[model]
+preset = "tiny"
+layers = 3
+
+[parallel]
+kind = "3d"
+edge = 2
+
+[train]
+steps = 50
+lr = 0.001
+optimizer = "sgd"
+seed = 7
+
+[runtime]
+artifacts_dir = "artifacts"
+"#;
+        let cfg = CubicConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.model.layers, 3);
+        assert_eq!(cfg.model.hidden, ModelConfig::tiny().hidden);
+        assert_eq!(cfg.parallelism, Parallelism::ThreeD);
+        assert_eq!(cfg.edge, 2);
+        assert_eq!(cfg.train.steps, 50);
+        assert_eq!(cfg.train.optimizer, OptimizerKind::Sgd);
+        assert!((cfg.train.lr - 0.001).abs() < 1e-9);
+        assert_eq!(cfg.train.seed, 7);
+        assert_eq!(cfg.artifacts_dir, "artifacts");
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        assert!(CubicConfig::from_toml("[parallel]\nkind = \"9d\"").is_err());
+        assert!(CubicConfig::from_toml("[model]\npreset = \"nope\"").is_err());
+        // tiny batch=4 cannot run 3-D at edge 4 (needs batch % 16 == 0).
+        let bad = "[model]\npreset = \"tiny\"\n[parallel]\nkind = \"3d\"\nedge = 4";
+        assert!(CubicConfig::from_toml(bad).is_err());
+    }
+}

@@ -1,0 +1,206 @@
+//! Minimal TOML-subset parser (no external crates offline).
+//!
+//! Supported: `[section]` headers, `key = value` pairs with integer, float,
+//! boolean and double-quoted string values, `#` comments (full-line and
+//! trailing), blank lines. Unsupported TOML (arrays, tables-in-tables,
+//! multi-line strings) is rejected with an error rather than misparsed.
+
+use std::collections::HashMap;
+
+/// Parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+/// A parsed document: `(section, key) -> value`. Keys before any section
+/// header live in section `""`.
+#[derive(Debug, Default)]
+pub struct Doc {
+    values: HashMap<(String, String), Value>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.values.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(Value::Int(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key) {
+            Some(Value::Float(v)) => Some(*v),
+            Some(Value::Int(v)) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(Value::Bool(v)) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
+        match self.get(section, key) {
+            Some(Value::Str(v)) => Some(v.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// Strip a trailing comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str, lineno: usize) -> Result<Value, String> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(format!("line {lineno}: missing value"));
+    }
+    if raw.starts_with('"') {
+        if raw.len() < 2 || !raw.ends_with('"') {
+            return Err(format!("line {lineno}: unterminated string"));
+        }
+        let inner = &raw[1..raw.len() - 1];
+        if inner.contains('"') {
+            return Err(format!("line {lineno}: embedded quote in string"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if raw.starts_with('[') {
+        return Err(format!("line {lineno}: arrays are not supported"));
+    }
+    // Integers (allow underscores like TOML).
+    let cleaned: String = raw.chars().filter(|&c| c != '_').collect();
+    if let Ok(v) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(format!("line {lineno}: cannot parse value {raw:?}"))
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Doc, String> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(format!("line {lineno}: malformed section header"));
+            }
+            let name = line[1..line.len() - 1].trim();
+            if name.is_empty() || name.contains('[') || name.contains('.') {
+                return Err(format!("line {lineno}: unsupported section {name:?}"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(format!("line {lineno}: expected `key = value`"));
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() || key.contains(' ') {
+            return Err(format!("line {lineno}: bad key {key:?}"));
+        }
+        let value = parse_value(&line[eq + 1..], lineno)?;
+        let k = (section.clone(), key.to_string());
+        if doc.values.insert(k, value).is_some() {
+            return Err(format!("line {lineno}: duplicate key {key:?} in [{section}]"));
+        }
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_types() {
+        let doc = parse(
+            "a = 1\nb = 2.5\nc = true\nd = \"hi\"\n[s]\ne = -3\nf = 1_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("", "a"), Some(1));
+        assert_eq!(doc.get_float("", "b"), Some(2.5));
+        assert_eq!(doc.get_bool("", "c"), Some(true));
+        assert_eq!(doc.get_str("", "d"), Some("hi".into()));
+        assert_eq!(doc.get_int("s", "e"), Some(-3));
+        assert_eq!(doc.get_int("s", "f"), Some(1000));
+        assert_eq!(doc.len(), 6);
+    }
+
+    #[test]
+    fn comments_and_blanks_are_ignored() {
+        let doc = parse("# header\n\na = 1  # trailing\nb = \"x # not a comment\"\n").unwrap();
+        assert_eq!(doc.get_int("", "a"), Some(1));
+        assert_eq!(doc.get_str("", "b"), Some("x # not a comment".into()));
+    }
+
+    #[test]
+    fn int_float_coercion_only_one_way() {
+        let doc = parse("a = 2\n").unwrap();
+        assert_eq!(doc.get_float("", "a"), Some(2.0)); // int readable as float
+        assert_eq!(doc.get_int("", "a"), Some(2));
+        let doc = parse("a = 2.5\n").unwrap();
+        assert_eq!(doc.get_int("", "a"), None); // float not readable as int
+    }
+
+    #[test]
+    fn errors_are_reported_with_line_numbers() {
+        assert!(parse("a =\n").unwrap_err().contains("line 1"));
+        assert!(parse("x\n").unwrap_err().contains("key = value"));
+        assert!(parse("[bad\n").unwrap_err().contains("section"));
+        assert!(parse("a = [1, 2]\n").unwrap_err().contains("arrays"));
+        assert!(parse("a = \"unterminated\n").unwrap_err().contains("string"));
+        assert!(parse("a = 1\na = 2\n").unwrap_err().contains("duplicate"));
+        assert!(parse("a = zzz\n").unwrap_err().contains("cannot parse"));
+    }
+
+    #[test]
+    fn sections_scope_keys() {
+        let doc = parse("[x]\nk = 1\n[y]\nk = 2\n").unwrap();
+        assert_eq!(doc.get_int("x", "k"), Some(1));
+        assert_eq!(doc.get_int("y", "k"), Some(2));
+        assert_eq!(doc.get_int("", "k"), None);
+    }
+}

@@ -1,0 +1,271 @@
+//! Cluster engine: the leader that spawns the worker ranks, runs training
+//! or timing workloads over them, and aggregates results.
+//!
+//! Two entry points:
+//!
+//! * [`run_training`] — materialized numerics: spawn `P` workers, each a
+//!   [`crate::train::TrainerRank`], run the configured steps, return the
+//!   loss curve plus run metrics. This is what `cubic train` and the e2e
+//!   example drive.
+//! * [`time_core_step`] — the paper's measurement: one forward + backward
+//!   of the Transformer core in phantom mode (shape-only tensors, analytic
+//!   compute charges, real collective schedules) on the virtual-clock
+//!   cluster. Benches regenerating Tables 1 & 2 call this per row.
+
+use crate::comm::NetModel;
+use crate::config::CubicConfig;
+use crate::metrics::{RunMetrics, Stopwatch};
+use crate::model::{
+    core_bwd, core_fwd, local_activation_shape, phantom_block, BlockTensors, ParEnv,
+};
+use crate::spmd::run_spmd_with_stats;
+use crate::tensor::Tensor;
+use crate::topology::Parallelism;
+use crate::train::TrainerRank;
+use anyhow::{bail, Result};
+
+/// Aggregated result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    /// Virtual seconds per step (max over ranks, averaged over steps).
+    pub avg_step_virtual: f64,
+    pub metrics: RunMetrics,
+}
+
+/// Train the configured model on a simulated cluster with real numerics.
+pub fn run_training(cfg: &CubicConfig, net: NetModel) -> Result<TrainReport> {
+    cfg.model
+        .validate(cfg.parallelism, cfg.edge)
+        .map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
+    let world = cfg.parallelism.world_size(cfg.edge);
+    let cfg2 = cfg.clone();
+    let sw = Stopwatch::start();
+    let results = run_spmd_with_stats(world, net, move |rank, ep| {
+        let mut trainer = TrainerRank::new(&cfg2, rank);
+        trainer.run(ep)
+    });
+    let host = sw.seconds();
+    let (report0, _, _) = &results[0];
+    // Loss must be identical on every rank (replicated head) — a cheap
+    // whole-system consistency check we always enforce.
+    for (r, (rep, _, _)) in results.iter().enumerate() {
+        if rep.losses != report0.losses {
+            bail!("rank {r} diverged from rank 0 loss curve");
+        }
+    }
+    let per_rank: Vec<(f64, crate::comm::CommStats)> =
+        results.iter().map(|(_, c, s)| (*c, s.clone())).collect();
+    let metrics = RunMetrics::from_ranks(&per_rank, host);
+    let steps = report0.losses.len().max(1) as f64;
+    Ok(TrainReport {
+        losses: report0.losses.clone(),
+        avg_step_virtual: metrics.virtual_time / steps,
+        metrics,
+    })
+}
+
+/// Like [`run_training`] but each rank writes a rank-sharded checkpoint of
+/// its final model shards (plus the replicated boundary layers on rank 0)
+/// to `dir` — the Megatron-style persistence layout.
+pub fn run_training_with_checkpoint(
+    cfg: &CubicConfig,
+    net: NetModel,
+    dir: &std::path::Path,
+) -> Result<TrainReport> {
+    cfg.model
+        .validate(cfg.parallelism, cfg.edge)
+        .map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
+    let world = cfg.parallelism.world_size(cfg.edge);
+    let cfg2 = cfg.clone();
+    let dir2 = dir.to_path_buf();
+    let sw = Stopwatch::start();
+    let results = run_spmd_with_stats(world, net, move |rank, ep| {
+        let mut trainer = TrainerRank::new(&cfg2, rank);
+        let report = trainer.run(ep);
+        let extra: Vec<(String, &crate::tensor::Tensor)> = if rank == 0 {
+            vec![
+                ("emb.table".into(), &trainer.emb.table),
+                ("emb.pos".into(), &trainer.emb.pos),
+                ("head.ln_g".into(), &trainer.head.ln_g),
+                ("head.ln_b".into(), &trainer.head.ln_b),
+                ("head.w".into(), &trainer.head.w),
+                ("head.b".into(), &trainer.head.b),
+            ]
+        } else {
+            Vec::new()
+        };
+        crate::train::checkpoint::save_rank(&dir2, rank, &trainer.blocks, &extra)
+            .expect("checkpoint save failed");
+        report
+    });
+    let host = sw.seconds();
+    let per_rank: Vec<(f64, crate::comm::CommStats)> =
+        results.iter().map(|(_, c, s)| (*c, s.clone())).collect();
+    let metrics = RunMetrics::from_ranks(&per_rank, host);
+    let report0 = results[0].0.clone();
+    let steps = report0.losses.len().max(1) as f64;
+    Ok(TrainReport {
+        losses: report0.losses,
+        avg_step_virtual: metrics.virtual_time / steps,
+        metrics,
+    })
+}
+
+/// Result of a phantom-mode timing run of the core (the paper's measured
+/// quantity: forward + backward of the consecutive Transformer layers).
+#[derive(Clone, Debug)]
+pub struct CoreTiming {
+    /// Virtual seconds for the forward passes of all layers.
+    pub forward_s: f64,
+    /// Virtual seconds for the backward passes.
+    pub backward_s: f64,
+    pub metrics: RunMetrics,
+}
+
+impl CoreTiming {
+    /// The paper's Eq. 6: (fwd + bwd) / batch.
+    pub fn avg_step_time(&self, batch: usize) -> f64 {
+        (self.forward_s + self.backward_s) / batch as f64
+    }
+}
+
+/// Time one fwd+bwd of the Transformer core in phantom mode.
+///
+/// `repeats` forward/backward passes are timed (the paper runs multiple
+/// iterations; virtual time is deterministic so 1 is exact, but repeats
+/// exercise steady-state tag reuse).
+///
+/// NOTE: intentionally does *not* call `ModelConfig::validate` — the
+/// paper's own Table 2 configs (e.g. batch 24 on a 4³ cube) split
+/// sequences across ranks, which the timing path models analytically
+/// (see `model::attention`).
+pub fn time_core_step(
+    cfg: &crate::config::ModelConfig,
+    par: Parallelism,
+    edge: usize,
+    net: NetModel,
+) -> Result<CoreTiming> {
+    let world = par.world_size(edge);
+    let cfg2 = cfg.clone();
+    let rows = cfg.batch * cfg.seq;
+    let sw = Stopwatch::start();
+    let results = run_spmd_with_stats(world, net, move |rank, ep| {
+        let env = ParEnv::new(par, edge, rank);
+        let blocks: Vec<BlockTensors> =
+            (0..cfg2.layers).map(|_| phantom_block(&env, &cfg2, rank)).collect();
+        let (lr, lc) = local_activation_shape(&env, rows, cfg2.hidden);
+        let x = Tensor::phantom(&[lr, lc]);
+        let (y, caches) = core_fwd(ep, &env, &blocks, &x, &cfg2);
+        let fwd_clock = ep.clock;
+        let dy = Tensor::phantom(y.shape());
+        let _ = core_bwd(ep, &env, &blocks, &caches, &dy, &cfg2);
+        let bwd_clock = ep.clock;
+        (fwd_clock, bwd_clock)
+    });
+    let host = sw.seconds();
+    let fwd = results.iter().map(|((f, _), _, _)| *f).fold(0.0, f64::max);
+    let total = results.iter().map(|((_, b), _, _)| *b).fold(0.0, f64::max);
+    let per_rank: Vec<(f64, crate::comm::CommStats)> =
+        results.iter().map(|(_, c, s)| (*c, s.clone())).collect();
+    Ok(CoreTiming {
+        forward_s: fwd,
+        backward_s: total - fwd,
+        metrics: RunMetrics::from_ranks(&per_rank, host),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CubicConfig, ModelConfig, TrainConfig};
+
+    #[test]
+    fn tiny_training_runs_and_loss_drops_seq() {
+        let cfg = CubicConfig {
+            model: ModelConfig {
+                layers: 1,
+                ..ModelConfig::tiny()
+            },
+            train: TrainConfig { steps: 12, lr: 3e-3, warmup: 2, ..Default::default() },
+            parallelism: Parallelism::Seq,
+            edge: 1,
+            artifacts_dir: String::new(),
+        };
+        let rep = run_training(&cfg, NetModel::zero()).unwrap();
+        assert_eq!(rep.losses.len(), 12);
+        let first = rep.losses[0];
+        let last = *rep.losses.last().unwrap();
+        assert!(
+            last < first,
+            "loss should drop: {first} -> {last} ({:?})",
+            rep.losses
+        );
+    }
+
+    #[test]
+    fn invalid_config_is_rejected() {
+        let mut cfg = CubicConfig::default();
+        cfg.model.batch = 3; // 3 % 4 != 0 for p=2 cube
+        assert!(run_training(&cfg, NetModel::zero()).is_err());
+    }
+
+    #[test]
+    fn phantom_timing_runs_at_paper_scale_3d() {
+        // Table 2's 3-D row: 64 GPUs (p=4), batch 24, hidden 3072, seq 512.
+        let cfg = ModelConfig::paper(3072, 24);
+        let t = time_core_step(&cfg, Parallelism::ThreeD, 4, NetModel::longhorn_v100())
+            .unwrap();
+        assert!(t.forward_s > 0.0);
+        assert!(t.backward_s > 0.8 * t.forward_s, "bwd should be comparable to fwd");
+        assert!(t.metrics.total_bytes > 0);
+    }
+
+    #[test]
+    fn phantom_timing_backward_roughly_double_forward() {
+        let cfg = ModelConfig::paper(1024, 8);
+        for (par, edge) in [
+            (Parallelism::OneD, 8),
+            (Parallelism::TwoD, 2),
+            (Parallelism::ThreeD, 2),
+        ] {
+            let t = time_core_step(&cfg, par, edge, NetModel::longhorn_v100()).unwrap();
+            let ratio = t.backward_s / t.forward_s;
+            assert!(
+                (1.05..4.0).contains(&ratio),
+                "{par:?}: bwd/fwd ratio {ratio} out of range"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod checkpoint_tests {
+    use super::*;
+    use crate::config::{CubicConfig, ModelConfig, TrainConfig};
+
+    #[test]
+    fn training_with_checkpoint_writes_all_rank_files() {
+        let dir = std::env::temp_dir().join(format!("cubic-engine-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = CubicConfig {
+            model: ModelConfig { layers: 1, ..ModelConfig::tiny() },
+            train: TrainConfig { steps: 3, ..Default::default() },
+            parallelism: crate::topology::Parallelism::ThreeD,
+            edge: 2,
+            artifacts_dir: String::new(),
+        };
+        let rep = run_training_with_checkpoint(&cfg, NetModel::zero(), &dir).unwrap();
+        assert_eq!(rep.losses.len(), 3);
+        for rank in 0..8 {
+            let path = dir.join(format!("rank-{rank}.bin"));
+            assert!(path.exists(), "missing {}", path.display());
+        }
+        // Shards restore into a matching topology.
+        let dense = crate::model::init_dense_blocks(&cfg.model, 123);
+        let env = crate::model::ParEnv::new(crate::topology::Parallelism::ThreeD, 2, 3);
+        let mut blocks = env.shard_blocks(&dense, 3);
+        crate::train::checkpoint::load_rank(&dir, 3, &mut blocks).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

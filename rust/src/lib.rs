@@ -1,0 +1,49 @@
+//! # cubic — 3-D tensor-parallel distributed training
+//!
+//! `cubic` is a production-shaped reproduction of *"Maximizing Parallelism in
+//! Distributed Training for Huge Neural Networks"* (Bian, Xu, Wang, You,
+//! 2021): load-balanced 3-D intra-layer tensor parallelism for Transformer
+//! models, implemented alongside the 1-D (Megatron [17]) and 2-D
+//! (Optimus/SUMMA [21]) baselines the paper compares against.
+//!
+//! The stack has three layers (see `DESIGN.md`):
+//!
+//! * **L3 (this crate)** — the coordinator: process topology, collective
+//!   communication, the 1-D/2-D/3-D parallel linear algebra (the paper's
+//!   Algorithms 1–8), the Transformer model, optimizer, trainer, cluster
+//!   engine, cost model, and benchmark harness.
+//! * **L2 (python/compile/model.py)** — per-shard JAX programs, AOT-lowered
+//!   once to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels the L2 programs call.
+//!
+//! Python never runs at train time: the [`runtime`] module loads the AOT
+//! artifacts through the PJRT C API and executes them from Rust.
+
+pub mod bench;
+pub mod cli;
+pub mod collectives;
+pub mod comm;
+pub mod config;
+pub mod costmodel;
+pub mod dist;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod ops;
+pub mod optim;
+pub mod parallel;
+pub mod rng;
+pub mod runtime;
+pub mod spmd;
+pub mod tensor;
+pub mod topology;
+pub mod train;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::comm::{Endpoint, NetModel};
+    // config types are re-exported once the config module lands
+    pub use crate::rng::Xoshiro256;
+    pub use crate::tensor::Tensor;
+    pub use crate::topology::{Axis, Coord, Cube, Line, Mesh, Parallelism};
+}

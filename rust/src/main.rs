@@ -1,0 +1,180 @@
+//! `cubic` — launcher CLI for the 3-D tensor-parallel training framework.
+//!
+//! Subcommands:
+//!   train         train a model on the simulated cluster (real numerics)
+//!   bench-table1  regenerate paper Table 1 (weak scaling)
+//!   bench-table2  regenerate paper Table 2 (strong scaling + headline)
+//!   plan          print the shard plan for a config (no execution)
+//!   artifacts     list + smoke-test the AOT artifact bundle
+//!   help          this text
+
+use cubic::bench;
+use cubic::cli::Args;
+use cubic::comm::NetModel;
+use cubic::config::{describe, CubicConfig};
+use cubic::engine::run_training;
+use cubic::model::{local_activation_shape, phantom_block, ParEnv};
+use cubic::rng::Xoshiro256;
+use cubic::runtime::Runtime;
+use cubic::tensor::Tensor;
+use cubic::topology::Parallelism;
+
+const HELP: &str = r#"cubic — 3-D tensor-parallel distributed training (Bian et al. 2021)
+
+USAGE: cubic <command> [options]
+
+COMMANDS
+  train           train on the simulated cluster with real numerics
+                    --config <file.toml>     load a config file
+                    --save-dir <dir>         write rank-sharded checkpoints
+                    --parallelism seq|1d|2d|3d (default 3d)
+                    --edge <n>               topology edge (default 2)
+                    --model tiny|charlm|large100m (default tiny)
+                    --steps <n> --lr <f> --seed <n>
+  bench-table1    regenerate paper Table 1 (weak scaling)
+  bench-table2    regenerate paper Table 2 (strong scaling + speedups)
+  plan            print the per-rank shard plan for a config
+  artifacts       list the AOT bundle and smoke-run one artifact
+                    --dir <artifacts dir> (default ./artifacts)
+  help            show this text
+"#;
+
+fn build_config(args: &Args) -> Result<CubicConfig, String> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        CubicConfig::from_file(&path).map_err(|e| e.to_string())?
+    } else {
+        CubicConfig::default()
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = match m.as_str() {
+            "tiny" => cubic::config::ModelConfig::tiny(),
+            "charlm" => cubic::config::ModelConfig::charlm(),
+            "large100m" => cubic::config::ModelConfig::large100m(),
+            other => return Err(format!("unknown model preset {other:?}")),
+        };
+    }
+    if let Some(p) = args.get("parallelism") {
+        cfg.parallelism =
+            Parallelism::parse(&p).ok_or_else(|| format!("unknown parallelism {p:?}"))?;
+    }
+    cfg.edge = args.get_usize("edge", cfg.edge)?;
+    cfg.train.steps = args.get_usize("steps", cfg.train.steps)?;
+    cfg.train.lr = args.get_f64("lr", cfg.train.lr as f64)? as f32;
+    cfg.train.seed = args.get_usize("seed", cfg.train.seed as usize)? as u64;
+    cfg.model
+        .validate(cfg.parallelism, cfg.edge)
+        .map_err(|e| format!("invalid config: {e}"))?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    let save_dir = args.get("save-dir");
+    eprintln!("training {}", describe(&cfg));
+    let report = if let Some(dir) = save_dir {
+        cubic::engine::run_training_with_checkpoint(&cfg, NetModel::longhorn_v100(), std::path::Path::new(&dir))
+            .map_err(|e| e.to_string())?
+    } else {
+        run_training(&cfg, NetModel::longhorn_v100()).map_err(|e| e.to_string())?
+    };
+    for (s, loss) in report.losses.iter().enumerate() {
+        if s % cfg.train.log_every == 0 || s + 1 == report.losses.len() {
+            println!("step {s:4}  loss {loss:.4}");
+        }
+    }
+    println!(
+        "done: {} steps, final loss {:.4}, {:.2} virtual ms/step, host {:.1}s",
+        report.losses.len(),
+        report.losses.last().unwrap(),
+        1e3 * report.avg_step_virtual,
+        report.metrics.host_seconds,
+    );
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    println!("plan for {}", describe(&cfg));
+    let world = cfg.parallelism.world_size(cfg.edge);
+    let rows = cfg.model.batch * cfg.model.seq;
+    for rank in 0..world {
+        let env = ParEnv::new(cfg.parallelism, cfg.edge, rank);
+        let block = phantom_block(&env, &cfg.model, rank);
+        let (ar, ac) = local_activation_shape(&env, rows, cfg.model.hidden);
+        println!(
+            "rank {rank:3}: activation {ar}x{ac}, block params {} ({} bytes), w_qkv {:?}",
+            block.numel(),
+            block.numel() * 4,
+            block.w_qkv.shape(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<(), String> {
+    let dir = args.get("dir").unwrap_or_else(|| "artifacts".into());
+    let rt = Runtime::load(&dir).map_err(|e| e.to_string())?;
+    let names = rt.manifest.names();
+    println!("{} artifacts in {dir}:", names.len());
+    for n in &names {
+        let e = rt.manifest.get(n).unwrap();
+        println!("  {n}  in={:?} out={:?}", e.in_shapes, e.out_shape);
+    }
+    if let Some(name) = names.iter().find(|n| n.starts_with("mm_nn_")) {
+        let e = rt.manifest.get(name).unwrap().clone();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let a = Tensor::randn(&e.in_shapes[0], 1.0, &mut rng);
+        let b = Tensor::randn(&e.in_shapes[1], 1.0, &mut rng);
+        let got = rt
+            .handle()
+            .execute(name, &[a.clone(), b.clone()])
+            .map_err(|e| e.to_string())?;
+        let diff = got.max_abs_diff(&a.matmul(&b));
+        println!("smoke {name}: PJRT vs native max diff {diff:.2e}");
+        if diff > 1e-3 {
+            return Err("artifact smoke test FAILED".into());
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(args) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("bench-table1") => {
+            let results = bench::run_rows(&bench::table1_rows(), &NetModel::longhorn_v100());
+            println!("{}", bench::render("Table 1 — weak scaling", &results));
+            Ok(())
+        }
+        Some("bench-table2") => {
+            let results = bench::run_rows(&bench::table2_rows(), &NetModel::longhorn_v100());
+            println!("{}", bench::render("Table 2 — strong scaling", &results));
+            let (s1, s2) = bench::strong_scaling_speedups(&results);
+            println!("3-D speedup at 64 GPUs: {s1:.2}x vs 1-D (paper 2.32x), {s2:.2}x vs 2-D (paper 1.57x)");
+            Ok(())
+        }
+        Some("plan") => cmd_plan(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("help") | None => {
+            println!("{HELP}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown command {other:?}\n\n{HELP}")),
+    };
+    let unknown = args.unknown();
+    if !unknown.is_empty() {
+        eprintln!("warning: unused options: {unknown:?}");
+    }
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,192 @@
+//! Metrics: timing reports, communication/memory accounting, and the
+//! markdown/CSV table writer the benchmark harness uses to print
+//! paper-style tables.
+
+use crate::comm::CommStats;
+use std::fmt::Write as _;
+
+/// Result of one timed distributed run (virtual clocks + real traffic).
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Max virtual clock across ranks (the step's makespan), seconds.
+    pub virtual_time: f64,
+    /// Max per-rank compute share of the virtual time.
+    pub compute_time: f64,
+    /// Max per-rank comm share.
+    pub comm_time: f64,
+    /// Total bytes sent across all ranks.
+    pub total_bytes: u64,
+    /// Bytes that crossed node boundaries.
+    pub inter_node_bytes: u64,
+    /// Total messages.
+    pub messages: u64,
+    /// Wall-clock seconds of the host simulation (not the model!).
+    pub host_seconds: f64,
+}
+
+impl RunMetrics {
+    /// Merge per-rank endpoint stats into a run summary.
+    pub fn from_ranks(ranks: &[(f64, CommStats)], host_seconds: f64) -> RunMetrics {
+        let mut m = RunMetrics { host_seconds, ..Default::default() };
+        for (clock, s) in ranks {
+            m.virtual_time = m.virtual_time.max(*clock);
+            m.compute_time = m.compute_time.max(s.compute_time);
+            m.comm_time = m.comm_time.max(s.comm_time);
+            m.total_bytes += s.bytes_sent;
+            m.inter_node_bytes += s.inter_node_bytes;
+            m.messages += s.messages_sent;
+        }
+        m
+    }
+}
+
+/// Simple markdown table builder (the bench harness prints paper-style
+/// tables with it).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncols {
+                let _ = write!(line, " {:width$} |", cells[i], width = widths[i]);
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<width$}|", "", width = w + 2);
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Wall-clock stopwatch for host-side (criterion-less) benchmarking.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch(std::time::Instant::now())
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Format seconds the way the paper's tables do (3 decimals).
+pub fn fmt_s(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_metrics_take_max_clock_and_sum_bytes() {
+        let mut s1 = CommStats::default();
+        s1.bytes_sent = 100;
+        s1.compute_time = 2.0;
+        let mut s2 = CommStats::default();
+        s2.bytes_sent = 50;
+        s2.inter_node_bytes = 10;
+        s2.comm_time = 1.5;
+        let m = RunMetrics::from_ranks(&[(3.0, s1), (4.0, s2)], 0.1);
+        assert_eq!(m.virtual_time, 4.0);
+        assert_eq!(m.total_bytes, 150);
+        assert_eq!(m.inter_node_bytes, 10);
+        assert_eq!(m.compute_time, 2.0);
+        assert_eq!(m.comm_time, 1.5);
+    }
+
+    #[test]
+    fn markdown_table_is_aligned() {
+        let mut t = Table::new(&["# GPUs", "Avg step time (s)"]);
+        t.row(&["8".into(), "0.341".into()]);
+        t.row(&["64".into(), "1.560".into()]);
+        let md = t.to_markdown();
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("# GPUs"));
+        assert!(lines[1].starts_with("|--"));
+        // all lines same width
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[0].len(), lines[1].len());
+    }
+
+    #[test]
+    fn csv_output() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,732 @@
+//! The Transformer model, parameterized by parallelism.
+//!
+//! One set of *global* parameters (deterministically initialized from a
+//! seed) can be sharded onto any of the four execution modes — `Seq`
+//! (dense single device), `1-D` (Megatron), `2-D` (Optimus/SUMMA) and the
+//! paper's `3-D` — and every mode computes the *same function* to float
+//! tolerance, which is what the cross-parallelism parity tests in
+//! `rust/tests/` pin down.
+//!
+//! ## Weight conventions
+//!
+//! * `w_qkv` is `(h, 3h)` in **head-major triple** order: columns
+//!   `[g·3·hd, (g+1)·3·hd)` hold `[Wq_g | Wk_g | Wv_g]` for head `g`. This
+//!   makes any column-sharding of the QKV projection hand each rank a set
+//!   of *complete heads*, so attention is always rank-local (the
+//!   Colossal-AI trick; the paper is silent on attention-score
+//!   distribution — see DESIGN.md).
+//! * Activations are `(batch·seq, hidden)` row-major, batch-major rows
+//!   (row = `b·seq + s`), so row-range shards hold complete sequences
+//!   whenever `batch` divides by the row-chunk count (`config::validate`).
+//!
+//! ## Direction bookkeeping (3-D)
+//!
+//! Every block starts with the canonical direction triple `d0`; its two
+//! linear layers per branch swap `d0 ↔ d1 = d0.swapped()` and swap back, so
+//! blocks stack with a constant layout (§3.2 of the paper). The bias of a
+//! linear layer lives on the diagonal of the *output* directions.
+
+pub mod attention;
+pub mod oned;
+pub mod seq;
+pub mod threed;
+pub mod twod;
+
+use crate::comm::Endpoint;
+use crate::config::ModelConfig;
+use crate::dist::{DiagVec3D, Dirs, Layout1D, Layout2D, Layout3D};
+use crate::parallel::{oned::Ctx1D, threed::Ctx3D, twod::Ctx2D};
+use crate::rng::Xoshiro256;
+use crate::tensor::Tensor;
+use crate::topology::{Cube, Mesh, Parallelism};
+
+/// One transformer block's tensors — used both for parameters and for
+/// gradients (same shapes, same ownership pattern). Matrix entries are
+/// always present (every rank owns a shard); vector entries are `Some` only
+/// on owning ranks (3-D: direction diagonal; 2-D: mesh row 0; 1-D/Seq: all).
+#[derive(Clone, Debug)]
+pub struct BlockTensors {
+    pub ln1_g: Option<Tensor>,
+    pub ln1_b: Option<Tensor>,
+    pub w_qkv: Tensor,
+    pub b_qkv: Option<Tensor>,
+    pub w_proj: Tensor,
+    pub b_proj: Option<Tensor>,
+    pub ln2_g: Option<Tensor>,
+    pub ln2_b: Option<Tensor>,
+    pub w_fc1: Tensor,
+    pub b_fc1: Option<Tensor>,
+    pub w_fc2: Tensor,
+    pub b_fc2: Option<Tensor>,
+}
+
+impl BlockTensors {
+    /// Parameter/gradient pairs for the optimizer, in a stable order.
+    pub fn pairs_mut<'a>(
+        &'a mut self,
+        g: &'a BlockTensors,
+    ) -> Vec<(&'a mut Tensor, &'a Tensor)> {
+        let mut out: Vec<(&mut Tensor, &Tensor)> = vec![
+            (&mut self.w_qkv, &g.w_qkv),
+            (&mut self.w_proj, &g.w_proj),
+            (&mut self.w_fc1, &g.w_fc1),
+            (&mut self.w_fc2, &g.w_fc2),
+        ];
+        let vecs: [(&mut Option<Tensor>, &Option<Tensor>); 8] = [
+            (&mut self.ln1_g, &g.ln1_g),
+            (&mut self.ln1_b, &g.ln1_b),
+            (&mut self.b_qkv, &g.b_qkv),
+            (&mut self.b_proj, &g.b_proj),
+            (&mut self.ln2_g, &g.ln2_g),
+            (&mut self.ln2_b, &g.ln2_b),
+            (&mut self.b_fc1, &g.b_fc1),
+            (&mut self.b_fc2, &g.b_fc2),
+        ];
+        for (p, gr) in vecs {
+            match (p.as_mut(), gr.as_ref()) {
+                (Some(p), Some(gr)) => out.push((p, gr)),
+                (None, None) => {}
+                _ => panic!("param/grad ownership mismatch"),
+            }
+        }
+        out
+    }
+
+    /// Total elements this rank stores for the block (memory accounting).
+    pub fn numel(&self) -> usize {
+        let v = |t: &Option<Tensor>| t.as_ref().map_or(0, |t| t.numel());
+        self.w_qkv.numel()
+            + self.w_proj.numel()
+            + self.w_fc1.numel()
+            + self.w_fc2.numel()
+            + v(&self.ln1_g)
+            + v(&self.ln1_b)
+            + v(&self.b_qkv)
+            + v(&self.b_proj)
+            + v(&self.ln2_g)
+            + v(&self.ln2_b)
+            + v(&self.b_fc1)
+            + v(&self.b_fc2)
+    }
+}
+
+/// Dense (global, unsharded) block parameters — the init source and the
+/// test-time ground truth.
+#[derive(Clone, Debug)]
+pub struct DenseBlock {
+    pub ln1_g: Tensor,
+    pub ln1_b: Tensor,
+    pub w_qkv: Tensor,
+    pub b_qkv: Tensor,
+    pub w_proj: Tensor,
+    pub b_proj: Tensor,
+    pub ln2_g: Tensor,
+    pub ln2_b: Tensor,
+    pub w_fc1: Tensor,
+    pub b_fc1: Tensor,
+    pub w_fc2: Tensor,
+    pub b_fc2: Tensor,
+}
+
+impl DenseBlock {
+    /// GPT-2-style init: N(0, 0.02) weights, residual-path projections
+    /// scaled down by √(2·layers), unit γ, zero biases.
+    pub fn init(cfg: &ModelConfig, rng: &mut Xoshiro256) -> DenseBlock {
+        let h = cfg.hidden;
+        let f = cfg.ffn;
+        let std = 0.02f32;
+        let res_std = std / ((2 * cfg.layers) as f32).sqrt();
+        DenseBlock {
+            ln1_g: Tensor::ones(&[h]),
+            ln1_b: Tensor::zeros(&[h]),
+            w_qkv: Tensor::randn(&[h, 3 * h], std, rng),
+            b_qkv: Tensor::zeros(&[3 * h]),
+            w_proj: Tensor::randn(&[h, h], res_std, rng),
+            b_proj: Tensor::zeros(&[h]),
+            ln2_g: Tensor::ones(&[h]),
+            ln2_b: Tensor::zeros(&[h]),
+            w_fc1: Tensor::randn(&[h, f], std, rng),
+            b_fc1: Tensor::zeros(&[f]),
+            w_fc2: Tensor::randn(&[f, h], res_std, rng),
+            b_fc2: Tensor::zeros(&[h]),
+        }
+    }
+
+    /// As `BlockTensors` with everything owned (the Seq sharding).
+    pub fn to_seq(&self) -> BlockTensors {
+        BlockTensors {
+            ln1_g: Some(self.ln1_g.clone()),
+            ln1_b: Some(self.ln1_b.clone()),
+            w_qkv: self.w_qkv.clone(),
+            b_qkv: Some(self.b_qkv.clone()),
+            w_proj: self.w_proj.clone(),
+            b_proj: Some(self.b_proj.clone()),
+            ln2_g: Some(self.ln2_g.clone()),
+            ln2_b: Some(self.ln2_b.clone()),
+            w_fc1: self.w_fc1.clone(),
+            b_fc1: Some(self.b_fc1.clone()),
+            w_fc2: self.w_fc2.clone(),
+            b_fc2: Some(self.b_fc2.clone()),
+        }
+    }
+
+    /// 1-D Megatron sharding for `rank` of `world`.
+    pub fn to_oned(&self, world: usize, rank: usize) -> BlockTensors {
+        let col = Layout1D::ColShard;
+        let row = Layout1D::RowShard;
+        let vec_shard = |v: &Tensor| {
+            let n = v.numel();
+            col.shard_of(world, rank, &v.reshape(&[1, n]))
+                .into_reshape(&[n / world])
+        };
+        BlockTensors {
+            ln1_g: Some(self.ln1_g.clone()),
+            ln1_b: Some(self.ln1_b.clone()),
+            w_qkv: col.shard_of(world, rank, &self.w_qkv),
+            b_qkv: Some(vec_shard(&self.b_qkv)),
+            w_proj: row.shard_of(world, rank, &self.w_proj),
+            b_proj: Some(self.b_proj.clone()),
+            ln2_g: Some(self.ln2_g.clone()),
+            ln2_b: Some(self.ln2_b.clone()),
+            w_fc1: col.shard_of(world, rank, &self.w_fc1),
+            b_fc1: Some(vec_shard(&self.b_fc1)),
+            w_fc2: row.shard_of(world, rank, &self.w_fc2),
+            b_fc2: Some(self.b_fc2.clone()),
+        }
+    }
+
+    /// 2-D SUMMA sharding: matrices in `(·/q, ·/q)` blocks, vectors as
+    /// column chunks on mesh row 0.
+    pub fn to_twod(&self, mesh: &Mesh, rank: usize) -> BlockTensors {
+        let (row, col) = mesh.coord_of(rank);
+        let q = mesh.edge();
+        let vec_chunk = |v: &Tensor| -> Option<Tensor> {
+            (row == 0).then(|| {
+                let n = v.numel();
+                v.reshape(&[1, n])
+                    .block(0, col * (n / q), 1, n / q)
+                    .into_reshape(&[n / q])
+            })
+        };
+        BlockTensors {
+            ln1_g: vec_chunk(&self.ln1_g),
+            ln1_b: vec_chunk(&self.ln1_b),
+            w_qkv: Layout2D::shard_of(mesh, rank, &self.w_qkv),
+            b_qkv: vec_chunk(&self.b_qkv),
+            w_proj: Layout2D::shard_of(mesh, rank, &self.w_proj),
+            b_proj: vec_chunk(&self.b_proj),
+            ln2_g: vec_chunk(&self.ln2_g),
+            ln2_b: vec_chunk(&self.ln2_b),
+            w_fc1: Layout2D::shard_of(mesh, rank, &self.w_fc1),
+            b_fc1: vec_chunk(&self.b_fc1),
+            w_fc2: Layout2D::shard_of(mesh, rank, &self.w_fc2),
+            b_fc2: vec_chunk(&self.b_fc2),
+        }
+    }
+
+    /// 3-D sharding under block-entry directions `d0` (paper §3.1.1/Fig. 5):
+    /// weights in `Layout3D::weight` of their layer's directions, vectors on
+    /// the diagonal of their layer's *output* directions.
+    pub fn to_threed(&self, cube: &Cube, rank: usize, d0: Dirs) -> BlockTensors {
+        let d1 = d0.swapped();
+        let coord = cube.coord_of(rank);
+        let wl0 = Layout3D::weight(d0);
+        let wl1 = Layout3D::weight(d1);
+        let diag0 = DiagVec3D::for_dirs(d0);
+        let diag1 = DiagVec3D::for_dirs(d1);
+        BlockTensors {
+            ln1_g: diag0.shard_of(cube, coord, &self.ln1_g),
+            ln1_b: diag0.shard_of(cube, coord, &self.ln1_b),
+            w_qkv: wl0.shard_of(cube, coord, &self.w_qkv),
+            b_qkv: diag1.shard_of(cube, coord, &self.b_qkv),
+            w_proj: wl1.shard_of(cube, coord, &self.w_proj),
+            b_proj: diag0.shard_of(cube, coord, &self.b_proj),
+            ln2_g: diag0.shard_of(cube, coord, &self.ln2_g),
+            ln2_b: diag0.shard_of(cube, coord, &self.ln2_b),
+            w_fc1: wl0.shard_of(cube, coord, &self.w_fc1),
+            b_fc1: diag1.shard_of(cube, coord, &self.b_fc1),
+            w_fc2: wl1.shard_of(cube, coord, &self.w_fc2),
+            b_fc2: diag0.shard_of(cube, coord, &self.b_fc2),
+        }
+    }
+}
+
+/// Deterministic global parameters for the whole core (all blocks).
+pub fn init_dense_blocks(cfg: &ModelConfig, seed: u64) -> Vec<DenseBlock> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..cfg.layers).map(|_| DenseBlock::init(cfg, &mut rng)).collect()
+}
+
+/// Per-rank execution environment: which parallelism, with its topology
+/// context. The 3-D variant carries the block-entry directions.
+pub enum ParEnv {
+    Seq,
+    OneD(Ctx1D),
+    TwoD(Ctx2D),
+    ThreeD(Ctx3D, Dirs),
+}
+
+impl ParEnv {
+    pub fn new(par: Parallelism, edge: usize, rank: usize) -> ParEnv {
+        match par {
+            Parallelism::Seq => ParEnv::Seq,
+            Parallelism::OneD => ParEnv::OneD(Ctx1D::new(edge, rank)),
+            Parallelism::TwoD => ParEnv::TwoD(Ctx2D::new(Mesh::new(edge), rank)),
+            Parallelism::ThreeD => {
+                ParEnv::ThreeD(Ctx3D::new(Cube::new(edge), rank), Dirs::canonical())
+            }
+        }
+    }
+
+    pub fn kind(&self) -> Parallelism {
+        match self {
+            ParEnv::Seq => Parallelism::Seq,
+            ParEnv::OneD(_) => Parallelism::OneD,
+            ParEnv::TwoD(_) => Parallelism::TwoD,
+            ParEnv::ThreeD(..) => Parallelism::ThreeD,
+        }
+    }
+
+    /// Shard the global dense blocks for this rank.
+    pub fn shard_blocks(&self, dense: &[DenseBlock], rank: usize) -> Vec<BlockTensors> {
+        dense
+            .iter()
+            .map(|b| match self {
+                ParEnv::Seq => b.to_seq(),
+                ParEnv::OneD(ctx) => b.to_oned(ctx.world(), rank),
+                ParEnv::TwoD(ctx) => b.to_twod(&ctx.mesh, rank),
+                ParEnv::ThreeD(ctx, d0) => b.to_threed(&ctx.cube, rank, *d0),
+            })
+            .collect()
+    }
+
+    /// This rank's shard of a global `(rows, hidden)` activation.
+    pub fn scatter_activation(&self, global: &Tensor, rank: usize) -> Tensor {
+        match self {
+            ParEnv::Seq | ParEnv::OneD(_) => global.clone(),
+            ParEnv::TwoD(ctx) => Layout2D::shard_of(&ctx.mesh, rank, global),
+            ParEnv::ThreeD(ctx, d0) => {
+                Layout3D::input(*d0).shard_of(&ctx.cube, ctx.cube.coord_of(rank), global)
+            }
+        }
+    }
+
+    /// Reassemble the global activation on every rank (one all-gather over
+    /// the world; only used at the model boundary — embedding/head — which
+    /// the paper excludes from the parallelized region).
+    pub fn gather_activation(
+        &self,
+        ep: &mut Endpoint,
+        local: &Tensor,
+        rows: usize,
+        cols: usize,
+    ) -> Tensor {
+        match self {
+            ParEnv::Seq | ParEnv::OneD(_) => local.clone(),
+            ParEnv::TwoD(ctx) => {
+                let world: Vec<usize> = (0..ctx.mesh.size()).collect();
+                let parts = crate::collectives::all_gather(ep, &world, local);
+                Layout2D::gather(&ctx.mesh, &parts, rows, cols)
+            }
+            ParEnv::ThreeD(ctx, d0) => {
+                let world: Vec<usize> = (0..ctx.cube.size()).collect();
+                let parts = crate::collectives::all_gather(ep, &world, local);
+                Layout3D::input(*d0).gather(&ctx.cube, &parts, rows, cols)
+            }
+        }
+    }
+
+    /// Number of attention heads this rank computes locally.
+    pub fn local_heads(&self, cfg: &ModelConfig) -> usize {
+        match self {
+            ParEnv::Seq => cfg.heads,
+            ParEnv::OneD(ctx) => cfg.heads / ctx.world(),
+            ParEnv::TwoD(ctx) => cfg.heads / ctx.q(),
+            ParEnv::ThreeD(ctx, _) => cfg.heads / ctx.p(),
+        }
+    }
+}
+
+/// Shape-only (phantom) block parameters for this rank — the timing path
+/// used by the benchmark harness at paper scale, where materializing
+/// hidden-8192 weights would be pointless. Shapes and vector ownership are
+/// identical to the materialized sharding.
+pub fn phantom_block(env: &ParEnv, cfg: &ModelConfig, rank: usize) -> BlockTensors {
+    let h = cfg.hidden;
+    let f = cfg.ffn;
+    // (w_qkv, b_qkv, w_proj, b_proj, w_fc1, b_fc1, w_fc2, b_fc2, ln owner?)
+    match env {
+        ParEnv::Seq => BlockTensors {
+            ln1_g: Some(Tensor::phantom(&[h])),
+            ln1_b: Some(Tensor::phantom(&[h])),
+            w_qkv: Tensor::phantom(&[h, 3 * h]),
+            b_qkv: Some(Tensor::phantom(&[3 * h])),
+            w_proj: Tensor::phantom(&[h, h]),
+            b_proj: Some(Tensor::phantom(&[h])),
+            ln2_g: Some(Tensor::phantom(&[h])),
+            ln2_b: Some(Tensor::phantom(&[h])),
+            w_fc1: Tensor::phantom(&[h, f]),
+            b_fc1: Some(Tensor::phantom(&[f])),
+            w_fc2: Tensor::phantom(&[f, h]),
+            b_fc2: Some(Tensor::phantom(&[h])),
+        },
+        ParEnv::OneD(ctx) => {
+            let w = ctx.world();
+            BlockTensors {
+                ln1_g: Some(Tensor::phantom(&[h])),
+                ln1_b: Some(Tensor::phantom(&[h])),
+                w_qkv: Tensor::phantom(&[h, 3 * h / w]),
+                b_qkv: Some(Tensor::phantom(&[3 * h / w])),
+                w_proj: Tensor::phantom(&[h / w, h]),
+                b_proj: Some(Tensor::phantom(&[h])),
+                ln2_g: Some(Tensor::phantom(&[h])),
+                ln2_b: Some(Tensor::phantom(&[h])),
+                w_fc1: Tensor::phantom(&[h, f / w]),
+                b_fc1: Some(Tensor::phantom(&[f / w])),
+                w_fc2: Tensor::phantom(&[f / w, h]),
+                b_fc2: Some(Tensor::phantom(&[h])),
+            }
+        }
+        ParEnv::TwoD(ctx) => {
+            let q = ctx.q();
+            let own = ctx.row == 0;
+            let vec = |n: usize| own.then(|| Tensor::phantom(&[n / q]));
+            BlockTensors {
+                ln1_g: vec(h),
+                ln1_b: vec(h),
+                w_qkv: Tensor::phantom(&[h / q, 3 * h / q]),
+                b_qkv: vec(3 * h),
+                w_proj: Tensor::phantom(&[h / q, h / q]),
+                b_proj: vec(h),
+                ln2_g: vec(h),
+                ln2_b: vec(h),
+                w_fc1: Tensor::phantom(&[h / q, f / q]),
+                b_fc1: vec(3 * h).map(|_| Tensor::phantom(&[f / q])),
+                w_fc2: Tensor::phantom(&[f / q, h / q]),
+                b_fc2: vec(h),
+            }
+        }
+        ParEnv::ThreeD(ctx, d0) => {
+            let p = ctx.p();
+            let d1 = d0.swapped();
+            let coord = ctx.cube.coord_of(rank);
+            let diag0 = DiagVec3D::for_dirs(*d0);
+            let diag1 = DiagVec3D::for_dirs(d1);
+            let vec = |diag: &DiagVec3D, n: usize| {
+                diag.owns(coord).then(|| Tensor::phantom(&[n / (p * p)]))
+            };
+            let wshape = |dirs: Dirs, rows: usize, cols: usize| {
+                let (r, c) = Layout3D::weight(dirs).shard_shape(p, rows, cols);
+                Tensor::phantom(&[r, c])
+            };
+            BlockTensors {
+                ln1_g: vec(&diag0, h),
+                ln1_b: vec(&diag0, h),
+                w_qkv: wshape(*d0, h, 3 * h),
+                b_qkv: vec(&diag1, 3 * h),
+                w_proj: wshape(d1, h, h),
+                b_proj: vec(&diag0, h),
+                ln2_g: vec(&diag0, h),
+                ln2_b: vec(&diag0, h),
+                w_fc1: wshape(*d0, h, f),
+                b_fc1: vec(&diag1, f),
+                w_fc2: wshape(d1, f, h),
+                b_fc2: vec(&diag0, h),
+            }
+        }
+    }
+}
+
+/// Shape of this rank's activation shard for a global `(rows, hidden)`.
+pub fn local_activation_shape(env: &ParEnv, rows: usize, hidden: usize) -> (usize, usize) {
+    match env {
+        ParEnv::Seq | ParEnv::OneD(_) => (rows, hidden),
+        ParEnv::TwoD(ctx) => (rows / ctx.q(), hidden / ctx.q()),
+        ParEnv::ThreeD(ctx, _) => {
+            let p = ctx.p();
+            (rows / (p * p), hidden / p)
+        }
+    }
+}
+
+/// Per-block forward cache (local shards only).
+pub struct BlockCache {
+    pub x: Tensor,
+    pub xhat1: Tensor,
+    pub istd1: Tensor,
+    pub ln1: Tensor,
+    pub attn: attention::AttnCache,
+    pub attn_out: Tensor,
+    pub xa: Tensor,
+    pub xhat2: Tensor,
+    pub istd2: Tensor,
+    pub ln2: Tensor,
+    pub fc1_pre: Tensor,
+    pub fc1_act: Tensor,
+}
+
+/// Dispatch: one transformer block forward on this rank's shard.
+pub fn block_fwd(
+    ep: &mut Endpoint,
+    env: &ParEnv,
+    p: &BlockTensors,
+    x: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, BlockCache) {
+    match env {
+        ParEnv::Seq => seq::block_fwd(ep, p, x, cfg),
+        ParEnv::OneD(ctx) => oned::block_fwd(ep, ctx, p, x, cfg),
+        ParEnv::TwoD(ctx) => twod::block_fwd(ep, ctx, p, x, cfg),
+        ParEnv::ThreeD(ctx, d0) => threed::block_fwd(ep, ctx, p, x, cfg, *d0),
+    }
+}
+
+/// Dispatch: block backward; returns `(dx, grads)`.
+pub fn block_bwd(
+    ep: &mut Endpoint,
+    env: &ParEnv,
+    p: &BlockTensors,
+    cache: &BlockCache,
+    dy: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, BlockTensors) {
+    match env {
+        ParEnv::Seq => seq::block_bwd(ep, p, cache, dy, cfg),
+        ParEnv::OneD(ctx) => oned::block_bwd(ep, ctx, p, cache, dy, cfg),
+        ParEnv::TwoD(ctx) => twod::block_bwd(ep, ctx, p, cache, dy, cfg),
+        ParEnv::ThreeD(ctx, d0) => threed::block_bwd(ep, ctx, p, cache, dy, cfg, *d0),
+    }
+}
+
+/// Full core forward: all blocks in sequence.
+pub fn core_fwd(
+    ep: &mut Endpoint,
+    env: &ParEnv,
+    blocks: &[BlockTensors],
+    x: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, Vec<BlockCache>) {
+    let mut cur = x.clone();
+    let mut caches = Vec::with_capacity(blocks.len());
+    for p in blocks {
+        let (y, cache) = block_fwd(ep, env, p, &cur, cfg);
+        caches.push(cache);
+        cur = y;
+    }
+    (cur, caches)
+}
+
+/// Full core backward: returns `(dx, per-block grads)`.
+pub fn core_bwd(
+    ep: &mut Endpoint,
+    env: &ParEnv,
+    blocks: &[BlockTensors],
+    caches: &[BlockCache],
+    dy: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, Vec<BlockTensors>) {
+    assert_eq!(blocks.len(), caches.len());
+    let mut grads = Vec::with_capacity(blocks.len());
+    let mut cur = dy.clone();
+    for (p, cache) in blocks.iter().zip(caches.iter()).rev() {
+        let (dx, g) = block_bwd(ep, env, p, cache, &cur, cfg);
+        grads.push(g);
+        cur = dx;
+    }
+    grads.reverse();
+    (cur, grads)
+}
+
+/// Local layernorm forward used by the Seq/1-D paths (rows fully local).
+/// Returns `(y, xhat, inv_std)`.
+pub fn local_layernorm(
+    x: &Tensor,
+    gamma: &Tensor,
+    beta: &Tensor,
+    eps: f32,
+) -> (Tensor, Tensor, Tensor) {
+    let (rows, cols) = x.dims2();
+    if x.is_phantom() {
+        return (
+            Tensor::phantom(x.shape()),
+            Tensor::phantom(x.shape()),
+            Tensor::phantom(&[rows]),
+        );
+    }
+    let mut xh = x.clone();
+    let mut istd = vec![0.0f32; rows];
+    {
+        let xd = xh.data_mut();
+        for r in 0..rows {
+            let row = &mut xd[r * cols..(r + 1) * cols];
+            let mean = row.iter().sum::<f32>() / cols as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
+            let inv = 1.0 / (var + eps).sqrt();
+            istd[r] = inv;
+            for v in row.iter_mut() {
+                *v = (*v - mean) * inv;
+            }
+        }
+    }
+    let y = xh.mul_row_vector(gamma).add_row_vector(beta);
+    (y, xh, Tensor::from_vec(&[rows], istd))
+}
+
+/// Local layernorm backward: `(dx, dγ, dβ)`.
+pub fn local_layernorm_backward(
+    dy: &Tensor,
+    xhat: &Tensor,
+    inv_std: &Tensor,
+    gamma: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (rows, cols) = dy.dims2();
+    if dy.is_phantom() || xhat.is_phantom() {
+        return (
+            Tensor::phantom(dy.shape()),
+            Tensor::phantom(gamma.shape()),
+            Tensor::phantom(gamma.shape()),
+        );
+    }
+    let dgamma = dy.mul(xhat).sum_rows();
+    let dbeta = dy.sum_rows();
+    let g = dy.mul_row_vector(gamma);
+    let gd = g.data();
+    let xd = xhat.data();
+    let istd = inv_std.data();
+    let n = cols as f32;
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let mut sum_g = 0.0f32;
+        let mut sum_gx = 0.0f32;
+        for c in 0..cols {
+            let idx = r * cols + c;
+            sum_g += gd[idx];
+            sum_gx += gd[idx] * xd[idx];
+        }
+        let c0 = istd[r] / n;
+        for c in 0..cols {
+            let idx = r * cols + c;
+            out[idx] = c0 * (n * gd[idx] - sum_g - xd[idx] * sum_gx);
+        }
+    }
+    (Tensor::from_vec(dy.shape(), out), dgamma, dbeta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::Axis;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::tiny()
+    }
+
+    #[test]
+    fn dense_init_is_deterministic() {
+        let a = init_dense_blocks(&cfg(), 7);
+        let b = init_dense_blocks(&cfg(), 7);
+        assert_eq!(a.len(), 2);
+        assert!(a[0].w_qkv.max_abs_diff(&b[0].w_qkv) == 0.0);
+        assert!(a[1].w_fc2.max_abs_diff(&b[1].w_fc2) == 0.0);
+        let c = init_dense_blocks(&cfg(), 8);
+        assert!(a[0].w_qkv.max_abs_diff(&c[0].w_qkv) > 0.0);
+    }
+
+    #[test]
+    fn sharding_partitions_weights_exactly_3d() {
+        let cfg = cfg();
+        let dense = DenseBlock::init(&cfg, &mut Xoshiro256::seed_from_u64(1));
+        let cube = Cube::new(2);
+        let d0 = Dirs::canonical();
+        let mut total_w_qkv = 0;
+        let mut vec_owners = 0;
+        for r in 0..8 {
+            let s = dense.to_threed(&cube, r, d0);
+            total_w_qkv += s.w_qkv.numel();
+            if s.b_qkv.is_some() {
+                vec_owners += 1;
+            }
+            // Perfect balance: every rank stores exactly 1/P of each matrix.
+            assert_eq!(s.w_qkv.numel(), cfg.hidden * 3 * cfg.hidden / 8);
+        }
+        assert_eq!(total_w_qkv, cfg.hidden * 3 * cfg.hidden);
+        assert_eq!(vec_owners, 4); // p² diagonal owners
+    }
+
+    #[test]
+    fn threed_gather_back_reconstructs_dense() {
+        let cfg = cfg();
+        let dense = DenseBlock::init(&cfg, &mut Xoshiro256::seed_from_u64(2));
+        let cube = Cube::new(2);
+        let d0 = Dirs::canonical();
+        let shards: Vec<BlockTensors> =
+            (0..8).map(|r| dense.to_threed(&cube, r, d0)).collect();
+        let w_shards: Vec<Tensor> = shards.iter().map(|s| s.w_qkv.clone()).collect();
+        let w = Layout3D::weight(d0).gather(&cube, &w_shards, cfg.hidden, 3 * cfg.hidden);
+        assert_eq!(w, dense.w_qkv);
+        // fc2 uses the swapped directions.
+        let w2_shards: Vec<Tensor> = shards.iter().map(|s| s.w_fc2.clone()).collect();
+        let w2 = Layout3D::weight(d0.swapped()).gather(&cube, &w2_shards, cfg.ffn, cfg.hidden);
+        assert_eq!(w2, dense.w_fc2);
+    }
+
+    #[test]
+    fn pairs_mut_yields_all_owned_params() {
+        let cfg = cfg();
+        let dense = DenseBlock::init(&cfg, &mut Xoshiro256::seed_from_u64(3));
+        let mut p = dense.to_seq();
+        let g = dense.to_seq();
+        assert_eq!(p.pairs_mut(&g).len(), 12);
+        let cube = Cube::new(2);
+        let mut p3 = dense.to_threed(&cube, 0, Dirs::canonical());
+        let g3 = dense.to_threed(&cube, 0, Dirs::canonical());
+        // rank 0 = coord (0,0,0): on every diagonal → owns all 8 vectors.
+        assert_eq!(p3.pairs_mut(&g3).len(), 12);
+        let mut p3b = dense.to_threed(&cube, 1, Dirs::canonical());
+        let g3b = dense.to_threed(&cube, 1, Dirs::canonical());
+        // rank 1 = coord (0,0,1): j≠l and l≠j diagonals differ per dirs.
+        assert!(p3b.pairs_mut(&g3b).len() < 12);
+    }
+
+    #[test]
+    fn local_layernorm_normalizes_and_backward_checks() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let x = Tensor::randn(&[6, 16], 1.0, &mut rng);
+        let gamma = Tensor::ones(&[16]);
+        let beta = Tensor::zeros(&[16]);
+        let (y, xhat, istd) = local_layernorm(&x, &gamma, &beta, 1e-5);
+        for r in 0..6 {
+            let mean: f32 = (0..16).map(|c| y.at2(r, c)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-5);
+        }
+        // Finite-difference dx check.
+        let dy = Tensor::randn(&[6, 16], 1.0, &mut rng);
+        let (dx, _, _) = local_layernorm_backward(&dy, &xhat, &istd, &gamma);
+        let h = 1e-2f32;
+        for idx in [0usize, 40, 95] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += h;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= h;
+            let fp = local_layernorm(&xp, &gamma, &beta, 1e-5).0;
+            let fm = local_layernorm(&xm, &gamma, &beta, 1e-5).0;
+            let num = fp.sub(&fm).scale(1.0 / (2.0 * h)).mul(&dy).sum();
+            let ana = dx.data()[idx];
+            assert!((num - ana).abs() < 2e-2 * (1.0 + ana.abs()), "{num} vs {ana}");
+        }
+    }
+
+    #[test]
+    fn par_env_constructors() {
+        let e = ParEnv::new(Parallelism::ThreeD, 2, 5);
+        assert_eq!(e.kind(), Parallelism::ThreeD);
+        assert_eq!(e.local_heads(&cfg()), 2);
+        if let ParEnv::ThreeD(ctx, d0) = e {
+            assert_eq!(ctx.coord, Cube::new(2).coord_of(5));
+            assert_eq!(d0.a, Axis::Y);
+        } else {
+            panic!()
+        }
+        assert_eq!(ParEnv::new(Parallelism::OneD, 4, 1).local_heads(&cfg()), 1);
+    }
+}

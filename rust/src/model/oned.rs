@@ -1,0 +1,116 @@
+//! 1-D (Megatron) transformer block: replicated activations, column- then
+//! row-parallel linears, two all-reduces per block in each direction.
+
+use super::{attention, local_layernorm, local_layernorm_backward, BlockCache, BlockTensors};
+use crate::comm::Endpoint;
+use crate::config::ModelConfig;
+use crate::ops;
+use crate::parallel::oned::{
+    col_linear_bwd, col_linear_fwd, row_linear_bwd, row_linear_fwd, Ctx1D,
+};
+use crate::tensor::Tensor;
+
+fn req<'a>(t: &'a Option<Tensor>, name: &str) -> &'a Tensor {
+    t.as_ref().unwrap_or_else(|| panic!("1-D block missing vector param {name}"))
+}
+
+pub fn block_fwd(
+    ep: &mut Endpoint,
+    ctx: &Ctx1D,
+    p: &BlockTensors,
+    x: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, BlockCache) {
+    let hd = cfg.hidden / cfg.heads;
+    let local_heads = cfg.heads / ctx.world();
+    let (ln1, xhat1, istd1) =
+        local_layernorm(x, req(&p.ln1_g, "ln1_g"), req(&p.ln1_b, "ln1_b"), cfg.eps);
+    ep.charge_memop(4.0 * x.nominal_bytes() as f64);
+
+    // Column-parallel QKV: local output = this rank's heads.
+    let qkv = col_linear_fwd(ep, ctx, &ln1, &p.w_qkv, Some(req(&p.b_qkv, "b_qkv")));
+    let (attn_out, attn) = attention::fwd(ep, &qkv, local_heads, hd, cfg.seq);
+
+    // Row-parallel projection: one all-reduce, replicated output.
+    let proj = row_linear_fwd(ep, ctx, &attn_out, &p.w_proj, Some(req(&p.b_proj, "b_proj")));
+    let xa = x.add(&proj);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+
+    let (ln2, xhat2, istd2) =
+        local_layernorm(&xa, req(&p.ln2_g, "ln2_g"), req(&p.ln2_b, "ln2_b"), cfg.eps);
+    ep.charge_memop(4.0 * x.nominal_bytes() as f64);
+
+    let fc1_pre = col_linear_fwd(ep, ctx, &ln2, &p.w_fc1, Some(req(&p.b_fc1, "b_fc1")));
+    let fc1_act = ops::gelu(&fc1_pre);
+    ep.charge_memop(2.0 * fc1_pre.nominal_bytes() as f64);
+
+    let fc2 = row_linear_fwd(ep, ctx, &fc1_act, &p.w_fc2, Some(req(&p.b_fc2, "b_fc2")));
+    let y = xa.add(&fc2);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+
+    (
+        y,
+        BlockCache {
+            x: x.clone(),
+            xhat1,
+            istd1,
+            ln1,
+            attn,
+            attn_out,
+            xa,
+            xhat2,
+            istd2,
+            ln2,
+            fc1_pre,
+            fc1_act,
+        },
+    )
+}
+
+pub fn block_bwd(
+    ep: &mut Endpoint,
+    ctx: &Ctx1D,
+    p: &BlockTensors,
+    cache: &BlockCache,
+    dy: &Tensor,
+    _cfg: &ModelConfig,
+) -> (Tensor, BlockTensors) {
+    // fc2 (row-parallel) backward: dy replicated.
+    let (d_fc1act, dw_fc2, db_fc2) = row_linear_bwd(ep, ctx, dy, &cache.fc1_act, &p.w_fc2);
+    let d_fc1pre = ops::gelu_backward(&d_fc1act, &cache.fc1_pre);
+    ep.charge_memop(3.0 * d_fc1act.nominal_bytes() as f64);
+    // fc1 (column-parallel) backward: all-reduces d_ln2.
+    let (d_ln2, dw_fc1, db_fc1) = col_linear_bwd(ep, ctx, &d_fc1pre, &cache.ln2, &p.w_fc1);
+
+    let (d_xa_ln, dg2, db2) =
+        local_layernorm_backward(&d_ln2, &cache.xhat2, &cache.istd2, req(&p.ln2_g, "ln2_g"));
+    ep.charge_memop(6.0 * dy.nominal_bytes() as f64);
+    let dxa = dy.add(&d_xa_ln);
+
+    let (d_attn, dw_proj, db_proj) = row_linear_bwd(ep, ctx, &dxa, &cache.attn_out, &p.w_proj);
+    let d_qkv = attention::bwd(ep, &d_attn, &cache.attn);
+    let (d_ln1, dw_qkv, db_qkv) = col_linear_bwd(ep, ctx, &d_qkv, &cache.ln1, &p.w_qkv);
+
+    let (dx_ln, dg1, db1) =
+        local_layernorm_backward(&d_ln1, &cache.xhat1, &cache.istd1, req(&p.ln1_g, "ln1_g"));
+    ep.charge_memop(6.0 * dy.nominal_bytes() as f64);
+    let dx = dxa.add(&dx_ln);
+
+    (
+        dx,
+        BlockTensors {
+            ln1_g: Some(dg1),
+            ln1_b: Some(db1),
+            w_qkv: dw_qkv,
+            b_qkv: Some(db_qkv),
+            w_proj: dw_proj,
+            b_proj: Some(db_proj),
+            ln2_g: Some(dg2),
+            ln2_b: Some(db2),
+            w_fc1: dw_fc1,
+            b_fc1: Some(db_fc1),
+            w_fc2: dw_fc2,
+            b_fc2: Some(db_fc2),
+        },
+    )
+}

@@ -1,0 +1,272 @@
+//! Dense single-device transformer block (the `Seq` reference everything
+//! else is verified against).
+
+use super::{attention, local_layernorm, local_layernorm_backward, BlockCache, BlockTensors};
+use crate::comm::Endpoint;
+use crate::config::ModelConfig;
+use crate::ops;
+use crate::tensor::Tensor;
+
+fn charge_mm(ep: &mut Endpoint, m: usize, n: usize, k: usize) {
+    ep.charge_flops(2.0 * m as f64 * n as f64 * k as f64);
+}
+
+fn req<'a>(t: &'a Option<Tensor>, name: &str) -> &'a Tensor {
+    t.as_ref().unwrap_or_else(|| panic!("Seq block missing vector param {name}"))
+}
+
+/// Forward: pre-LN block `y = x + proj(attn(ln1 x)) + fc2(gelu(fc1(ln2 ·)))`.
+pub fn block_fwd(
+    ep: &mut Endpoint,
+    p: &BlockTensors,
+    x: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, BlockCache) {
+    let (rows, h) = x.dims2();
+    let hd = cfg.hidden / cfg.heads;
+    let (ln1, xhat1, istd1) =
+        local_layernorm(x, req(&p.ln1_g, "ln1_g"), req(&p.ln1_b, "ln1_b"), cfg.eps);
+    ep.charge_memop(4.0 * x.nominal_bytes() as f64);
+
+    charge_mm(ep, rows, 3 * h, h);
+    let qkv = ln1.matmul(&p.w_qkv).add_row_vector(req(&p.b_qkv, "b_qkv"));
+    let (attn_out, attn) = attention::fwd(ep, &qkv, cfg.heads, hd, cfg.seq);
+
+    charge_mm(ep, rows, h, h);
+    let proj = attn_out
+        .matmul(&p.w_proj)
+        .add_row_vector(req(&p.b_proj, "b_proj"));
+    let xa = x.add(&proj);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+
+    let (ln2, xhat2, istd2) =
+        local_layernorm(&xa, req(&p.ln2_g, "ln2_g"), req(&p.ln2_b, "ln2_b"), cfg.eps);
+    ep.charge_memop(4.0 * x.nominal_bytes() as f64);
+
+    charge_mm(ep, rows, cfg.ffn, h);
+    let fc1_pre = ln2.matmul(&p.w_fc1).add_row_vector(req(&p.b_fc1, "b_fc1"));
+    let fc1_act = ops::gelu(&fc1_pre);
+    ep.charge_memop(2.0 * fc1_pre.nominal_bytes() as f64);
+
+    charge_mm(ep, rows, h, cfg.ffn);
+    let fc2 = fc1_act
+        .matmul(&p.w_fc2)
+        .add_row_vector(req(&p.b_fc2, "b_fc2"));
+    let y = xa.add(&fc2);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+
+    (
+        y,
+        BlockCache {
+            x: x.clone(),
+            xhat1,
+            istd1,
+            ln1,
+            attn,
+            attn_out,
+            xa,
+            xhat2,
+            istd2,
+            ln2,
+            fc1_pre,
+            fc1_act,
+        },
+    )
+}
+
+/// Backward; returns `(dx, grads)`.
+pub fn block_bwd(
+    ep: &mut Endpoint,
+    p: &BlockTensors,
+    cache: &BlockCache,
+    dy: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, BlockTensors) {
+    let (rows, h) = dy.dims2();
+    let f = cfg.ffn;
+
+    // y = xa + fc2(gelu(fc1(ln2(xa)))): both residual branches get dy.
+    let db_fc2 = dy.sum_rows();
+    charge_mm(ep, rows, f, h);
+    let d_fc1act = dy.matmul_nt(&p.w_fc2);
+    charge_mm(ep, f, h, rows);
+    let dw_fc2 = cache.fc1_act.matmul_tn(dy);
+
+    let d_fc1pre = ops::gelu_backward(&d_fc1act, &cache.fc1_pre);
+    ep.charge_memop(3.0 * d_fc1act.nominal_bytes() as f64);
+    let db_fc1 = d_fc1pre.sum_rows();
+    charge_mm(ep, rows, h, f);
+    let d_ln2 = d_fc1pre.matmul_nt(&p.w_fc1);
+    charge_mm(ep, h, f, rows);
+    let dw_fc1 = cache.ln2.matmul_tn(&d_fc1pre);
+
+    let (d_xa_ln, dg2, db2) =
+        local_layernorm_backward(&d_ln2, &cache.xhat2, &cache.istd2, req(&p.ln2_g, "ln2_g"));
+    ep.charge_memop(6.0 * dy.nominal_bytes() as f64);
+    let dxa = dy.add(&d_xa_ln);
+
+    // xa = x + proj(attn): both branches get dxa.
+    let db_proj = dxa.sum_rows();
+    charge_mm(ep, rows, h, h);
+    let d_attn = dxa.matmul_nt(&p.w_proj);
+    charge_mm(ep, h, h, rows);
+    let dw_proj = cache.attn_out.matmul_tn(&dxa);
+
+    let d_qkv = attention::bwd(ep, &d_attn, &cache.attn);
+    let db_qkv = d_qkv.sum_rows();
+    charge_mm(ep, rows, h, 3 * h);
+    let d_ln1 = d_qkv.matmul_nt(&p.w_qkv);
+    charge_mm(ep, h, 3 * h, rows);
+    let dw_qkv = cache.ln1.matmul_tn(&d_qkv);
+
+    let (dx_ln, dg1, db1) =
+        local_layernorm_backward(&d_ln1, &cache.xhat1, &cache.istd1, req(&p.ln1_g, "ln1_g"));
+    ep.charge_memop(6.0 * dy.nominal_bytes() as f64);
+    let dx = dxa.add(&dx_ln);
+
+    (
+        dx,
+        BlockTensors {
+            ln1_g: Some(dg1),
+            ln1_b: Some(db1),
+            w_qkv: dw_qkv,
+            b_qkv: Some(db_qkv),
+            w_proj: dw_proj,
+            b_proj: Some(db_proj),
+            ln2_g: Some(dg2),
+            ln2_b: Some(db2),
+            w_fc1: dw_fc1,
+            b_fc1: Some(db_fc1),
+            w_fc2: dw_fc2,
+            b_fc2: Some(db_fc2),
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+    use crate::model::{init_dense_blocks, DenseBlock};
+    use crate::rng::Xoshiro256;
+    use crate::spmd::run_spmd;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::tiny()
+    }
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Tensor::randn(shape, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let cfg = tiny();
+        let dense = init_dense_blocks(&cfg, 1);
+        let x = randt(&[cfg.batch * cfg.seq, cfg.hidden], 2);
+        let x2 = x.clone();
+        let p = dense[0].to_seq();
+        let p2 = p.clone();
+        let y1 = run_spmd(1, NetModel::zero(), move |_, ep| block_fwd(ep, &p, &x, &tiny()).0)
+            .pop()
+            .unwrap();
+        let y2 = run_spmd(1, NetModel::zero(), move |_, ep| block_fwd(ep, &p2, &x2, &tiny()).0)
+            .pop()
+            .unwrap();
+        assert_eq!(y1.shape(), &[cfg.batch * cfg.seq, cfg.hidden]);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn backward_input_gradient_matches_numeric() {
+        let mut cfg = tiny();
+        cfg.seq = 4;
+        cfg.batch = 1;
+        cfg.hidden = 16;
+        cfg.ffn = 32;
+        cfg.heads = 2;
+        cfg.layers = 1;
+        let dense = DenseBlock::init(&cfg, &mut Xoshiro256::seed_from_u64(3));
+        let x0 = randt(&[cfg.seq, cfg.hidden], 4);
+        let dy0 = randt(&[cfg.seq, cfg.hidden], 5);
+
+        let run_f = |xin: Tensor| -> Tensor {
+            let p = dense.to_seq();
+            let cfg = cfg.clone();
+            run_spmd(1, NetModel::zero(), move |_, ep| block_fwd(ep, &p, &xin, &cfg).0)
+                .pop()
+                .unwrap()
+        };
+        let p = dense.to_seq();
+        let cfgc = cfg.clone();
+        let x = x0.clone();
+        let dy = dy0.clone();
+        let dx = run_spmd(1, NetModel::zero(), move |_, ep| {
+            let (_, cache) = block_fwd(ep, &p, &x, &cfgc);
+            block_bwd(ep, &p, &cache, &dy, &cfgc).0
+        })
+        .pop()
+        .unwrap();
+
+        let h = 5e-3f32;
+        for idx in [0usize, 33, 63] {
+            let mut xp = x0.clone();
+            xp.data_mut()[idx] += h;
+            let mut xm = x0.clone();
+            xm.data_mut()[idx] -= h;
+            let num = run_f(xp).sub(&run_f(xm)).scale(1.0 / (2.0 * h)).mul(&dy0).sum();
+            let ana = dx.data()[idx];
+            assert!(
+                (num - ana).abs() < 5e-2 * (1.0 + ana.abs()),
+                "idx {idx}: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn backward_weight_gradient_matches_numeric() {
+        let mut cfg = tiny();
+        cfg.seq = 4;
+        cfg.batch = 1;
+        cfg.hidden = 8;
+        cfg.ffn = 16;
+        cfg.heads = 2;
+        cfg.layers = 1;
+        let dense = DenseBlock::init(&cfg, &mut Xoshiro256::seed_from_u64(6));
+        let x0 = randt(&[cfg.seq, cfg.hidden], 7);
+        let dy0 = randt(&[cfg.seq, cfg.hidden], 8);
+
+        let p0 = dense.to_seq();
+        let cfgc = cfg.clone();
+        let x = x0.clone();
+        let dy = dy0.clone();
+        let grads = run_spmd(1, NetModel::zero(), move |_, ep| {
+            let (_, cache) = block_fwd(ep, &p0, &x, &cfgc);
+            block_bwd(ep, &p0, &cache, &dy, &cfgc).1
+        })
+        .pop()
+        .unwrap();
+
+        // Perturb w_fc1[idx] and check dL = <grad, dW> numerically.
+        let h = 5e-3f32;
+        for idx in [0usize, 50, 127] {
+            let run_with = |delta: f32| -> Tensor {
+                let mut d2 = dense.clone();
+                d2.w_fc1.data_mut()[idx] += delta;
+                let p = d2.to_seq();
+                let x = x0.clone();
+                let cfg = cfg.clone();
+                run_spmd(1, NetModel::zero(), move |_, ep| block_fwd(ep, &p, &x, &cfg).0)
+                    .pop()
+                    .unwrap()
+            };
+            let num = run_with(h).sub(&run_with(-h)).scale(1.0 / (2.0 * h)).mul(&dy0).sum();
+            let ana = grads.w_fc1.data()[idx];
+            assert!(
+                (num - ana).abs() < 5e-2 * (1.0 + ana.abs()),
+                "w_fc1[{idx}]: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! 3-D transformer block — the paper's §3.2, built from Algorithms 1–8.
+//!
+//! Directions: the block receives its input in `Layout3D::input(d0)`. Each
+//! linear layer (Algorithm 1 + 7) flips the activation directions
+//! `d0 ↔ d1 = d0.swapped()`; with exactly two linears per residual branch,
+//! both branch outputs land back in `d0`, so the residual adds are local
+//! and blocks stack with a constant layout — the paper's "we only need to
+//! exchange the input and output direction after the first linear layer of
+//! both Self-Attention and MLP blocks".
+//!
+//! Biases live on the diagonal of their layer's *output* directions
+//! (Figure 5); layernorm γ/β on the diagonal of `d0`.
+
+use super::{attention, BlockCache, BlockTensors};
+use crate::comm::Endpoint;
+use crate::config::ModelConfig;
+use crate::dist::Dirs;
+use crate::ops;
+use crate::parallel::threed::{
+    add_vec_backward, layernorm, layernorm_backward, mm_nn, mm_nn_backward, vec_op, Ctx3D,
+};
+use crate::tensor::Tensor;
+
+pub fn block_fwd(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    p: &BlockTensors,
+    x: &Tensor,
+    cfg: &ModelConfig,
+    d0: Dirs,
+) -> (Tensor, BlockCache) {
+    let d1 = d0.swapped();
+    let hd = cfg.hidden / cfg.heads;
+    let local_heads = cfg.heads / ctx.p();
+
+    // LN1 (γ/β diagonal vectors under d0).
+    let (ln1, xhat1, istd1) = layernorm(
+        ep, ctx, x, p.ln1_g.as_ref(), p.ln1_b.as_ref(), d0, cfg.eps, cfg.hidden,
+    );
+
+    // QKV linear: Algorithm 1 under d0, bias via Algorithm 7 under d1.
+    let qkv_mm = mm_nn(ep, ctx, &ln1, &p.w_qkv, d0);
+    let qkv = vec_op(ep, ctx, &qkv_mm, p.b_qkv.as_ref(), d1, false);
+
+    // Attention: rank-local (complete heads × complete sequences).
+    let (attn_out, attn) = attention::fwd(ep, &qkv, local_heads, hd, cfg.seq);
+
+    // Projection: Algorithm 1 under d1 → back to d0.
+    let proj_mm = mm_nn(ep, ctx, &attn_out, &p.w_proj, d1);
+    let proj = vec_op(ep, ctx, &proj_mm, p.b_proj.as_ref(), d0, false);
+    let xa = x.add(&proj);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+
+    // LN2.
+    let (ln2, xhat2, istd2) = layernorm(
+        ep, ctx, &xa, p.ln2_g.as_ref(), p.ln2_b.as_ref(), d0, cfg.eps, cfg.hidden,
+    );
+
+    // MLP: fc1 under d0, gelu local, fc2 under d1 → back to d0.
+    let fc1_mm = mm_nn(ep, ctx, &ln2, &p.w_fc1, d0);
+    let fc1_pre = vec_op(ep, ctx, &fc1_mm, p.b_fc1.as_ref(), d1, false);
+    let fc1_act = ops::gelu(&fc1_pre);
+    ep.charge_memop(2.0 * fc1_pre.nominal_bytes() as f64);
+
+    let fc2_mm = mm_nn(ep, ctx, &fc1_act, &p.w_fc2, d1);
+    let fc2 = vec_op(ep, ctx, &fc2_mm, p.b_fc2.as_ref(), d0, false);
+    let y = xa.add(&fc2);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+
+    (
+        y,
+        BlockCache {
+            x: x.clone(),
+            xhat1,
+            istd1,
+            ln1,
+            attn,
+            attn_out,
+            xa,
+            xhat2,
+            istd2,
+            ln2,
+            fc1_pre,
+            fc1_act,
+        },
+    )
+}
+
+pub fn block_bwd(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    p: &BlockTensors,
+    cache: &BlockCache,
+    dy: &Tensor,
+    cfg: &ModelConfig,
+    d0: Dirs,
+) -> (Tensor, BlockTensors) {
+    let d1 = d0.swapped();
+
+    // fc2 bias (Algorithm 8 under d0) then matmul backward (Algorithm 2
+    // under d1: fc2 ran with dirs d1).
+    let (d_fc2mm, db_fc2) = add_vec_backward(ep, ctx, dy, d0);
+    let (d_fc1act, dw_fc2) =
+        mm_nn_backward(ep, ctx, &d_fc2mm, &cache.fc1_act, &p.w_fc2, d1);
+
+    let d_fc1pre = ops::gelu_backward(&d_fc1act, &cache.fc1_pre);
+    ep.charge_memop(3.0 * d_fc1act.nominal_bytes() as f64);
+
+    let (d_fc1mm, db_fc1) = add_vec_backward(ep, ctx, &d_fc1pre, d1);
+    let (d_ln2, dw_fc1) = mm_nn_backward(ep, ctx, &d_fc1mm, &cache.ln2, &p.w_fc1, d0);
+
+    let (d_xa_ln, dg2, db2) = layernorm_backward(
+        ep, ctx, &d_ln2, &cache.xhat2, &cache.istd2, p.ln2_g.as_ref(), d0, cfg.hidden,
+    );
+    let dxa = dy.add(&d_xa_ln);
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+
+    // Attention branch.
+    let (d_projmm, db_proj) = add_vec_backward(ep, ctx, &dxa, d0);
+    let (d_attn, dw_proj) =
+        mm_nn_backward(ep, ctx, &d_projmm, &cache.attn_out, &p.w_proj, d1);
+
+    let d_qkv = attention::bwd(ep, &d_attn, &cache.attn);
+
+    let (d_qkvmm, db_qkv) = add_vec_backward(ep, ctx, &d_qkv, d1);
+    let (d_ln1, dw_qkv) = mm_nn_backward(ep, ctx, &d_qkvmm, &cache.ln1, &p.w_qkv, d0);
+
+    let (dx_ln, dg1, db1) = layernorm_backward(
+        ep, ctx, &d_ln1, &cache.xhat1, &cache.istd1, p.ln1_g.as_ref(), d0, cfg.hidden,
+    );
+    let dx = dxa.add(&dx_ln);
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+
+    (
+        dx,
+        BlockTensors {
+            ln1_g: dg1,
+            ln1_b: db1,
+            w_qkv: dw_qkv,
+            b_qkv: db_qkv,
+            w_proj: dw_proj,
+            b_proj: db_proj,
+            ln2_g: dg2,
+            ln2_b: db2,
+            w_fc1: dw_fc1,
+            b_fc1: db_fc1,
+            w_fc2: dw_fc2,
+            b_fc2: db_fc2,
+        },
+    )
+}

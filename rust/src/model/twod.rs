@@ -1,0 +1,110 @@
+//! 2-D (Optimus/SUMMA) transformer block: everything block-distributed on
+//! the `q × q` mesh; linears run as SUMMA, layernorm all-reduces row stats
+//! across mesh rows, attention is rank-local (complete heads × complete
+//! sequences per block).
+
+use super::{attention, BlockCache, BlockTensors};
+use crate::comm::Endpoint;
+use crate::config::ModelConfig;
+use crate::ops;
+use crate::parallel::twod::{layernorm, layernorm_backward, linear_bwd, linear_fwd, Ctx2D};
+use crate::tensor::Tensor;
+
+pub fn block_fwd(
+    ep: &mut Endpoint,
+    ctx: &Ctx2D,
+    p: &BlockTensors,
+    x: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, BlockCache) {
+    let hd = cfg.hidden / cfg.heads;
+    let local_heads = cfg.heads / ctx.q();
+    let (ln1, xhat1, istd1) = layernorm(
+        ep, ctx, x, p.ln1_g.as_ref(), p.ln1_b.as_ref(), cfg.eps, cfg.hidden,
+    );
+
+    let qkv = linear_fwd(ep, ctx, &ln1, &p.w_qkv, p.b_qkv.as_ref(), true);
+    let (attn_out, attn) = attention::fwd(ep, &qkv, local_heads, hd, cfg.seq);
+
+    let proj = linear_fwd(ep, ctx, &attn_out, &p.w_proj, p.b_proj.as_ref(), true);
+    let xa = x.add(&proj);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+
+    let (ln2, xhat2, istd2) = layernorm(
+        ep, ctx, &xa, p.ln2_g.as_ref(), p.ln2_b.as_ref(), cfg.eps, cfg.hidden,
+    );
+
+    let fc1_pre = linear_fwd(ep, ctx, &ln2, &p.w_fc1, p.b_fc1.as_ref(), true);
+    let fc1_act = ops::gelu(&fc1_pre);
+    ep.charge_memop(2.0 * fc1_pre.nominal_bytes() as f64);
+
+    let fc2 = linear_fwd(ep, ctx, &fc1_act, &p.w_fc2, p.b_fc2.as_ref(), true);
+    let y = xa.add(&fc2);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+
+    (
+        y,
+        BlockCache {
+            x: x.clone(),
+            xhat1,
+            istd1,
+            ln1,
+            attn,
+            attn_out,
+            xa,
+            xhat2,
+            istd2,
+            ln2,
+            fc1_pre,
+            fc1_act,
+        },
+    )
+}
+
+pub fn block_bwd(
+    ep: &mut Endpoint,
+    ctx: &Ctx2D,
+    p: &BlockTensors,
+    cache: &BlockCache,
+    dy: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, BlockTensors) {
+    let (d_fc1act, dw_fc2, db_fc2) = linear_bwd(ep, ctx, dy, &cache.fc1_act, &p.w_fc2);
+    let d_fc1pre = ops::gelu_backward(&d_fc1act, &cache.fc1_pre);
+    ep.charge_memop(3.0 * d_fc1act.nominal_bytes() as f64);
+    let (d_ln2, dw_fc1, db_fc1) = linear_bwd(ep, ctx, &d_fc1pre, &cache.ln2, &p.w_fc1);
+
+    let (d_xa_ln, dg2, db2) = layernorm_backward(
+        ep, ctx, &d_ln2, &cache.xhat2, &cache.istd2, p.ln2_g.as_ref(), cfg.eps, cfg.hidden,
+    );
+    let dxa = dy.add(&d_xa_ln);
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+
+    let (d_attn, dw_proj, db_proj) = linear_bwd(ep, ctx, &dxa, &cache.attn_out, &p.w_proj);
+    let d_qkv = attention::bwd(ep, &d_attn, &cache.attn);
+    let (d_ln1, dw_qkv, db_qkv) = linear_bwd(ep, ctx, &d_qkv, &cache.ln1, &p.w_qkv);
+
+    let (dx_ln, dg1, db1) = layernorm_backward(
+        ep, ctx, &d_ln1, &cache.xhat1, &cache.istd1, p.ln1_g.as_ref(), cfg.eps, cfg.hidden,
+    );
+    let dx = dxa.add(&dx_ln);
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+
+    (
+        dx,
+        BlockTensors {
+            ln1_g: dg1,
+            ln1_b: db1,
+            w_qkv: dw_qkv,
+            b_qkv: db_qkv,
+            w_proj: dw_proj,
+            b_proj: db_proj,
+            ln2_g: dg2,
+            ln2_b: db2,
+            w_fc1: dw_fc1,
+            b_fc1: db_fc1,
+            w_fc2: dw_fc2,
+            b_fc2: db_fc2,
+        },
+    )
+}

@@ -1,0 +1,327 @@
+//! Local (per-shard) activation operations and their VJPs.
+//!
+//! These run shard-wise on every rank with no communication — the paper's
+//! observation that "activation operations can be independently executed in
+//! parallel" (§3.1) is what makes the balanced 3-D storage pay off: because
+//! every rank holds exactly `1/P` of each activation, the elementwise work
+//! is also perfectly balanced.
+//!
+//! All functions propagate phantom tensors (shape-only) untouched so the
+//! paper-scale benches flow through the identical code path.
+
+use crate::tensor::Tensor;
+
+/// Tanh-approximation GeLU (the BERT/Megatron variant):
+/// `gelu(x) = 0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`.
+pub fn gelu(x: &Tensor) -> Tensor {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    x.map(|v| 0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh()))
+}
+
+/// VJP of [`gelu`]: `dx = dy · gelu'(x)`.
+pub fn gelu_backward(dy: &Tensor, x: &Tensor) -> Tensor {
+    const C: f32 = 0.797_884_6;
+    let dgelu = x.map(|v| {
+        let inner = C * (v + 0.044715 * v * v * v);
+        let t = inner.tanh();
+        let sech2 = 1.0 - t * t;
+        0.5 * (1.0 + t) + 0.5 * v * sech2 * C * (1.0 + 3.0 * 0.044715 * v * v)
+    });
+    dy.mul(&dgelu)
+}
+
+/// Row-wise softmax of a rank-2 tensor (numerically stabilized).
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    let (r, c) = x.dims2();
+    let Some(d) = x.try_data() else {
+        return Tensor::phantom(x.shape());
+    };
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        let row = &d[i * c..(i + 1) * c];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for j in 0..c {
+            let e = (row[j] - m).exp();
+            out[i * c + j] = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for j in 0..c {
+            out[i * c + j] *= inv;
+        }
+    }
+    Tensor::from_vec(x.shape(), out)
+}
+
+/// VJP of row-softmax: `dx_i = s_i ⊙ (dy_i − ⟨dy_i, s_i⟩)` per row, where
+/// `s` is the saved softmax output.
+pub fn softmax_rows_backward(dy: &Tensor, s: &Tensor) -> Tensor {
+    assert_eq!(dy.shape(), s.shape());
+    let (r, c) = dy.dims2();
+    let (Some(dyd), Some(sd)) = (dy.try_data(), s.try_data()) else {
+        return Tensor::phantom(dy.shape());
+    };
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        let dyr = &dyd[i * c..(i + 1) * c];
+        let sr = &sd[i * c..(i + 1) * c];
+        let dot: f32 = dyr.iter().zip(sr.iter()).map(|(&a, &b)| a * b).sum();
+        for j in 0..c {
+            out[i * c + j] = sr[j] * (dyr[j] - dot);
+        }
+    }
+    Tensor::from_vec(dy.shape(), out)
+}
+
+/// Causal (lower-triangular) mask applied in-place semantics: entries with
+/// `col > row (mod seq)` set to −1e9 before softmax. `x` is `(rows, seq)`
+/// where each chunk of `seq` rows is one attention matrix.
+pub fn causal_mask(x: &Tensor, seq: usize) -> Tensor {
+    let (r, c) = x.dims2();
+    assert_eq!(c, seq, "mask expects (…, seq) scores");
+    let Some(d) = x.try_data() else {
+        return Tensor::phantom(x.shape());
+    };
+    let mut out = d.to_vec();
+    for i in 0..r {
+        let q_pos = i % seq;
+        for j in (q_pos + 1)..seq {
+            out[i * c + j] = -1e9;
+        }
+    }
+    Tensor::from_vec(x.shape(), out)
+}
+
+/// Zero out gradient entries that were masked in the forward pass.
+pub fn causal_mask_backward(dy: &Tensor, seq: usize) -> Tensor {
+    let (r, c) = dy.dims2();
+    assert_eq!(c, seq);
+    let Some(d) = dy.try_data() else {
+        return Tensor::phantom(dy.shape());
+    };
+    let mut out = d.to_vec();
+    for i in 0..r {
+        let q_pos = i % seq;
+        for j in (q_pos + 1)..seq {
+            out[i * c + j] = 0.0;
+        }
+    }
+    Tensor::from_vec(dy.shape(), out)
+}
+
+/// Fused softmax-cross-entropy over logit rows. `targets[i]` is the class
+/// index for row `i`. Returns `(mean_loss, dlogits)` — the backward is fused
+/// because `dlogits = (softmax − onehot)/rows` falls out of the forward.
+pub fn cross_entropy(logits: &Tensor, targets: &[usize]) -> (f32, Tensor) {
+    let (r, c) = logits.dims2();
+    assert_eq!(r, targets.len());
+    if logits.is_phantom() {
+        return (0.0, Tensor::phantom(logits.shape()));
+    }
+    let probs = softmax_rows(logits);
+    let pd = probs.data();
+    let mut loss = 0.0f64;
+    let mut grad = pd.to_vec();
+    for i in 0..r {
+        let t = targets[i];
+        assert!(t < c, "target {t} out of range for {c} classes");
+        loss += -(pd[i * c + t].max(1e-12) as f64).ln();
+        grad[i * c + t] -= 1.0;
+    }
+    let scale = 1.0 / r as f32;
+    for g in grad.iter_mut() {
+        *g *= scale;
+    }
+    ((loss / r as f64) as f32, Tensor::from_vec(logits.shape(), grad))
+}
+
+/// Deterministic dropout (seeded per rank/step by the caller). Returns
+/// `(y, mask)`; backward is `dy ⊙ mask`.
+pub fn dropout(x: &Tensor, rate: f32, rng: &mut crate::rng::Xoshiro256) -> (Tensor, Tensor) {
+    assert!((0.0..1.0).contains(&rate));
+    if rate == 0.0 {
+        return (x.clone(), Tensor::ones(x.shape()));
+    }
+    let keep = 1.0 - rate;
+    let scale = 1.0 / keep;
+    let mask_data: Vec<f32> = (0..x.numel())
+        .map(|_| if rng.next_f32() < keep { scale } else { 0.0 })
+        .collect();
+    let mask = Tensor::from_vec(x.shape(), mask_data);
+    if x.is_phantom() {
+        return (Tensor::phantom(x.shape()), mask);
+    }
+    (x.mul(&mask), mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Tensor::randn(shape, 1.0, &mut rng)
+    }
+
+    /// Generic finite-difference VJP check: ⟨num_grad, dy⟩ vs analytic.
+    fn check_grad(
+        f: impl Fn(&Tensor) -> Tensor,
+        grad: impl Fn(&Tensor, &Tensor) -> Tensor,
+        x: &Tensor,
+        dy: &Tensor,
+        tol: f32,
+    ) {
+        let analytic = grad(dy, x);
+        let h = 1e-2f32;
+        for idx in [0usize, x.numel() / 2, x.numel() - 1] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += h;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= h;
+            let num = f(&xp).sub(&f(&xm)).scale(1.0 / (2.0 * h)).mul(dy).sum();
+            let ana = analytic.data()[idx];
+            assert!(
+                (num - ana).abs() < tol * (1.0 + ana.abs()),
+                "idx {idx}: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        let x = Tensor::from_vec(&[3], vec![-1.0, 0.0, 1.0]);
+        let y = gelu(&x);
+        assert!((y.data()[1]).abs() < 1e-7);
+        assert!((y.data()[2] - 0.8412).abs() < 1e-3);
+        assert!((y.data()[0] + 0.1588).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_gradient_matches_numeric() {
+        let x = randt(&[4, 5], 1);
+        let dy = randt(&[4, 5], 2);
+        check_grad(gelu, gelu_backward, &x, &dy, 1e-2);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_shift_invariant() {
+        let x = randt(&[5, 7], 3);
+        let s = softmax_rows(&x);
+        for i in 0..5 {
+            let sum: f32 = (0..7).map(|j| s.at2(i, j)).sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+        let shifted = softmax_rows(&x.map(|v| v + 100.0));
+        assert!(s.max_abs_diff(&shifted) < 1e-5);
+    }
+
+    #[test]
+    fn softmax_gradient_matches_numeric() {
+        let x = randt(&[3, 6], 4);
+        let dy = randt(&[3, 6], 5);
+        let s = softmax_rows(&x);
+        let analytic = softmax_rows_backward(&dy, &s);
+        let h = 1e-2f32;
+        for idx in [0usize, 7, 17] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += h;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= h;
+            let num = softmax_rows(&xp)
+                .sub(&softmax_rows(&xm))
+                .scale(1.0 / (2.0 * h))
+                .mul(&dy)
+                .sum();
+            let ana = analytic.data()[idx];
+            assert!((num - ana).abs() < 1e-2 * (1.0 + ana.abs()));
+        }
+    }
+
+    #[test]
+    fn causal_mask_zeroes_upper_triangle() {
+        let seq = 4;
+        let x = Tensor::ones(&[8, seq]); // two 4x4 attention matrices
+        let m = causal_mask(&x, seq);
+        for block in 0..2 {
+            for i in 0..seq {
+                for j in 0..seq {
+                    let v = m.at2(block * seq + i, j);
+                    if j > i {
+                        assert!(v < -1e8);
+                    } else {
+                        assert_eq!(v, 1.0);
+                    }
+                }
+            }
+        }
+        // backward zeroes the same entries
+        let g = causal_mask_backward(&Tensor::ones(&[8, seq]), seq);
+        assert_eq!(g.at2(0, 3), 0.0);
+        assert_eq!(g.at2(3, 3), 1.0);
+    }
+
+    #[test]
+    fn cross_entropy_perfect_prediction_is_low_loss() {
+        // Huge logit on the target class → loss ≈ 0, grads ≈ 0.
+        let mut logits = Tensor::zeros(&[2, 4]);
+        logits.data_mut()[0 * 4 + 1] = 50.0;
+        logits.data_mut()[1 * 4 + 3] = 50.0;
+        let (loss, grad) = cross_entropy(&logits, &[1, 3]);
+        assert!(loss < 1e-4);
+        assert!(grad.frob_norm() < 1e-4);
+    }
+
+    #[test]
+    fn cross_entropy_uniform_is_log_c() {
+        let logits = Tensor::zeros(&[3, 8]);
+        let (loss, _) = cross_entropy(&logits, &[0, 1, 2]);
+        assert!((loss - (8f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cross_entropy_gradient_matches_numeric() {
+        let x = randt(&[3, 5], 6);
+        let targets = vec![2usize, 0, 4];
+        let (_, grad) = cross_entropy(&x, &targets);
+        let h = 1e-2f32;
+        for idx in [0usize, 7, 14] {
+            let mut xp = x.clone();
+            xp.data_mut()[idx] += h;
+            let mut xm = x.clone();
+            xm.data_mut()[idx] -= h;
+            let (lp, _) = cross_entropy(&xp, &targets);
+            let (lm, _) = cross_entropy(&xm, &targets);
+            let num = (lp - lm) / (2.0 * h);
+            let ana = grad.data()[idx];
+            assert!((num - ana).abs() < 1e-3, "idx {idx}: {num} vs {ana}");
+        }
+    }
+
+    #[test]
+    fn dropout_scales_and_masks() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let x = Tensor::ones(&[100, 10]);
+        let (y, mask) = dropout(&x, 0.3, &mut rng);
+        let kept = y.data().iter().filter(|&&v| v > 0.0).count();
+        // ~70% kept, scaled by 1/0.7.
+        assert!((kept as f32 / 1000.0 - 0.7).abs() < 0.05);
+        for &v in y.data() {
+            assert!(v == 0.0 || (v - 1.0 / 0.7).abs() < 1e-6);
+        }
+        // backward is mask multiplication: dy ⊙ mask recovers y for dy = x.
+        assert_eq!(x.mul(&mask), y);
+    }
+
+    #[test]
+    fn phantom_propagation() {
+        let p = Tensor::phantom(&[3, 4]);
+        assert!(gelu(&p).is_phantom());
+        assert!(softmax_rows(&p).is_phantom());
+        assert!(causal_mask(&p, 4).is_phantom());
+        let (l, g) = cross_entropy(&p, &[0, 1, 2]);
+        assert_eq!(l, 0.0);
+        assert!(g.is_phantom());
+    }
+}

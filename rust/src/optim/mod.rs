@@ -1,0 +1,227 @@
+//! Optimizers over per-rank parameter shards.
+//!
+//! Because every parallelism assigns each parameter shard to exactly one
+//! owner (vectors) or an exclusive shard per rank (matrices) — and
+//! replicated parameters receive bit-identical gradients on every replica —
+//! a purely local optimizer step keeps the distributed model consistent.
+//! This is asserted end-to-end by the cross-parallelism training parity
+//! test in `rust/tests/`.
+
+use crate::config::{OptimizerKind, TrainConfig};
+use crate::tensor::Tensor;
+
+/// Learning-rate schedule: linear warmup then cosine decay to 10%.
+pub fn lr_at(cfg: &TrainConfig, step: usize) -> f32 {
+    let base = cfg.lr;
+    if cfg.warmup > 0 && step < cfg.warmup {
+        return base * (step + 1) as f32 / cfg.warmup as f32;
+    }
+    if cfg.steps <= cfg.warmup {
+        return base;
+    }
+    let t = (step - cfg.warmup) as f32 / (cfg.steps - cfg.warmup).max(1) as f32;
+    let min = 0.1 * base;
+    min + 0.5 * (base - min) * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos())
+}
+
+/// Global-norm gradient clipping over a set of local grads.
+///
+/// NOTE: the norm here is over the *local* shards; in distributed runs the
+/// trainer all-reduces the squared norm first and passes the global value
+/// via `pre_reduced_sq_norm`.
+pub fn clip_grads(grads: &mut [&mut Tensor], max_norm: f32, pre_reduced_sq_norm: Option<f32>) {
+    if max_norm <= 0.0 {
+        return;
+    }
+    let sq: f32 = match pre_reduced_sq_norm {
+        Some(v) => v,
+        None => grads
+            .iter()
+            .map(|g| g.try_data().map_or(0.0, |d| d.iter().map(|&x| x * x).sum::<f32>()))
+            .sum(),
+    };
+    let norm = sq.sqrt();
+    if norm > max_norm {
+        let scale = max_norm / (norm + 1e-6);
+        for g in grads.iter_mut() {
+            if !g.is_phantom() {
+                for v in g.data_mut() {
+                    *v *= scale;
+                }
+            }
+        }
+    }
+}
+
+/// Sum of squared gradient entries (local contribution to the global norm).
+pub fn local_sq_norm(grads: &[&Tensor]) -> f32 {
+    grads
+        .iter()
+        .map(|g| g.try_data().map_or(0.0, |d| d.iter().map(|&x| x * x).sum::<f32>()))
+        .sum()
+}
+
+/// Optimizer state for one ordered parameter list. The parameter order must
+/// be identical every step (it is: `BlockTensors::pairs_mut` is stable).
+pub enum Optimizer {
+    Sgd {
+        momentum: f32,
+        velocity: Vec<Tensor>,
+    },
+    Adam {
+        beta1: f32,
+        beta2: f32,
+        eps: f32,
+        weight_decay: f32,
+        t: u64,
+        m: Vec<Tensor>,
+        v: Vec<Tensor>,
+    },
+}
+
+impl Optimizer {
+    pub fn new(cfg: &TrainConfig, param_shapes: &[Vec<usize>]) -> Optimizer {
+        match cfg.optimizer {
+            OptimizerKind::Sgd => Optimizer::Sgd {
+                momentum: 0.9,
+                velocity: param_shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            },
+            OptimizerKind::Adam => Optimizer::Adam {
+                beta1: cfg.adam_beta1,
+                beta2: cfg.adam_beta2,
+                eps: 1e-8,
+                weight_decay: cfg.weight_decay,
+                t: 0,
+                m: param_shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+                v: param_shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            },
+        }
+    }
+
+    /// Apply one update to `pairs` (param, grad) with learning rate `lr`.
+    pub fn step(&mut self, pairs: &mut [(&mut Tensor, &Tensor)], lr: f32) {
+        match self {
+            Optimizer::Sgd { momentum, velocity } => {
+                assert_eq!(pairs.len(), velocity.len(), "param count changed");
+                for ((p, g), vel) in pairs.iter_mut().zip(velocity.iter_mut()) {
+                    if p.is_phantom() || g.is_phantom() {
+                        continue;
+                    }
+                    let gd = g.data();
+                    let vd = vel.data_mut();
+                    let pd = p.data_mut();
+                    for i in 0..pd.len() {
+                        vd[i] = *momentum * vd[i] + gd[i];
+                        pd[i] -= lr * vd[i];
+                    }
+                }
+            }
+            Optimizer::Adam { beta1, beta2, eps, weight_decay, t, m, v } => {
+                assert_eq!(pairs.len(), m.len(), "param count changed");
+                *t += 1;
+                let b1t = 1.0 - (*beta1).powi(*t as i32);
+                let b2t = 1.0 - (*beta2).powi(*t as i32);
+                for (k, (p, g)) in pairs.iter_mut().enumerate() {
+                    if p.is_phantom() || g.is_phantom() {
+                        continue;
+                    }
+                    let gd = g.data();
+                    let md = m[k].data_mut();
+                    let pd = p.data_mut();
+                    // split borrows: v after m
+                    let vd = v[k].data_mut();
+                    for i in 0..pd.len() {
+                        let gi = gd[i] + *weight_decay * pd[i];
+                        md[i] = *beta1 * md[i] + (1.0 - *beta1) * gi;
+                        vd[i] = *beta2 * vd[i] + (1.0 - *beta2) * gi * gi;
+                        let mhat = md[i] / b1t;
+                        let vhat = vd[i] / b2t;
+                        pd[i] -= lr * mhat / (vhat.sqrt() + *eps);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn quad_loss(p: &Tensor) -> (f32, Tensor) {
+        // L = 0.5‖p − 3‖²; grad = p − 3.
+        let g = p.map(|v| v - 3.0);
+        let l = 0.5 * g.data().iter().map(|&x| x * x).sum::<f32>();
+        (l, g)
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let cfg = TrainConfig { optimizer: OptimizerKind::Sgd, lr: 0.1, ..Default::default() };
+        let mut p = Tensor::zeros(&[4]);
+        let mut opt = Optimizer::new(&cfg, &[vec![4]]);
+        for _ in 0..200 {
+            let (_, g) = quad_loss(&p);
+            opt.step(&mut [(&mut p, &g)], 0.1);
+        }
+        for &v in p.data() {
+            assert!((v - 3.0).abs() < 1e-3, "{v}");
+        }
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let cfg = TrainConfig::default();
+        let mut p = Tensor::zeros(&[4]);
+        let mut opt = Optimizer::new(&cfg, &[vec![4]]);
+        for _ in 0..500 {
+            let (_, g) = quad_loss(&p);
+            opt.step(&mut [(&mut p, &g)], 0.05);
+        }
+        for &v in p.data() {
+            assert!((v - 3.0).abs() < 1e-2, "{v}");
+        }
+    }
+
+    #[test]
+    fn adam_is_deterministic() {
+        let cfg = TrainConfig::default();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let g = Tensor::randn(&[8], 1.0, &mut rng);
+        let mut p1 = Tensor::ones(&[8]);
+        let mut p2 = Tensor::ones(&[8]);
+        let mut o1 = Optimizer::new(&cfg, &[vec![8]]);
+        let mut o2 = Optimizer::new(&cfg, &[vec![8]]);
+        for _ in 0..10 {
+            o1.step(&mut [(&mut p1, &g)], 1e-3);
+            o2.step(&mut [(&mut p2, &g)], 1e-3);
+        }
+        assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let cfg = TrainConfig { lr: 1.0, warmup: 10, steps: 110, ..Default::default() };
+        assert!((lr_at(&cfg, 0) - 0.1).abs() < 1e-6);
+        assert!((lr_at(&cfg, 9) - 1.0).abs() < 1e-6);
+        assert!(lr_at(&cfg, 60) < 1.0);
+        assert!(lr_at(&cfg, 109) >= 0.1 - 1e-6);
+        // Monotone decay after warmup.
+        assert!(lr_at(&cfg, 30) > lr_at(&cfg, 80));
+    }
+
+    #[test]
+    fn clipping_caps_global_norm() {
+        let mut g1 = Tensor::full(&[4], 3.0);
+        let mut g2 = Tensor::full(&[4], 4.0);
+        // ‖g‖ = sqrt(4·9 + 4·16) = 10.
+        clip_grads(&mut [&mut g1, &mut g2], 5.0, None);
+        let sq = g1.data().iter().chain(g2.data()).map(|&x| x * x).sum::<f32>();
+        assert!((sq.sqrt() - 5.0).abs() < 1e-3);
+        // Under the cap: untouched.
+        let mut g3 = Tensor::full(&[2], 0.1);
+        clip_grads(&mut [&mut g3], 5.0, None);
+        assert_eq!(g3, Tensor::full(&[2], 0.1));
+    }
+}

@@ -1,0 +1,10 @@
+//! Tensor-parallel linear algebra: the paper's 3-D algorithms plus the 1-D
+//! (Megatron [17]) and 2-D (Optimus/SUMMA [21]) baselines it compares with.
+//!
+//! Each submodule implements forward *and* backward of the distributed
+//! linear operations used by the Transformer model in [`crate::model`],
+//! verified shard-for-shard against dense references in `rust/tests/`.
+
+pub mod oned;
+pub mod threed;
+pub mod twod;

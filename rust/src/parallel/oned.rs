@@ -1,0 +1,240 @@
+//! 1-D tensor parallelism — the Megatron-LM baseline [17].
+//!
+//! Weights are split along a single dimension across the `P`-rank group;
+//! activations are replicated. A Transformer block pairs a *column-parallel*
+//! linear (no forward communication; the output is column-sharded, so the
+//! following elementwise ops run on shards) with a *row-parallel* linear
+//! (one all-reduce to sum the partial products). Backward mirrors this with
+//! one all-reduce for the input gradient of the column-parallel layer.
+//!
+//! Per-block communication: 2 all-reduces of the full activation forward,
+//! 2 backward — the `O(1)`-in-`P` bandwidth profile the paper's Tables 1–2
+//! show losing to 2-D/3-D at large `P`.
+
+use crate::collectives::all_reduce;
+use crate::comm::Endpoint;
+use crate::tensor::Tensor;
+
+/// Per-rank context: the ordered tensor-parallel group and this rank's
+/// position in it.
+pub struct Ctx1D {
+    pub group: Vec<usize>,
+    pub pos: usize,
+}
+
+impl Ctx1D {
+    pub fn new(world: usize, rank: usize) -> Self {
+        Ctx1D { group: (0..world).collect(), pos: rank }
+    }
+
+    pub fn world(&self) -> usize {
+        self.group.len()
+    }
+}
+
+fn charge_mm(ep: &mut Endpoint, m: usize, n: usize, k: usize) {
+    ep.charge_flops(2.0 * m as f64 * n as f64 * k as f64);
+}
+
+/// Column-parallel linear forward: `Y_i = X·W_i + b_i`.
+///
+/// `x` is replicated `(M, N)`; `w_shard` is the rank's column slice
+/// `(N, K/P)`; `b_shard` its bias slice `(K/P)`. Returns the column shard
+/// `(M, K/P)` of `Y` — no communication.
+pub fn col_linear_fwd(
+    ep: &mut Endpoint,
+    _ctx: &Ctx1D,
+    x: &Tensor,
+    w_shard: &Tensor,
+    b_shard: Option<&Tensor>,
+) -> Tensor {
+    let (m, n) = x.dims2();
+    let k = w_shard.dims2().1;
+    charge_mm(ep, m, k, n);
+    let y = x.matmul(w_shard);
+    match b_shard {
+        Some(b) => {
+            ep.charge_memop(y.nominal_bytes() as f64);
+            y.add_row_vector(b)
+        }
+        None => y,
+    }
+}
+
+/// Column-parallel linear backward. Returns `(dX, dW_i, db_i)`; `dX` is the
+/// full replicated gradient (one all-reduce over the group).
+pub fn col_linear_bwd(
+    ep: &mut Endpoint,
+    ctx: &Ctx1D,
+    dy_shard: &Tensor,
+    x: &Tensor,
+    w_shard: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (m, n) = x.dims2();
+    let k = dy_shard.dims2().1;
+    charge_mm(ep, m, n, k);
+    let dx_partial = dy_shard.matmul_nt(w_shard); // (M, N) partial
+    let dx = all_reduce(ep, &ctx.group, &dx_partial);
+    charge_mm(ep, n, k, m);
+    let dw = x.matmul_tn(dy_shard); // (N, K/P)
+    ep.charge_memop(dy_shard.nominal_bytes() as f64);
+    let db = dy_shard.sum_rows();
+    (dx, dw, db)
+}
+
+/// Row-parallel linear forward: `Y = Σ_i X_i·W_i + b`.
+///
+/// `x_shard` is the rank's column slice `(M, N/P)` of the input (as produced
+/// by a preceding column-parallel layer); `w_shard` the row slice
+/// `(N/P, K)`. One all-reduce; returns the replicated `(M, K)` output.
+pub fn row_linear_fwd(
+    ep: &mut Endpoint,
+    ctx: &Ctx1D,
+    x_shard: &Tensor,
+    w_shard: &Tensor,
+    b: Option<&Tensor>,
+) -> Tensor {
+    let (m, n) = x_shard.dims2();
+    let k = w_shard.dims2().1;
+    charge_mm(ep, m, k, n);
+    let y_partial = x_shard.matmul(w_shard);
+    let y = all_reduce(ep, &ctx.group, &y_partial);
+    match b {
+        Some(b) => {
+            ep.charge_memop(y.nominal_bytes() as f64);
+            y.add_row_vector(b)
+        }
+        None => y,
+    }
+}
+
+/// Row-parallel linear backward. Returns `(dX_i, dW_i, db)`; no collective
+/// needed (`dX_i = dY·W_iᵀ` is local because `dY` is replicated; `db` is the
+/// replicated column-sum every rank computes identically).
+pub fn row_linear_bwd(
+    ep: &mut Endpoint,
+    _ctx: &Ctx1D,
+    dy: &Tensor,
+    x_shard: &Tensor,
+    w_shard: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (m, k) = dy.dims2();
+    let n = w_shard.dims2().0;
+    charge_mm(ep, m, n, k);
+    let dx = dy.matmul_nt(w_shard); // (M, N/P)
+    charge_mm(ep, n, k, m);
+    let dw = x_shard.matmul_tn(dy); // (N/P, K)
+    ep.charge_memop(dy.nominal_bytes() as f64);
+    let db = dy.sum_rows();
+    (dx, dw, db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+    use crate::dist::Layout1D;
+    use crate::rng::Xoshiro256;
+    use crate::spmd::run_spmd;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Tensor::randn(shape, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn col_then_row_equals_dense_two_layer() {
+        // Megatron MLP pattern: Y = (X·W1 + b1)·W2 + b2 with W1 col-split,
+        // W2 row-split.
+        let world = 4;
+        let (m, h, f) = (6, 8, 16);
+        let x = randt(&[m, h], 1);
+        let w1 = randt(&[h, f], 2);
+        let b1 = randt(&[f], 3);
+        let w2 = randt(&[f, h], 4);
+        let b2 = randt(&[h], 5);
+        let y_ref = x.matmul(&w1).add_row_vector(&b1).matmul(&w2).add_row_vector(&b2);
+        let w1s = Layout1D::ColShard.scatter(world, &w1);
+        let b1s = Layout1D::ColShard.scatter(world, &b1.reshape(&[1, f]));
+        let w2s = Layout1D::RowShard.scatter(world, &w2);
+        let out = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx1D::new(world, rank);
+            let b1r = b1s[rank].reshape(&[f / world]);
+            let h1 = col_linear_fwd(ep, &ctx, &x, &w1s[rank], Some(&b1r));
+            row_linear_fwd(ep, &ctx, &h1, &w2s[rank], Some(&b2))
+        });
+        for y in out {
+            assert!(y.max_abs_diff(&y_ref) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn col_linear_backward_matches_dense() {
+        let world = 2;
+        let (m, n, k) = (4, 6, 8);
+        let x = randt(&[m, n], 6);
+        let w = randt(&[n, k], 7);
+        let dy = randt(&[m, k], 8);
+        let dx_ref = dy.matmul_nt(&w);
+        let dw_ref = x.matmul_tn(&dy);
+        let db_ref = dy.sum_rows();
+        let ws = Layout1D::ColShard.scatter(world, &w);
+        let dys = Layout1D::ColShard.scatter(world, &dy);
+        let out = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx1D::new(world, rank);
+            col_linear_bwd(ep, &ctx, &dys[rank], &x, &ws[rank])
+        });
+        let dw = Layout1D::ColShard.gather(&out.iter().map(|o| o.1.clone()).collect::<Vec<_>>());
+        let db = Layout1D::ColShard.gather(
+            &out.iter().map(|o| o.2.reshape(&[1, k / world])).collect::<Vec<_>>(),
+        );
+        for (dx, _, _) in &out {
+            assert!(dx.max_abs_diff(&dx_ref) < 1e-3);
+        }
+        assert!(dw.max_abs_diff(&dw_ref) < 1e-3);
+        assert!(db.max_abs_diff(&db_ref.reshape(&[1, k])) < 1e-3);
+    }
+
+    #[test]
+    fn row_linear_backward_matches_dense() {
+        let world = 2;
+        let (m, n, k) = (4, 6, 8);
+        let x = randt(&[m, n], 9);
+        let w = randt(&[n, k], 10);
+        let dy = randt(&[m, k], 11);
+        let dx_ref = dy.matmul_nt(&w);
+        let dw_ref = x.matmul_tn(&dy);
+        let db_ref = dy.sum_rows();
+        let xs = Layout1D::ColShard.scatter(world, &x);
+        let ws = Layout1D::RowShard.scatter(world, &w);
+        let out = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx1D::new(world, rank);
+            row_linear_bwd(ep, &ctx, &dy, &xs[rank], &ws[rank])
+        });
+        let dx = Layout1D::ColShard.gather(&out.iter().map(|o| o.0.clone()).collect::<Vec<_>>());
+        let dw = Layout1D::RowShard.gather(&out.iter().map(|o| o.1.clone()).collect::<Vec<_>>());
+        assert!(dx.max_abs_diff(&dx_ref) < 1e-3);
+        assert!(dw.max_abs_diff(&dw_ref) < 1e-3);
+        for (_, _, db) in &out {
+            assert!(db.max_abs_diff(&db_ref) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn forward_comm_volume_is_one_allreduce_per_row_linear() {
+        let world = 4;
+        let (m, n, k) = (8, 8, 8);
+        let out = run_spmd(world, NetModel::flat(0.0, 1e9, f64::INFINITY), move |rank, ep| {
+            let ctx = Ctx1D::new(world, rank);
+            let x = Tensor::phantom(&[m, n / world]);
+            let w = Tensor::phantom(&[n / world, k]);
+            let _ = row_linear_fwd(ep, &ctx, &x, &w, None);
+            ep.stats.bytes_sent
+        });
+        // Ring all-reduce of (m, k) f32: 2·(g-1)/g·n_bytes per rank.
+        let n_bytes = (m * k * 4) as u64;
+        for b in out {
+            assert_eq!(b, 2 * 3 * (n_bytes / 4));
+        }
+    }
+}

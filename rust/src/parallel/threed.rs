@@ -1,0 +1,945 @@
+//! The paper's contribution: load-balanced 3-D parallel matrix operations
+//! (§3.1, Algorithms 1–8).
+//!
+//! Every function here is SPMD: it runs on each rank of the `p³` cube with
+//! that rank's shard, communicates along axis-aligned lines via
+//! [`crate::collectives`], and returns that rank's shard of the result.
+//!
+//! ## Structure
+//!
+//! All six matmul algorithms decompose into the same three moves:
+//!
+//! 1. **gather-merge** each operand along its direction: an all-gather over
+//!    the `p`-rank line, concatenating shards along whichever dimension of
+//!    the operand's [`Layout3D`] is (inner-)split by that axis;
+//! 2. a **local matmul** of form NN / NT / TN on the merged `(·/p, ·/p)`
+//!    blocks, charged to the virtual clock at `2·m·n·k` flops;
+//! 3. **reduce-scatter-split** of the partial product along the output
+//!    direction, splitting rows or columns so the result lands exactly in
+//!    the output's `Layout3D`.
+//!
+//! The correctness of each composition is pinned shard-for-shard against a
+//! dense reference in `rust/tests/dist_matmul.rs`.
+
+use crate::collectives::{all_gather, broadcast, reduce, reduce_scatter};
+use crate::comm::Endpoint;
+use crate::dist::{DiagVec3D, Dirs, Layout3D, Split};
+use crate::tensor::Tensor;
+use crate::topology::{Coord, Cube};
+
+/// Per-rank context for 3-D operations: the cube geometry and this rank's
+/// coordinate. Construct once per worker with [`Ctx3D::new`].
+pub struct Ctx3D {
+    pub cube: Cube,
+    pub coord: Coord,
+}
+
+impl Ctx3D {
+    pub fn new(cube: Cube, rank: usize) -> Self {
+        let coord = cube.coord_of(rank);
+        Ctx3D { cube, coord }
+    }
+
+    pub fn p(&self) -> usize {
+        self.cube.edge()
+    }
+}
+
+/// Additional operand layouts used by the `ABᵀ` and `AᵀB` forms. (The
+/// `input`/`weight`/`output` layouts live in [`crate::dist`]; these two are
+/// only ever operands of the transposed forms, so they live with them.)
+pub trait Layout3DExt {
+    /// Layout of the second operand of `C = A·Bᵀ` (the paper's `B_{jli}`):
+    /// global shape `(K, N)`, rows split `p²` by `(dA outer, dB inner)`,
+    /// cols split `p` by `dC`.
+    fn nt_rhs(dirs: Dirs) -> Layout3D;
+    /// Layout of the first operand of `C = Aᵀ·B` (the paper's `A_{ilj}` in
+    /// Algorithm 5): global shape `(N, M)`, rows split `p` by `dC`, cols
+    /// split `p²` by `(dB outer, dA inner)`.
+    fn tn_lhs(dirs: Dirs) -> Layout3D;
+}
+
+impl Layout3DExt for Layout3D {
+    fn nt_rhs(dirs: Dirs) -> Layout3D {
+        Layout3D { row: Split::Two(dirs.a, dirs.b), col: Split::One(dirs.c) }
+    }
+
+    fn tn_lhs(dirs: Dirs) -> Layout3D {
+        Layout3D { row: Split::One(dirs.c), col: Split::Two(dirs.b, dirs.a) }
+    }
+}
+
+/// All-gather `shard` along `axis` and merge the parts along whichever
+/// dimension of `layout` is split by `axis`. Returns the merged block
+/// (one gather step of Algorithms 1/3/5).
+pub fn gather_merge(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    shard: &Tensor,
+    layout: Layout3D,
+    axis: crate::topology::Axis,
+) -> Tensor {
+    let group = ctx.cube.line(ctx.coord, axis);
+    let parts = all_gather(ep, &group, shard);
+    merge_parts(parts, layout, axis)
+}
+
+fn merge_parts(parts: Vec<Tensor>, layout: Layout3D, axis: crate::topology::Axis) -> Tensor {
+    let row_hit = matches!(layout.row, Split::Two(_, inner) if inner == axis)
+        || matches!(layout.row, Split::One(ax) if ax == axis);
+    let col_hit = matches!(layout.col, Split::Two(_, inner) if inner == axis)
+        || matches!(layout.col, Split::One(ax) if ax == axis);
+    match (row_hit, col_hit) {
+        (true, false) => Tensor::concat_rows(&parts),
+        (false, true) => Tensor::concat_cols(&parts),
+        _ => panic!("layout {layout:?} is not (inner-)split along {axis:?}"),
+    }
+}
+
+/// Reduce-scatter the partial product `partial` along `axis`, splitting rows
+/// (`split_rows = true`) or columns so each line member keeps its chunk
+/// (one reduce step of Algorithms 1/3/5).
+pub fn reduce_scatter_split(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    partial: Tensor,
+    axis: crate::topology::Axis,
+    split_rows: bool,
+) -> Tensor {
+    let group = ctx.cube.line(ctx.coord, axis);
+    let chunks = if split_rows {
+        partial.split_rows(ctx.p())
+    } else {
+        partial.split_cols(ctx.p())
+    };
+    reduce_scatter(ep, &group, chunks)
+}
+
+fn charge_mm(ep: &mut Endpoint, m: usize, n: usize, k: usize) {
+    ep.charge_flops(2.0 * m as f64 * n as f64 * k as f64);
+}
+
+// ---------------------------------------------------------------------
+// Algorithm 1 & 2 — C = A·B
+// ---------------------------------------------------------------------
+
+/// **Algorithm 1** (forward `C = AB`): `a` in `Layout3D::input(dirs)`
+/// (global `(M, N)`), `b` in `Layout3D::weight(dirs)` (global `(N, K)`);
+/// returns this rank's shard of `C` in `Layout3D::output(dirs)`.
+pub fn mm_nn(ep: &mut Endpoint, ctx: &Ctx3D, a: &Tensor, b: &Tensor, dirs: Dirs) -> Tensor {
+    dirs.assert_distinct();
+    let a_full = gather_merge(ep, ctx, a, Layout3D::input(dirs), dirs.a); // (M/p, N/p)
+    let b_full = gather_merge(ep, ctx, b, Layout3D::weight(dirs), dirs.b); // (N/p, K/p)
+    let (m, k) = a_full.dims2();
+    let n = b_full.dims2().1;
+    let partial = a_full.matmul(&b_full); // (M/p, K/p)
+    charge_mm(ep, m, n, k);
+    reduce_scatter_split(ep, ctx, partial, dirs.c, true)
+}
+
+/// **Algorithm 2** (backward `C = AB`): given `dc` in output layout and the
+/// forward operands, returns `(dA, dB)` in the operands' own layouts.
+///
+/// `Ȧ = Ċ·Bᵀ` runs with directions `(z, x, y)`; `Ḃ = Aᵀ·Ċ` with
+/// `(y, z, x)` — both reuse the `Ċ` gathered along `z`.
+pub fn mm_nn_backward(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    dc: &Tensor,
+    a: &Tensor,
+    b: &Tensor,
+    dirs: Dirs,
+) -> (Tensor, Tensor) {
+    dirs.assert_distinct();
+    // Shared gather: Ċ along dC merges the output's inner row split.
+    let dc_full = gather_merge(ep, ctx, dc, Layout3D::output(dirs), dirs.c); // (M/p, K/p)
+
+    // Ȧ = Ċ·Bᵀ : gather B along dB (merging its inner col split), local NT,
+    // reduce-scatter along dA splitting rows -> input layout.
+    let b_full = gather_merge(ep, ctx, b, Layout3D::weight(dirs), dirs.b); // (N/p, K/p)
+    {
+        let (m, kk) = dc_full.dims2();
+        let n = b_full.dims2().0;
+        charge_mm(ep, m, n, kk);
+    }
+    let da_partial = dc_full.matmul_nt(&b_full); // (M/p, N/p)
+    let da = reduce_scatter_split(ep, ctx, da_partial, dirs.a, true);
+
+    // Ḃ = Aᵀ·Ċ : gather A along dA, local TN, reduce-scatter along dB
+    // splitting *columns* -> weight layout (cols split Two(dA, dB)).
+    let a_full = gather_merge(ep, ctx, a, Layout3D::input(dirs), dirs.a); // (M/p, N/p)
+    {
+        let (m, n) = a_full.dims2();
+        let kk = dc_full.dims2().1;
+        charge_mm(ep, n, kk, m);
+    }
+    let db_partial = a_full.matmul_tn(&dc_full); // (N/p, K/p)
+    let db = reduce_scatter_split(ep, ctx, db_partial, dirs.b, false);
+
+    (da, db)
+}
+
+// ---------------------------------------------------------------------
+// Algorithm 3 & 4 — C = A·Bᵀ
+// ---------------------------------------------------------------------
+
+/// **Algorithm 3** (forward `C = A·Bᵀ`): `a` in input layout (global
+/// `(M, N)`), `b` in [`Layout3DExt::nt_rhs`] layout (global `(K, N)`);
+/// returns `C` (global `(M, K)`) in output layout.
+pub fn mm_nt(ep: &mut Endpoint, ctx: &Ctx3D, a: &Tensor, b: &Tensor, dirs: Dirs) -> Tensor {
+    dirs.assert_distinct();
+    let a_full = gather_merge(ep, ctx, a, Layout3D::input(dirs), dirs.a); // (M/p, N/p)
+    let b_full = gather_merge(ep, ctx, b, Layout3D::nt_rhs(dirs), dirs.b); // (K/p, N/p)
+    let (m, n) = a_full.dims2();
+    let kk = b_full.dims2().0;
+    let partial = a_full.matmul_nt(&b_full); // (M/p, K/p)
+    charge_mm(ep, m, kk, n);
+    reduce_scatter_split(ep, ctx, partial, dirs.c, true)
+}
+
+/// **Algorithm 4** (backward `C = A·Bᵀ`): `Ȧ = Ċ·B` in `(z, x, y)`,
+/// `Ḃ = Ċᵀ·A` in `(z, y, x)`.
+pub fn mm_nt_backward(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    dc: &Tensor,
+    a: &Tensor,
+    b: &Tensor,
+    dirs: Dirs,
+) -> (Tensor, Tensor) {
+    dirs.assert_distinct();
+    let dc_full = gather_merge(ep, ctx, dc, Layout3D::output(dirs), dirs.c); // (M/p, K/p)
+
+    // Ȧ = Ċ·B : gather B along dB merging rows, local NN,
+    // reduce-scatter along dA splitting rows -> input layout.
+    let b_full = gather_merge(ep, ctx, b, Layout3D::nt_rhs(dirs), dirs.b); // (K/p, N/p)
+    {
+        let (m, kk) = dc_full.dims2();
+        let n = b_full.dims2().1;
+        charge_mm(ep, m, n, kk);
+    }
+    let da_partial = dc_full.matmul(&b_full); // (M/p, N/p)
+    let da = reduce_scatter_split(ep, ctx, da_partial, dirs.a, true);
+
+    // Ḃ = Ċᵀ·A : gather A along dA, local TN, reduce-scatter along dB
+    // splitting rows -> nt_rhs layout (rows split Two(dA, dB)).
+    let a_full = gather_merge(ep, ctx, a, Layout3D::input(dirs), dirs.a); // (M/p, N/p)
+    {
+        let (m, kk) = dc_full.dims2();
+        let n = a_full.dims2().1;
+        charge_mm(ep, kk, n, m);
+    }
+    let db_partial = dc_full.matmul_tn(&a_full); // (K/p, N/p)
+    let db = reduce_scatter_split(ep, ctx, db_partial, dirs.b, true);
+
+    (da, db)
+}
+
+// ---------------------------------------------------------------------
+// Algorithm 5 & 6 — C = Aᵀ·B
+// ---------------------------------------------------------------------
+
+/// **Algorithm 5** (forward `C = Aᵀ·B`): `a` in [`Layout3DExt::tn_lhs`]
+/// layout (global `(N, M)`), `b` in weight layout (global `(N, K)`);
+/// returns `C` (global `(M, K)`) in output layout.
+pub fn mm_tn(ep: &mut Endpoint, ctx: &Ctx3D, a: &Tensor, b: &Tensor, dirs: Dirs) -> Tensor {
+    dirs.assert_distinct();
+    let a_full = gather_merge(ep, ctx, a, Layout3D::tn_lhs(dirs), dirs.a); // (N/p, M/p)
+    let b_full = gather_merge(ep, ctx, b, Layout3D::weight(dirs), dirs.b); // (N/p, K/p)
+    let (n, m) = a_full.dims2();
+    let kk = b_full.dims2().1;
+    let partial = a_full.matmul_tn(&b_full); // (M/p, K/p)
+    charge_mm(ep, m, kk, n);
+    reduce_scatter_split(ep, ctx, partial, dirs.c, true)
+}
+
+/// **Algorithm 6** (backward `C = Aᵀ·B`): `Ȧ = B·Ċᵀ` in `(x, z, y)`,
+/// `Ḃ = A·Ċ` in `(y, z, x)`.
+pub fn mm_tn_backward(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    dc: &Tensor,
+    a: &Tensor,
+    b: &Tensor,
+    dirs: Dirs,
+) -> (Tensor, Tensor) {
+    dirs.assert_distinct();
+    let dc_full = gather_merge(ep, ctx, dc, Layout3D::output(dirs), dirs.c); // (M/p, K/p)
+
+    // Ȧ = B·Ċᵀ : (N/p, K/p)·(M/p, K/p)ᵀ = (N/p, M/p); reduce-scatter along
+    // dA splitting *columns* -> tn_lhs layout (cols split Two(dB, dA)).
+    let b_full = gather_merge(ep, ctx, b, Layout3D::weight(dirs), dirs.b); // (N/p, K/p)
+    {
+        let (n, kk) = b_full.dims2();
+        let m = dc_full.dims2().0;
+        charge_mm(ep, n, m, kk);
+    }
+    let da_partial = b_full.matmul_nt(&dc_full); // (N/p, M/p)
+    let da = reduce_scatter_split(ep, ctx, da_partial, dirs.a, false);
+
+    // Ḃ = A·Ċ : (N/p, M/p)·(M/p, K/p) = (N/p, K/p); reduce-scatter along dB
+    // splitting *columns* -> weight layout (cols split Two(dA, dB)).
+    let a_full = gather_merge(ep, ctx, a, Layout3D::tn_lhs(dirs), dirs.a); // (N/p, M/p)
+    {
+        let (n, m) = a_full.dims2();
+        let kk = dc_full.dims2().1;
+        charge_mm(ep, n, kk, m);
+    }
+    let db_partial = a_full.matmul(&dc_full); // (N/p, K/p)
+    let db = reduce_scatter_split(ep, ctx, db_partial, dirs.b, false);
+
+    (da, db)
+}
+
+// ---------------------------------------------------------------------
+// Algorithms 7 & 8 — matrix-vector operations (bias add, scale)
+// ---------------------------------------------------------------------
+
+/// Materialize the full column-chunk `b_chunk_full` of a diagonally stored
+/// vector at every rank (the broadcast + all-gather prefix shared by
+/// Algorithms 7/8 and their `*` variants).
+///
+/// `b_chunk` is `Some(chunk)` on diagonal owners (`coord(dirs.a) ==
+/// coord(dirs.c)`), `None` elsewhere. Returns the length-`cols(shard)`
+/// vector aligned with the rank's activation shard (input layout).
+pub fn gather_vec(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    b_chunk: Option<&Tensor>,
+    dirs: Dirs,
+) -> Tensor {
+    // Broadcast along dA from the diagonal owner of this line. The owner of
+    // the dA-line through this coord is the member with coord(dirs.a) ==
+    // coord(dirs.c) — exactly `DiagVec3D::for_dirs(dirs).owns(..)`.
+    debug_assert_eq!(
+        DiagVec3D::for_dirs(dirs).owns(ctx.coord),
+        ctx.coord.axis(dirs.a) == ctx.coord.axis(dirs.c)
+    );
+    let line_a = ctx.cube.line(ctx.coord, dirs.a);
+    let root_pos = ctx.coord.axis(dirs.c);
+    let mine = if ctx.cube.pos_in_line(ctx.coord, dirs.a) == root_pos {
+        Some(
+            b_chunk
+                .expect("diagonal owner must supply its vector chunk")
+                .clone(),
+        )
+    } else {
+        assert!(b_chunk.is_none(), "off-diagonal rank must pass None");
+        None
+    };
+    let chunk = broadcast(ep, &line_a, root_pos, mine);
+    // All-gather along dB and flatten into the full per-column-block vector.
+    let line_b = ctx.cube.line(ctx.coord, dirs.b);
+    let parts = all_gather(ep, &line_b, &chunk);
+    if parts.iter().any(|p| p.is_phantom()) {
+        let n: usize = parts.iter().map(|p| p.numel()).sum();
+        return Tensor::phantom(&[n]);
+    }
+    let mut flat = Vec::new();
+    for p in &parts {
+        flat.extend_from_slice(p.data());
+    }
+    let n = flat.len();
+    Tensor::from_vec(&[n], flat)
+}
+
+/// **Algorithm 7** (forward `C = A + b`): `a` in input layout, `b_chunk` the
+/// diagonal shard (or `None` off-diagonal). Also used for `C = A * b` via
+/// `mul = true` (the layernorm γ path).
+pub fn vec_op(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    a: &Tensor,
+    b_chunk: Option<&Tensor>,
+    dirs: Dirs,
+    mul: bool,
+) -> Tensor {
+    let b_full = gather_vec(ep, ctx, b_chunk, dirs);
+    ep.charge_memop(a.nominal_bytes() as f64);
+    if mul {
+        a.mul_row_vector(&b_full)
+    } else {
+        a.add_row_vector(&b_full)
+    }
+}
+
+/// **Algorithm 8** (backward `C = A + b`): returns `(Ȧ, ḃ)` where `ḃ` is
+/// `Some(chunk)` only on diagonal owners. `Ȧ = Ċ`; `ḃ` is the column-sum of
+/// `Ċ` reduced over the dA line to the diagonal owner, then reduce-scattered
+/// over the dB line so each owner keeps its chunk.
+pub fn add_vec_backward(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    dc: &Tensor,
+    dirs: Dirs,
+) -> (Tensor, Option<Tensor>) {
+    let db = vec_grad(ep, ctx, dc, dirs);
+    (dc.clone(), db)
+}
+
+/// Backward of `C = A * b`: `Ȧ = Ċ * b` (per-column), `ḃ = Σ_rows (Ċ ⊙ A)`.
+pub fn mul_vec_backward(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    dc: &Tensor,
+    a: &Tensor,
+    b_chunk: Option<&Tensor>,
+    dirs: Dirs,
+) -> (Tensor, Option<Tensor>) {
+    let b_full = gather_vec(ep, ctx, b_chunk, dirs);
+    ep.charge_memop(2.0 * dc.nominal_bytes() as f64);
+    let da = dc.mul_row_vector(&b_full);
+    let db = vec_grad(ep, ctx, &dc.mul(a), dirs);
+    (da, db)
+}
+
+/// Shared reduction path of Algorithm 8: column-sum `g` locally, reduce over
+/// the dA line to the diagonal owner, reduce-scatter over the dB line.
+fn vec_grad(ep: &mut Endpoint, ctx: &Ctx3D, g: &Tensor, dirs: Dirs) -> Option<Tensor> {
+    let p = ctx.p();
+    ep.charge_memop(g.nominal_bytes() as f64);
+    let local = g.sum_rows(); // (cols,)
+    // Reduce along dA to the diagonal member (pos = coord(dirs.c)).
+    let line_a = ctx.cube.line(ctx.coord, dirs.a);
+    let root_pos = ctx.coord.axis(dirs.c);
+    let at_diag = reduce(ep, &line_a, root_pos, &local);
+    // Diagonal owners split the column-block vector over the dB line and
+    // reduce-scatter; off-diagonal ranks return None. NOTE: the dB-line of a
+    // diagonal rank consists entirely of diagonal ranks (dA and dC coords
+    // are shared along the dB line), so the collective's participants agree.
+    match at_diag {
+        Some(v) => {
+            let line_b = ctx.cube.line(ctx.coord, dirs.b);
+            let n = v.numel();
+            assert_eq!(n % p, 0);
+            let chunks = v.reshape(&[p, n / p]).split_rows(p);
+            let chunks: Vec<Tensor> = chunks
+                .into_iter()
+                .map(|c| {
+                    let len = c.numel();
+                    c.into_reshape(&[len])
+                })
+                .collect();
+            Some(reduce_scatter(ep, &line_b, chunks))
+        }
+        None => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3-D layer normalization (§3.2: "3-D layer normalization ... only applies
+// matrix-vector adds and multiplications with the parameters γ and β")
+// ---------------------------------------------------------------------
+
+/// Forward 3-D layernorm over the hidden (column) dimension of an
+/// input-laid-out activation. Statistics need the full row, whose columns
+/// are split along `dirs.c`, so mean/var are computed with one all-reduce of
+/// the stacked (sum, sumsq) vectors over the dC line. γ and β are diagonal
+/// vectors applied via Algorithm 7's machinery.
+///
+/// Returns `(y, xhat, inv_std)` — the latter two are saved for backward.
+pub fn layernorm(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    x: &Tensor,
+    gamma_chunk: Option<&Tensor>,
+    beta_chunk: Option<&Tensor>,
+    dirs: Dirs,
+    eps: f32,
+    n_global_cols: usize,
+) -> (Tensor, Tensor, Tensor) {
+    let (rows, _cols) = x.dims2();
+    let line_c = ctx.cube.line(ctx.coord, dirs.c);
+    // Stack local row-sums and row-sumsqs into one tensor -> one all-reduce.
+    let stats = if x.is_phantom() {
+        Tensor::phantom(&[2, rows])
+    } else {
+        let mut s = Tensor::zeros(&[2, rows]);
+        let sums = x.sum_cols();
+        let sumsq = x.map(|v| v * v).sum_cols();
+        s.set_block(0, 0, &sums.reshape(&[1, rows]));
+        s.set_block(1, 0, &sumsq.reshape(&[1, rows]));
+        s
+    };
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+    let stats = crate::collectives::all_reduce(ep, &line_c, &stats);
+    let n = n_global_cols as f32;
+    let (xhat, inv_std) = if stats.is_phantom() || x.is_phantom() {
+        (Tensor::phantom(x.shape()), Tensor::phantom(&[rows]))
+    } else {
+        let mut xh = x.clone();
+        let mut istd = vec![0.0f32; rows];
+        {
+            let sd = stats.data().to_vec();
+            let cols = x.dims2().1;
+            let xd = xh.data_mut();
+            for r in 0..rows {
+                let mean = sd[r] / n;
+                let var = (sd[rows + r] / n - mean * mean).max(0.0);
+                let inv = 1.0 / (var + eps).sqrt();
+                istd[r] = inv;
+                for c in 0..cols {
+                    xd[r * cols + c] = (xd[r * cols + c] - mean) * inv;
+                }
+            }
+        }
+        (xh, Tensor::from_vec(&[rows], istd))
+    };
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+    // y = xhat * γ + β  (both diagonal vectors, Algorithm 7 machinery).
+    let scaled = vec_op(ep, ctx, &xhat, gamma_chunk, dirs, true);
+    let y = vec_op(ep, ctx, &scaled, beta_chunk, dirs, false);
+    (y, xhat, inv_std)
+}
+
+/// Backward 3-D layernorm. Given upstream `dy` and the saved `(xhat,
+/// inv_std)`, returns `(dx, dγ, dβ)` with the vector grads on diagonal
+/// owners only.
+///
+/// Uses the standard layernorm VJP:
+/// `dx = inv_std/N · (N·g − Σg − xhat·Σ(g⊙xhat))` with `g = dy ⊙ γ`,
+/// where the two row-reductions are all-reduced over the dC line.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_backward(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    dy: &Tensor,
+    xhat: &Tensor,
+    inv_std: &Tensor,
+    gamma_chunk: Option<&Tensor>,
+    dirs: Dirs,
+    n_global_cols: usize,
+) -> (Tensor, Option<Tensor>, Option<Tensor>) {
+    let (rows, cols) = dy.dims2();
+    // dβ = Σ_rows dy ; dγ = Σ_rows (dy ⊙ xhat) — Algorithm 8 reduction path.
+    let dbeta = vec_grad(ep, ctx, dy, dirs);
+    let dgamma = vec_grad(ep, ctx, &dy.mul(xhat), dirs);
+
+    // g = dy ⊙ γ (γ materialized at full column-block via Algorithm 7 prefix)
+    let gamma_full = gather_vec(ep, ctx, gamma_chunk, dirs);
+    let g = dy.mul_row_vector(&gamma_full);
+    ep.charge_memop(3.0 * dy.nominal_bytes() as f64);
+
+    // Row reductions of g and g ⊙ xhat, all-reduced over the dC line.
+    let line_c = ctx.cube.line(ctx.coord, dirs.c);
+    let stats = if g.is_phantom() || xhat.is_phantom() {
+        Tensor::phantom(&[2, rows])
+    } else {
+        let mut s = Tensor::zeros(&[2, rows]);
+        s.set_block(0, 0, &g.sum_cols().reshape(&[1, rows]));
+        s.set_block(1, 0, &g.mul(xhat).sum_cols().reshape(&[1, rows]));
+        s
+    };
+    let stats = crate::collectives::all_reduce(ep, &line_c, &stats);
+    let n = n_global_cols as f32;
+    let dx = if g.is_phantom() || stats.is_phantom() || inv_std.is_phantom() {
+        Tensor::phantom(dy.shape())
+    } else {
+        let sd = stats.data();
+        let istd = inv_std.data();
+        let gd = g.data();
+        let xd = xhat.data();
+        let mut out = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            let sum_g = sd[r];
+            let sum_gx = sd[rows + r];
+            let c0 = istd[r] / n;
+            for c in 0..cols {
+                let idx = r * cols + c;
+                out[idx] = c0 * (n * gd[idx] - sum_g - xd[idx] * sum_gx);
+            }
+        }
+        Tensor::from_vec(&[rows, cols], out)
+    };
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+    (dx, dgamma, dbeta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+    use crate::rng::Xoshiro256;
+    use crate::spmd::run_spmd;
+    use crate::topology::Axis;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Tensor::randn(shape, 1.0, &mut rng)
+    }
+
+    /// Dense global reference for C = A·B, scattered/compared shard-wise.
+    fn check_mm_nn(p: usize, m: usize, n: usize, k: usize, dirs: Dirs) {
+        let cube = Cube::new(p);
+        let a = randt(&[m, n], 1);
+        let b = randt(&[n, k], 2);
+        let c_ref = a.matmul(&b);
+        let a_shards = Layout3D::input(dirs).scatter(&cube, &a);
+        let b_shards = Layout3D::weight(dirs).scatter(&cube, &b);
+        let world = p * p * p;
+        let out = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            mm_nn(ep, &ctx, &a_shards[rank], &b_shards[rank], dirs)
+        });
+        let got = Layout3D::output(dirs).gather(&cube, &out, m, k);
+        assert!(
+            got.max_abs_diff(&c_ref) < 1e-3,
+            "mm_nn mismatch p={p} dirs={dirs:?}"
+        );
+    }
+
+    #[test]
+    fn algorithm1_matches_dense_p2() {
+        check_mm_nn(2, 8, 12, 16, Dirs::canonical());
+    }
+
+    #[test]
+    fn algorithm1_matches_dense_swapped_dirs() {
+        check_mm_nn(2, 8, 12, 16, Dirs::canonical().swapped());
+    }
+
+    #[test]
+    fn algorithm1_matches_dense_p1_degenerate() {
+        check_mm_nn(1, 4, 4, 4, Dirs::canonical());
+    }
+
+    #[test]
+    fn algorithm1_exotic_dirs() {
+        // Any permutation of distinct axes must work.
+        check_mm_nn(2, 8, 8, 8, Dirs { a: Axis::X, b: Axis::Z, c: Axis::Y });
+    }
+
+    #[test]
+    fn algorithm2_matches_dense_gradients() {
+        let p = 2;
+        let dirs = Dirs::canonical();
+        let cube = Cube::new(p);
+        let (m, n, k) = (8, 12, 16);
+        let a = randt(&[m, n], 3);
+        let b = randt(&[n, k], 4);
+        let dc = randt(&[m, k], 5);
+        // Dense reference: dA = dC·Bᵀ, dB = Aᵀ·dC (paper Eq. 3).
+        let da_ref = dc.matmul_nt(&b);
+        let db_ref = a.matmul_tn(&dc);
+        let a_shards = Layout3D::input(dirs).scatter(&cube, &a);
+        let b_shards = Layout3D::weight(dirs).scatter(&cube, &b);
+        let dc_shards = Layout3D::output(dirs).scatter(&cube, &dc);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            mm_nn_backward(ep, &ctx, &dc_shards[rank], &a_shards[rank], &b_shards[rank], dirs)
+        });
+        let da_shards: Vec<Tensor> = out.iter().map(|(da, _)| da.clone()).collect();
+        let db_shards: Vec<Tensor> = out.iter().map(|(_, db)| db.clone()).collect();
+        let da = Layout3D::input(dirs).gather(&cube, &da_shards, m, n);
+        let db = Layout3D::weight(dirs).gather(&cube, &db_shards, n, k);
+        assert!(da.max_abs_diff(&da_ref) < 1e-3, "dA mismatch");
+        assert!(db.max_abs_diff(&db_ref) < 1e-3, "dB mismatch");
+    }
+
+    #[test]
+    fn algorithm3_nt_matches_dense() {
+        let p = 2;
+        let dirs = Dirs::canonical();
+        let cube = Cube::new(p);
+        let (m, n, k) = (8, 12, 16); // A (m,n), B (k,n), C (m,k)
+        let a = randt(&[m, n], 6);
+        let b = randt(&[k, n], 7);
+        let c_ref = a.matmul_nt(&b);
+        let a_shards = Layout3D::input(dirs).scatter(&cube, &a);
+        let b_shards = Layout3D::nt_rhs(dirs).scatter(&cube, &b);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            mm_nt(ep, &ctx, &a_shards[rank], &b_shards[rank], dirs)
+        });
+        let got = Layout3D::output(dirs).gather(&cube, &out, m, k);
+        assert!(got.max_abs_diff(&c_ref) < 1e-3);
+    }
+
+    #[test]
+    fn algorithm4_nt_backward_matches_dense() {
+        let p = 2;
+        let dirs = Dirs::canonical();
+        let cube = Cube::new(p);
+        let (m, n, k) = (8, 12, 16);
+        let a = randt(&[m, n], 8);
+        let b = randt(&[k, n], 9);
+        let dc = randt(&[m, k], 10);
+        // Paper Eq. 4: dA = dC·B, dB = dCᵀ·A.
+        let da_ref = dc.matmul(&b);
+        let db_ref = dc.matmul_tn(&a);
+        let a_shards = Layout3D::input(dirs).scatter(&cube, &a);
+        let b_shards = Layout3D::nt_rhs(dirs).scatter(&cube, &b);
+        let dc_shards = Layout3D::output(dirs).scatter(&cube, &dc);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            mm_nt_backward(ep, &ctx, &dc_shards[rank], &a_shards[rank], &b_shards[rank], dirs)
+        });
+        let da_shards: Vec<Tensor> = out.iter().map(|(da, _)| da.clone()).collect();
+        let db_shards: Vec<Tensor> = out.iter().map(|(_, db)| db.clone()).collect();
+        let da = Layout3D::input(dirs).gather(&cube, &da_shards, m, n);
+        let db = Layout3D::nt_rhs(dirs).gather(&cube, &db_shards, k, n);
+        assert!(da.max_abs_diff(&da_ref) < 1e-3, "dA mismatch");
+        assert!(db.max_abs_diff(&db_ref) < 1e-3, "dB mismatch");
+    }
+
+    #[test]
+    fn algorithm5_tn_matches_dense() {
+        let p = 2;
+        let dirs = Dirs::canonical();
+        let cube = Cube::new(p);
+        let (m, n, k) = (8, 12, 16); // A (n,m), B (n,k), C (m,k)
+        let a = randt(&[n, m], 11);
+        let b = randt(&[n, k], 12);
+        let c_ref = a.matmul_tn(&b);
+        let a_shards = Layout3D::tn_lhs(dirs).scatter(&cube, &a);
+        let b_shards = Layout3D::weight(dirs).scatter(&cube, &b);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            mm_tn(ep, &ctx, &a_shards[rank], &b_shards[rank], dirs)
+        });
+        let got = Layout3D::output(dirs).gather(&cube, &out, m, k);
+        assert!(got.max_abs_diff(&c_ref) < 1e-3);
+    }
+
+    #[test]
+    fn algorithm6_tn_backward_matches_dense() {
+        let p = 2;
+        let dirs = Dirs::canonical();
+        let cube = Cube::new(p);
+        let (m, n, k) = (8, 12, 16);
+        let a = randt(&[n, m], 13);
+        let b = randt(&[n, k], 14);
+        let dc = randt(&[m, k], 15);
+        // Paper Eq. 5: dA = B·dCᵀ, dB = A·dC.
+        let da_ref = b.matmul_nt(&dc);
+        let db_ref = a.matmul(&dc);
+        let a_shards = Layout3D::tn_lhs(dirs).scatter(&cube, &a);
+        let b_shards = Layout3D::weight(dirs).scatter(&cube, &b);
+        let dc_shards = Layout3D::output(dirs).scatter(&cube, &dc);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            mm_tn_backward(ep, &ctx, &dc_shards[rank], &a_shards[rank], &b_shards[rank], dirs)
+        });
+        let da_shards: Vec<Tensor> = out.iter().map(|(da, _)| da.clone()).collect();
+        let db_shards: Vec<Tensor> = out.iter().map(|(_, db)| db.clone()).collect();
+        let da = Layout3D::tn_lhs(dirs).gather(&cube, &da_shards, n, m);
+        let db = Layout3D::weight(dirs).gather(&cube, &db_shards, n, k);
+        assert!(da.max_abs_diff(&da_ref) < 1e-3, "dA mismatch");
+        assert!(db.max_abs_diff(&db_ref) < 1e-3, "dB mismatch");
+    }
+
+    #[test]
+    fn algorithm7_vector_add_matches_dense() {
+        let p = 2;
+        let dirs = Dirs::canonical();
+        let cube = Cube::new(p);
+        let (m, n) = (8, 12);
+        let a = randt(&[m, n], 16);
+        let v = randt(&[n], 17);
+        let c_ref = a.add_row_vector(&v);
+        let a_shards = Layout3D::input(dirs).scatter(&cube, &a);
+        let v_shards = DiagVec3D::for_dirs(dirs).scatter(&cube, &v);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            vec_op(ep, &ctx, &a_shards[rank], v_shards[rank].as_ref(), dirs, false)
+        });
+        let got = Layout3D::input(dirs).gather(&cube, &out, m, n);
+        assert!(got.max_abs_diff(&c_ref) < 1e-5);
+    }
+
+    #[test]
+    fn algorithm7_vector_mul_matches_dense() {
+        let p = 2;
+        let dirs = Dirs::canonical().swapped();
+        let cube = Cube::new(p);
+        let (m, n) = (4, 8);
+        let a = randt(&[m, n], 18);
+        let v = randt(&[n], 19);
+        let c_ref = a.mul_row_vector(&v);
+        let a_shards = Layout3D::input(dirs).scatter(&cube, &a);
+        let v_shards = DiagVec3D::for_dirs(dirs).scatter(&cube, &v);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            vec_op(ep, &ctx, &a_shards[rank], v_shards[rank].as_ref(), dirs, true)
+        });
+        let got = Layout3D::input(dirs).gather(&cube, &out, m, n);
+        assert!(got.max_abs_diff(&c_ref) < 1e-5);
+    }
+
+    #[test]
+    fn algorithm8_bias_grad_matches_dense() {
+        let p = 2;
+        let dirs = Dirs::canonical();
+        let cube = Cube::new(p);
+        let (m, n) = (8, 12);
+        let dc = randt(&[m, n], 20);
+        let db_ref = dc.sum_rows();
+        let dc_shards = Layout3D::input(dirs).scatter(&cube, &dc);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            add_vec_backward(ep, &ctx, &dc_shards[rank], dirs)
+        });
+        let da_shards: Vec<Tensor> = out.iter().map(|(da, _)| da.clone()).collect();
+        let db_shards: Vec<Option<Tensor>> = out.iter().map(|(_, db)| db.clone()).collect();
+        // dA must equal dC shard-for-shard.
+        let da = Layout3D::input(dirs).gather(&cube, &da_shards, m, n);
+        assert!(da.max_abs_diff(&dc) < 1e-6);
+        let db = DiagVec3D::for_dirs(dirs).gather(&cube, &db_shards, n);
+        assert!(db.max_abs_diff(&db_ref) < 1e-4, "db {:?} vs {:?}", db, db_ref);
+    }
+
+    #[test]
+    fn mul_vec_backward_matches_dense() {
+        let p = 2;
+        let dirs = Dirs::canonical();
+        let cube = Cube::new(p);
+        let (m, n) = (8, 12);
+        let a = randt(&[m, n], 21);
+        let v = randt(&[n], 22);
+        let dc = randt(&[m, n], 23);
+        let da_ref = dc.mul_row_vector(&v);
+        let dv_ref = dc.mul(&a).sum_rows();
+        let a_shards = Layout3D::input(dirs).scatter(&cube, &a);
+        let v_shards = DiagVec3D::for_dirs(dirs).scatter(&cube, &v);
+        let dc_shards = Layout3D::input(dirs).scatter(&cube, &dc);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            mul_vec_backward(
+                ep, &ctx, &dc_shards[rank], &a_shards[rank], v_shards[rank].as_ref(), dirs,
+            )
+        });
+        let da_shards: Vec<Tensor> = out.iter().map(|(da, _)| da.clone()).collect();
+        let dv_shards: Vec<Option<Tensor>> = out.iter().map(|(_, dv)| dv.clone()).collect();
+        let da = Layout3D::input(dirs).gather(&cube, &da_shards, m, n);
+        let dv = DiagVec3D::for_dirs(dirs).gather(&cube, &dv_shards, n);
+        assert!(da.max_abs_diff(&da_ref) < 1e-4);
+        assert!(dv.max_abs_diff(&dv_ref) < 1e-4);
+    }
+
+    #[test]
+    fn layernorm_matches_dense() {
+        let p = 2;
+        let dirs = Dirs::canonical();
+        let cube = Cube::new(p);
+        let (m, n) = (8, 16);
+        let x = randt(&[m, n], 24);
+        let gamma = randt(&[n], 25).map(|v| 1.0 + 0.1 * v);
+        let beta = randt(&[n], 26).scale(0.1);
+        let eps = 1e-5f32;
+        // Dense reference.
+        let mut y_ref = Tensor::zeros(&[m, n]);
+        for r in 0..m {
+            let row: Vec<f32> = (0..n).map(|c| x.at2(r, c)).collect();
+            let mean = row.iter().sum::<f32>() / n as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+            let inv = 1.0 / (var + eps).sqrt();
+            for c in 0..n {
+                y_ref.data_mut()[r * n + c] =
+                    (row[c] - mean) * inv * gamma.data()[c] + beta.data()[c];
+            }
+        }
+        let x_shards = Layout3D::input(dirs).scatter(&cube, &x);
+        let g_shards = DiagVec3D::for_dirs(dirs).scatter(&cube, &gamma);
+        let b_shards = DiagVec3D::for_dirs(dirs).scatter(&cube, &beta);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            let (y, _, _) = layernorm(
+                ep, &ctx, &x_shards[rank], g_shards[rank].as_ref(), b_shards[rank].as_ref(),
+                dirs, eps, n,
+            );
+            y
+        });
+        let got = Layout3D::input(dirs).gather(&cube, &out, m, n);
+        assert!(got.max_abs_diff(&y_ref) < 1e-3);
+    }
+
+    #[test]
+    fn layernorm_backward_matches_numeric_gradient() {
+        // Finite-difference check of dx through the distributed layernorm.
+        let p = 2;
+        let dirs = Dirs::canonical();
+        let cube = Cube::new(p);
+        let (m, n) = (4, 8);
+        let x = randt(&[m, n], 27);
+        let gamma = randt(&[n], 28).map(|v| 1.0 + 0.1 * v);
+        let beta = Tensor::zeros(&[n]);
+        let dy = randt(&[m, n], 29);
+        let eps = 1e-5f32;
+
+        let gamma2 = gamma.clone();
+        let beta2 = beta.clone();
+        let cube2 = cube.clone();
+        let run_fwd = move |xin: &Tensor| -> Tensor {
+            let cube = cube2.clone();
+            let x_shards = Layout3D::input(dirs).scatter(&cube, xin);
+            let g_shards = DiagVec3D::for_dirs(dirs).scatter(&cube, &gamma2);
+            let b_shards = DiagVec3D::for_dirs(dirs).scatter(&cube, &beta2);
+            let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+                let ctx = Ctx3D::new(Cube::new(p), rank);
+                layernorm(
+                    ep, &ctx, &x_shards[rank], g_shards[rank].as_ref(),
+                    b_shards[rank].as_ref(), dirs, eps, n,
+                )
+                .0
+            });
+            Layout3D::input(dirs).gather(&cube, &out, m, n)
+        };
+
+        // Analytic dx via the distributed backward.
+        let x_shards = Layout3D::input(dirs).scatter(&cube, &x);
+        let g_shards = DiagVec3D::for_dirs(dirs).scatter(&cube, &gamma);
+        let b_shards = DiagVec3D::for_dirs(dirs).scatter(&cube, &beta);
+        let dy_shards = Layout3D::input(dirs).scatter(&cube, &dy);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            let (_, xhat, istd) = layernorm(
+                ep, &ctx, &x_shards[rank], g_shards[rank].as_ref(), b_shards[rank].as_ref(),
+                dirs, eps, n,
+            );
+            let g2 = DiagVec3D::for_dirs(dirs).scatter(&Cube::new(p), &gamma);
+            layernorm_backward(
+                ep, &ctx, &dy_shards[rank], &xhat, &istd, g2[rank].as_ref(), dirs, n,
+            )
+            .0
+        });
+        let dx = Layout3D::input(dirs).gather(&cube, &out, m, n);
+
+        // Numeric gradient: (f(x+h·e) - f(x-h·e))/2h dotted with dy.
+        let h = 1e-2f32;
+        for &(r, c) in &[(0usize, 0usize), (1, 3), (3, 7), (2, 5)] {
+            let mut xp = x.clone();
+            xp.data_mut()[r * n + c] += h;
+            let mut xm = x.clone();
+            xm.data_mut()[r * n + c] -= h;
+            let fp = run_fwd(&xp);
+            let fm = run_fwd(&xm);
+            let num = fp.sub(&fm).scale(1.0 / (2.0 * h)).mul(&dy).sum();
+            let ana = dx.at2(r, c);
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + ana.abs()),
+                "dx[{r},{c}] numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn phantom_mode_flows_through_algorithm1() {
+        let p = 2;
+        let dirs = Dirs::canonical();
+        let out = run_spmd(8, NetModel::longhorn_v100(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            // Paper-scale-ish shard shapes, phantom data.
+            let a = Tensor::phantom(&[128, 1024]); // (M/p², N/p)
+            let b = Tensor::phantom(&[1024, 128]); // (N/p, K/p²)
+            let c = mm_nn(ep, &ctx, &a, &b, dirs);
+            (c.is_phantom(), c.shape().to_vec(), ep.clock)
+        });
+        for (ph, shape, clock) in out {
+            assert!(ph);
+            // a: (M/p², N/p) = (128, 1024) → M = 512; b: (N/p, K/p²) =
+            // (1024, 128) → K = 512; output shard (M/p², K/p) = (128, 256).
+            assert_eq!(shape, vec![128, 256]);
+            assert!(clock > 0.0, "virtual time must advance in phantom mode");
+        }
+    }
+}

@@ -1,0 +1,443 @@
+//! 2-D tensor parallelism — the Optimus/SUMMA baseline [21, 19].
+//!
+//! All matrices (weights *and* activations) are block-distributed on a
+//! `q × q` mesh: rank `(i, j)` holds block `(i, j)` of every `(R/q, C/q)`
+//! blocking. Matmuls run as SUMMA: `q` steps, each broadcasting a block
+//! panel along mesh rows and/or columns and accumulating a local product.
+//!
+//! Three SUMMA variants cover forward and backward (van de Geijn & Watts):
+//! * [`summa_nn`] — `C = A·B`   (broadcast A panel along rows, B panel
+//!   along cols, accumulate locally);
+//! * [`summa_nt`] — `C = A·Bᵀ`  (broadcast B panel along cols, local NT
+//!   product, *reduce* the partial along rows to the panel owner);
+//! * [`summa_tn`] — `C = Aᵀ·B`  (broadcast A panel along rows, local TN
+//!   product, reduce along cols to the panel owner).
+//!
+//! Bias vectors are stored on mesh row 0 (split by column block) and
+//! broadcast down columns when needed, matching Optimus.
+
+use crate::collectives::{all_reduce, broadcast, broadcast_bw, reduce_bw};
+use crate::comm::Endpoint;
+use crate::tensor::Tensor;
+use crate::topology::Mesh;
+
+/// Per-rank context on the `q × q` mesh.
+pub struct Ctx2D {
+    pub mesh: Mesh,
+    pub row: usize,
+    pub col: usize,
+}
+
+impl Ctx2D {
+    pub fn new(mesh: Mesh, rank: usize) -> Self {
+        let (row, col) = mesh.coord_of(rank);
+        Ctx2D { mesh, row, col }
+    }
+
+    pub fn q(&self) -> usize {
+        self.mesh.edge()
+    }
+
+    fn row_group(&self) -> Vec<usize> {
+        self.mesh.row_group(self.row)
+    }
+
+    fn col_group(&self) -> Vec<usize> {
+        self.mesh.col_group(self.col)
+    }
+}
+
+fn charge_mm(ep: &mut Endpoint, m: usize, n: usize, k: usize) {
+    ep.charge_flops(2.0 * m as f64 * n as f64 * k as f64);
+}
+
+/// SUMMA `C = A·B`: `a` is this rank's `(M/q, N/q)` block, `b` its
+/// `(N/q, K/q)` block; returns the `(M/q, K/q)` block of `C`.
+pub fn summa_nn(ep: &mut Endpoint, ctx: &Ctx2D, a: &Tensor, b: &Tensor) -> Tensor {
+    let q = ctx.q();
+    let (ma, _na) = a.dims2();
+    let (_nb, kb) = b.dims2();
+    let mut c = Tensor::zeros(&[ma, kb]);
+    for t in 0..q {
+        // Panel A[·, t] travels along mesh rows from column t.
+        let a_panel = broadcast_bw(ep, &ctx.row_group(), t, (ctx.col == t).then(|| a.clone()), a.shape());
+        // Panel B[t, ·] travels along mesh columns from row t.
+        let b_panel = broadcast_bw(ep, &ctx.col_group(), t, (ctx.row == t).then(|| b.clone()), b.shape());
+        let (m, n) = a_panel.dims2();
+        let k = b_panel.dims2().1;
+        charge_mm(ep, m, k, n);
+        let prod = a_panel.matmul(&b_panel);
+        if prod.is_phantom() {
+            c = Tensor::phantom(&[ma, kb]);
+        } else {
+            c.add_assign(&prod);
+        }
+    }
+    c
+}
+
+/// SUMMA `C = A·Bᵀ`: `a` is the `(M/q, N/q)` block, `b` the `(K/q, N/q)`
+/// block of `B` (global `(K, N)`); returns the `(M/q, K/q)` block of `C`.
+///
+/// Step `t`: broadcast `B[t, j]` down columns from row `t`; every rank
+/// computes `A[i,j]·B[t,j]ᵀ` (a contribution to `C[i,t]`) and the partials
+/// are reduced along mesh rows to the owner column `t`.
+pub fn summa_nt(ep: &mut Endpoint, ctx: &Ctx2D, a: &Tensor, b: &Tensor) -> Tensor {
+    let q = ctx.q();
+    let (ma, _) = a.dims2();
+    let (kb, _) = b.dims2();
+    let mut c: Option<Tensor> = None;
+    for t in 0..q {
+        let b_panel = broadcast_bw(ep, &ctx.col_group(), t, (ctx.row == t).then(|| b.clone()), b.shape());
+        let (m, n) = a.dims2();
+        let k = b_panel.dims2().0;
+        charge_mm(ep, m, k, n);
+        let partial = a.matmul_nt(&b_panel); // (M/q, K/q) contribution to C[i, t]
+        if let Some(summed) = reduce_bw(ep, &ctx.row_group(), t, &partial) {
+            c = Some(summed);
+        }
+    }
+    c.unwrap_or_else(|| Tensor::phantom(&[ma, kb]))
+}
+
+/// SUMMA `C = Aᵀ·B`: `a` is the `(N/q, M/q)` block of `A` (global
+/// `(N, M)`), `b` the `(N/q, K/q)` block of `B`; returns the `(M/q, K/q)`
+/// block of `C`.
+///
+/// Step `t`: broadcast `A[i, t]` along rows from column `t`; every rank
+/// computes `A[i,t]ᵀ·B[i,j]` (a contribution to `C[t,j]`) and partials are
+/// reduced along mesh columns to the owner row `t`.
+pub fn summa_tn(ep: &mut Endpoint, ctx: &Ctx2D, a: &Tensor, b: &Tensor) -> Tensor {
+    let q = ctx.q();
+    let (_, ma) = a.dims2();
+    let (_, kb) = b.dims2();
+    let mut c: Option<Tensor> = None;
+    for t in 0..q {
+        let a_panel = broadcast_bw(ep, &ctx.row_group(), t, (ctx.col == t).then(|| a.clone()), a.shape());
+        let (n, m) = a_panel.dims2();
+        let k = b.dims2().1;
+        charge_mm(ep, m, k, n);
+        let partial = a_panel.matmul_tn(b); // (M/q, K/q) contribution to C[t, j]
+        if let Some(summed) = reduce_bw(ep, &ctx.col_group(), t, &partial) {
+            c = Some(summed);
+        }
+    }
+    c.unwrap_or_else(|| Tensor::phantom(&[ma, kb]))
+}
+
+/// Materialize this rank's column-block slice of a bias vector stored on
+/// mesh row 0 (`b_chunk` is `Some` only at `row == 0`).
+pub fn bcast_bias(ep: &mut Endpoint, ctx: &Ctx2D, b_chunk: Option<&Tensor>) -> Tensor {
+    broadcast(ep, &ctx.col_group(), 0, b_chunk.map(|b| b.clone()))
+}
+
+/// 2-D linear forward `Y = X·W + b`. All blocks `(·/q, ·/q)`; bias stored on
+/// row 0 (`b_chunk` is `Some` exactly on row-0 ranks of biased layers;
+/// `has_bias` tells every rank whether to join the broadcast). Returns this
+/// rank's block of `Y`.
+pub fn linear_fwd(
+    ep: &mut Endpoint,
+    ctx: &Ctx2D,
+    x: &Tensor,
+    w: &Tensor,
+    b_chunk: Option<&Tensor>,
+    has_bias: bool,
+) -> Tensor {
+    let y = summa_nn(ep, ctx, x, w);
+    if has_bias {
+        let b = bcast_bias(ep, ctx, b_chunk);
+        ep.charge_memop(y.nominal_bytes() as f64);
+        y.add_row_vector(&b)
+    } else {
+        assert!(b_chunk.is_none());
+        y
+    }
+}
+
+/// 2-D linear backward: returns `(dX, dW, db_chunk)` with `db_chunk` only on
+/// mesh row 0 (where the bias lives).
+pub fn linear_bwd(
+    ep: &mut Endpoint,
+    ctx: &Ctx2D,
+    dy: &Tensor,
+    x: &Tensor,
+    w: &Tensor,
+) -> (Tensor, Tensor, Option<Tensor>) {
+    let dx = summa_nt(ep, ctx, dy, w); // dX = dY·Wᵀ  (W global (N,K) → blocks (N/q,K/q))
+    let dw = summa_tn(ep, ctx, x, dy); // dW = Xᵀ·dY
+    // db = column-sum of dY, reduced along mesh columns to row 0.
+    ep.charge_memop(dy.nominal_bytes() as f64);
+    let local = dy.sum_rows();
+    let db = reduce_bw(ep, &ctx.col_group(), 0, &local);
+    (dx, dw, db)
+}
+
+/// 2-D layernorm forward over the hidden (column) dimension. Row statistics
+/// are all-reduced along mesh rows; γ/β live on mesh row 0 (column-block
+/// split) and are broadcast down columns.
+///
+/// Returns `(y, xhat, inv_std)`.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm(
+    ep: &mut Endpoint,
+    ctx: &Ctx2D,
+    x: &Tensor,
+    gamma_chunk: Option<&Tensor>,
+    beta_chunk: Option<&Tensor>,
+    eps: f32,
+    n_global_cols: usize,
+) -> (Tensor, Tensor, Tensor) {
+    let (rows, _cols) = x.dims2();
+    let stats = if x.is_phantom() {
+        Tensor::phantom(&[2, rows])
+    } else {
+        let mut s = Tensor::zeros(&[2, rows]);
+        s.set_block(0, 0, &x.sum_cols().reshape(&[1, rows]));
+        s.set_block(1, 0, &x.map(|v| v * v).sum_cols().reshape(&[1, rows]));
+        s
+    };
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+    let stats = all_reduce(ep, &ctx.row_group(), &stats);
+    let n = n_global_cols as f32;
+    let (xhat, inv_std) = if stats.is_phantom() || x.is_phantom() {
+        (Tensor::phantom(x.shape()), Tensor::phantom(&[rows]))
+    } else {
+        let mut xh = x.clone();
+        let mut istd = vec![0.0f32; rows];
+        let sd = stats.data().to_vec();
+        let cols = x.dims2().1;
+        let xd = xh.data_mut();
+        for r in 0..rows {
+            let mean = sd[r] / n;
+            let var = (sd[rows + r] / n - mean * mean).max(0.0);
+            let inv = 1.0 / (var + eps).sqrt();
+            istd[r] = inv;
+            for c in 0..cols {
+                xd[r * cols + c] = (xd[r * cols + c] - mean) * inv;
+            }
+        }
+        (xh, Tensor::from_vec(&[rows], istd))
+    };
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+    let gamma = bcast_bias(ep, ctx, gamma_chunk);
+    let beta = bcast_bias(ep, ctx, beta_chunk);
+    let y = xhat.mul_row_vector(&gamma).add_row_vector(&beta);
+    (y, xhat, inv_std)
+}
+
+/// 2-D layernorm backward; `(dx, dγ_chunk, dβ_chunk)` with vector grads on
+/// mesh row 0 only.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_backward(
+    ep: &mut Endpoint,
+    ctx: &Ctx2D,
+    dy: &Tensor,
+    xhat: &Tensor,
+    inv_std: &Tensor,
+    gamma_chunk: Option<&Tensor>,
+    eps_unused: f32,
+    n_global_cols: usize,
+) -> (Tensor, Option<Tensor>, Option<Tensor>) {
+    let _ = eps_unused;
+    let (rows, cols) = dy.dims2();
+    ep.charge_memop(3.0 * dy.nominal_bytes() as f64);
+    let dbeta = reduce_bw(ep, &ctx.col_group(), 0, &dy.sum_rows());
+    let dgamma = reduce_bw(ep, &ctx.col_group(), 0, &dy.mul(xhat).sum_rows());
+    let gamma = bcast_bias(ep, ctx, gamma_chunk);
+    let g = dy.mul_row_vector(&gamma);
+    let stats = if g.is_phantom() || xhat.is_phantom() {
+        Tensor::phantom(&[2, rows])
+    } else {
+        let mut s = Tensor::zeros(&[2, rows]);
+        s.set_block(0, 0, &g.sum_cols().reshape(&[1, rows]));
+        s.set_block(1, 0, &g.mul(xhat).sum_cols().reshape(&[1, rows]));
+        s
+    };
+    let stats = all_reduce(ep, &ctx.row_group(), &stats);
+    let n = n_global_cols as f32;
+    let dx = if g.is_phantom() || stats.is_phantom() || inv_std.is_phantom() {
+        Tensor::phantom(dy.shape())
+    } else {
+        let sd = stats.data();
+        let istd = inv_std.data();
+        let gd = g.data();
+        let xd = xhat.data();
+        let mut out = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            let c0 = istd[r] / n;
+            for c in 0..cols {
+                let idx = r * cols + c;
+                out[idx] = c0 * (n * gd[idx] - sd[r] - xd[idx] * sd[rows + r]);
+            }
+        }
+        Tensor::from_vec(&[rows, cols], out)
+    };
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+    (dx, dgamma, dbeta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+    use crate::dist::Layout2D;
+    use crate::rng::Xoshiro256;
+    use crate::spmd::run_spmd;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Tensor::randn(shape, 1.0, &mut rng)
+    }
+
+    fn scatter_bias_row0(mesh: &Mesh, v: &Tensor) -> Vec<Option<Tensor>> {
+        let q = mesh.edge();
+        let n = v.numel();
+        (0..mesh.size())
+            .map(|r| {
+                let (row, col) = mesh.coord_of(r);
+                (row == 0).then(|| {
+                    v.reshape(&[1, n]).block(0, col * (n / q), 1, n / q).into_reshape(&[n / q])
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn summa_nn_matches_dense() {
+        for q in [2usize, 3] {
+            let mesh = Mesh::new(q);
+            let (m, n, k) = (6 * q, 4 * q, 2 * q);
+            let a = randt(&[m, n], 1);
+            let b = randt(&[n, k], 2);
+            let c_ref = a.matmul(&b);
+            let a_s = Layout2D::scatter(&mesh, &a);
+            let b_s = Layout2D::scatter(&mesh, &b);
+            let out = run_spmd(q * q, NetModel::zero(), move |rank, ep| {
+                let ctx = Ctx2D::new(Mesh::new(q), rank);
+                summa_nn(ep, &ctx, &a_s[rank], &b_s[rank])
+            });
+            let got = Layout2D::gather(&mesh, &out, m, k);
+            assert!(got.max_abs_diff(&c_ref) < 1e-3, "q={q}");
+        }
+    }
+
+    #[test]
+    fn summa_nt_matches_dense() {
+        let q = 2;
+        let mesh = Mesh::new(q);
+        let (m, n, k) = (8, 6, 4);
+        let a = randt(&[m, n], 3);
+        let b = randt(&[k, n], 4);
+        let c_ref = a.matmul_nt(&b);
+        let a_s = Layout2D::scatter(&mesh, &a);
+        let b_s = Layout2D::scatter(&mesh, &b);
+        let out = run_spmd(q * q, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx2D::new(Mesh::new(q), rank);
+            summa_nt(ep, &ctx, &a_s[rank], &b_s[rank])
+        });
+        let got = Layout2D::gather(&mesh, &out, m, k);
+        assert!(got.max_abs_diff(&c_ref) < 1e-3);
+    }
+
+    #[test]
+    fn summa_tn_matches_dense() {
+        let q = 2;
+        let mesh = Mesh::new(q);
+        let (m, n, k) = (8, 6, 4); // A (n, m), B (n, k)
+        let a = randt(&[n, m], 5);
+        let b = randt(&[n, k], 6);
+        let c_ref = a.matmul_tn(&b);
+        let a_s = Layout2D::scatter(&mesh, &a);
+        let b_s = Layout2D::scatter(&mesh, &b);
+        let out = run_spmd(q * q, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx2D::new(Mesh::new(q), rank);
+            summa_tn(ep, &ctx, &a_s[rank], &b_s[rank])
+        });
+        let got = Layout2D::gather(&mesh, &out, m, k);
+        assert!(got.max_abs_diff(&c_ref) < 1e-3);
+    }
+
+    #[test]
+    fn linear_fwd_bwd_matches_dense() {
+        let q = 2;
+        let mesh = Mesh::new(q);
+        let (m, n, k) = (8, 6, 4);
+        let x = randt(&[m, n], 7);
+        let w = randt(&[n, k], 8);
+        let bias = randt(&[k], 9);
+        let dy = randt(&[m, k], 10);
+        let y_ref = x.matmul(&w).add_row_vector(&bias);
+        let dx_ref = dy.matmul_nt(&w);
+        let dw_ref = x.matmul_tn(&dy);
+        let db_ref = dy.sum_rows();
+        let x_s = Layout2D::scatter(&mesh, &x);
+        let w_s = Layout2D::scatter(&mesh, &w);
+        let b_s = scatter_bias_row0(&mesh, &bias);
+        let dy_s = Layout2D::scatter(&mesh, &dy);
+        let out = run_spmd(q * q, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx2D::new(Mesh::new(q), rank);
+            let y = linear_fwd(ep, &ctx, &x_s[rank], &w_s[rank], b_s[rank].as_ref(), true);
+            let (dx, dw, db) = linear_bwd(ep, &ctx, &dy_s[rank], &x_s[rank], &w_s[rank]);
+            (y, dx, dw, db)
+        });
+        let y = Layout2D::gather(&mesh, &out.iter().map(|o| o.0.clone()).collect::<Vec<_>>(), m, k);
+        let dx = Layout2D::gather(&mesh, &out.iter().map(|o| o.1.clone()).collect::<Vec<_>>(), m, n);
+        let dw = Layout2D::gather(&mesh, &out.iter().map(|o| o.2.clone()).collect::<Vec<_>>(), n, k);
+        assert!(y.max_abs_diff(&y_ref) < 1e-3);
+        assert!(dx.max_abs_diff(&dx_ref) < 1e-3);
+        assert!(dw.max_abs_diff(&dw_ref) < 1e-3);
+        // db chunks live on mesh row 0.
+        let db0 = out[0].3.as_ref().unwrap();
+        let db1 = out[1].3.as_ref().unwrap();
+        let db = Tensor::concat_cols(&[db0.reshape(&[1, k / q]), db1.reshape(&[1, k / q])]);
+        assert!(db.max_abs_diff(&db_ref.reshape(&[1, k])) < 1e-3);
+        assert!(out[2].3.is_none() && out[3].3.is_none());
+    }
+
+    #[test]
+    fn layernorm_2d_matches_dense() {
+        let q = 2;
+        let mesh = Mesh::new(q);
+        let (m, n) = (8, 12);
+        let x = randt(&[m, n], 11);
+        let gamma = randt(&[n], 12).map(|v| 1.0 + 0.1 * v);
+        let beta = randt(&[n], 13).scale(0.1);
+        let eps = 1e-5f32;
+        let mut y_ref = Tensor::zeros(&[m, n]);
+        for r in 0..m {
+            let row: Vec<f32> = (0..n).map(|c| x.at2(r, c)).collect();
+            let mean = row.iter().sum::<f32>() / n as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n as f32;
+            let inv = 1.0 / (var + eps).sqrt();
+            for c in 0..n {
+                y_ref.data_mut()[r * n + c] =
+                    (row[c] - mean) * inv * gamma.data()[c] + beta.data()[c];
+            }
+        }
+        let x_s = Layout2D::scatter(&mesh, &x);
+        let g_s = scatter_bias_row0(&mesh, &gamma);
+        let b_s = scatter_bias_row0(&mesh, &beta);
+        let out = run_spmd(q * q, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx2D::new(Mesh::new(q), rank);
+            layernorm(ep, &ctx, &x_s[rank], g_s[rank].as_ref(), b_s[rank].as_ref(), eps, n).0
+        });
+        let got = Layout2D::gather(&mesh, &out, m, n);
+        assert!(got.max_abs_diff(&y_ref) < 1e-3);
+    }
+
+    #[test]
+    fn phantom_summa_charges_time() {
+        let q = 2;
+        let out = run_spmd(q * q, NetModel::longhorn_v100(), move |rank, ep| {
+            let ctx = Ctx2D::new(Mesh::new(q), rank);
+            let a = Tensor::phantom(&[256, 256]);
+            let b = Tensor::phantom(&[256, 256]);
+            let c = summa_nn(ep, &ctx, &a, &b);
+            (c.is_phantom(), ep.clock)
+        });
+        for (ph, clock) in out {
+            assert!(ph);
+            assert!(clock > 0.0);
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! This is the boundary where the L1/L2 Python work re-enters the system —
+//! as **HLO text**, never as a Python process. `make artifacts` runs
+//! `python/compile/aot.py` once; afterwards the Rust binary is
+//! self-contained: [`Runtime`] parses `artifacts/manifest.tsv`, compiles
+//! each program on the PJRT CPU client on first use (cached thereafter),
+//! and executes it with `Tensor` inputs.
+//!
+//! ## Threading
+//!
+//! The `xla` crate's client types are single-threaded; `cubic`'s workers
+//! are many. A dedicated **service thread** owns the `PjRtClient` and all
+//! compiled executables; worker threads talk to it through a channel via
+//! the cloneable [`RuntimeHandle`]. (On this 1-core container the
+//! serialization is also the honest performance model — one accelerator
+//! services one op at a time.)
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+
+/// One artifact as described by `manifest.tsv`:
+/// `name \t file \t in_shapes \t out_shape` with shapes like `64x64,64x256`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub in_shapes: Vec<Vec<usize>>,
+    pub out_shape: Vec<usize>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    s.split('x')
+        .map(|d| d.parse::<usize>().map_err(|e| anyhow!("bad dim {d:?}: {e}")))
+        .collect()
+}
+
+/// Parsed manifest (name → entry).
+#[derive(Debug, Default)]
+pub struct Manifest {
+    entries: HashMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = HashMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                bail!("manifest line {}: expected 4 tab-separated columns", i + 1);
+            }
+            let in_shapes = cols[2]
+                .split(',')
+                .map(parse_shape)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("manifest line {}", i + 1))?;
+            let entry = ManifestEntry {
+                name: cols[0].to_string(),
+                file: cols[1].to_string(),
+                in_shapes,
+                out_shape: parse_shape(cols[3])?,
+            };
+            if entries.insert(entry.name.clone(), entry).is_some() {
+                bail!("duplicate manifest entry {:?}", cols[0]);
+            }
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Artifact name for a local matmul of the given form and shape, if the
+    /// AOT bundle includes it (`mm_nn_MxKxN` naming from aot.py).
+    pub fn matmul_name(&self, form: &str, m: usize, k: usize, n: usize) -> Option<String> {
+        let name = format!("mm_{form}_{m}x{k}x{n}");
+        self.entries.contains_key(&name).then_some(name)
+    }
+}
+
+enum Request {
+    Execute {
+        name: String,
+        inputs: Vec<Tensor>,
+        reply: Sender<Result<Tensor>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle for submitting execution requests from any thread.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: Sender<Request>,
+}
+
+impl RuntimeHandle {
+    /// Execute artifact `name` with `inputs`; blocks until the result is
+    /// ready. Inputs must be materialized rank-1/2 f32 tensors matching the
+    /// manifest shapes.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Tensor> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Request::Execute {
+                name: name.to_string(),
+                inputs: inputs.to_vec(),
+                reply,
+            })
+            .map_err(|_| anyhow!("runtime service thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("runtime dropped the request"))?
+    }
+}
+
+/// The artifact runtime: manifest + service thread owning the PJRT client.
+pub struct Runtime {
+    pub manifest: Manifest,
+    handle: RuntimeHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Runtime {
+    /// Load a runtime for an artifacts directory produced by `make
+    /// artifacts`. Compiles lazily: each program is compiled on first
+    /// execute and cached.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let entries: HashMap<String, ManifestEntry> = manifest
+            .names()
+            .into_iter()
+            .map(|n| (n.clone(), manifest.get(&n).unwrap().clone()))
+            .collect();
+        let (tx, rx) = channel::<Request>();
+        let join = std::thread::Builder::new()
+            .name("cubic-pjrt".into())
+            .spawn(move || service_thread(dir, entries, rx))
+            .context("spawning PJRT service thread")?;
+        Ok(Runtime {
+            manifest,
+            handle: RuntimeHandle { tx },
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> RuntimeHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The service thread: owns the client, compiles + caches executables,
+/// answers execute requests until shutdown.
+fn service_thread(
+    dir: PathBuf,
+    entries: HashMap<String, ManifestEntry>,
+    rx: std::sync::mpsc::Receiver<Request>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the construction error.
+            while let Ok(req) = rx.recv() {
+                if let Request::Execute { reply, .. } = req {
+                    let _ = reply.send(Err(anyhow!("PJRT client failed to start: {e}")));
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Execute { name, inputs, reply } => {
+                let result = execute_one(&client, &dir, &entries, &mut cache, &name, &inputs);
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn execute_one(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    entries: &HashMap<String, ManifestEntry>,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    name: &str,
+    inputs: &[Tensor],
+) -> Result<Tensor> {
+    let entry = entries
+        .get(name)
+        .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+    if inputs.len() != entry.in_shapes.len() {
+        bail!(
+            "{name}: expected {} inputs, got {}",
+            entry.in_shapes.len(),
+            inputs.len()
+        );
+    }
+    for (i, (t, want)) in inputs.iter().zip(entry.in_shapes.iter()).enumerate() {
+        if t.shape() != &want[..] {
+            bail!("{name}: input {i} shape {:?} != manifest {:?}", t.shape(), want);
+        }
+        if t.is_phantom() {
+            bail!("{name}: input {i} is phantom; PJRT needs materialized data");
+        }
+    }
+    if !cache.contains_key(name) {
+        let path = dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        cache.insert(name.to_string(), exe);
+    }
+    let exe = cache.get(name).unwrap();
+    let literals: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|t| {
+            let flat = xla::Literal::vec1(t.data());
+            let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+            flat.reshape(&dims).map_err(|e| anyhow!("reshaping input: {e}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("fetching result: {e}"))?;
+    // aot.py lowers with return_tuple=True → 1-tuple.
+    let out = result
+        .to_tuple1()
+        .map_err(|e| anyhow!("untupling result: {e}"))?;
+    let values = out
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("reading result: {e}"))?;
+    Ok(Tensor::from_vec(&entry.out_shape, values))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_and_indexes() {
+        let text = "mm_nn_4x8x2\tmm_nn_4x8x2.hlo.txt\t4x8,8x2\t4x2\n\
+                    gelu_4x8\tgelu_4x8.hlo.txt\t4x8\t4x8\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.len(), 2);
+        let e = m.get("mm_nn_4x8x2").unwrap();
+        assert_eq!(e.in_shapes, vec![vec![4, 8], vec![8, 2]]);
+        assert_eq!(e.out_shape, vec![4, 2]);
+        assert_eq!(m.matmul_name("nn", 4, 8, 2), Some("mm_nn_4x8x2".into()));
+        assert_eq!(m.matmul_name("nn", 4, 8, 3), None);
+        assert_eq!(m.names()[0], "gelu_4x8");
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("too\tfew\tcolumns\n").is_err());
+        assert!(Manifest::parse("a\tb\t4xZ\t4\n").is_err());
+        let dup = "a\tf\t1\t1\na\tf\t1\t1\n";
+        assert!(Manifest::parse(dup).is_err());
+    }
+
+    // Execution against real artifacts is covered by rust/tests/
+    // runtime_artifacts.rs (requires `make artifacts` first).
+}

@@ -1,0 +1,95 @@
+//! Minimal SPMD launcher: run one closure per rank on its own thread with a
+//! connected [`Endpoint`]. This is the primitive beneath [`crate::engine`]
+//! and the scaffolding used by every distributed test in the repo.
+
+use crate::comm::{Endpoint, NetModel, World};
+use std::sync::Arc;
+use std::thread;
+
+/// Launch `n` ranks, each running `f(rank, endpoint)`; returns per-rank
+/// results in rank order. A panicking rank propagates its panic to the
+/// caller (after all threads have been joined), so distributed assertion
+/// failures surface as ordinary test failures.
+pub fn run_spmd<T: Send + 'static>(
+    n: usize,
+    net: NetModel,
+    f: impl Fn(usize, &mut Endpoint) -> T + Send + Sync + 'static,
+) -> Vec<T> {
+    let world = World::new(n, net);
+    let f = Arc::new(f);
+    let mut handles = Vec::with_capacity(n);
+    for (rank, mut ep) in world.endpoints().into_iter().enumerate() {
+        let f = f.clone();
+        let builder = thread::Builder::new()
+            .name(format!("cubic-rank-{rank}"))
+            // Deep transformer stacks recurse through per-layer backward
+            // closures; give workers a roomy stack.
+            .stack_size(16 << 20);
+        handles.push(
+            builder
+                .spawn(move || f(rank, &mut ep))
+                .expect("failed to spawn worker thread"),
+        );
+    }
+    let results: Vec<thread::Result<T>> = handles.into_iter().map(|h| h.join()).collect();
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(rank, r)| match r {
+            Ok(v) => v,
+            Err(e) => {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| e.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!("rank {rank} panicked: {msg}");
+            }
+        })
+        .collect()
+}
+
+/// Like [`run_spmd`] but also returns each rank's final [`Endpoint`] state
+/// (virtual clock + comm stats) for the metrics layer.
+pub fn run_spmd_with_stats<T: Send + 'static>(
+    n: usize,
+    net: NetModel,
+    f: impl Fn(usize, &mut Endpoint) -> T + Send + Sync + 'static,
+) -> Vec<(T, f64, crate::comm::CommStats)> {
+    run_spmd(n, net, move |rank, ep| {
+        let v = f(rank, ep);
+        (v, ep.clock, ep.stats.clone())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_ranks_and_orders_results() {
+        let out = run_spmd(5, NetModel::zero(), |rank, _| rank * 2);
+        assert_eq!(out, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank 2 panicked")]
+    fn worker_panic_propagates() {
+        run_spmd(4, NetModel::zero(), |rank, _| {
+            if rank == 2 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn stats_variant_reports_clocks() {
+        let out = run_spmd_with_stats(2, NetModel::flat(0.0, 1e9, 1e9), |_, ep| {
+            ep.charge_flops(3e9);
+        });
+        for (_, clock, stats) in out {
+            assert!((clock - 3.0).abs() < 1e-9);
+            assert!((stats.compute_time - 3.0).abs() < 1e-9);
+        }
+    }
+}

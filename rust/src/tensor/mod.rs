@@ -1,0 +1,612 @@
+//! Dense tensor substrate.
+//!
+//! The offline crate set has no `ndarray` or BLAS, so `cubic` carries its own
+//! dense f32 tensor with the handful of operations a Transformer needs:
+//! blocked matrix multiplication in all three forms the paper uses
+//! (`C = AB`, `C = ABᵀ`, `C = AᵀB`), transpose, elementwise arithmetic,
+//! reductions, and block slicing (the primitive behind every shard layout in
+//! [`crate::dist`]).
+//!
+//! ## Dual-mode tensors
+//!
+//! A [`Tensor`] is either *materialized* (carries a `Vec<f32>`) or *phantom*
+//! (shape only). Every operation flows through the same code path in both
+//! modes: phantom inputs produce phantom outputs with the correct shape.
+//! This is the mechanism that lets the benchmark harness drive the exact
+//! 1-D/2-D/3-D schedules at paper scale (hidden 8192, batch 384 — ~10¹⁵
+//! flops) while charging only virtual time, and lets the test suite verify
+//! the *same* code path numerically at small scale. See DESIGN.md §2.
+
+use crate::rng::Xoshiro256;
+use std::fmt;
+
+pub mod matmul;
+
+pub use matmul::{flops_executed as matmul_flops, reset_flops as reset_flop_counter};
+
+/// Row-major dense f32 tensor (materialized) or shape-only placeholder
+/// (phantom).
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Option<Vec<f32>>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.data {
+            Some(d) if d.len() <= 16 => {
+                write!(f, "Tensor{:?} {:?}", self.shape, d)
+            }
+            Some(_) => write!(f, "Tensor{:?} (materialized)", self.shape),
+            None => write!(f, "Tensor{:?} (phantom)", self.shape),
+        }
+    }
+}
+
+impl Tensor {
+    // ------------------------------------------------------------------
+    // Constructors
+    // ------------------------------------------------------------------
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: Some(vec![0.0; n]) }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self::full(shape, 1.0)
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: Some(vec![v; n]) }
+    }
+
+    /// Shape-only tensor: flows through every op without computing data.
+    pub fn phantom(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: None }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {:?} does not match data len {}", shape, data.len());
+        Self { shape: shape.to_vec(), data: Some(data) }
+    }
+
+    /// N(0, std) initialized tensor (deterministic given the rng state).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Xoshiro256) -> Self {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0.0f32; n];
+        rng.fill_normal(&mut data, std);
+        Self { shape: shape.to_vec(), data: Some(data) }
+    }
+
+    /// U(lo, hi) initialized tensor.
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Xoshiro256) -> Self {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0.0f32; n];
+        rng.fill_uniform(&mut data, lo, hi);
+        Self { shape: shape.to_vec(), data: Some(data) }
+    }
+
+    // ------------------------------------------------------------------
+    // Accessors
+    // ------------------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_phantom(&self) -> bool {
+        self.data.is_none()
+    }
+
+    /// Bytes this tensor would occupy materialized (used by the memory
+    /// accountant regardless of mode).
+    pub fn nominal_bytes(&self) -> usize {
+        self.numel() * std::mem::size_of::<f32>()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        self.data.as_deref().expect("tensor is phantom; no data")
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        self.data.as_deref_mut().expect("tensor is phantom; no data")
+    }
+
+    pub fn try_data(&self) -> Option<&[f32]> {
+        self.data.as_deref()
+    }
+
+    /// 2-D dimensions helper; panics if not rank 2.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "expected rank-2 tensor, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        let (_, cols) = self.dims2();
+        self.data()[r * cols + c]
+    }
+
+    // ------------------------------------------------------------------
+    // Shape manipulation
+    // ------------------------------------------------------------------
+
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.numel(), "reshape {:?} -> {:?} changes numel", self.shape, shape);
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    pub fn into_reshape(mut self, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.numel(), "reshape {:?} -> {:?} changes numel", self.shape, shape);
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D transpose.
+    pub fn transpose(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let Some(src) = self.try_data() else {
+            return Tensor::phantom(&[c, r]);
+        };
+        let mut out = vec![0.0f32; r * c];
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for ib in (0..r).step_by(B) {
+            for jb in (0..c).step_by(B) {
+                for i in ib..(ib + B).min(r) {
+                    for j in jb..(jb + B).min(c) {
+                        out[j * r + i] = src[i * c + j];
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(&[c, r], out)
+    }
+
+    // ------------------------------------------------------------------
+    // Block slicing / assembly — the primitive behind all shard layouts
+    // ------------------------------------------------------------------
+
+    /// Extract the sub-block `[r0..r0+rows, c0..c0+cols]` of a rank-2 tensor.
+    pub fn block(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Tensor {
+        let (r, c) = self.dims2();
+        assert!(r0 + rows <= r && c0 + cols <= c,
+            "block [{r0}+{rows}, {c0}+{cols}] out of bounds for {:?}", self.shape);
+        let Some(src) = self.try_data() else {
+            return Tensor::phantom(&[rows, cols]);
+        };
+        let mut out = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            let off = (r0 + i) * c + c0;
+            out.extend_from_slice(&src[off..off + cols]);
+        }
+        Tensor::from_vec(&[rows, cols], out)
+    }
+
+    /// Write `src` into the sub-block at `[r0, c0]` of a rank-2 tensor.
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Tensor) {
+        let (r, c) = self.dims2();
+        let (rows, cols) = src.dims2();
+        assert!(r0 + rows <= r && c0 + cols <= c,
+            "set_block [{r0}+{rows}, {c0}+{cols}] out of bounds for {r}x{c}");
+        if self.is_phantom() || src.is_phantom() {
+            return;
+        }
+        let sdata = src.data().to_vec();
+        let dst = self.data_mut();
+        for i in 0..rows {
+            let doff = (r0 + i) * c + c0;
+            let soff = i * cols;
+            dst[doff..doff + cols].copy_from_slice(&sdata[soff..soff + cols]);
+        }
+    }
+
+    /// Concatenate rank-2 tensors along rows (axis 0).
+    pub fn concat_rows(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let cols = parts[0].dims2().1;
+        let rows: usize = parts.iter().map(|p| {
+            assert_eq!(p.dims2().1, cols, "concat_rows: column mismatch");
+            p.dims2().0
+        }).sum();
+        if parts.iter().any(|p| p.is_phantom()) {
+            return Tensor::phantom(&[rows, cols]);
+        }
+        let mut data = Vec::with_capacity(rows * cols);
+        for p in parts {
+            data.extend_from_slice(p.data());
+        }
+        Tensor::from_vec(&[rows, cols], data)
+    }
+
+    /// Concatenate rank-2 tensors along columns (axis 1).
+    pub fn concat_cols(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let rows = parts[0].dims2().0;
+        let cols: usize = parts.iter().map(|p| {
+            assert_eq!(p.dims2().0, rows, "concat_cols: row mismatch");
+            p.dims2().1
+        }).sum();
+        if parts.iter().any(|p| p.is_phantom()) {
+            return Tensor::phantom(&[rows, cols]);
+        }
+        let mut data = vec![0.0f32; rows * cols];
+        let mut c0 = 0;
+        for p in parts {
+            let (_, pc) = p.dims2();
+            let pd = p.data();
+            for i in 0..rows {
+                data[i * cols + c0..i * cols + c0 + pc]
+                    .copy_from_slice(&pd[i * pc..(i + 1) * pc]);
+            }
+            c0 += pc;
+        }
+        Tensor::from_vec(&[rows, cols], data)
+    }
+
+    /// Split a rank-2 tensor into `n` equal row chunks.
+    pub fn split_rows(&self, n: usize) -> Vec<Tensor> {
+        let (r, c) = self.dims2();
+        assert_eq!(r % n, 0, "split_rows: {r} rows not divisible by {n}");
+        let chunk = r / n;
+        (0..n).map(|i| self.block(i * chunk, 0, chunk, c)).collect()
+    }
+
+    /// Split a rank-2 tensor into `n` equal column chunks.
+    pub fn split_cols(&self, n: usize) -> Vec<Tensor> {
+        let (r, c) = self.dims2();
+        assert_eq!(c % n, 0, "split_cols: {c} cols not divisible by {n}");
+        let chunk = c / n;
+        (0..n).map(|j| self.block(0, j * chunk, r, chunk)).collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Elementwise arithmetic
+    // ------------------------------------------------------------------
+
+    fn zip_with(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape,
+            "elementwise shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        match (self.try_data(), other.try_data()) {
+            (Some(a), Some(b)) => {
+                let data = a.iter().zip(b.iter()).map(|(&x, &y)| f(x, y)).collect();
+                Tensor::from_vec(&self.shape, data)
+            }
+            _ => Tensor::phantom(&self.shape),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip_with(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip_with(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip_with(other, |a, b| a * b)
+    }
+
+    /// In-place accumulate: `self += other`.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape,
+            "add_assign shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        if self.is_phantom() || other.is_phantom() {
+            self.data = None;
+            return;
+        }
+        let o = other.data();
+        for (a, &b) in self.data_mut().iter_mut().zip(o.iter()) {
+            *a += b;
+        }
+    }
+
+    /// In-place axpy: `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        if self.is_phantom() || other.is_phantom() {
+            self.data = None;
+            return;
+        }
+        let o = other.data();
+        for (a, &b) in self.data_mut().iter_mut().zip(o.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        match self.try_data() {
+            Some(d) => Tensor::from_vec(&self.shape, d.iter().map(|&x| f(x)).collect()),
+            None => Tensor::phantom(&self.shape),
+        }
+    }
+
+    /// Add a row vector (len == cols) to every row of a rank-2 tensor.
+    pub fn add_row_vector(&self, v: &Tensor) -> Tensor {
+        let (r, c) = self.dims2();
+        assert_eq!(v.numel(), c, "row vector len {} != cols {c}", v.numel());
+        match (self.try_data(), v.try_data()) {
+            (Some(a), Some(b)) => {
+                let mut out = Vec::with_capacity(r * c);
+                for i in 0..r {
+                    for j in 0..c {
+                        out.push(a[i * c + j] + b[j]);
+                    }
+                }
+                Tensor::from_vec(&self.shape, out)
+            }
+            _ => Tensor::phantom(&self.shape),
+        }
+    }
+
+    /// Multiply every row of a rank-2 tensor by a row vector (len == cols).
+    pub fn mul_row_vector(&self, v: &Tensor) -> Tensor {
+        let (r, c) = self.dims2();
+        assert_eq!(v.numel(), c, "row vector len {} != cols {c}", v.numel());
+        match (self.try_data(), v.try_data()) {
+            (Some(a), Some(b)) => {
+                let mut out = Vec::with_capacity(r * c);
+                for i in 0..r {
+                    for j in 0..c {
+                        out.push(a[i * c + j] * b[j]);
+                    }
+                }
+                Tensor::from_vec(&self.shape, out)
+            }
+            _ => Tensor::phantom(&self.shape),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Reductions
+    // ------------------------------------------------------------------
+
+    pub fn sum(&self) -> f32 {
+        self.data().iter().sum()
+    }
+
+    /// Sum over rows producing a row vector of length `cols`.
+    pub fn sum_rows(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let Some(d) = self.try_data() else {
+            return Tensor::phantom(&[c]);
+        };
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j] += d[i * c + j];
+            }
+        }
+        Tensor::from_vec(&[c], out)
+    }
+
+    /// Sum over columns producing a column vector of length `rows`.
+    pub fn sum_cols(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let Some(d) = self.try_data() else {
+            return Tensor::phantom(&[r]);
+        };
+        let mut out = vec![0.0f32; r];
+        for i in 0..r {
+            let row = &d[i * c..(i + 1) * c];
+            out[i] = row.iter().sum();
+        }
+        Tensor::from_vec(&[r], out)
+    }
+
+    /// Max |a - b| over all elements; used pervasively by tests.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape,
+            "max_abs_diff shape mismatch: {:?} vs {:?}", self.shape, other.shape);
+        self.data()
+            .iter()
+            .zip(other.data().iter())
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative L2 error ‖a−b‖ / (‖b‖ + eps).
+    pub fn rel_l2_error(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (&a, &b) in self.data().iter().zip(other.data().iter()) {
+            num += ((a - b) as f64).powi(2);
+            den += (b as f64).powi(2);
+        }
+        (num.sqrt() / (den.sqrt() + 1e-12)) as f32
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        (self.data().iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sqrt() as f32
+    }
+
+    // ------------------------------------------------------------------
+    // Matmul — delegates to the blocked kernels in `matmul`
+    // ------------------------------------------------------------------
+
+    /// `C = self · other` — (m,k)·(k,n) -> (m,n).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        matmul::matmul_nn(self, other)
+    }
+
+    /// `C = self · otherᵀ` — (m,k)·(n,k)ᵀ -> (m,n).
+    pub fn matmul_nt(&self, other: &Tensor) -> Tensor {
+        matmul::matmul_nt(self, other)
+    }
+
+    /// `C = selfᵀ · other` — (k,m)ᵀ·(k,n) -> (m,n).
+    pub fn matmul_tn(&self, other: &Tensor) -> Tensor {
+        matmul::matmul_tn(self, other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Tensor {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Tensor::from_vec(&[rows, cols], data)
+    }
+
+    #[test]
+    fn construct_and_shape() {
+        let t = Tensor::zeros(&[3, 4]);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.numel(), 12);
+        assert!(!t.is_phantom());
+        let p = Tensor::phantom(&[3, 4]);
+        assert!(p.is_phantom());
+        assert_eq!(p.nominal_bytes(), 48);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let t = t2(5, 7, |i, j| (i * 10 + j) as f32);
+        let tt = t.transpose().transpose();
+        assert_eq!(t, tt);
+        assert_eq!(t.transpose().at2(3, 4), t.at2(4, 3));
+    }
+
+    #[test]
+    fn transpose_phantom_keeps_shape() {
+        let p = Tensor::phantom(&[5, 7]);
+        let pt = p.transpose();
+        assert!(pt.is_phantom());
+        assert_eq!(pt.shape(), &[7, 5]);
+    }
+
+    #[test]
+    fn block_and_set_block_round_trip() {
+        let t = t2(6, 8, |i, j| (i * 8 + j) as f32);
+        let b = t.block(2, 3, 3, 4);
+        assert_eq!(b.shape(), &[3, 4]);
+        assert_eq!(b.at2(0, 0), t.at2(2, 3));
+        assert_eq!(b.at2(2, 3), t.at2(4, 6));
+        let mut z = Tensor::zeros(&[6, 8]);
+        z.set_block(2, 3, &b);
+        assert_eq!(z.at2(3, 4), t.at2(3, 4));
+        assert_eq!(z.at2(0, 0), 0.0);
+    }
+
+    #[test]
+    fn split_concat_rows_round_trip() {
+        let t = t2(6, 4, |i, j| (i + j) as f32 * 0.5);
+        let parts = t.split_rows(3);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(Tensor::concat_rows(&parts), t);
+    }
+
+    #[test]
+    fn split_concat_cols_round_trip() {
+        let t = t2(4, 6, |i, j| (i * 6 + j) as f32);
+        let parts = t.split_cols(2);
+        assert_eq!(parts[1].at2(0, 0), 3.0);
+        assert_eq!(Tensor::concat_cols(&parts), t);
+    }
+
+    #[test]
+    fn elementwise_ops() {
+        let a = t2(2, 3, |i, j| (i + j) as f32);
+        let b = t2(2, 3, |_, _| 2.0);
+        assert_eq!(a.add(&b).at2(1, 2), 5.0);
+        assert_eq!(a.sub(&b).at2(0, 0), -2.0);
+        assert_eq!(a.mul(&b).at2(1, 1), 4.0);
+        assert_eq!(a.scale(3.0).at2(1, 2), 9.0);
+        let mut c = a.clone();
+        c.add_assign(&b);
+        assert_eq!(c.at2(0, 1), 3.0);
+        c.axpy(-1.0, &b);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn phantom_propagates_through_elementwise() {
+        let a = Tensor::phantom(&[2, 3]);
+        let b = Tensor::ones(&[2, 3]);
+        assert!(a.add(&b).is_phantom());
+        assert!(b.mul(&a).is_phantom());
+        let mut c = Tensor::ones(&[2, 3]);
+        c.add_assign(&a);
+        assert!(c.is_phantom());
+    }
+
+    #[test]
+    fn row_vector_ops() {
+        let a = t2(2, 3, |i, j| (i * 3 + j) as f32);
+        let v = Tensor::from_vec(&[3], vec![10.0, 20.0, 30.0]);
+        let s = a.add_row_vector(&v);
+        assert_eq!(s.at2(0, 0), 10.0);
+        assert_eq!(s.at2(1, 2), 35.0);
+        let m = a.mul_row_vector(&v);
+        assert_eq!(m.at2(1, 1), 80.0);
+    }
+
+    #[test]
+    fn reductions() {
+        let a = t2(2, 3, |i, j| (i * 3 + j) as f32); // 0..5
+        assert_eq!(a.sum(), 15.0);
+        assert_eq!(a.sum_rows().data(), &[3.0, 5.0, 7.0]);
+        assert_eq!(a.sum_cols().data(), &[3.0, 12.0]);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = t2(2, 2, |i, j| (i + j) as f32);
+        let mut b = a.clone();
+        b.data_mut()[3] += 0.5;
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+        assert!(a.rel_l2_error(&a) < 1e-9);
+    }
+
+    #[test]
+    fn randn_is_deterministic_per_seed() {
+        let mut r1 = Xoshiro256::seed_from_u64(11);
+        let mut r2 = Xoshiro256::seed_from_u64(11);
+        let a = Tensor::randn(&[4, 4], 0.02, &mut r1);
+        let b = Tensor::randn(&[4, 4], 0.02, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "phantom")]
+    fn phantom_data_access_panics() {
+        let p = Tensor::phantom(&[2, 2]);
+        let _ = p.data();
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let t = Tensor::zeros(&[2, 6]);
+        let r = t.reshape(&[3, 4]);
+        assert_eq!(r.shape(), &[3, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "changes numel")]
+    fn bad_reshape_panics() {
+        let t = Tensor::zeros(&[2, 6]);
+        let _ = t.reshape(&[3, 5]);
+    }
+}

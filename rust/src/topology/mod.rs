@@ -1,0 +1,335 @@
+//! Process topologies: the 1-D line, 2-D mesh, and 3-D cube the three
+//! parallelisms run on.
+//!
+//! The paper (§2.3, Figure 1) stacks `P = p³` processors into a cube with
+//! coordinates `(i, j, l)` and directions `x` (varying `i`), `y` (varying
+//! `j`), `z` (varying `l`). Collectives run along axis-aligned *lines* of the
+//! cube: e.g. "all-gather A_{il} in the y direction" is an all-gather over
+//! the `p` ranks `{(i, j, l) : 0 ≤ j < p}`.
+//!
+//! This module owns rank ↔ coordinate maps and group enumeration for all
+//! three topologies, plus the rank → node map used by the hierarchical
+//! network model (4 GPUs per node on TACC Longhorn).
+
+/// Axis of a 3-D cube, named exactly as in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Axis {
+    /// Varies `i` (the paper's x direction — weight matrices travel here).
+    X,
+    /// Varies `j` (the paper's y direction — inputs gathered here).
+    Y,
+    /// Varies `l` (the paper's z direction — outputs reduce-scattered here).
+    Z,
+}
+
+/// Coordinate in a `p × p × p` cube.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Coord {
+    pub i: usize,
+    pub j: usize,
+    pub l: usize,
+}
+
+impl Coord {
+    pub fn axis(&self, axis: Axis) -> usize {
+        match axis {
+            Axis::X => self.i,
+            Axis::Y => self.j,
+            Axis::Z => self.l,
+        }
+    }
+
+    pub fn with_axis(mut self, axis: Axis, v: usize) -> Coord {
+        match axis {
+            Axis::X => self.i = v,
+            Axis::Y => self.j = v,
+            Axis::Z => self.l = v,
+        }
+        self
+    }
+}
+
+/// `p³` processor cube (the 3-D parallelism substrate).
+#[derive(Clone, Debug)]
+pub struct Cube {
+    p: usize,
+}
+
+impl Cube {
+    pub fn new(p: usize) -> Self {
+        assert!(p >= 1, "cube edge must be >= 1");
+        Self { p }
+    }
+
+    /// Edge length `p`.
+    pub fn edge(&self) -> usize {
+        self.p
+    }
+
+    /// Total ranks `P = p³`.
+    pub fn size(&self) -> usize {
+        self.p * self.p * self.p
+    }
+
+    /// Rank layout: `rank = (i·p + j)·p + l`. The z (l) axis is innermost so
+    /// that z-lines are contiguous ranks — on Longhorn-style packing (4 GPUs
+    /// per node) this keeps the output reduce-scatter mostly intra-node for
+    /// p ≥ 4, mirroring how the authors would map ranks with contiguous
+    /// allocation.
+    pub fn rank_of(&self, c: Coord) -> usize {
+        debug_assert!(c.i < self.p && c.j < self.p && c.l < self.p,
+            "coord {:?} out of bounds for p={}", c, self.p);
+        (c.i * self.p + c.j) * self.p + c.l
+    }
+
+    pub fn coord_of(&self, rank: usize) -> Coord {
+        debug_assert!(rank < self.size());
+        Coord {
+            i: rank / (self.p * self.p),
+            j: (rank / self.p) % self.p,
+            l: rank % self.p,
+        }
+    }
+
+    /// The `p` ranks on the axis-aligned line through `c` along `axis`,
+    /// ordered by their coordinate on that axis. `c` itself is included at
+    /// position `c.axis(axis)`.
+    pub fn line(&self, c: Coord, axis: Axis) -> Vec<usize> {
+        (0..self.p)
+            .map(|v| self.rank_of(c.with_axis(axis, v)))
+            .collect()
+    }
+
+    /// Position of `c` within its own `line(c, axis)`.
+    pub fn pos_in_line(&self, c: Coord, axis: Axis) -> usize {
+        c.axis(axis)
+    }
+
+    /// All axis-aligned lines along `axis` (each of length `p`), i.e. `p²`
+    /// disjoint groups covering the cube.
+    pub fn all_lines(&self, axis: Axis) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.p * self.p);
+        for a in 0..self.p {
+            for b in 0..self.p {
+                let c = match axis {
+                    Axis::X => Coord { i: 0, j: a, l: b },
+                    Axis::Y => Coord { i: a, j: 0, l: b },
+                    Axis::Z => Coord { i: a, j: b, l: 0 },
+                };
+                out.push(self.line(c, axis));
+            }
+        }
+        out
+    }
+}
+
+/// `q × q` processor mesh (the 2-D SUMMA substrate, Optimus [21]).
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    q: usize,
+}
+
+impl Mesh {
+    pub fn new(q: usize) -> Self {
+        assert!(q >= 1);
+        Self { q }
+    }
+
+    pub fn edge(&self) -> usize {
+        self.q
+    }
+
+    pub fn size(&self) -> usize {
+        self.q * self.q
+    }
+
+    /// Row-major: `rank = row·q + col`.
+    pub fn rank_of(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.q && col < self.q);
+        row * self.q + col
+    }
+
+    pub fn coord_of(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.size());
+        (rank / self.q, rank % self.q)
+    }
+
+    /// Ranks in `row`, ordered by column.
+    pub fn row_group(&self, row: usize) -> Vec<usize> {
+        (0..self.q).map(|c| self.rank_of(row, c)).collect()
+    }
+
+    /// Ranks in `col`, ordered by row.
+    pub fn col_group(&self, col: usize) -> Vec<usize> {
+        (0..self.q).map(|r| self.rank_of(r, col)).collect()
+    }
+}
+
+/// 1-D line of `P` ranks (the Megatron tensor-parallel group).
+#[derive(Clone, Debug)]
+pub struct Line {
+    p: usize,
+}
+
+impl Line {
+    pub fn new(p: usize) -> Self {
+        assert!(p >= 1);
+        Self { p }
+    }
+
+    pub fn size(&self) -> usize {
+        self.p
+    }
+
+    pub fn group(&self) -> Vec<usize> {
+        (0..self.p).collect()
+    }
+}
+
+/// Which parallelism a model/run uses; carried through configs and the CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Single-device sequential execution (reference).
+    Seq,
+    /// Megatron-style 1-D tensor parallelism [17].
+    OneD,
+    /// Optimus / SUMMA 2-D tensor parallelism [21].
+    TwoD,
+    /// The paper's load-balanced 3-D tensor parallelism.
+    ThreeD,
+}
+
+impl Parallelism {
+    /// World size for a given "edge" parameter: 1-D uses `P = edge`, 2-D
+    /// `P = edge²`, 3-D `P = edge³`.
+    pub fn world_size(&self, edge: usize) -> usize {
+        match self {
+            Parallelism::Seq => 1,
+            Parallelism::OneD => edge,
+            Parallelism::TwoD => edge * edge,
+            Parallelism::ThreeD => edge * edge * edge,
+        }
+    }
+
+    /// Edge parameter for a given world size; `None` if the world size is
+    /// not a perfect square/cube as required.
+    pub fn edge_for_world(&self, world: usize) -> Option<usize> {
+        match self {
+            Parallelism::Seq => (world == 1).then_some(1),
+            Parallelism::OneD => Some(world),
+            Parallelism::TwoD => {
+                let q = (world as f64).sqrt().round() as usize;
+                (q * q == world).then_some(q)
+            }
+            Parallelism::ThreeD => {
+                let p = (world as f64).cbrt().round() as usize;
+                (p * p * p == world).then_some(p)
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Parallelism::Seq => "seq",
+            Parallelism::OneD => "1d",
+            Parallelism::TwoD => "2d",
+            Parallelism::ThreeD => "3d",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Parallelism> {
+        match s {
+            "seq" => Some(Parallelism::Seq),
+            "1d" | "oned" => Some(Parallelism::OneD),
+            "2d" | "twod" => Some(Parallelism::TwoD),
+            "3d" | "threed" => Some(Parallelism::ThreeD),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cube_rank_coord_round_trip() {
+        let cube = Cube::new(3);
+        assert_eq!(cube.size(), 27);
+        for r in 0..27 {
+            assert_eq!(cube.rank_of(cube.coord_of(r)), r);
+        }
+    }
+
+    #[test]
+    fn cube_lines_have_right_members() {
+        let cube = Cube::new(2);
+        let c = Coord { i: 1, j: 0, l: 1 };
+        // y line through (1, *, 1)
+        let y = cube.line(c, Axis::Y);
+        assert_eq!(y, vec![
+            cube.rank_of(Coord { i: 1, j: 0, l: 1 }),
+            cube.rank_of(Coord { i: 1, j: 1, l: 1 }),
+        ]);
+        assert_eq!(cube.pos_in_line(c, Axis::Y), 0);
+        // x line through (*, 0, 1)
+        let x = cube.line(c, Axis::X);
+        assert_eq!(x, vec![
+            cube.rank_of(Coord { i: 0, j: 0, l: 1 }),
+            cube.rank_of(Coord { i: 1, j: 0, l: 1 }),
+        ]);
+        assert_eq!(cube.pos_in_line(c, Axis::X), 1);
+    }
+
+    #[test]
+    fn cube_all_lines_partition_the_cube() {
+        let cube = Cube::new(3);
+        for axis in [Axis::X, Axis::Y, Axis::Z] {
+            let lines = cube.all_lines(axis);
+            assert_eq!(lines.len(), 9);
+            let mut seen = vec![false; 27];
+            for line in &lines {
+                assert_eq!(line.len(), 3);
+                for &r in line {
+                    assert!(!seen[r], "rank {r} in two {axis:?} lines");
+                    seen[r] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn z_lines_are_contiguous_ranks() {
+        let cube = Cube::new(4);
+        let line = cube.line(Coord { i: 2, j: 3, l: 0 }, Axis::Z);
+        for w in line.windows(2) {
+            assert_eq!(w[1], w[0] + 1);
+        }
+    }
+
+    #[test]
+    fn mesh_groups() {
+        let mesh = Mesh::new(3);
+        assert_eq!(mesh.size(), 9);
+        for r in 0..9 {
+            let (row, col) = mesh.coord_of(r);
+            assert_eq!(mesh.rank_of(row, col), r);
+        }
+        assert_eq!(mesh.row_group(1), vec![3, 4, 5]);
+        assert_eq!(mesh.col_group(2), vec![2, 5, 8]);
+    }
+
+    #[test]
+    fn parallelism_world_size_and_edge() {
+        assert_eq!(Parallelism::OneD.world_size(8), 8);
+        assert_eq!(Parallelism::TwoD.world_size(4), 16);
+        assert_eq!(Parallelism::ThreeD.world_size(4), 64);
+        assert_eq!(Parallelism::TwoD.edge_for_world(36), Some(6));
+        assert_eq!(Parallelism::TwoD.edge_for_world(12), None);
+        assert_eq!(Parallelism::ThreeD.edge_for_world(64), Some(4));
+        assert_eq!(Parallelism::ThreeD.edge_for_world(10), None);
+        assert_eq!(Parallelism::parse("3d"), Some(Parallelism::ThreeD));
+        assert_eq!(Parallelism::parse("bogus"), None);
+    }
+}

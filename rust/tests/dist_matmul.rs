@@ -1,0 +1,200 @@
+//! Integration: distributed matmuls vs dense references across all
+//! parallelisms, matmul forms and direction triples — the shard-for-shard
+//! correctness net under the paper's Algorithms 1–6 and the SUMMA/Megatron
+//! baselines.
+
+use cubic::comm::NetModel;
+use cubic::dist::{Dirs, Layout1D, Layout2D, Layout3D};
+use cubic::parallel::threed::{self, Ctx3D, Layout3DExt};
+use cubic::parallel::{oned, twod};
+use cubic::rng::Xoshiro256;
+use cubic::spmd::run_spmd;
+use cubic::tensor::Tensor;
+use cubic::topology::{Axis, Cube, Mesh};
+
+fn randt(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    Tensor::randn(shape, 1.0, &mut rng)
+}
+
+/// Every distinct direction triple (3! = 6 permutations of the axes).
+fn all_dirs() -> Vec<Dirs> {
+    let axes = [Axis::X, Axis::Y, Axis::Z];
+    let mut out = Vec::new();
+    for &a in &axes {
+        for &b in &axes {
+            for &c in &axes {
+                if a != b && b != c && a != c {
+                    out.push(Dirs { a, b, c });
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn threed_mm_nn_all_direction_triples() {
+    let p = 2;
+    let cube = Cube::new(p);
+    let (m, n, k) = (8, 12, 16);
+    let a = randt(&[m, n], 1);
+    let b = randt(&[n, k], 2);
+    let c_ref = a.matmul(&b);
+    for dirs in all_dirs() {
+        let a_shards = Layout3D::input(dirs).scatter(&cube, &a);
+        let b_shards = Layout3D::weight(dirs).scatter(&cube, &b);
+        let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            threed::mm_nn(ep, &ctx, &a_shards[rank], &b_shards[rank], dirs)
+        });
+        let got = Layout3D::output(dirs).gather(&cube, &out, m, k);
+        assert!(got.max_abs_diff(&c_ref) < 1e-3, "dirs {dirs:?}");
+    }
+}
+
+#[test]
+fn threed_mm_nn_p3_cube_27_ranks() {
+    // A non-power-of-two cube edge exercises ring steps and uneven trees.
+    let p = 3;
+    let cube = Cube::new(p);
+    let dirs = Dirs::canonical();
+    let (m, n, k) = (18, 9, 27);
+    let a = randt(&[m, n], 3);
+    let b = randt(&[n, k], 4);
+    let c_ref = a.matmul(&b);
+    let a_shards = Layout3D::input(dirs).scatter(&cube, &a);
+    let b_shards = Layout3D::weight(dirs).scatter(&cube, &b);
+    let out = run_spmd(27, NetModel::zero(), move |rank, ep| {
+        let ctx = Ctx3D::new(Cube::new(p), rank);
+        threed::mm_nn(ep, &ctx, &a_shards[rank], &b_shards[rank], dirs)
+    });
+    let got = Layout3D::output(dirs).gather(&cube, &out, m, k);
+    assert!(got.max_abs_diff(&c_ref) < 1e-3);
+}
+
+#[test]
+fn threed_chained_linears_swap_directions() {
+    // Two chained mm_nn calls with swapped dirs — the §3.2 stacking
+    // pattern: output of layer 1 feeds layer 2 unchanged.
+    let p = 2;
+    let cube = Cube::new(p);
+    let d0 = Dirs::canonical();
+    let d1 = d0.swapped();
+    let (m, h, f) = (8, 16, 32);
+    let x = randt(&[m, h], 5);
+    let w1 = randt(&[h, f], 6);
+    let w2 = randt(&[f, h], 7);
+    let y_ref = x.matmul(&w1).matmul(&w2);
+    let x_shards = Layout3D::input(d0).scatter(&cube, &x);
+    let w1_shards = Layout3D::weight(d0).scatter(&cube, &w1);
+    let w2_shards = Layout3D::weight(d1).scatter(&cube, &w2);
+    let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+        let ctx = Ctx3D::new(Cube::new(p), rank);
+        let h1 = threed::mm_nn(ep, &ctx, &x_shards[rank], &w1_shards[rank], d0);
+        threed::mm_nn(ep, &ctx, &h1, &w2_shards[rank], d1)
+    });
+    // After two swaps the output is back in input-layout(d0) ≡ output(d1).
+    let got = Layout3D::output(d1).gather(&cube, &out, m, h);
+    assert!(got.max_abs_diff(&y_ref) < 1e-3);
+}
+
+#[test]
+fn threed_full_linear_layer_with_bias_grads() {
+    // Y = XW + b forward and full backward through Algorithms 1, 2, 7, 8.
+    let p = 2;
+    let cube = Cube::new(p);
+    let d0 = Dirs::canonical();
+    let d1 = d0.swapped();
+    let (m, n, k) = (8, 16, 12);
+    let x = randt(&[m, n], 8);
+    let w = randt(&[n, k], 9);
+    let bias = randt(&[k], 10);
+    let dy = randt(&[m, k], 11);
+    let y_ref = x.matmul(&w).add_row_vector(&bias);
+    let dx_ref = dy.matmul_nt(&w);
+    let dw_ref = x.matmul_tn(&dy);
+    let db_ref = dy.sum_rows();
+
+    let x_shards = Layout3D::input(d0).scatter(&cube, &x);
+    let w_shards = Layout3D::weight(d0).scatter(&cube, &w);
+    let b_shards = cubic::dist::DiagVec3D::for_dirs(d1).scatter(&cube, &bias);
+    let dy_shards = Layout3D::output(d0).scatter(&cube, &dy);
+
+    let out = run_spmd(8, NetModel::zero(), move |rank, ep| {
+        let ctx = Ctx3D::new(Cube::new(p), rank);
+        let mm = threed::mm_nn(ep, &ctx, &x_shards[rank], &w_shards[rank], d0);
+        let y = threed::vec_op(ep, &ctx, &mm, b_shards[rank].as_ref(), d1, false);
+        let (d_mm, db) = threed::add_vec_backward(ep, &ctx, &dy_shards[rank], d1);
+        let (dx, dw) =
+            threed::mm_nn_backward(ep, &ctx, &d_mm, &x_shards[rank], &w_shards[rank], d0);
+        (y, dx, dw, db)
+    });
+    let y = Layout3D::output(d0)
+        .gather(&cube, &out.iter().map(|o| o.0.clone()).collect::<Vec<_>>(), m, k);
+    let dx = Layout3D::input(d0)
+        .gather(&cube, &out.iter().map(|o| o.1.clone()).collect::<Vec<_>>(), m, n);
+    let dw = Layout3D::weight(d0)
+        .gather(&cube, &out.iter().map(|o| o.2.clone()).collect::<Vec<_>>(), n, k);
+    let db = cubic::dist::DiagVec3D::for_dirs(d1)
+        .gather(&cube, &out.iter().map(|o| o.3.clone()).collect::<Vec<_>>(), k);
+    assert!(y.max_abs_diff(&y_ref) < 1e-3);
+    assert!(dx.max_abs_diff(&dx_ref) < 1e-3);
+    assert!(dw.max_abs_diff(&dw_ref) < 1e-3);
+    assert!(db.max_abs_diff(&db_ref) < 1e-3);
+}
+
+#[test]
+fn nt_and_tn_layout_shard_shapes_balance() {
+    // The auxiliary layouts of Algorithms 3/5 also store 1/P per rank.
+    let p = 2;
+    for (rows, cols) in [(8usize, 16usize), (16, 8)] {
+        let nt = Layout3D::nt_rhs(Dirs::canonical()).shard_shape(p, rows, cols);
+        let tn = Layout3D::tn_lhs(Dirs::canonical()).shard_shape(p, rows, cols);
+        assert_eq!(nt.0 * nt.1 * p * p * p, rows * cols);
+        assert_eq!(tn.0 * tn.1 * p * p * p, rows * cols);
+    }
+}
+
+#[test]
+fn oned_vs_twod_vs_threed_same_linear() {
+    // One linear layer computed under all three parallelisms from the same
+    // global operands gives the same global result.
+    let (m, n, k) = (8, 16, 8);
+    let x = randt(&[m, n], 20);
+    let w = randt(&[n, k], 21);
+    let y_ref = x.matmul(&w);
+
+    // 1-D column-parallel (no bias).
+    let w_1d = Layout1D::ColShard.scatter(4, &w);
+    let x1 = x.clone();
+    let out1 = run_spmd(4, NetModel::zero(), move |rank, ep| {
+        let ctx = oned::Ctx1D::new(4, rank);
+        oned::col_linear_fwd(ep, &ctx, &x1, &w_1d[rank], None)
+    });
+    let y1 = Layout1D::ColShard.gather(&out1);
+    assert!(y1.max_abs_diff(&y_ref) < 1e-3);
+
+    // 2-D SUMMA.
+    let mesh = Mesh::new(2);
+    let x_2d = Layout2D::scatter(&mesh, &x);
+    let w_2d = Layout2D::scatter(&mesh, &w);
+    let out2 = run_spmd(4, NetModel::zero(), move |rank, ep| {
+        let ctx = twod::Ctx2D::new(Mesh::new(2), rank);
+        twod::summa_nn(ep, &ctx, &x_2d[rank], &w_2d[rank])
+    });
+    let y2 = Layout2D::gather(&mesh, &out2, m, k);
+    assert!(y2.max_abs_diff(&y_ref) < 1e-3);
+
+    // 3-D.
+    let cube = Cube::new(2);
+    let dirs = Dirs::canonical();
+    let x_3d = Layout3D::input(dirs).scatter(&cube, &x);
+    let w_3d = Layout3D::weight(dirs).scatter(&cube, &w);
+    let out3 = run_spmd(8, NetModel::zero(), move |rank, ep| {
+        let ctx = Ctx3D::new(Cube::new(2), rank);
+        threed::mm_nn(ep, &ctx, &x_3d[rank], &w_3d[rank], dirs)
+    });
+    let y3 = Layout3D::output(dirs).gather(&cube, &out3, m, k);
+    assert!(y3.max_abs_diff(&y_ref) < 1e-3);
+}

@@ -1,0 +1,259 @@
+//! Property-based tests over randomized shapes, cube sizes, direction
+//! triples and seeds. No `proptest` in the offline crate set, so this file
+//! carries its own tiny harness: seeded generators + a fixed case budget
+//! per property, with the failing case's parameters printed on assert.
+//!
+//! Invariants pinned here:
+//! * shard layouts tile the global matrix exactly (no gaps/overlaps);
+//! * scatter ∘ gather = identity for every layout;
+//! * collective byte ledgers match the closed-form cost model for random
+//!   shapes/groups;
+//! * distributed mm == dense for random shapes/dirs;
+//! * virtual clocks are monotone and group-synchronized after collectives.
+
+use cubic::collectives::{all_gather, all_reduce, reduce_scatter};
+use cubic::comm::NetModel;
+use cubic::costmodel;
+use cubic::dist::{DiagVec3D, Dirs, Layout3D};
+use cubic::parallel::threed::{mm_nn, Ctx3D};
+use cubic::rng::Xoshiro256;
+use cubic::spmd::run_spmd;
+use cubic::tensor::Tensor;
+use cubic::topology::{Axis, Cube};
+
+struct Gen(Xoshiro256);
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen(Xoshiro256::seed_from_u64(seed))
+    }
+
+    fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.0.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    fn dirs(&mut self) -> Dirs {
+        let mut axes = [Axis::X, Axis::Y, Axis::Z];
+        // Fisher-Yates.
+        for i in (1..3).rev() {
+            let j = self.0.next_below((i + 1) as u64) as usize;
+            axes.swap(i, j);
+        }
+        Dirs { a: axes[0], b: axes[1], c: axes[2] }
+    }
+
+    fn tensor(&mut self, shape: &[usize]) -> Tensor {
+        Tensor::randn(shape, 1.0, &mut self.0)
+    }
+}
+
+#[test]
+fn prop_layout3d_tiles_exactly() {
+    // Every cell of the global matrix is covered by exactly one shard.
+    for case in 0..40u64 {
+        let mut g = Gen::new(1000 + case);
+        let p = g.usize_in(1, 3);
+        let cube = Cube::new(p);
+        let rows = p * p * g.usize_in(1, 4);
+        let cols = p * p * g.usize_in(1, 4);
+        let dirs = g.dirs();
+        for layout in [
+            Layout3D::input(dirs),
+            Layout3D::weight(dirs),
+            Layout3D::output(dirs),
+        ] {
+            let mut cover = vec![0u8; rows * cols];
+            for r in 0..cube.size() {
+                let (r0, c0, sr, sc) = layout.shard_bounds(&cube, cube.coord_of(r), rows, cols);
+                for i in r0..r0 + sr {
+                    for j in c0..c0 + sc {
+                        cover[i * cols + j] += 1;
+                    }
+                }
+            }
+            assert!(
+                cover.iter().all(|&c| c == 1),
+                "case {case}: p={p} {rows}x{cols} dirs {dirs:?} layout {layout:?} not a partition"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_scatter_gather_identity() {
+    for case in 0..30u64 {
+        let mut g = Gen::new(2000 + case);
+        let p = g.usize_in(1, 3);
+        let cube = Cube::new(p);
+        let rows = p * p * g.usize_in(1, 3);
+        let cols = p * p * g.usize_in(1, 3);
+        let dirs = g.dirs();
+        let t = g.tensor(&[rows, cols]);
+        for layout in [Layout3D::input(dirs), Layout3D::weight(dirs)] {
+            let shards = layout.scatter(&cube, &t);
+            let back = layout.gather(&cube, &shards, rows, cols);
+            assert_eq!(back, t, "case {case}: p={p} dirs {dirs:?}");
+        }
+        // Diagonal vectors too.
+        let v = g.tensor(&[cols]);
+        let spec = DiagVec3D::for_dirs(dirs);
+        let shards = spec.scatter(&cube, &v);
+        assert_eq!(spec.gather(&cube, &shards, cols), v, "case {case} vec");
+    }
+}
+
+#[test]
+fn prop_collective_ledger_matches_cost_model() {
+    for case in 0..15u64 {
+        let mut g = Gen::new(3000 + case);
+        let world = g.usize_in(2, 8);
+        let elems = g.usize_in(1, 500);
+        let bytes = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let group: Vec<usize> = (0..world).collect();
+            let t = Tensor::full(&[elems], rank as f32);
+            let _ = all_reduce(ep, &group, &t);
+            ep.stats.bytes_sent
+        });
+        let want = costmodel::ring_all_reduce_bytes(world as u64, elems as u64);
+        for (rank, &b) in bytes.iter().enumerate() {
+            assert_eq!(b, want, "case {case}: world={world} elems={elems} rank={rank}");
+        }
+    }
+}
+
+#[test]
+fn prop_all_gather_then_reduce_scatter_roundtrip() {
+    // reduce_scatter(all_gather(x) scaled) recovers a scaled shard: checks
+    // the two rings compose coherently for random sizes.
+    for case in 0..15u64 {
+        let mut g = Gen::new(4000 + case);
+        let world = g.usize_in(2, 6);
+        let elems = g.usize_in(1, 64);
+        let out = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let group: Vec<usize> = (0..world).collect();
+            let mine = Tensor::full(&[elems], (rank + 1) as f32);
+            let parts = all_gather(ep, &group, &mine);
+            // Feed everyone's parts back as reduce-scatter contributions:
+            // destination k receives sum over ranks of part[k] = world·(k+1).
+            let got = reduce_scatter(ep, &group, parts);
+            got.data().to_vec()
+        });
+        for (rank, v) in out.iter().enumerate() {
+            let want = (world * (rank + 1)) as f32;
+            assert!(
+                v.iter().all(|&x| x == want),
+                "case {case}: world={world} rank={rank}: {v:?} != {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_mm3d_matches_dense_random_shapes() {
+    for case in 0..12u64 {
+        let mut g = Gen::new(5000 + case);
+        let p = g.usize_in(1, 2);
+        let cube = Cube::new(p);
+        let world = p * p * p;
+        let dirs = g.dirs();
+        let m = p * p * g.usize_in(1, 4);
+        let n = p * p * g.usize_in(1, 4);
+        let k = p * p * g.usize_in(1, 4);
+        let a = g.tensor(&[m, n]);
+        let b = g.tensor(&[n, k]);
+        let c_ref = a.matmul(&b);
+        let a_sh = Layout3D::input(dirs).scatter(&cube, &a);
+        let b_sh = Layout3D::weight(dirs).scatter(&cube, &b);
+        let out = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            mm_nn(ep, &ctx, &a_sh[rank], &b_sh[rank], dirs)
+        });
+        let c = Layout3D::output(dirs).gather(&cube, &out, m, k);
+        assert!(
+            c.max_abs_diff(&c_ref) < 1e-3,
+            "case {case}: p={p} ({m},{n},{k}) dirs {dirs:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_clocks_monotone_and_synchronized() {
+    for case in 0..10u64 {
+        let mut g = Gen::new(6000 + case);
+        let world = g.usize_in(2, 8);
+        let elems = g.usize_in(16, 256);
+        let rounds = g.usize_in(1, 5);
+        let clocks = run_spmd(world, NetModel::flat(1e-6, 1e9, 1e12), move |rank, ep| {
+            let group: Vec<usize> = (0..world).collect();
+            let mut history = Vec::new();
+            let mut rng = Xoshiro256::seed_from_u64(rank as u64);
+            for _ in 0..rounds {
+                // Unbalanced local work, then a synchronizing collective.
+                ep.charge_flops(1e6 * (1.0 + rng.next_f64() * 5.0));
+                let t = Tensor::full(&[elems], 1.0);
+                let _ = all_reduce(ep, &group, &t);
+                history.push(ep.clock);
+            }
+            history
+        });
+        // Monotone per rank.
+        for (rank, h) in clocks.iter().enumerate() {
+            for w in h.windows(2) {
+                assert!(w[1] >= w[0], "case {case} rank {rank}: clock went backwards");
+            }
+        }
+        // Ring all-reduce fully synchronizes: after each round all ranks'
+        // clocks must agree to within one ring traversal of slack.
+        let slack = world as f64 * (1e-6 + (elems * 4) as f64 / 1e9) + 1e-2;
+        for round in 0..rounds {
+            let vals: Vec<f64> = clocks.iter().map(|h| h[round]).collect();
+            let lo = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = vals.iter().cloned().fold(0.0, f64::max);
+            assert!(
+                hi - lo <= slack,
+                "case {case} round {round}: clocks spread {lo}..{hi} (slack {slack})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_phantom_and_materialized_charge_identical_time() {
+    // The central dual-mode invariant: the virtual time of a schedule must
+    // not depend on whether data is materialized.
+    for case in 0..8u64 {
+        let mut g = Gen::new(7000 + case);
+        let p = 2;
+        let cube = Cube::new(p);
+        let dirs = g.dirs();
+        let m = 4 * g.usize_in(1, 3);
+        let n = 4 * g.usize_in(1, 3);
+        let k = 4 * g.usize_in(1, 3);
+        let a = g.tensor(&[m, n]);
+        let b = g.tensor(&[n, k]);
+        let a_sh = Layout3D::input(dirs).scatter(&cube, &a);
+        let b_sh = Layout3D::weight(dirs).scatter(&cube, &b);
+        let net = NetModel::longhorn_v100();
+        let real = run_spmd(8, net.clone(), {
+            let (a_sh, b_sh) = (a_sh.clone(), b_sh.clone());
+            move |rank, ep| {
+                let ctx = Ctx3D::new(Cube::new(p), rank);
+                let _ = mm_nn(ep, &ctx, &a_sh[rank], &b_sh[rank], dirs);
+                ep.clock
+            }
+        });
+        let phantom = run_spmd(8, net, move |rank, ep| {
+            let ctx = Ctx3D::new(Cube::new(p), rank);
+            let ap = Tensor::phantom(a_sh[rank].shape());
+            let bp = Tensor::phantom(b_sh[rank].shape());
+            let _ = mm_nn(ep, &ctx, &ap, &bp, dirs);
+            ep.clock
+        });
+        for (r, (x, y)) in real.iter().zip(phantom.iter()).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-12,
+                "case {case} rank {r}: materialized {x} vs phantom {y}"
+            );
+        }
+    }
+}
