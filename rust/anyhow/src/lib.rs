@@ -1,0 +1,156 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The container's crate set has no registry access, so `cubic` vendors the
+//! small `anyhow` subset it actually uses: a string-backed [`Error`], the
+//! [`Result`] alias, the `anyhow!` / `bail!` / `ensure!` macros, the
+//! [`Context`] extension trait, and a blanket `From` impl so `?` converts
+//! any `std::error::Error`. API-compatible for these uses with the real
+//! crate, so swapping the dependency back is a Cargo.toml change only.
+
+use std::fmt;
+
+/// A string-backed error value. Like the real `anyhow::Error`, this type
+/// deliberately does NOT implement `std::error::Error` — that keeps the
+/// blanket `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), context: Vec::new() }
+    }
+
+    fn push_context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.context.push(c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Outermost context first, like anyhow's single-line format.
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// (and options), converting the error into [`Error`] with a prefix.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).push_context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn context_prefixes_outermost_first() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r2: std::result::Result<(), String> = Err("inner".into());
+        let e2 = r2.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(e2.to_string(), "step 3: inner");
+    }
+
+    #[test]
+    fn macros_build_and_bail() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed");
+        assert_eq!(f(-2).unwrap_err().to_string(), "negative: -2");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+    }
+}

@@ -45,4 +45,9 @@ fn main() {
     println!("## §3.1.2 — per-rank communication volume, one layer fwd+bwd\n");
     println!("{}", t.to_markdown());
     println!("\nPaper claims: 3-D bandwidth O(P^-2/3), latency O(log p); 1-D volume flat in P.");
+    // Phantom-mode runs move no data at all: the copy-on-write counter must
+    // stay at zero across every sweep above.
+    let cloned = cubic::metrics::bytes_cloned();
+    assert_eq!(cloned, 0, "phantom sweeps must not clone tensor data");
+    println!("bytes cloned across all sweeps: {cloned} (phantom mode is data-free)");
 }

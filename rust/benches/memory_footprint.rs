@@ -58,4 +58,6 @@ fn main() {
     println!("## §3.1.1 — per-rank memory, one layer (weights + input activation)\n");
     println!("{}", t.to_markdown());
     println!("\nPaper claim: 3-D memory O(1/P) incl. activations; 1-D replicates activations.");
+    // Shape-only accounting: the copy-on-write counter must stay at zero.
+    assert_eq!(cubic::metrics::bytes_cloned(), 0, "phantom accounting must not clone tensor data");
 }

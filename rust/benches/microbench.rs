@@ -3,31 +3,45 @@
 //! engine, and the phantom-mode scheduling overhead that bounds how fast
 //! the table benches can sweep configurations.
 //!
+//! Since the Arc-backed storage refactor this bench also reports **bytes
+//! cloned** (the copy-on-write counter in `cubic::metrics`) next to GF/s:
+//! the send path of the transport must contribute exactly 0, and a ring
+//! all-reduce's only clone is the one accumulator materialization per rank
+//! per call (numel/g floats), independent of ring length.
+//!
 //! Run: `cargo bench --bench microbench`
+//! Side effect: rewrites `BENCH_PR1.json` at the repo root with the
+//! headline numbers (256³ matmul GF/s, 8-rank all-reduce clone/op stats).
 
 use cubic::collectives::all_reduce;
-use cubic::comm::NetModel;
-use cubic::metrics::Stopwatch;
+use cubic::comm::{NetModel, World};
+use cubic::metrics::{bytes_cloned, Stopwatch};
 use cubic::rng::Xoshiro256;
 use cubic::spmd::run_spmd;
 use cubic::tensor::{matmul_flops, Tensor};
 
-fn bench_matmul(label: &str, m: usize, k: usize, n: usize, iters: usize) {
+fn bench_matmul(label: &str, m: usize, k: usize, n: usize, iters: usize) -> f64 {
     let mut rng = Xoshiro256::seed_from_u64(1);
     let a = Tensor::randn(&[m, k], 1.0, &mut rng);
     let b = Tensor::randn(&[k, n], 1.0, &mut rng);
     // Warm-up.
     let mut sink = a.matmul(&b).at2(0, 0);
+    let cloned0 = bytes_cloned();
     let sw = Stopwatch::start();
     for _ in 0..iters {
         sink += a.matmul(&b).at2(0, 0);
     }
     let secs = sw.seconds();
+    let cloned = bytes_cloned() - cloned0;
     let gflops = (iters as f64 * 2.0 * m as f64 * k as f64 * n as f64) / secs / 1e9;
-    println!("matmul_nn {label}: {gflops:.2} GF/s  ({:.3} ms/iter, sink {sink:.1})", 1e3 * secs / iters as f64);
+    println!(
+        "matmul_nn {label}: {gflops:.2} GF/s  ({:.3} ms/iter, {cloned} B cloned, sink {sink:.1})",
+        1e3 * secs / iters as f64
+    );
+    gflops
 }
 
-fn bench_matmul_nt(m: usize, k: usize, n: usize, iters: usize) {
+fn bench_matmul_nt(m: usize, k: usize, n: usize, iters: usize) -> f64 {
     let mut rng = Xoshiro256::seed_from_u64(2);
     let a = Tensor::randn(&[m, k], 1.0, &mut rng);
     let b = Tensor::randn(&[n, k], 1.0, &mut rng);
@@ -39,9 +53,44 @@ fn bench_matmul_nt(m: usize, k: usize, n: usize, iters: usize) {
     let secs = sw.seconds();
     let gflops = (iters as f64 * 2.0 * m as f64 * k as f64 * n as f64) / secs / 1e9;
     println!("matmul_nt {m}x{k}x{n}: {gflops:.2} GF/s (sink {sink:.1})");
+    gflops
 }
 
-fn bench_collectives(world: usize, elems: usize, iters: usize) {
+/// Pure transport benchmark: the send path must never copy payload data.
+/// Returns the (exactly measured) bytes cloned by N sends of a large
+/// tensor — the acceptance number for the zero-copy refactor.
+fn bench_send_path(elems: usize, iters: usize) -> u64 {
+    let mut world = World::new(2, NetModel::zero());
+    let mut e0 = world.endpoint(0);
+    let mut e1 = world.endpoint(1);
+    let payload = Tensor::full(&[elems], 1.0);
+    let its = iters as u64;
+    let cloned0 = bytes_cloned();
+    let sw = Stopwatch::start();
+    let h = std::thread::spawn(move || {
+        for i in 0..its {
+            e0.send(1, i, &payload);
+        }
+    });
+    for i in 0..its {
+        let got = e1.recv(0, i);
+        assert_eq!(got.numel(), elems);
+    }
+    h.join().unwrap();
+    let secs = sw.seconds();
+    let cloned = bytes_cloned() - cloned0;
+    println!(
+        "send path: {iters} x {} KiB messages in {:.3} ms — {cloned} B cloned (expect 0)",
+        elems * 4 / 1024,
+        1e3 * secs
+    );
+    cloned
+}
+
+/// 8-rank materialized ring all-reduce: ms/op plus cloned bytes per rank
+/// per op (the steady-state allocation figure).
+fn bench_collectives(world: usize, elems: usize, iters: usize) -> (f64, f64) {
+    let cloned0 = bytes_cloned();
     let sw = Stopwatch::start();
     let its = iters;
     run_spmd(world, NetModel::zero(), move |rank, ep| {
@@ -52,12 +101,17 @@ fn bench_collectives(world: usize, elems: usize, iters: usize) {
         }
     });
     let secs = sw.seconds();
+    let cloned = bytes_cloned() - cloned0;
+    let cloned_per_rank_op = cloned as f64 / (world * iters) as f64;
     let gb = (iters * world * elems * 4) as f64 / 1e9;
     println!(
-        "all_reduce world={world} n={elems}: {:.3} ms/op, {:.2} GB/s aggregate",
+        "all_reduce world={world} n={elems}: {:.3} ms/op, {:.2} GB/s aggregate, \
+         {cloned_per_rank_op:.0} B cloned/rank/op (chunk = {} B)",
         1e3 * secs / iters as f64,
-        gb / secs
+        gb / secs,
+        elems / world * 4,
     );
+    (1e3 * secs / iters as f64, cloned_per_rank_op)
 }
 
 fn bench_phantom_overhead() {
@@ -82,15 +136,50 @@ fn bench_phantom_overhead() {
     );
 }
 
+fn write_json(
+    nn256: f64,
+    nt256: f64,
+    send_cloned: u64,
+    ar_ms: f64,
+    ar_cloned_per_rank_op: f64,
+) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR1.json");
+    let json = format!(
+        "{{\n  \"pr\": 1,\n  \"generated_by\": \"cargo bench --bench microbench\",\n  \
+         \"host\": \"wall-clock on the build host; regenerate locally for comparable numbers\",\n  \
+         \"matmul_nn_256\": {{ \"gflops\": {nn256:.3} }},\n  \
+         \"matmul_nt_256\": {{ \"gflops\": {nt256:.3} }},\n  \
+         \"send_path_bytes_cloned\": {send_cloned},\n  \
+         \"all_reduce_8rank_65536\": {{\n    \"ms_per_op\": {ar_ms:.4},\n    \
+         \"bytes_cloned_per_rank_per_op\": {ar_cloned_per_rank_op:.1},\n    \
+         \"note\": \"pre-refactor transport deep-copied every payload: >= 2*(g-1)/g*n bytes per rank per op on the ring, plus per-hop chunk clones\"\n  }}\n}}\n"
+    );
+    match std::fs::write(path, json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}
+
 fn main() {
     println!("## Host microbenchmarks (wall-clock)\n");
     cubic::tensor::reset_flop_counter();
-    bench_matmul("256x256x256", 256, 256, 256, 20);
+    let nn256 = bench_matmul("256x256x256", 256, 256, 256, 20);
     bench_matmul("512x512x512", 512, 512, 512, 4);
     bench_matmul("128x1024x128", 128, 1024, 128, 20);
-    bench_matmul_nt(256, 256, 256, 20);
+    let nt256 = bench_matmul_nt(256, 256, 256, 20);
+    let send_cloned = bench_send_path(1 << 18, 100);
+    assert_eq!(send_cloned, 0, "transport send path must be zero-copy");
     bench_collectives(4, 1 << 16, 50);
-    bench_collectives(8, 1 << 16, 50);
+    let (ar_ms, ar_cloned) = bench_collectives(8, 1 << 16, 50);
+    // Exact pin (this process owns the counter): the ONLY clone per rank
+    // per all-reduce is the step-0 accumulator materialization of one
+    // chunk. Any reintroduced per-hop copy fails this equality.
+    let chunk_bytes = ((1usize << 16) / 8 * 4) as f64;
+    assert_eq!(
+        ar_cloned, chunk_bytes,
+        "8-rank all-reduce must clone exactly one chunk per rank per op"
+    );
     bench_phantom_overhead();
     let _ = matmul_flops();
+    write_json(nn256, nt256, send_cloned, ar_ms, ar_cloned);
 }

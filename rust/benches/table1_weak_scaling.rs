@@ -30,4 +30,6 @@ fn main() {
         );
     }
     println!("\nPaper claim: 3-D has the slowest rising average step time.");
+    // Timing sweeps are phantom-mode: no tensor data may be copied.
+    assert_eq!(cubic::metrics::bytes_cloned(), 0, "phantom sweeps must not clone tensor data");
 }

@@ -19,4 +19,6 @@ fn main() {
     println!("- 3-D vs 1-D: {s1:.2}x measured (paper 2.32x = 0.550/0.237·…; raw 0.550/0.359 = 1.53x)");
     println!("- 3-D vs 2-D: {s2:.2}x measured (paper 1.57x; raw 0.497/0.359 = 1.38x)");
     println!("\nShape criteria: 3-D fastest at 64 GPUs; 2-D scales down with P while 1-D plateaus.");
+    // Timing sweeps are phantom-mode: no tensor data may be copied.
+    assert_eq!(cubic::metrics::bytes_cloned(), 0, "phantom sweeps must not clone tensor data");
 }

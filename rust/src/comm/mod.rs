@@ -17,7 +17,7 @@
 //! but on the actual production code path. See DESIGN.md §1 and §5.
 
 use crate::tensor::Tensor;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier};
@@ -127,7 +127,9 @@ impl NetModel {
 
 /// A tagged message between ranks. The payload is a [`Tensor`] so phantom
 /// shards flow through the transport exactly like materialized ones (the
-/// ledger charges `nominal_bytes` either way).
+/// ledger charges `nominal_bytes` either way). With the Arc-backed tensor
+/// storage the payload is a *handle* — enqueueing a message never copies
+/// the f32 buffer, in either mode.
 struct Message {
     src: usize,
     tag: u64,
@@ -230,8 +232,10 @@ pub struct Endpoint {
     /// Virtual time (seconds) at this rank.
     pub clock: f64,
     pub stats: CommStats,
-    /// Out-of-order arrivals parked until someone asks for them.
-    stash: HashMap<(usize, u64), Vec<Message>>,
+    /// Out-of-order arrivals parked until someone asks for them. Per-key
+    /// FIFO: `VecDeque` so draining is O(1) per message even under heavy
+    /// reordering (a `Vec` + `remove(0)` degrades to O(n²)).
+    stash: HashMap<(usize, u64), VecDeque<Message>>,
     /// Per-*group* collective sequence numbers, keyed by a hash of the
     /// ordered group membership (see `next_collective_tag`).
     group_seqs: HashMap<u64, u64>,
@@ -284,10 +288,19 @@ impl Endpoint {
         ((h & 0x0FFF_FFF0_0000_0000) >> 16) | (*seq & 0xFFFFF)
     }
 
-    /// Send `t` to `dst` with `tag`, charging the ledger. The payload clone
-    /// is cheap for phantom tensors (shape only), which is what the
-    /// paper-scale benches run.
+    /// Send `t` to `dst` with `tag`, charging the ledger. Zero-copy: the
+    /// payload clone is an `Arc` refcount bump (materialized) or shape-only
+    /// (phantom) — the f32 buffer is never duplicated on the send path.
     pub fn send(&mut self, dst: usize, tag: u64, t: &Tensor) {
+        self.send_owned(dst, tag, t.clone());
+    }
+
+    /// Like [`Endpoint::send`] but consumes the tensor, so the sender
+    /// relinquishes its buffer handle at send time. Ring algorithms use
+    /// this for forwarded chunks: the receiver then holds the only
+    /// reference and can fold into the buffer in place, keeping the
+    /// steady-state collective hot path free of copy-on-write.
+    pub fn send_owned(&mut self, dst: usize, tag: u64, t: Tensor) {
         let bytes = t.nominal_bytes();
         self.stats.messages_sent += 1;
         self.stats.bytes_sent += bytes as u64;
@@ -298,7 +311,7 @@ impl Endpoint {
             src: self.rank,
             tag,
             clock: self.clock,
-            payload: t.clone(),
+            payload: t,
         };
         // A send can only fail if the peer's receiver was dropped, which
         // means the worker panicked; propagate as a panic here too so the
@@ -313,8 +326,7 @@ impl Endpoint {
     pub fn recv(&mut self, src: usize, tag: u64) -> Tensor {
         let msg = loop {
             if let Some(q) = self.stash.get_mut(&(src, tag)) {
-                if !q.is_empty() {
-                    let m = q.remove(0);
+                if let Some(m) = q.pop_front() {
                     if q.is_empty() {
                         self.stash.remove(&(src, tag));
                     }
@@ -328,7 +340,7 @@ impl Endpoint {
             if m.src == src && m.tag == tag {
                 break m;
             }
-            self.stash.entry((m.src, m.tag)).or_default().push(m);
+            self.stash.entry((m.src, m.tag)).or_default().push_back(m);
         };
         let bytes = msg.payload.nominal_bytes();
         let hop = self.net.hop_cost(src, self.rank, bytes);
@@ -421,6 +433,46 @@ mod tests {
         assert_eq!(e1.recv(0, 102).data(), &[3.0]);
         assert_eq!(e1.recv(0, 101).data(), &[2.0]);
         assert_eq!(e1.recv(0, 100).data(), &[1.0]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn send_is_zero_copy() {
+        // The received tensor must share storage with the sender's original
+        // buffer — the transport moves handles, not data.
+        let mut world = World::new(2, NetModel::zero());
+        let mut e0 = world.endpoint(0);
+        let mut e1 = world.endpoint(1);
+        let original = Tensor::from_vec(&[64], (0..64).map(|i| i as f32).collect());
+        let keep = original.clone();
+        let h = thread::spawn(move || {
+            e0.send(1, 5, &original);
+        });
+        let got = e1.recv(0, 5);
+        h.join().unwrap();
+        assert!(got.shares_storage(&keep), "payload must be a buffer handle");
+        assert_eq!(got.data(), keep.data());
+    }
+
+    #[test]
+    fn heavy_reordering_drains_stash_fifo() {
+        // Many same-tag messages received after an unrelated tag: FIFO
+        // order per (src, tag) must hold (VecDeque stash).
+        let mut world = World::new(2, NetModel::zero());
+        let mut e0 = world.endpoint(0);
+        let mut e1 = world.endpoint(1);
+        let n = 200u64;
+        let h = thread::spawn(move || {
+            for i in 0..n {
+                e0.send(1, 7, &Tensor::from_vec(&[1], vec![i as f32]));
+            }
+            e0.send(1, 8, &Tensor::from_vec(&[1], vec![-1.0]));
+        });
+        // Pull the late tag first, stashing all n tag-7 messages.
+        assert_eq!(e1.recv(0, 8).data(), &[-1.0]);
+        for i in 0..n {
+            assert_eq!(e1.recv(0, 7).data(), &[i as f32], "message {i} out of order");
+        }
         h.join().unwrap();
     }
 

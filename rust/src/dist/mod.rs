@@ -1,0 +1,498 @@
+//! Shard layouts: how global matrices and vectors map onto the 1-D line,
+//! 2-D mesh and 3-D cube topologies.
+//!
+//! This module is pure data-placement algebra — no communication. Each
+//! layout knows, for every rank, which sub-block of a global tensor that
+//! rank owns, and provides `scatter` (global → per-rank shards), `gather`
+//! (per-rank shards → global) and `shard_of` (one rank's shard). The
+//! distributed algorithms in [`crate::parallel`] are written against these
+//! layouts, and the property tests in `rust/tests/property.rs` pin down
+//! that every layout tiles the global matrix exactly (no gaps, no
+//! overlaps) and that `gather ∘ scatter = id`.
+//!
+//! With the Arc-backed tensor storage, shard extraction cuts a view of the
+//! source and then *compacts* it (`Tensor::compact`): shards are long-lived
+//! model state, and a zero-copy view would pin the full global allocation
+//! on every rank. Zero-copy views are reserved for the transient chunking
+//! on the collective hot path (`Tensor::block`/`split_rows`/`split_flat`).
+//!
+//! ## The 3-D layouts (paper §3.1.1, Figure 5)
+//!
+//! A `p³` cube has coordinates `(i, j, l)` along axes `X`, `Y`, `Z`
+//! ([`crate::topology::Axis`]). A direction triple [`Dirs`] `{a, b, c}`
+//! assigns the three axes roles per operation: operand `A` is gathered
+//! along `a`, operand `B` along `b`, and the output partial is
+//! reduce-scattered along `c`. The canonical triple is `{a: Y, b: X,
+//! c: Z}` — inputs travel along y, weights along x, outputs reduce along
+//! z, exactly the paper's Figure 1 annotation.
+//!
+//! Every matrix layout splits rows and columns by cube axes via [`Split`]:
+//! `One(axis)` splits a dimension `p` ways indexed by that axis'
+//! coordinate; `Two(outer, inner)` splits it `p²` ways indexed by
+//! `coord(outer)·p + coord(inner)`. The three operand layouts of
+//! Algorithm 1 (`C = A·B`) are:
+//!
+//! | layout                | global | rows split        | cols split        |
+//! |-----------------------|--------|-------------------|-------------------|
+//! | [`Layout3D::input`]   | (M, N) | `Two(b, a)` (p²)  | `One(c)` (p)      |
+//! | [`Layout3D::weight`]  | (N, K) | `One(c)` (p)      | `Two(a, b)` (p²)  |
+//! | [`Layout3D::output`]  | (M, K) | `Two(b, c)` (p²)  | `One(a)` (p)      |
+//!
+//! so every rank stores exactly `1/p³` of each matrix — the paper's
+//! perfect load balance. Gathering `input` along `a` merges the inner row
+//! split into an `(M/p, N/p)` block; ditto `weight` along `b`; the local
+//! product is reduce-scattered along `c`, splitting rows, which lands the
+//! result exactly in the `output` layout. Note `output(d) = input(d.swapped())`:
+//! chaining two linear layers with swapped direction triples keeps the
+//! activation layout invariant (§3.2).
+//!
+//! Vectors (biases, layernorm γ/β) use [`DiagVec3D`]: the length-`n`
+//! vector is split into `p²` chunks owned by the ranks on the diagonal
+//! `coord(a) == coord(c)`, with chunk `coord(c)·(n/p) + coord(b)·(n/p²)`.
+//! That placement makes Algorithm 7's broadcast (along `a`, rooted at the
+//! diagonal) + all-gather (along `b`) deliver exactly the column-block
+//! slice each activation shard needs.
+
+use crate::tensor::Tensor;
+use crate::topology::{Axis, Coord, Cube, Mesh};
+
+// ---------------------------------------------------------------------
+// Direction triples
+// ---------------------------------------------------------------------
+
+/// The three cube axes in their per-operation roles: gather `A` along `a`,
+/// gather `B` along `b`, reduce-scatter the output along `c`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dirs {
+    pub a: Axis,
+    pub b: Axis,
+    pub c: Axis,
+}
+
+impl Dirs {
+    /// The paper's Figure 1 assignment: inputs along y, weights along x,
+    /// outputs along z.
+    pub fn canonical() -> Dirs {
+        Dirs { a: Axis::Y, b: Axis::X, c: Axis::Z }
+    }
+
+    /// Swap the input and output directions (`a ↔ c`), keeping `b`. The
+    /// §3.2 stacking trick: `output(d) == input(d.swapped())`, so two
+    /// chained linears under `d` then `d.swapped()` return the activation
+    /// to its original layout.
+    pub fn swapped(&self) -> Dirs {
+        Dirs { a: self.c, b: self.b, c: self.a }
+    }
+
+    /// Panic unless the three directions are distinct axes.
+    pub fn assert_distinct(&self) {
+        assert!(
+            self.a != self.b && self.b != self.c && self.a != self.c,
+            "direction triple {:?} must use three distinct axes",
+            self
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Splits and the 3-D matrix layouts
+// ---------------------------------------------------------------------
+
+/// How one dimension of a matrix is split across cube axes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    /// `p` blocks indexed by the coordinate on the given axis.
+    One(Axis),
+    /// `p²` blocks indexed by `coord(outer)·p + coord(inner)`. Ring
+    /// collectives along `inner` merge/scatter adjacent blocks.
+    Two(Axis, Axis),
+}
+
+impl Split {
+    fn factor(&self, p: usize) -> usize {
+        match self {
+            Split::One(_) => p,
+            Split::Two(_, _) => p * p,
+        }
+    }
+
+    fn index(&self, p: usize, c: Coord) -> usize {
+        match self {
+            Split::One(ax) => c.axis(*ax),
+            Split::Two(outer, inner) => c.axis(*outer) * p + c.axis(*inner),
+        }
+    }
+}
+
+/// A rank-2 tensor distribution over the `p³` cube: independent row and
+/// column splits. See the module docs for the three standard layouts; the
+/// transposed-form operand layouts live in
+/// `crate::parallel::threed::Layout3DExt`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Layout3D {
+    pub row: Split,
+    pub col: Split,
+}
+
+impl Layout3D {
+    /// Layout of `A` in `C = A·B` (global `(M, N)`).
+    pub fn input(d: Dirs) -> Layout3D {
+        Layout3D { row: Split::Two(d.b, d.a), col: Split::One(d.c) }
+    }
+
+    /// Layout of `B` in `C = A·B` (global `(N, K)`).
+    pub fn weight(d: Dirs) -> Layout3D {
+        Layout3D { row: Split::One(d.c), col: Split::Two(d.a, d.b) }
+    }
+
+    /// Layout of `C` in `C = A·B` (global `(M, K)`). Equals
+    /// `input(d.swapped())`.
+    pub fn output(d: Dirs) -> Layout3D {
+        Layout3D { row: Split::Two(d.b, d.c), col: Split::One(d.a) }
+    }
+
+    /// Per-rank shard shape for a global `(rows, cols)` matrix.
+    pub fn shard_shape(&self, p: usize, rows: usize, cols: usize) -> (usize, usize) {
+        let rf = self.row.factor(p);
+        let cf = self.col.factor(p);
+        assert_eq!(rows % rf, 0, "rows {rows} not divisible by split factor {rf}");
+        assert_eq!(cols % cf, 0, "cols {cols} not divisible by split factor {cf}");
+        (rows / rf, cols / cf)
+    }
+
+    /// Per-rank shard bytes (f32) for a global `(rows, cols)` matrix —
+    /// always `rows·cols·4 / p³` for the standard layouts.
+    pub fn bytes_per_rank(&self, p: usize, rows: usize, cols: usize) -> usize {
+        let (r, c) = self.shard_shape(p, rows, cols);
+        r * c * std::mem::size_of::<f32>()
+    }
+
+    /// `(r0, c0, shard_rows, shard_cols)` of the block owned by `coord`.
+    pub fn shard_bounds(
+        &self,
+        cube: &Cube,
+        coord: Coord,
+        rows: usize,
+        cols: usize,
+    ) -> (usize, usize, usize, usize) {
+        let p = cube.edge();
+        let (sr, sc) = self.shard_shape(p, rows, cols);
+        let r0 = self.row.index(p, coord) * sr;
+        let c0 = self.col.index(p, coord) * sc;
+        (r0, c0, sr, sc)
+    }
+
+    /// Extract the shard owned by `coord` (phantom in → phantom out).
+    /// Shards are *compacted* — they own a private minimal buffer — because
+    /// they are long-lived (model state); a zero-copy view here would pin
+    /// the full global matrix allocation on every rank. Transient chunking
+    /// on the collective hot path uses `Tensor::block`/`split_rows` views
+    /// directly.
+    pub fn shard_of(&self, cube: &Cube, coord: Coord, t: &Tensor) -> Tensor {
+        let (rows, cols) = t.dims2();
+        let (r0, c0, sr, sc) = self.shard_bounds(cube, coord, rows, cols);
+        t.block(r0, c0, sr, sc).compact()
+    }
+
+    /// All shards in rank order.
+    pub fn scatter(&self, cube: &Cube, t: &Tensor) -> Vec<Tensor> {
+        (0..cube.size())
+            .map(|r| self.shard_of(cube, cube.coord_of(r), t))
+            .collect()
+    }
+
+    /// Reassemble the global `(rows, cols)` matrix from shards in rank
+    /// order. Any phantom shard makes the result phantom.
+    pub fn gather(&self, cube: &Cube, shards: &[Tensor], rows: usize, cols: usize) -> Tensor {
+        assert_eq!(shards.len(), cube.size(), "need one shard per rank");
+        if shards.iter().any(|s| s.is_phantom()) {
+            return Tensor::phantom(&[rows, cols]);
+        }
+        let mut out = Tensor::zeros(&[rows, cols]);
+        for (rank, shard) in shards.iter().enumerate() {
+            let coord = cube.coord_of(rank);
+            let (r0, c0, sr, sc) = self.shard_bounds(cube, coord, rows, cols);
+            assert_eq!(
+                shard.shape(),
+                &[sr, sc],
+                "rank {rank} shard shape mismatch for layout {:?}",
+                self
+            );
+            out.set_block(r0, c0, shard);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Diagonal vectors (Algorithms 7/8 storage)
+// ---------------------------------------------------------------------
+
+/// Diagonal storage for a length-`n` vector under directions `d`: ranks
+/// with `coord(a) == coord(c)` each own the `n/p²` chunk at offset
+/// `coord(c)·(n/p) + coord(b)·(n/p²)`; everyone else owns nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct DiagVec3D {
+    pub dirs: Dirs,
+}
+
+impl DiagVec3D {
+    pub fn for_dirs(dirs: Dirs) -> DiagVec3D {
+        DiagVec3D { dirs }
+    }
+
+    /// Does `coord` own a chunk (is it on the `a == c` diagonal)?
+    pub fn owns(&self, c: Coord) -> bool {
+        c.axis(self.dirs.a) == c.axis(self.dirs.c)
+    }
+
+    fn chunk_range(&self, p: usize, n: usize, c: Coord) -> (usize, usize) {
+        assert_eq!(n % (p * p), 0, "vector len {n} not divisible by p² = {}", p * p);
+        let chunk = n / (p * p);
+        let off = c.axis(self.dirs.c) * (n / p) + c.axis(self.dirs.b) * chunk;
+        (off, chunk)
+    }
+
+    /// This coord's chunk, or `None` off the diagonal.
+    pub fn shard_of(&self, cube: &Cube, coord: Coord, v: &Tensor) -> Option<Tensor> {
+        if !self.owns(coord) {
+            return None;
+        }
+        let p = cube.edge();
+        let n = v.numel();
+        let (off, chunk) = self.chunk_range(p, n, coord);
+        if v.is_phantom() {
+            return Some(Tensor::phantom(&[chunk]));
+        }
+        Some(
+            v.reshape(&[1, n])
+                .block(0, off, 1, chunk)
+                .into_reshape(&[chunk])
+                .compact(),
+        )
+    }
+
+    /// Per-rank chunks in rank order (`None` off the diagonal).
+    pub fn scatter(&self, cube: &Cube, v: &Tensor) -> Vec<Option<Tensor>> {
+        (0..cube.size())
+            .map(|r| self.shard_of(cube, cube.coord_of(r), v))
+            .collect()
+    }
+
+    /// Reassemble the global vector from per-rank chunks.
+    pub fn gather(&self, cube: &Cube, shards: &[Option<Tensor>], n: usize) -> Tensor {
+        assert_eq!(shards.len(), cube.size(), "need one entry per rank");
+        let p = cube.edge();
+        let mut out = vec![0.0f32; n];
+        let mut covered = 0usize;
+        for (rank, s) in shards.iter().enumerate() {
+            let coord = cube.coord_of(rank);
+            match s {
+                Some(t) => {
+                    assert!(self.owns(coord), "rank {rank} is off-diagonal but has a chunk");
+                    let (off, chunk) = self.chunk_range(p, n, coord);
+                    assert_eq!(t.numel(), chunk, "rank {rank} chunk length mismatch");
+                    out[off..off + chunk].copy_from_slice(t.data());
+                    covered += chunk;
+                }
+                None => {
+                    assert!(!self.owns(coord), "rank {rank} is on-diagonal but has no chunk");
+                }
+            }
+        }
+        assert_eq!(covered, n, "diagonal chunks do not cover the vector");
+        Tensor::from_vec(&[n], out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1-D (Megatron) and 2-D (SUMMA) layouts
+// ---------------------------------------------------------------------
+
+/// Megatron weight sharding along one dimension of a rank-2 tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout1D {
+    /// Split columns `P` ways (column-parallel linear weights).
+    ColShard,
+    /// Split rows `P` ways (row-parallel linear weights).
+    RowShard,
+}
+
+impl Layout1D {
+    /// The shard owned by `rank` of `world` (compacted — see
+    /// [`Layout3D::shard_of`] for why shards own their buffers).
+    pub fn shard_of(&self, world: usize, rank: usize, t: &Tensor) -> Tensor {
+        let (r, c) = t.dims2();
+        match self {
+            Layout1D::ColShard => {
+                assert_eq!(c % world, 0, "cols {c} not divisible by world {world}");
+                t.block(0, rank * (c / world), r, c / world)
+            }
+            Layout1D::RowShard => {
+                assert_eq!(r % world, 0, "rows {r} not divisible by world {world}");
+                t.block(rank * (r / world), 0, r / world, c)
+            }
+        }
+        .compact()
+    }
+
+    /// All shards in rank order.
+    pub fn scatter(&self, world: usize, t: &Tensor) -> Vec<Tensor> {
+        (0..world).map(|rank| self.shard_of(world, rank, t)).collect()
+    }
+
+    /// Reassemble from shards in rank order.
+    pub fn gather(&self, parts: &[Tensor]) -> Tensor {
+        match self {
+            Layout1D::ColShard => Tensor::concat_cols(parts),
+            Layout1D::RowShard => Tensor::concat_rows(parts),
+        }
+    }
+}
+
+/// Optimus/SUMMA block distribution: rank `(i, j)` of the `q × q` mesh
+/// owns block `(i, j)` of every `(R/q, C/q)` blocking.
+#[derive(Clone, Copy, Debug)]
+pub struct Layout2D;
+
+impl Layout2D {
+    /// The `(R/q, C/q)` block owned by `rank` (compacted — see
+    /// [`Layout3D::shard_of`]).
+    pub fn shard_of(mesh: &Mesh, rank: usize, t: &Tensor) -> Tensor {
+        let q = mesh.edge();
+        let (r, c) = t.dims2();
+        assert_eq!(r % q, 0, "rows {r} not divisible by mesh edge {q}");
+        assert_eq!(c % q, 0, "cols {c} not divisible by mesh edge {q}");
+        let (row, col) = mesh.coord_of(rank);
+        t.block(row * (r / q), col * (c / q), r / q, c / q).compact()
+    }
+
+    /// All blocks in rank order.
+    pub fn scatter(mesh: &Mesh, t: &Tensor) -> Vec<Tensor> {
+        (0..mesh.size()).map(|rank| Self::shard_of(mesh, rank, t)).collect()
+    }
+
+    /// Reassemble the global `(rows, cols)` matrix from blocks in rank
+    /// order. Any phantom block makes the result phantom.
+    pub fn gather(mesh: &Mesh, parts: &[Tensor], rows: usize, cols: usize) -> Tensor {
+        assert_eq!(parts.len(), mesh.size(), "need one block per rank");
+        if parts.iter().any(|p| p.is_phantom()) {
+            return Tensor::phantom(&[rows, cols]);
+        }
+        let q = mesh.edge();
+        assert_eq!(rows % q, 0);
+        assert_eq!(cols % q, 0);
+        let (br, bc) = (rows / q, cols / q);
+        let mut out = Tensor::zeros(&[rows, cols]);
+        for (rank, part) in parts.iter().enumerate() {
+            let (row, col) = mesh.coord_of(rank);
+            assert_eq!(part.shape(), &[br, bc], "rank {rank} block shape mismatch");
+            out.set_block(row * br, col * bc, part);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Tensor::randn(shape, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn canonical_dirs_match_paper_roles() {
+        let d = Dirs::canonical();
+        assert_eq!(d.a, Axis::Y);
+        assert_eq!(d.b, Axis::X);
+        assert_eq!(d.c, Axis::Z);
+        d.assert_distinct();
+        let s = d.swapped();
+        assert_eq!(s, Dirs { a: Axis::Z, b: Axis::X, c: Axis::Y });
+        assert_eq!(s.swapped(), d);
+    }
+
+    #[test]
+    fn output_equals_swapped_input() {
+        let d = Dirs::canonical();
+        assert_eq!(Layout3D::output(d), Layout3D::input(d.swapped()));
+    }
+
+    #[test]
+    fn layout3d_shard_shapes_are_balanced() {
+        let d = Dirs::canonical();
+        for p in [1usize, 2, 3] {
+            let (rows, cols) = (p * p * 3, p * p * 5);
+            for layout in [Layout3D::input(d), Layout3D::weight(d), Layout3D::output(d)] {
+                let (r, c) = layout.shard_shape(p, rows, cols);
+                assert_eq!(r * c * p * p * p, rows * cols, "p={p} layout {layout:?}");
+                assert_eq!(layout.bytes_per_rank(p, rows, cols), r * c * 4);
+            }
+        }
+    }
+
+    #[test]
+    fn layout3d_scatter_gather_round_trip() {
+        let d = Dirs::canonical();
+        let cube = Cube::new(2);
+        let t = randt(&[8, 12], 1);
+        for layout in [Layout3D::input(d), Layout3D::weight(d), Layout3D::output(d)] {
+            let shards = layout.scatter(&cube, &t);
+            assert_eq!(shards.len(), 8);
+            assert_eq!(layout.gather(&cube, &shards, 8, 12), t);
+        }
+    }
+
+    #[test]
+    fn layout3d_phantom_flows() {
+        let d = Dirs::canonical();
+        let cube = Cube::new(2);
+        let t = Tensor::phantom(&[8, 12]);
+        let shards = Layout3D::input(d).scatter(&cube, &t);
+        assert!(shards.iter().all(|s| s.is_phantom()));
+        assert!(Layout3D::input(d).gather(&cube, &shards, 8, 12).is_phantom());
+    }
+
+    #[test]
+    fn diag_vec_round_trip_and_ownership() {
+        let cube = Cube::new(2);
+        for d in [Dirs::canonical(), Dirs::canonical().swapped()] {
+            let spec = DiagVec3D::for_dirs(d);
+            let v = randt(&[12], 2);
+            let shards = spec.scatter(&cube, &v);
+            let owners = shards.iter().filter(|s| s.is_some()).count();
+            assert_eq!(owners, 4, "p² diagonal owners");
+            for (rank, s) in shards.iter().enumerate() {
+                assert_eq!(s.is_some(), spec.owns(cube.coord_of(rank)));
+                if let Some(t) = s {
+                    assert_eq!(t.numel(), 12 / 4);
+                }
+            }
+            assert_eq!(spec.gather(&cube, &shards, 12), v);
+        }
+    }
+
+    #[test]
+    fn layout1d_round_trips_both_ways() {
+        let t = randt(&[6, 8], 3);
+        for layout in [Layout1D::ColShard, Layout1D::RowShard] {
+            let parts = layout.scatter(2, &t);
+            assert_eq!(parts.len(), 2);
+            assert_eq!(layout.gather(&parts), t);
+            assert_eq!(parts[1], layout.shard_of(2, 1, &t));
+        }
+    }
+
+    #[test]
+    fn layout2d_round_trip() {
+        let mesh = Mesh::new(2);
+        let t = randt(&[8, 6], 4);
+        let parts = Layout2D::scatter(&mesh, &t);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[3], t.block(4, 3, 4, 3));
+        assert_eq!(Layout2D::gather(&mesh, &parts, 8, 6), t);
+    }
+}

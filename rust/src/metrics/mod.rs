@@ -1,9 +1,35 @@
-//! Metrics: timing reports, communication/memory accounting, and the
-//! markdown/CSV table writer the benchmark harness uses to print
-//! paper-style tables.
+//! Metrics: timing reports, communication/memory accounting, the global
+//! bytes-cloned counter (the copy-on-write observability hook of the
+//! Arc-backed tensor storage), and the markdown/CSV table writer the
+//! benchmark harness uses to print paper-style tables.
 
 use crate::comm::CommStats;
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global bytes-cloned counter — the companion of the flop counter in
+/// [`crate::tensor::matmul`]. Every copy-on-write materialization of a
+/// shared tensor buffer (see `Tensor::data_mut`) adds the copied byte count
+/// here. Zero-copy paths — message payload handoff, ring-chunk forwarding,
+/// clones, views — contribute nothing, which is exactly what the microbench
+/// and the collective zero-copy tests assert.
+static BYTES_CLONED: AtomicU64 = AtomicU64::new(0);
+
+/// Charge `bytes` of buffer duplication (called from the tensor CoW path).
+pub fn add_bytes_cloned(bytes: u64) {
+    BYTES_CLONED.fetch_add(bytes, Ordering::Relaxed);
+}
+
+/// Total bytes duplicated by copy-on-write since start (or last reset).
+pub fn bytes_cloned() -> u64 {
+    BYTES_CLONED.load(Ordering::Relaxed)
+}
+
+/// Reset the bytes-cloned counter (bench harness only; racy with respect to
+/// concurrently running workers, like the flop counter).
+pub fn reset_bytes_cloned() {
+    BYTES_CLONED.store(0, Ordering::Relaxed);
+}
 
 /// Result of one timed distributed run (virtual clocks + real traffic).
 #[derive(Clone, Debug, Default)]

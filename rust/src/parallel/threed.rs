@@ -98,7 +98,9 @@ fn merge_parts(parts: Vec<Tensor>, layout: Layout3D, axis: crate::topology::Axis
 
 /// Reduce-scatter the partial product `partial` along `axis`, splitting rows
 /// (`split_rows = true`) or columns so each line member keeps its chunk
-/// (one reduce step of Algorithms 1/3/5).
+/// (one reduce step of Algorithms 1/3/5). Row chunking is zero-copy: the
+/// chunks are views of `partial`'s buffer (column chunks are strided and
+/// extracted with one copy).
 pub fn reduce_scatter_split(
     ep: &mut Endpoint,
     ctx: &Ctx3D,

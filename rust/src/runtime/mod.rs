@@ -22,6 +22,79 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc::{channel, Sender};
 
+/// Offline stand-in for the `xla` PJRT bindings. This container has no
+/// XLA/PJRT shared library in its crate set, so the runtime compiles
+/// against this stub: the types mirror the real `xla` crate's surface, but
+/// client construction fails with a descriptive error which the service
+/// thread then returns for every execute request (callers fall back to the
+/// native kernels; the artifact integration tests skip when no bundle is
+/// present). Swapping in the real bindings is this module plus one Cargo
+/// dependency.
+mod xla {
+    const UNAVAILABLE: &str =
+        "XLA/PJRT bindings are not built into this binary (offline crate set); \
+         AOT artifacts cannot be executed — use the native kernels";
+
+    pub struct PjRtClient;
+    pub struct PjRtLoadedExecutable;
+    pub struct PjRtBuffer;
+    pub struct HloModuleProto;
+    pub struct XlaComputation;
+    pub struct Literal;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+
+        pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str) -> Result<HloModuleProto, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+
+    impl XlaComputation {
+        pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    impl Literal {
+        pub fn vec1(_data: &[f32]) -> Literal {
+            Literal
+        }
+
+        pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+
+        pub fn to_tuple1(&self) -> Result<Literal, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, String> {
+            Err(UNAVAILABLE.to_string())
+        }
+    }
+}
+
 /// One artifact as described by `manifest.tsv`:
 /// `name \t file \t in_shapes \t out_shape` with shapes like `64x64,64x256`.
 #[derive(Clone, Debug, PartialEq)]

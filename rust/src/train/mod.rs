@@ -210,7 +210,9 @@ impl TrainerRank {
         let mut brng = Xoshiro256::seed_from_u64(cfg.train.seed ^ 0xB0DA0);
         let emb = Embedding::init(&cfg.model, &mut brng);
         let head = Head::init(&cfg.model, &mut brng);
-        // Optimizer state shapes: core pairs first, then emb/head.
+        // Optimizer state shapes: core pairs first, then emb/head. The
+        // block clone is refcount bumps only under the Arc-backed storage —
+        // nothing is copied to enumerate shapes.
         let mut shapes: Vec<Vec<usize>> = Vec::new();
         {
             let mut tmp = blocks.clone();
