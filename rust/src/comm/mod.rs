@@ -22,6 +22,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier};
 
+pub mod pool;
+
+use pool::{BufferPool, Takeout};
+
 /// Hierarchical α-β network + device compute model.
 ///
 /// Defaults are calibrated to the paper's testbed (TACC Longhorn):
@@ -149,6 +153,14 @@ pub struct CommStats {
     pub comm_time: f64,
     /// Virtual seconds spent in local compute charges.
     pub compute_time: f64,
+    /// Scratch-buffer requests served by the recycling pool (no heap
+    /// allocation). Per-endpoint, so tests can assert exact values even
+    /// when other worlds run concurrently in the process.
+    pub pool_hits: u64,
+    /// Scratch-buffer requests that had to heap-allocate. In the collective
+    /// steady state this stops growing after the first iteration — the
+    /// zero-allocation pin of the hot path.
+    pub pool_misses: u64,
 }
 
 impl CommStats {
@@ -158,6 +170,8 @@ impl CommStats {
         self.inter_node_bytes += other.inter_node_bytes;
         self.comm_time = self.comm_time.max(other.comm_time);
         self.compute_time = self.compute_time.max(other.compute_time);
+        self.pool_hits += other.pool_hits;
+        self.pool_misses += other.pool_misses;
     }
 }
 
@@ -213,6 +227,7 @@ impl World {
             stash: HashMap::new(),
             group_seqs: HashMap::new(),
             world_id: self.world_id,
+            pool: BufferPool::new(),
         }
     }
 
@@ -240,6 +255,10 @@ pub struct Endpoint {
     /// ordered group membership (see `next_collective_tag`).
     group_seqs: HashMap<u64, u64>,
     world_id: u64,
+    /// Recycling pool for collective scratch buffers (reduce-scatter
+    /// accumulators, all-gather output assemblies, padded chunks). See
+    /// [`pool::BufferPool`].
+    pool: BufferPool,
 }
 
 impl Endpoint {
@@ -391,6 +410,32 @@ impl Endpoint {
     /// clocks — use a collective for that.
     pub fn barrier_wait(&self) {
         self.barrier.wait();
+    }
+
+    /// Scratch tensor of `shape` from this endpoint's recycling pool.
+    /// Contents are unspecified (recycled) — the caller must overwrite every
+    /// element it reads. The buffer returns to this pool when the last
+    /// handle drops, wherever that happens; after warmup the collective hot
+    /// path is served entirely from recycled buffers (see
+    /// `CommStats::pool_misses` and the counters in [`crate::metrics`]).
+    pub fn pooled_tensor(&mut self, shape: &[usize]) -> Tensor {
+        let (t, how) = self.pool.tensor(shape);
+        match how {
+            Takeout::Recycled => {
+                self.stats.pool_hits += 1;
+                crate::metrics::add_pool_hit();
+            }
+            Takeout::Allocated => {
+                self.stats.pool_misses += 1;
+                crate::metrics::add_pool_alloc();
+            }
+        }
+        t
+    }
+
+    /// Buffers currently idle in this endpoint's pool (diagnostics).
+    pub fn pool_idle(&self) -> usize {
+        self.pool.idle()
     }
 }
 

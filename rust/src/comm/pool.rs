@@ -1,0 +1,147 @@
+//! Per-endpoint recycling buffer pool.
+//!
+//! The collectives in [`crate::collectives`] need exactly two scratch
+//! buffers per steady-state all-reduce on each rank: the reduce-scatter
+//! accumulator (one chunk) and the all-gather output assembly (the full
+//! payload). Before PR 2 both were fresh heap allocations per call; this
+//! pool recycles them, so after one warmup iteration the hot loop performs
+//! **zero** f32-buffer allocations (asserted per-endpoint by the
+//! collectives tests and exactly, process-wide, by the microbench).
+//!
+//! Mechanics: [`BufferPool::take`] hands out a `Vec<f32>` from the shared
+//! [`FreeList`], best-fit by capacity (smallest buffer that holds the
+//! request, so a chunk-sized request cannot poach the full-payload buffer
+//! and force it to reallocate). Tensors built over pooled buffers
+//! ([`Tensor::from_pooled`]) push the buffer back onto the free list when
+//! their *last* handle drops — which for ring collectives is routinely on a
+//! different rank's thread, hence the `Arc<Mutex<..>>` free list rather
+//! than a thread-local. A `Weak` back-reference keeps a retired endpoint
+//! from leaking buffers: reclaim is a no-op once the pool is gone.
+//!
+//! Scope of the zero-allocation claim: the pool tracks the f32 *data*
+//! buffers (the ones proportional to payload size). Small control
+//! allocations — shape `Vec<usize>`s, the per-call chunk-handle vector —
+//! are O(group size) pointers and are not routed through the pool.
+
+use crate::tensor::{FreeList, Tensor};
+use std::sync::{Arc, Mutex};
+
+/// A recycling pool of f32 buffers, owned by one [`super::Endpoint`].
+pub struct BufferPool {
+    free: FreeList,
+}
+
+/// What a [`BufferPool::take`] had to do to satisfy the request — the
+/// endpoint turns this into `CommStats::pool_hits` / `pool_misses` and the
+/// global counters in [`crate::metrics`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Takeout {
+    /// Served from the free list: no heap allocation happened.
+    Recycled,
+    /// Free list had no buffer of sufficient capacity: fresh allocation.
+    Allocated,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        BufferPool { free: Arc::new(Mutex::new(Vec::new())) }
+    }
+
+    /// The shared free list pooled tensors return their buffers to.
+    pub fn free_list(&self) -> &FreeList {
+        &self.free
+    }
+
+    /// Buffers currently parked in the free list (diagnostics/tests).
+    pub fn idle(&self) -> usize {
+        self.free.lock().map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// A buffer of exactly `n` elements. Best-fit from the free list when
+    /// possible (`Takeout::Recycled`), freshly allocated otherwise.
+    /// Recycled contents are unspecified beyond length `n` being zeroed on
+    /// *growth* only — callers must overwrite every element they read.
+    pub fn take(&self, n: usize) -> (Vec<f32>, Takeout) {
+        let mut free = self.free.lock().expect("buffer pool poisoned");
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, b) in free.iter().enumerate() {
+            let cap = b.capacity();
+            let better = match best {
+                None => cap >= n,
+                Some((_, c)) => cap >= n && cap < c,
+            };
+            if better {
+                best = Some((i, cap));
+            }
+        }
+        match best {
+            Some((i, _)) => {
+                let mut v = free.swap_remove(i);
+                // Within capacity: resize never reallocates here.
+                v.resize(n, 0.0);
+                (v, Takeout::Recycled)
+            }
+            None => (vec![0.0; n], Takeout::Allocated),
+        }
+    }
+
+    /// Build a pooled tensor of `shape` over a [`BufferPool::take`] buffer.
+    /// The buffer comes home to this pool on final drop.
+    pub fn tensor(&self, shape: &[usize]) -> (Tensor, Takeout) {
+        let n: usize = shape.iter().product();
+        let (buf, how) = self.take(n);
+        (Tensor::from_pooled(shape, buf, &self.free), how)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_allocates_then_recycles() {
+        let pool = BufferPool::new();
+        let (t, how) = pool.tensor(&[16]);
+        assert_eq!(how, Takeout::Allocated);
+        drop(t);
+        assert_eq!(pool.idle(), 1);
+        let (t2, how2) = pool.tensor(&[16]);
+        assert_eq!(how2, Takeout::Recycled, "round trip must hit the pool");
+        assert_eq!(t2.numel(), 16);
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn best_fit_leaves_the_big_buffer_for_the_big_request() {
+        let pool = BufferPool::new();
+        let (small, _) = pool.tensor(&[8]);
+        let (big, _) = pool.tensor(&[64]);
+        drop(small);
+        drop(big);
+        assert_eq!(pool.idle(), 2);
+        // A small request must take the 8-capacity buffer, not the 64.
+        let (s, how) = pool.take(8);
+        assert_eq!(how, Takeout::Recycled);
+        assert!(s.capacity() < 64, "best fit must not poach the large buffer");
+        let (b, how) = pool.take(64);
+        assert_eq!(how, Takeout::Recycled);
+        assert_eq!(b.len(), 64);
+    }
+
+    #[test]
+    fn shrinking_reuse_keeps_capacity_for_later_growth() {
+        let pool = BufferPool::new();
+        let (t, _) = pool.tensor(&[64]);
+        drop(t);
+        let (small, how) = pool.take(8);
+        assert_eq!(how, Takeout::Recycled);
+        assert_eq!(small.len(), 8);
+        assert!(small.capacity() >= 64, "capacity must survive shrink");
+    }
+}

@@ -31,6 +31,36 @@ pub fn reset_bytes_cloned() {
     BYTES_CLONED.store(0, Ordering::Relaxed);
 }
 
+/// Global mirrors of the per-endpoint buffer-pool counters (see
+/// `comm::pool`): scratch-buffer requests served by recycling vs. by a
+/// fresh heap allocation. `POOL_ALLOCS` staying flat across steady-state
+/// iterations is the "hot loop performs zero allocations after warmup"
+/// proof the microbench asserts; per-endpoint exact values live in
+/// `comm::CommStats` (this global is shared across concurrent worlds, so
+/// in-crate tests assert on the endpoint stats instead).
+static POOL_HITS: AtomicU64 = AtomicU64::new(0);
+static POOL_ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Record a pool request served without allocating (called from comm).
+pub fn add_pool_hit() {
+    POOL_HITS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record a pool request that had to heap-allocate (called from comm).
+pub fn add_pool_alloc() {
+    POOL_ALLOCS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total pool requests served by recycling since start.
+pub fn pool_hits() -> u64 {
+    POOL_HITS.load(Ordering::Relaxed)
+}
+
+/// Total pool requests that allocated since start.
+pub fn pool_allocs() -> u64 {
+    POOL_ALLOCS.load(Ordering::Relaxed)
+}
+
 /// Result of one timed distributed run (virtual clocks + real traffic).
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {

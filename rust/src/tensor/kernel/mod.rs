@@ -1,0 +1,373 @@
+//! Explicit-SIMD matmul microkernel subsystem.
+//!
+//! This is the per-device compute engine beneath every matmul form in
+//! [`crate::tensor::matmul`] — the role a hand-tuned cuBLAS SGEMM inner
+//! kernel plays on the paper's V100s. The design is the classic GEBP
+//! (GotoBLAS/BLIS) decomposition:
+//!
+//! * **Register-blocked microkernel** — an [`MR`]×[`NR`] (8×8) tile of C is
+//!   held entirely in registers while streaming through a shared `k` panel:
+//!   per `k` step, one NR-wide vector load of B, MR scalar broadcasts of A,
+//!   and MR fused multiply-adds. Implemented three times with identical
+//!   accumulation order:
+//!   - [`avx2`]: `std::arch` x86-64 AVX2+FMA (`__m256`, `_mm256_fmadd_ps`),
+//!   - [`neon`]: `std::arch` aarch64 NEON (`float32x4_t` ×2, `vfmaq_f32`),
+//!   - [`scalar`]: portable fallback (plain mul+add, autovectorizable),
+//!   plus a [`reference`] kernel (`f32::mul_add`, same order) whose results
+//!   are bit-identical to the FMA kernels — the oracle of the parity suite.
+//! * **Packing** ([`pack`]) — operand panels are repacked into
+//!   microkernel-aligned layout (`kc`-major, MR/NR-wide, zero-padded at the
+//!   edges) so the inner loop issues only contiguous loads regardless of the
+//!   source form (nn / nt / tn are just different pack strides).
+//! * **Cache blocking** — [`gemm_strided`] tiles the operation `NC`×`KC`×`MC`
+//!   so the packed B block lives in L2/L3 and each packed A block in L1/L2,
+//!   then sweeps the microkernel over full tiles; partial edge tiles compute
+//!   into a zero-padded register tile and write back only the valid window.
+//! * **Runtime dispatch** — the best kernel is selected once per process
+//!   (`is_x86_feature_detected!` / `is_aarch64_feature_detected!`) into a
+//!   [`Kernel`] table entry; [`selected`] caches the choice in a `OnceLock`.
+//!   `CUBIC_KERNEL=scalar|avx2|neon` overrides the choice (benchmarking and
+//!   fallback-path testing), and building with `--no-default-features`
+//!   (disabling the `simd` cargo feature) compiles the scalar path only.
+//!
+//! Edge handling contract: every (m, n, k) is legal, including 1. Remainder
+//! tiles in m and n are computed through the same packed microkernel against
+//! zero-padded panels, so for `k <= KC` every output element is one
+//! k-sequential accumulation chain — which is what makes the parity suite's
+//! bit-for-bit comparison against [`reference`] meaningful.
+
+pub mod pack;
+pub mod reference;
+pub mod scalar;
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+pub mod avx2;
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+pub mod neon;
+
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+/// Microkernel tile height (rows of C held in registers).
+pub const MR: usize = 8;
+/// Microkernel tile width (columns of C held in registers).
+pub const NR: usize = 8;
+
+/// Cache-block depth (k). Also the upper bound on `k` for which the whole
+/// accumulation is a single per-element chain (the parity suite relies on
+/// this when comparing kernels bit-for-bit).
+pub const KC: usize = 256;
+/// Cache-block height (m): rows of A packed per inner block.
+pub const MC: usize = 128;
+/// Cache-block width (n): columns of B packed per outer block.
+pub const NC: usize = 256;
+
+/// A packed-panel microkernel:
+/// `C[MR×NR] += Apanel(kc×MR) · Bpanel(kc×NR)`, with C at row stride `ldc`.
+///
+/// # Safety
+/// * `a` must point to `kc * MR` readable f32s (k-major MR-wide panels);
+/// * `b` must point to `kc * NR` readable f32s (k-major NR-wide panels);
+/// * `c` must point to an MR×NR writable window at row stride `ldc`
+///   (`c[r*ldc + j]` valid for r < MR, j < NR);
+/// * for the SIMD variants, the corresponding CPU feature must be present
+///   (guaranteed by [`available`], which only lists detected kernels).
+pub type MicroKernel =
+    unsafe fn(kc: usize, a: *const f32, b: *const f32, c: *mut f32, ldc: usize);
+
+/// One dispatch-table entry: a named microkernel variant.
+#[derive(Clone, Copy)]
+pub struct Kernel {
+    pub name: &'static str,
+    pub mk: MicroKernel,
+}
+
+impl std::fmt::Debug for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Kernel({})", self.name)
+    }
+}
+
+fn detect() -> Vec<Kernel> {
+    let mut v = vec![Kernel { name: "scalar", mk: scalar::microkernel }];
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        v.push(Kernel { name: "avx2+fma", mk: avx2::microkernel });
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        v.push(Kernel { name: "neon", mk: neon::microkernel });
+    }
+    v
+}
+
+/// All kernels usable on this host, scalar first, best last. Stable for the
+/// process lifetime; the parity suite and the microbench iterate over this.
+pub fn available() -> &'static [Kernel] {
+    static KERNELS: OnceLock<Vec<Kernel>> = OnceLock::new();
+    KERNELS.get_or_init(detect)
+}
+
+/// The kernel every matmul call dispatches through: the most capable
+/// detected variant, unless `CUBIC_KERNEL=<name>` pins one explicitly.
+/// Selected once per process.
+pub fn selected() -> Kernel {
+    static SELECTED: OnceLock<Kernel> = OnceLock::new();
+    *SELECTED.get_or_init(|| {
+        let avail = available();
+        if let Ok(want) = std::env::var("CUBIC_KERNEL") {
+            if let Some(k) = avail.iter().find(|k| k.name.starts_with(&want)) {
+                return *k;
+            }
+            eprintln!(
+                "CUBIC_KERNEL={want} not available (have: {:?}); using default",
+                avail.iter().map(|k| k.name).collect::<Vec<_>>()
+            );
+        }
+        *avail.last().expect("scalar kernel is always available")
+    })
+}
+
+/// Name of the dispatched kernel (for reports and bench JSON).
+pub fn selected_name() -> &'static str {
+    selected().name
+}
+
+/// The fused-rounding oracle kernel (not in [`available`]: it is built for
+/// bit-exactness against the FMA kernels, not speed).
+pub fn reference_kernel() -> Kernel {
+    Kernel { name: "reference-fma", mk: reference::microkernel }
+}
+
+thread_local! {
+    /// Per-thread packing scratch (A panels, B panels), reused across calls
+    /// so the steady-state matmul path performs no panel allocations.
+    static SCRATCH: RefCell<(Vec<f32>, Vec<f32>)> = const { RefCell::new((Vec::new(), Vec::new())) };
+}
+
+/// `C += A' · B'` where the logical operands are addressed through strides:
+/// `A'[i][kk] = a[i*ars + kk*aks]` (m×k) and `B'[kk][j] = b[kk*brs + j*bcs]`
+/// (k×n). C is row-major m×n. The three matmul forms are:
+///
+/// | form | A strides (ars, aks) | B strides (brs, bcs) |
+/// |------|----------------------|----------------------|
+/// | nn   | `(k, 1)`             | `(n, 1)`             |
+/// | nt   | `(k, 1)`             | `(1, k)`             |
+/// | tn   | `(1, m)`             | `(n, 1)`             |
+///
+/// Accumulating (`+=`) rather than overwriting keeps k-blocking trivial;
+/// callers that want `C = A·B` pass a zeroed `c`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_strided(
+    kern: Kernel,
+    m: usize,
+    n: usize,
+    kdim: usize,
+    a: &[f32],
+    ars: usize,
+    aks: usize,
+    b: &[f32],
+    brs: usize,
+    bcs: usize,
+    c: &mut [f32],
+) {
+    assert_eq!(c.len(), m * n, "gemm_strided: C buffer is {} elems, need {}", c.len(), m * n);
+    if m == 0 || n == 0 || kdim == 0 {
+        return;
+    }
+    SCRATCH.with(|s| {
+        let scratch = &mut *s.borrow_mut();
+        let (ap_buf, bp_buf) = (&mut scratch.0, &mut scratch.1);
+        for jc in (0..n).step_by(NC) {
+            let nc = (jc + NC).min(n) - jc;
+            let nc_pad = nc.div_ceil(NR) * NR;
+            for pc in (0..kdim).step_by(KC) {
+                let kc = (pc + KC).min(kdim) - pc;
+                bp_buf.resize(kc * nc_pad, 0.0);
+                for (pi, jr) in (0..nc).step_by(NR).enumerate() {
+                    let nr_eff = NR.min(nc - jr);
+                    pack::pack_b(
+                        b,
+                        brs,
+                        bcs,
+                        pc,
+                        kc,
+                        jc + jr,
+                        nr_eff,
+                        &mut bp_buf[pi * kc * NR..(pi + 1) * kc * NR],
+                    );
+                }
+                for ic in (0..m).step_by(MC) {
+                    let mc = (ic + MC).min(m) - ic;
+                    let mc_pad = mc.div_ceil(MR) * MR;
+                    ap_buf.resize(kc * mc_pad, 0.0);
+                    for (pi, ir) in (0..mc).step_by(MR).enumerate() {
+                        let mr_eff = MR.min(mc - ir);
+                        pack::pack_a(
+                            a,
+                            ars,
+                            aks,
+                            ic + ir,
+                            mr_eff,
+                            pc,
+                            kc,
+                            &mut ap_buf[pi * kc * MR..(pi + 1) * kc * MR],
+                        );
+                    }
+                    for (bpi, jr) in (0..nc).step_by(NR).enumerate() {
+                        let nr_eff = NR.min(nc - jr);
+                        for (api, ir) in (0..mc).step_by(MR).enumerate() {
+                            let mr_eff = MR.min(mc - ir);
+                            let apan = ap_buf[api * kc * MR..(api + 1) * kc * MR].as_ptr();
+                            let bpan = bp_buf[bpi * kc * NR..(bpi + 1) * kc * NR].as_ptr();
+                            let (row, col) = (ic + ir, jc + jr);
+                            if mr_eff == MR && nr_eff == NR {
+                                // SAFETY: panels hold kc*MR / kc*NR packed
+                                // f32s (resized + fully written above); the
+                                // full-tile condition guarantees the MR×NR
+                                // window at c[row*n + col] with ldc = n is
+                                // in bounds; `kern` came from `available`,
+                                // so its ISA features are present.
+                                unsafe {
+                                    (kern.mk)(kc, apan, bpan, c.as_mut_ptr().add(row * n + col), n);
+                                }
+                            } else {
+                                // Edge tile: compute the full padded tile
+                                // into registers-backed scratch, write back
+                                // only the valid window. Zero-padded panel
+                                // lanes contribute exact zeros.
+                                let mut tile = [0.0f32; MR * NR];
+                                // SAFETY: as above; `tile` is an MR×NR
+                                // window with ldc = NR.
+                                unsafe {
+                                    (kern.mk)(kc, apan, bpan, tile.as_mut_ptr(), NR);
+                                }
+                                for (r, trow) in tile.chunks_exact(NR).take(mr_eff).enumerate() {
+                                    let crow = &mut c[(row + r) * n + col..][..nr_eff];
+                                    for (cv, &tv) in crow.iter_mut().zip(trow) {
+                                        *cv += tv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unfused same-order oracle: per output element, one k-sequential
+    /// chain of `acc + a*b` — the exact op sequence of the scalar kernel.
+    fn naive_unfused(
+        m: usize,
+        n: usize,
+        kdim: usize,
+        a: &[f32],
+        ars: usize,
+        aks: usize,
+        b: &[f32],
+        brs: usize,
+        bcs: usize,
+    ) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..kdim {
+                    acc += a[i * ars + kk * aks] * b[kk * brs + j * bcs];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    fn fill(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn scalar_kernel_is_bit_exact_vs_unfused_naive() {
+        for &(m, n, k) in &[(1, 1, 1), (3, 5, 7), (8, 8, 8), (9, 17, 13), (64, 64, 64), (65, 9, 33)]
+        {
+            let a = fill(1, m * k);
+            let b = fill(2, k * n);
+            let mut c = vec![0.0f32; m * n];
+            let kern = Kernel { name: "scalar", mk: scalar::microkernel };
+            gemm_strided(kern, m, n, k, &a, k, 1, &b, n, 1, &mut c);
+            let r = naive_unfused(m, n, k, &a, k, 1, &b, n, 1);
+            assert_eq!(c, r, "({m},{n},{k})");
+        }
+    }
+
+    #[test]
+    fn strided_forms_agree_with_explicit_transposes() {
+        let (m, n, k) = (11, 13, 17);
+        let kern = *available().last().unwrap();
+        let a = fill(3, m * k); // row-major (m,k)
+        let b = fill(4, k * n); // row-major (k,n)
+        let mut c_nn = vec![0.0f32; m * n];
+        gemm_strided(kern, m, n, k, &a, k, 1, &b, n, 1, &mut c_nn);
+        // nt: hand B as its (n,k) transpose with swapped strides.
+        let mut bt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let mut c_nt = vec![0.0f32; m * n];
+        gemm_strided(kern, m, n, k, &a, k, 1, &bt, 1, k, &mut c_nt);
+        assert_eq!(c_nn, c_nt);
+        // tn: hand A as its (k,m) transpose with swapped strides.
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        let mut c_tn = vec![0.0f32; m * n];
+        gemm_strided(kern, m, n, k, &at, 1, m, &b, n, 1, &mut c_tn);
+        assert_eq!(c_nn, c_tn);
+    }
+
+    #[test]
+    fn multi_kblock_accumulation_is_numerically_sound() {
+        // k > KC exercises the C += per-k-block accumulation path.
+        let (m, n, k) = (5, 6, 2 * KC + 37);
+        let a = fill(5, m * k);
+        let b = fill(6, k * n);
+        for kern in available() {
+            let mut c = vec![0.0f32; m * n];
+            gemm_strided(*kern, m, n, k, &a, k, 1, &b, n, 1, &mut c);
+            // f64 oracle.
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f64 =
+                        (0..k).map(|kk| a[i * k + kk] as f64 * b[kk * n + j] as f64).sum();
+                    let got = c[i * n + j] as f64;
+                    assert!(
+                        (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                        "{}: ({i},{j}) got {got} want {want}",
+                        kern.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_always_has_scalar_and_selected_is_available() {
+        let avail = available();
+        assert_eq!(avail[0].name, "scalar");
+        let sel = selected_name();
+        assert!(avail.iter().any(|k| k.name == sel), "selected {sel} not in table");
+    }
+}

@@ -1,0 +1,47 @@
+//! NEON microkernel (aarch64).
+//!
+//! The 8×8 C tile is sixteen `float32x4_t` accumulators (two 128-bit
+//! registers per C-tile row). Per depth step: two 128-bit loads of the
+//! packed B row, eight scalar broadcasts of the packed A column, sixteen
+//! `fmla` (vfmaq_f32, fused). aarch64 has 32 architectural vector
+//! registers, so 16 accumulators + 2 B vectors + a broadcast register leave
+//! ample headroom; accumulation order per output element is identical to
+//! the AVX2 and reference kernels (k-sequential fused chain), so parity is
+//! bit-for-bit.
+//!
+//! Only compiled on `aarch64` with the `simd` feature; dispatched when
+//! `is_aarch64_feature_detected!("neon")` (always true on aarch64 in
+//! practice — NEON is mandatory in ARMv8-A — but checked anyway).
+
+use super::{MR, NR};
+use core::arch::aarch64::{
+    float32x4_t, vaddq_f32, vdupq_n_f32, vfmaq_f32, vld1q_f32, vst1q_f32,
+};
+
+/// `C[8×8] += Apanel(kc×8) · Bpanel(kc×8)`; see [`super::MicroKernel`].
+///
+/// # Safety
+/// As [`super::MicroKernel`], plus the host CPU must support NEON
+/// (guaranteed when this kernel is obtained from [`super::available`]).
+#[target_feature(enable = "neon")]
+pub unsafe fn microkernel(kc: usize, a: *const f32, b: *const f32, c: *mut f32, ldc: usize) {
+    const { assert!(NR == 8, "two float32x4 per C-tile row") };
+    let zero = vdupq_n_f32(0.0);
+    let mut acc: [[float32x4_t; 2]; MR] = [[zero; 2]; MR];
+    for kk in 0..kc {
+        let bp = b.add(kk * NR);
+        let b0 = vld1q_f32(bp);
+        let b1 = vld1q_f32(bp.add(4));
+        let ap = a.add(kk * MR);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = vdupq_n_f32(*ap.add(r));
+            accr[0] = vfmaq_f32(accr[0], av, b0);
+            accr[1] = vfmaq_f32(accr[1], av, b1);
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let cp = c.add(r * ldc);
+        vst1q_f32(cp, vaddq_f32(vld1q_f32(cp), accr[0]));
+        vst1q_f32(cp.add(4), vaddq_f32(vld1q_f32(cp.add(4)), accr[1]));
+    }
+}

@@ -1,0 +1,112 @@
+//! Operand packing into microkernel-aligned micro-panels.
+//!
+//! The microkernel consumes both operands as `k`-major panels: for each
+//! depth step `kk` there are [`MR`](super::MR) consecutive A values (one per
+//! C-tile row) and [`NR`](super::NR) consecutive B values (one per C-tile
+//! column). Packing happens once per cache block and is amortized over every
+//! microkernel invocation that reuses the panel (`~MC/MR` times for B panels,
+//! `~NC/NR` times for A panels), which is what lets the inner loop run at
+//! register speed on strided source forms (nt reads B column-major, tn reads
+//! A column-major — after packing the microkernel cannot tell the difference).
+//!
+//! Panels at the m/n edges are zero-padded to full MR/NR width. Zero lanes
+//! flow through the multiply-accumulate as exact zeros, and the driver's
+//! edge write-back discards them, so padding never contaminates results.
+
+use super::{MR, NR};
+
+/// Pack the A micro-panel for C-tile rows `i0..i0+mr_eff` over depth
+/// `k0..k0+kc` into `dst` (layout: `kc` groups of `MR` floats), reading the
+/// logical operand through strides: `A'[i][kk] = a[i*ars + kk*aks]`.
+/// Rows `mr_eff..MR` are zero-filled.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_a(
+    a: &[f32],
+    ars: usize,
+    aks: usize,
+    i0: usize,
+    mr_eff: usize,
+    k0: usize,
+    kc: usize,
+    dst: &mut [f32],
+) {
+    debug_assert!(mr_eff >= 1 && mr_eff <= MR);
+    debug_assert!(dst.len() >= kc * MR);
+    for (kk, d) in dst.chunks_exact_mut(MR).take(kc).enumerate() {
+        let kbase = (k0 + kk) * aks;
+        for (r, dr) in d.iter_mut().enumerate() {
+            *dr = if r < mr_eff { a[(i0 + r) * ars + kbase] } else { 0.0 };
+        }
+    }
+}
+
+/// Pack the B micro-panel for C-tile columns `j0..j0+nr_eff` over depth
+/// `k0..k0+kc` into `dst` (layout: `kc` groups of `NR` floats), reading the
+/// logical operand through strides: `B'[kk][j] = b[kk*brs + j*bcs]`.
+/// Columns `nr_eff..NR` are zero-filled.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_b(
+    b: &[f32],
+    brs: usize,
+    bcs: usize,
+    k0: usize,
+    kc: usize,
+    j0: usize,
+    nr_eff: usize,
+    dst: &mut [f32],
+) {
+    debug_assert!(nr_eff >= 1 && nr_eff <= NR);
+    debug_assert!(dst.len() >= kc * NR);
+    if bcs == 1 && nr_eff == NR {
+        // Contiguous full-width rows (the nn/tn B form away from the right
+        // edge): straight memcpy per depth step.
+        for (kk, d) in dst.chunks_exact_mut(NR).take(kc).enumerate() {
+            let src = (k0 + kk) * brs + j0;
+            d.copy_from_slice(&b[src..src + NR]);
+        }
+        return;
+    }
+    for (kk, d) in dst.chunks_exact_mut(NR).take(kc).enumerate() {
+        let kbase = (k0 + kk) * brs;
+        for (j, dj) in d.iter_mut().enumerate() {
+            *dj = if j < nr_eff { b[kbase + (j0 + j) * bcs] } else { 0.0 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_a_pads_and_orders() {
+        // A (3x4) row-major, pack rows 1..3 (mr_eff=2), k 1..4 (kc=3).
+        let a: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let mut dst = vec![-1.0f32; 3 * MR];
+        pack_a(&a, 4, 1, 1, 2, 1, 3, &mut dst);
+        for kk in 0..3 {
+            let d = &dst[kk * MR..(kk + 1) * MR];
+            assert_eq!(d[0], a[4 + 1 + kk], "row 1, k {kk}");
+            assert_eq!(d[1], a[8 + 1 + kk], "row 2, k {kk}");
+            assert!(d[2..].iter().all(|&x| x == 0.0), "padding must be zero");
+        }
+    }
+
+    #[test]
+    fn pack_b_strided_matches_contiguous() {
+        // B (4x6) row-major vs its transpose read back through strides.
+        let b: Vec<f32> = (0..24).map(|x| (x * 7 % 13) as f32).collect();
+        let mut bt = vec![0.0f32; 24];
+        for kk in 0..4 {
+            for j in 0..6 {
+                bt[j * 4 + kk] = b[kk * 6 + j];
+            }
+        }
+        let mut d1 = vec![0.0f32; 4 * NR];
+        let mut d2 = vec![0.0f32; 4 * NR];
+        pack_b(&b, 6, 1, 0, 4, 0, 6, &mut d1);
+        pack_b(&bt, 1, 4, 0, 4, 0, 6, &mut d2);
+        assert_eq!(d1, d2);
+        assert!(d1[6..NR].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,39 @@
+//! Fused-rounding reference microkernel — the parity oracle.
+//!
+//! Identical blocking and accumulation order to the SIMD kernels, with
+//! `f32::mul_add` (round-once fused multiply-add) as the arithmetic
+//! primitive. A hardware FMA instruction and `mul_add`'s software fallback
+//! are both correctly rounded, so for any `k <= KC` (single k-block: one
+//! accumulation chain per output element) this kernel's results are
+//! **bit-identical** to the AVX2 and NEON kernels on every input — the
+//! property the parity suite (`tests/kernel_parity.rs`) asserts. Not listed
+//! in [`super::available`]: without hardware FMA codegen the software
+//! `fmaf` path is orders of magnitude slower than [`super::scalar`].
+
+use super::{MR, NR};
+
+/// `C[MR×NR] += Apanel(kc×MR) · Bpanel(kc×NR)` with fused rounding; see
+/// [`super::MicroKernel`] for the full safety contract.
+///
+/// # Safety
+/// `a`/`b` must point to `kc*MR` / `kc*NR` readable f32s; `c` must be an
+/// MR×NR writable window at row stride `ldc`.
+pub unsafe fn microkernel(kc: usize, a: *const f32, b: *const f32, c: *mut f32, ldc: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..kc {
+        let ap = a.add(kk * MR);
+        let bp = b.add(kk * NR);
+        for (r, row) in acc.iter_mut().enumerate() {
+            let av = *ap.add(r);
+            for (j, cell) in row.iter_mut().enumerate() {
+                *cell = av.mul_add(*bp.add(j), *cell);
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate() {
+        let cp = c.add(r * ldc);
+        for (j, &cell) in row.iter().enumerate() {
+            *cp.add(j) += cell;
+        }
+    }
+}

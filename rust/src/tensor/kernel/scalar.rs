@@ -1,0 +1,36 @@
+//! Portable scalar microkernel — the fallback on hosts without AVX2/NEON
+//! and the only kernel when the `simd` cargo feature is disabled.
+//!
+//! Same register-blocking shape as the SIMD variants (an MR×NR accumulator
+//! tile, k-sequential per-element chains) but with plain `a * b + acc`
+//! arithmetic: no fused rounding, so an autovectorizing compiler is free to
+//! keep it fast on any ISA, and its results are bit-identical to a naive
+//! same-order unfused triple loop (pinned by `kernel::tests`).
+
+use super::{MR, NR};
+
+/// `C[MR×NR] += Apanel(kc×MR) · Bpanel(kc×NR)`; see [`super::MicroKernel`]
+/// for the full safety contract.
+///
+/// # Safety
+/// `a`/`b` must point to `kc*MR` / `kc*NR` readable f32s; `c` must be an
+/// MR×NR writable window at row stride `ldc`.
+pub unsafe fn microkernel(kc: usize, a: *const f32, b: *const f32, c: *mut f32, ldc: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for kk in 0..kc {
+        let ap = a.add(kk * MR);
+        let bp = b.add(kk * NR);
+        for (r, row) in acc.iter_mut().enumerate() {
+            let av = *ap.add(r);
+            for (j, cell) in row.iter_mut().enumerate() {
+                *cell += av * *bp.add(j);
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate() {
+        let cp = c.add(r * ldc);
+        for (j, &cell) in row.iter().enumerate() {
+            *cp.add(j) += cell;
+        }
+    }
+}

@@ -1,28 +1,33 @@
-//! Blocked matrix-multiplication kernels.
+//! Matrix multiplication in the three forms the paper uses.
 //!
 //! Three forms, matching the paper's §3.1.2 (Eq. 3–5): `C = AB`, `C = ABᵀ`,
 //! `C = AᵀB`. These are the per-device compute of the whole framework — the
 //! role cuBLAS plays on the authors' V100s and the Pallas L1 kernel plays on
-//! TPU — so they are written as cache-blocked loops with packed B-panels and
-//! multi-accumulator inner kernels, plus a per-call flop counter feeding the
-//! metrics layer.
+//! TPU — so since PR 2 all three forms drive the explicit-SIMD microkernel
+//! subsystem in [`super::kernel`]:
 //!
-//! Kernel structure (§Perf of EXPERIMENTS.md):
-//! * `matmul_nn` packs each `(k-block × j-block)` panel of B into a
-//!   contiguous scratch tile (one pack amortized over all `m` rows) and
-//!   applies 4 rank-1 updates per pass over the C row segment — 4× fewer
-//!   C-row traversals than the scalar `ikj` loop.
-//! * `matmul_nt` is a dot-product kernel over two contiguous rows; the dot
-//!   runs on 8 independent accumulators to break the serial FP-add
-//!   dependency chain (the k<8 remainder takes a scalar tail, exercised by
-//!   the tail-only tests below).
-//! * `matmul_tn` streams 4 rank-1 updates per C row pass with contiguous
-//!   row access on A, B and C.
+//! * an 8×8 register-blocked microkernel (AVX2+FMA on x86-64, NEON on
+//!   aarch64, portable scalar fallback) selected **once at startup** by
+//!   runtime CPU-feature detection — see `kernel::selected`;
+//! * operands packed into microkernel-aligned micro-panels per cache block
+//!   (`KC`/`MC`/`NC` tiling), so nn / nt / tn differ only in pack strides:
+//!   the inner loop never sees a transpose;
+//! * edge tiles (m, n remainders) computed against zero-padded panels and
+//!   written back through a masked copy — every (m, n, k) ≥ 1 is legal and
+//!   verified bit-for-bit against a reference kernel by
+//!   `tests/kernel_parity.rs`.
 //!
-//! Phantom inputs short-circuit to a phantom output of the correct shape;
-//! shape *checking* still happens first, so the simulated benches exercise
-//! the same contract the numeric path does.
+//! This module keeps the *accounting contract* around the kernels: the
+//! global flop counter (2·M·N·K per call, read by the metrics layer) and
+//! the phantom short-circuit — phantom inputs return a phantom output of
+//! the correct shape *after* shape checking, so the simulated benches
+//! exercise the same contract the numeric path does.
+//!
+//! Measured throughput lives in `BENCH_PR2.json` (per-kernel GF/s on the
+//! 256³ microbench plus the scalar-vs-SIMD ratio); design details and the
+//! dispatch policy are documented in [`super::kernel`].
 
+use super::kernel;
 use super::Tensor;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -43,18 +48,8 @@ fn count(m: usize, n: usize, k: usize) {
     FLOPS.fetch_add(2 * (m as u64) * (n as u64) * (k as u64), Ordering::Relaxed);
 }
 
-/// Cache block edge (elements). 64×64 f32 tiles = 16 KiB per operand tile,
-/// comfortably inside L1+L2 on any x86 host; chosen by the §Perf sweep in
-/// EXPERIMENTS.md.
-const BLOCK: usize = 64;
-
-/// `C = A · B` for A:(m,k), B:(k,n).
-///
-/// For each `(k-block, j-block)` pair the B panel is packed into a
-/// contiguous scratch tile, then every row of A streams through it with a
-/// 4-wide rank-1-update kernel: `c[j] += a0·b0[j] + a1·b1[j] + a2·b2[j] +
-/// a3·b3[j]`. The pack cost is `O(k·n)` total and is repaid `m/BLOCK`
-/// times over.
+/// `C = A · B` for A:(m,k), B:(k,n): both operands row-major, unit column
+/// stride on each — pack strides `(k, 1)` / `(n, 1)`.
 pub fn matmul_nn(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, ka) = a.dims2();
     let (kb, n) = b.dims2();
@@ -63,56 +58,14 @@ pub fn matmul_nn(a: &Tensor, b: &Tensor) -> Tensor {
         return Tensor::phantom(&[m, n]);
     };
     count(m, n, ka);
-    let k = ka;
     let mut c = vec![0.0f32; m * n];
-    let mut bpack = vec![0.0f32; BLOCK * BLOCK];
-    for jb in (0..n).step_by(BLOCK) {
-        let je = (jb + BLOCK).min(n);
-        let jw = je - jb;
-        for kb_ in (0..k).step_by(BLOCK) {
-            let ke = (kb_ + BLOCK).min(k);
-            let kw = ke - kb_;
-            // Pack B[kb_..ke, jb..je] rows contiguously.
-            for kk in 0..kw {
-                let src = (kb_ + kk) * n + jb;
-                bpack[kk * jw..(kk + 1) * jw].copy_from_slice(&bd[src..src + jw]);
-            }
-            for i in 0..m {
-                let arow = &ad[i * k + kb_..i * k + ke];
-                let crow = &mut c[i * n + jb..i * n + je];
-                let k4 = kw - kw % 4;
-                let mut kk = 0;
-                while kk < k4 {
-                    let a0 = arow[kk];
-                    let a1 = arow[kk + 1];
-                    let a2 = arow[kk + 2];
-                    let a3 = arow[kk + 3];
-                    let b0 = &bpack[kk * jw..kk * jw + jw];
-                    let b1 = &bpack[(kk + 1) * jw..(kk + 1) * jw + jw];
-                    let b2 = &bpack[(kk + 2) * jw..(kk + 2) * jw + jw];
-                    let b3 = &bpack[(kk + 3) * jw..(kk + 3) * jw + jw];
-                    for j in 0..jw {
-                        crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                    }
-                    kk += 4;
-                }
-                while kk < kw {
-                    let aik = arow[kk];
-                    let brow = &bpack[kk * jw..kk * jw + jw];
-                    if aik != 0.0 {
-                        for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                            *cv += aik * bv;
-                        }
-                    }
-                    kk += 1;
-                }
-            }
-        }
-    }
+    kernel::gemm_strided(kernel::selected(), m, n, ka, ad, ka, 1, bd, n, 1, &mut c);
     Tensor::from_vec(&[m, n], c)
 }
 
-/// `C = A · Bᵀ` for A:(m,k), B:(n,k).
+/// `C = A · Bᵀ` for A:(m,k), B:(n,k): the logical `(k,n)` right operand is
+/// B read through swapped strides `(1, k)` — the B pack walks B's rows as
+/// columns, and the microkernel never sees the transpose.
 pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, ka) = a.dims2();
     let (n, kb) = b.dims2();
@@ -121,48 +74,13 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
         return Tensor::phantom(&[m, n]);
     };
     count(m, n, ka);
-    let k = ka;
     let mut c = vec![0.0f32; m * n];
-    // Both A and B rows are contiguous here, so a dot-product kernel is the
-    // natural fit; block over (i, j) to keep B rows resident. The dot is
-    // split across 8 independent accumulators to break the serial FP add
-    // dependency chain (§Perf: 2.85 → ~9 GF/s with 4 accumulators on the
-    // 256³ microbench; 8 keeps the FMA ports saturated on wider cores).
-    for ib in (0..m).step_by(BLOCK) {
-        let ie = (ib + BLOCK).min(m);
-        for jb in (0..n).step_by(BLOCK) {
-            let je = (jb + BLOCK).min(n);
-            for i in ib..ie {
-                let arow = &ad[i * k..(i + 1) * k];
-                for j in jb..je {
-                    let brow = &bd[j * k..(j + 1) * k];
-                    let chunks = k / 8;
-                    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-                    let (mut a4, mut a5, mut a6, mut a7) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-                    for t in 0..chunks {
-                        let base = t * 8;
-                        a0 += arow[base] * brow[base];
-                        a1 += arow[base + 1] * brow[base + 1];
-                        a2 += arow[base + 2] * brow[base + 2];
-                        a3 += arow[base + 3] * brow[base + 3];
-                        a4 += arow[base + 4] * brow[base + 4];
-                        a5 += arow[base + 5] * brow[base + 5];
-                        a6 += arow[base + 6] * brow[base + 6];
-                        a7 += arow[base + 7] * brow[base + 7];
-                    }
-                    let mut acc = ((a0 + a1) + (a2 + a3)) + ((a4 + a5) + (a6 + a7));
-                    for t in chunks * 8..k {
-                        acc += arow[t] * brow[t];
-                    }
-                    c[i * n + j] = acc;
-                }
-            }
-        }
-    }
+    kernel::gemm_strided(kernel::selected(), m, n, ka, ad, ka, 1, bd, 1, ka, &mut c);
     Tensor::from_vec(&[m, n], c)
 }
 
-/// `C = Aᵀ · B` for A:(k,m), B:(k,n).
+/// `C = Aᵀ · B` for A:(k,m), B:(k,n): the logical `(m,k)` left operand is
+/// A read through swapped strides `(1, m)`.
 pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     let (ka, m) = a.dims2();
     let (kb, n) = b.dims2();
@@ -171,50 +89,8 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
         return Tensor::phantom(&[m, n]);
     };
     count(m, n, ka);
-    let k = ka;
     let mut c = vec![0.0f32; m * n];
-    // k is the outer loop: for each row of A (length m) and row of B
-    // (length n), rank-1 update of C. Row accesses are all contiguous; four
-    // k-rows are fused per C pass to quarter the C traffic.
-    for kb_ in (0..k).step_by(BLOCK) {
-        let ke = (kb_ + BLOCK).min(k);
-        let kw = ke - kb_;
-        let k4 = kw - kw % 4;
-        let mut kk = 0;
-        while kk < k4 {
-            let a0 = &ad[(kb_ + kk) * m..(kb_ + kk + 1) * m];
-            let a1 = &ad[(kb_ + kk + 1) * m..(kb_ + kk + 2) * m];
-            let a2 = &ad[(kb_ + kk + 2) * m..(kb_ + kk + 3) * m];
-            let a3 = &ad[(kb_ + kk + 3) * m..(kb_ + kk + 4) * m];
-            let b0 = &bd[(kb_ + kk) * n..(kb_ + kk + 1) * n];
-            let b1 = &bd[(kb_ + kk + 1) * n..(kb_ + kk + 2) * n];
-            let b2 = &bd[(kb_ + kk + 2) * n..(kb_ + kk + 3) * n];
-            let b3 = &bd[(kb_ + kk + 3) * n..(kb_ + kk + 4) * n];
-            for i in 0..m {
-                let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
-                let crow = &mut c[i * n..(i + 1) * n];
-                for j in 0..n {
-                    crow[j] += x0 * b0[j] + x1 * b1[j] + x2 * b2[j] + x3 * b3[j];
-                }
-            }
-            kk += 4;
-        }
-        while kk < kw {
-            let arow = &ad[(kb_ + kk) * m..(kb_ + kk + 1) * m];
-            let brow = &bd[(kb_ + kk) * n..(kb_ + kk + 1) * n];
-            for i in 0..m {
-                let aki = arow[i];
-                if aki == 0.0 {
-                    continue;
-                }
-                let crow = &mut c[i * n..(i + 1) * n];
-                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                    *cv += aki * bv;
-                }
-            }
-            kk += 1;
-        }
-    }
+    kernel::gemm_strided(kernel::selected(), m, n, ka, ad, 1, m, bd, n, 1, &mut c);
     Tensor::from_vec(&[m, n], c)
 }
 
@@ -269,8 +145,9 @@ mod tests {
 
     #[test]
     fn nt_tail_only_small_k() {
-        // k < 8 exercises only the scalar remainder of the 8-accumulator
-        // dot kernel (the tail path the unrolled loop never touches).
+        // k < 8: shallower than one full microkernel depth step group —
+        // exercises short packed panels (the exhaustive 1..=17 sweep lives
+        // in tests/kernel_parity.rs).
         for k in 1..8usize {
             let (m, n) = (5, 6);
             let a = randt(&[m, k], 100 + k as u64);
@@ -283,8 +160,8 @@ mod tests {
 
     #[test]
     fn nt_unroll_boundary_ks() {
-        // k straddling multiples of the 8-wide unroll: both the unrolled
-        // body and the remainder contribute.
+        // k straddling multiples of the 8-wide microkernel tile: both full
+        // and remainder panels contribute.
         for k in [8usize, 9, 15, 16, 17, 24] {
             let (m, n) = (3, 4);
             let a = randt(&[m, k], 300 + k as u64);

@@ -29,6 +29,13 @@
 //! view for full-width row ranges (and single rows), so `split_rows` — the
 //! chunking primitive under reduce-scatter — never copies.
 //!
+//! Buffers can additionally be *pooled*: [`Tensor::from_pooled`] ties the
+//! storage to a [`FreeList`] so the buffer returns there when the last
+//! handle drops (possibly on another rank's thread) instead of being freed.
+//! This is the mechanism behind the per-endpoint recycling pool
+//! (`comm::pool`) that makes the collective steady state allocation-free —
+//! see [`crate::collectives`].
+//!
 //! ## Dual-mode tensors
 //!
 //! A [`Tensor`] is either *materialized* (carries a buffer window) or
@@ -41,15 +48,71 @@
 
 use crate::rng::Xoshiro256;
 use std::fmt;
-use std::sync::Arc;
+use std::ops::Deref;
+use std::sync::{Arc, Mutex, Weak};
 
+pub mod kernel;
 pub mod matmul;
 
 pub use matmul::{flops_executed as matmul_flops, reset_flops as reset_flop_counter};
 
+/// Shared free list a pooled buffer returns to when its last handle drops:
+/// the storage side of the per-endpoint recycling pool in
+/// [`crate::comm::pool`]. Kept as a plain `Mutex<Vec<Vec<f32>>>` so the
+/// reclaim in [`Storage::drop`] works from whichever worker thread happens
+/// to drop the final handle (ring collectives routinely retire a buffer on
+/// a different rank than the one that allocated it).
+pub type FreeList = Arc<Mutex<Vec<Vec<f32>>>>;
+
+/// Upper bound on buffers parked in one free list; beyond this, retiring
+/// buffers are simply freed (defends against pathological churn pinning
+/// unbounded memory).
+const MAX_POOLED: usize = 32;
+
+/// The refcounted storage behind a materialized tensor: the f32 buffer plus
+/// an optional way home. Plain storage (`reclaim: None`) frees normally;
+/// pooled storage (built by [`Tensor::from_pooled`]) pushes its buffer back
+/// onto the owning endpoint's free list on final drop, making the buffer
+/// reusable without a fresh heap allocation.
+struct Storage {
+    data: Vec<f32>,
+    reclaim: Option<Weak<Mutex<Vec<Vec<f32>>>>>,
+}
+
+impl Storage {
+    fn plain(data: Vec<f32>) -> Self {
+        Storage { data, reclaim: None }
+    }
+}
+
+impl Deref for Storage {
+    type Target = [f32];
+    fn deref(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+impl Drop for Storage {
+    fn drop(&mut self) {
+        if let Some(w) = self.reclaim.take() {
+            if let Some(free) = w.upgrade() {
+                // Never panic in drop: a poisoned free list (some rank
+                // panicked mid-collective) still accepts the buffer.
+                let mut q = match free.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                if q.len() < MAX_POOLED {
+                    q.push(std::mem::take(&mut self.data));
+                }
+            }
+        }
+    }
+}
+
 /// Shared storage: one refcounted buffer, potentially windowed by several
 /// tensors (clones, `block` views, `split_rows` chunks).
-type Buf = Arc<Vec<f32>>;
+type Buf = Arc<Storage>;
 
 /// Row-major dense f32 tensor (a window into shared storage) or shape-only
 /// placeholder (phantom).
@@ -91,7 +154,7 @@ impl Tensor {
 
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
-        Self { shape: shape.to_vec(), off: 0, data: Some(Arc::new(vec![0.0; n])) }
+        Self { shape: shape.to_vec(), off: 0, data: Some(Arc::new(Storage::plain(vec![0.0; n]))) }
     }
 
     pub fn ones(shape: &[usize]) -> Self {
@@ -100,7 +163,7 @@ impl Tensor {
 
     pub fn full(shape: &[usize], v: f32) -> Self {
         let n: usize = shape.iter().product();
-        Self { shape: shape.to_vec(), off: 0, data: Some(Arc::new(vec![v; n])) }
+        Self { shape: shape.to_vec(), off: 0, data: Some(Arc::new(Storage::plain(vec![v; n]))) }
     }
 
     /// Shape-only tensor: flows through every op without computing data.
@@ -112,7 +175,19 @@ impl Tensor {
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
         let n: usize = shape.iter().product();
         assert_eq!(n, data.len(), "shape {:?} does not match data len {}", shape, data.len());
-        Self { shape: shape.to_vec(), off: 0, data: Some(Arc::new(data)) }
+        Self { shape: shape.to_vec(), off: 0, data: Some(Arc::new(Storage::plain(data))) }
+    }
+
+    /// Like [`Tensor::from_vec`], but the buffer returns to `home` (an
+    /// endpoint's recycling free list) when the last handle drops instead
+    /// of being freed — the constructor behind
+    /// `comm::Endpoint::pooled_tensor`. The reclaim reference is weak: if
+    /// the owning pool is gone by then, the buffer frees normally.
+    pub fn from_pooled(shape: &[usize], data: Vec<f32>, home: &FreeList) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {:?} does not match data len {}", shape, data.len());
+        let storage = Storage { data, reclaim: Some(Arc::downgrade(home)) };
+        Self { shape: shape.to_vec(), off: 0, data: Some(Arc::new(storage)) }
     }
 
     /// N(0, std) initialized tensor (deterministic given the rng state).
@@ -157,7 +232,7 @@ impl Tensor {
         if Arc::get_mut(buf).is_none() {
             let copied: Vec<f32> = buf[off..off + n].to_vec();
             crate::metrics::add_bytes_cloned((n * std::mem::size_of::<f32>()) as u64);
-            *buf = Arc::new(copied);
+            *buf = Arc::new(Storage::plain(copied));
             self.off = 0;
         }
     }
@@ -188,7 +263,7 @@ impl Tensor {
         };
         if needs {
             let copied = self.data().to_vec();
-            self.data = Some(Arc::new(copied));
+            self.data = Some(Arc::new(Storage::plain(copied)));
             self.off = 0;
         }
         self
@@ -228,7 +303,7 @@ impl Tensor {
         let off = self.off;
         let buf = self.data.as_mut().expect("tensor is phantom; no data");
         let v = Arc::get_mut(buf).expect("buffer unique after make_unique");
-        &mut v[off..off + n]
+        &mut v.data[off..off + n]
     }
 
     pub fn try_data(&self) -> Option<&[f32]> {
@@ -841,6 +916,41 @@ mod tests {
         let copy = Tensor::from_vec(&[2, 2], vec![2.0, 3.0, 4.0, 5.0]);
         assert_eq!(view, copy);
         assert!(!view.shares_storage(&copy));
+    }
+
+    #[test]
+    fn pooled_storage_returns_to_free_list_on_final_drop() {
+        let free: FreeList = Arc::new(Mutex::new(Vec::new()));
+        let t = Tensor::from_pooled(&[4], vec![1.0; 4], &free);
+        let u = t.clone();
+        assert!(t.shares_storage(&u));
+        drop(t);
+        assert_eq!(free.lock().unwrap().len(), 0, "a live handle must pin the buffer");
+        drop(u);
+        assert_eq!(free.lock().unwrap().len(), 1, "final drop must return the buffer");
+        assert_eq!(free.lock().unwrap()[0], vec![1.0; 4]);
+    }
+
+    #[test]
+    fn cow_on_shared_pooled_tensor_detaches_and_still_reclaims() {
+        let free: FreeList = Arc::new(Mutex::new(Vec::new()));
+        let t = Tensor::from_pooled(&[3], vec![7.0; 3], &free);
+        let mut u = t.clone();
+        u.data_mut()[0] = 1.0; // CoW: u detaches onto plain storage
+        assert!(!t.shares_storage(&u));
+        assert_eq!(t.data(), &[7.0; 3], "original pooled data intact");
+        drop(u); // plain storage: freed, NOT pooled
+        assert_eq!(free.lock().unwrap().len(), 0);
+        drop(t);
+        assert_eq!(free.lock().unwrap().len(), 1, "pooled original comes home once");
+    }
+
+    #[test]
+    fn pooled_reclaim_is_a_noop_when_the_pool_is_gone() {
+        let free: FreeList = Arc::new(Mutex::new(Vec::new()));
+        let t = Tensor::from_pooled(&[2], vec![0.5; 2], &free);
+        drop(free); // endpoint torn down before its in-flight buffers
+        drop(t); // must not panic; buffer simply frees
     }
 
     #[test]

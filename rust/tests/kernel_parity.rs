@@ -1,0 +1,238 @@
+//! Parity suite for the SIMD matmul microkernels.
+//!
+//! Every kernel variant the dispatcher can select must agree with a
+//! same-accumulation-order oracle on every shape — including all the edge
+//! geometries the packed-panel driver has to zero-pad:
+//!
+//! * **SIMD kernels (AVX2+FMA, NEON) vs the fused reference kernel**: both
+//!   use round-once fused multiply-add in identical k-sequential chains, so
+//!   for `k <= KC` (one k-block) results must match within 1 ulp — and in
+//!   practice bit-for-bit (hardware FMA and `f32::mul_add` are both
+//!   correctly rounded).
+//! * **Scalar fallback vs a naive unfused triple loop**: same op sequence
+//!   (`acc + a*b`, k-sequential), so the match must be within 1 ulp.
+//!
+//! Sweep: exhaustive `m, n, k ∈ 1..=17` (every microkernel-tile remainder
+//! combination, 4913 shapes per form), the `64±1` boundary cube, and
+//! 256-sized cases (the `KC` cache-block edge) — all three forms
+//! (nn/nt/tn) each. Plus a multi-k-block case (`k > KC`) checked against an
+//! f64 oracle, and the public `Tensor::matmul*` wrappers cross-checked so
+//! the dispatch wiring itself is covered.
+
+use cubic::rng::Xoshiro256;
+use cubic::tensor::kernel::{self, gemm_strided, Kernel, KC};
+use cubic::tensor::Tensor;
+
+/// Ulp distance between two finite f32s (0 for exact equality, including
+/// `0.0 == -0.0`).
+fn ulp_diff(a: f32, b: f32) -> u64 {
+    if a == b {
+        return 0;
+    }
+    if a.is_nan() || b.is_nan() {
+        return u64::MAX;
+    }
+    fn ordered(x: f32) -> i64 {
+        let bits = x.to_bits();
+        if bits & 0x8000_0000 != 0 {
+            -((bits & 0x7FFF_FFFF) as i64)
+        } else {
+            bits as i64
+        }
+    }
+    (ordered(a) - ordered(b)).unsigned_abs()
+}
+
+fn fill(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+/// The three forms as (name, A-strides, B-strides) over row-major storage:
+/// nn keeps both operands as stored; nt/tn swap one operand's strides.
+#[derive(Clone, Copy)]
+enum Form {
+    Nn,
+    Nt,
+    Tn,
+}
+
+impl Form {
+    fn name(self) -> &'static str {
+        match self {
+            Form::Nn => "nn",
+            Form::Nt => "nt",
+            Form::Tn => "tn",
+        }
+    }
+
+    /// ((a_len, ars, aks), (b_len, brs, bcs)) for logical (m,k)·(k,n).
+    #[allow(clippy::type_complexity)]
+    fn strides(
+        self,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> ((usize, usize, usize), (usize, usize, usize)) {
+        match self {
+            // A stored (m,k), B stored (k,n).
+            Form::Nn => ((m * k, k, 1), (k * n, n, 1)),
+            // A stored (m,k), B stored (n,k) read as its transpose.
+            Form::Nt => ((m * k, k, 1), (n * k, 1, k)),
+            // A stored (k,m) read as its transpose, B stored (k,n).
+            Form::Tn => ((k * m, 1, m), (k * n, n, 1)),
+        }
+    }
+}
+
+/// Same-order oracle: one k-sequential accumulation chain per element,
+/// fused (`mul_add`) or unfused (`a*b + acc`).
+#[allow(clippy::too_many_arguments)]
+fn naive(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    ars: usize,
+    aks: usize,
+    b: &[f32],
+    brs: usize,
+    bcs: usize,
+    fused: bool,
+) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                let (av, bv) = (a[i * ars + kk * aks], b[kk * brs + j * bcs]);
+                acc = if fused { av.mul_add(bv, acc) } else { av * bv + acc };
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Run one (kernel, form, shape) case against its same-order oracle.
+fn check(kern: Kernel, form: Form, m: usize, n: usize, k: usize, fused_oracle: bool) {
+    let ((alen, ars, aks), (blen, brs, bcs)) = form.strides(m, n, k);
+    let a = fill(1000 + (m * 31 + n * 7 + k) as u64, alen);
+    let b = fill(2000 + (m + n * 13 + k * 5) as u64, blen);
+    let mut c = vec![0.0f32; m * n];
+    gemm_strided(kern, m, n, k, &a, ars, aks, &b, brs, bcs, &mut c);
+    let want = naive(m, n, k, &a, ars, aks, &b, brs, bcs, fused_oracle);
+    for (idx, (&got, &w)) in c.iter().zip(&want).enumerate() {
+        let d = ulp_diff(got, w);
+        assert!(
+            d <= 1,
+            "{} {} ({m},{n},{k}) elem {idx}: got {got:e} want {w:e} ({d} ulp)",
+            kern.name,
+            form.name()
+        );
+    }
+}
+
+/// Kernels to sweep, paired with the oracle rounding they must match:
+/// scalar ↔ unfused, every detected SIMD variant (and the reference
+/// kernel itself, as a self-check) ↔ fused.
+fn kernels_under_test() -> Vec<(Kernel, bool)> {
+    let mut v: Vec<(Kernel, bool)> = Vec::new();
+    for k in kernel::available() {
+        v.push((*k, k.name != "scalar"));
+    }
+    v.push((kernel::reference_kernel(), true));
+    v
+}
+
+#[test]
+fn exhaustive_small_dims_all_forms() {
+    let kernels = kernels_under_test();
+    for &(kern, fused) in &kernels {
+        for form in [Form::Nn, Form::Nt, Form::Tn] {
+            for m in 1..=17 {
+                for n in 1..=17 {
+                    for k in 1..=17 {
+                        check(kern, form, m, n, k, fused);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cache_block_boundary_dims_all_forms() {
+    let kernels = kernels_under_test();
+    let boundary = [63usize, 64, 65];
+    for &(kern, fused) in &kernels {
+        for form in [Form::Nn, Form::Nt, Form::Tn] {
+            for &m in &boundary {
+                for &n in &boundary {
+                    for &k in &boundary {
+                        check(kern, form, m, n, k, fused);
+                    }
+                }
+            }
+            // KC-edge cases: 256 in each position (k = 256 is exactly one
+            // full k-block — the largest single-chain depth).
+            for &(m, n, k) in &[(256, 9, 17), (9, 256, 17), (9, 17, 256), (256, 64, 8)] {
+                check(kern, form, m, n, k, fused);
+            }
+        }
+    }
+    // Full 256³ once, nn only (the microbench headline shape).
+    for &(kern, fused) in &kernels {
+        check(kern, Form::Nn, 256, 256, 256, fused);
+    }
+}
+
+#[test]
+fn multi_kblock_and_cache_edges_match_f64_oracle() {
+    // k > KC splits the accumulation across k-blocks (C += per block), so
+    // same-order ulp comparison no longer applies; check against an f64
+    // oracle instead. Shape straddles MC (128) and NC (256) too.
+    let (m, n, k) = (129, 257, KC + 41);
+    let a = fill(7, m * k);
+    let b = fill(8, k * n);
+    for kern in kernel::available() {
+        let mut c = vec![0.0f32; m * n];
+        gemm_strided(*kern, m, n, k, &a, k, 1, &b, n, 1, &mut c);
+        for i in (0..m).step_by(17) {
+            for j in (0..n).step_by(19) {
+                let want: f64 = (0..k).map(|kk| a[i * k + kk] as f64 * b[kk * n + j] as f64).sum();
+                let got = c[i * n + j] as f64;
+                assert!(
+                    (got - want).abs() <= 1e-3 * want.abs().max(1.0),
+                    "{}: ({i},{j}) got {got} want {want}",
+                    kern.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tensor_wrappers_dispatch_to_the_same_kernels() {
+    // The public matmul API must produce exactly what the selected kernel
+    // produces through the raw driver — pins the matmul.rs wiring.
+    let (m, n, k) = (13, 11, 9);
+    let kern = kernel::selected();
+    let a = fill(21, m * k);
+    let b = fill(22, k * n);
+    let ta = Tensor::from_vec(&[m, k], a.clone());
+    let tb = Tensor::from_vec(&[k, n], b.clone());
+    let mut c = vec![0.0f32; m * n];
+    gemm_strided(kern, m, n, k, &a, k, 1, &b, n, 1, &mut c);
+    assert_eq!(ta.matmul(&tb).data(), &c[..], "matmul_nn wiring");
+    let tbt = tb.transpose();
+    let mut c_nt = vec![0.0f32; m * n];
+    gemm_strided(kern, m, n, k, &a, k, 1, tbt.data(), 1, k, &mut c_nt);
+    assert_eq!(ta.matmul_nt(&tbt).data(), &c_nt[..], "matmul_nt wiring");
+    let tat = ta.transpose();
+    let mut c_tn = vec![0.0f32; m * n];
+    gemm_strided(kern, m, n, k, tat.data(), 1, m, &b, n, 1, &mut c_tn);
+    assert_eq!(tat.matmul_tn(&tb).data(), &c_tn[..], "matmul_tn wiring");
+}
