@@ -23,7 +23,14 @@
 //! * all-reduce chunks its input with zero-copy flat views (`split_flat`)
 //!   whenever `numel % g == 0` (padded chunks in the misaligned case come
 //!   from the pool), and assembles its output by writing each ring chunk
-//!   straight into a pooled output buffer as it arrives.
+//!   straight into a pooled output buffer as it arrives;
+//! * the binomial-tree `reduce` materializes its accumulator from the pool
+//!   on the first fold (pure leaves never touch the pool, and the caller's
+//!   tensor is never copy-on-written), and the large-payload `broadcast_bw`
+//!   / `reduce_bw` assemble their full outputs straight into pooled buffers
+//!   (`broadcast_bw` through the same `all_gather_into` engine the
+//!   all-reduce uses) — so the tree/bw paths recycle exactly like the ring
+//!   steady state, pinned by the per-endpoint pool-counter tests below.
 //!
 //! The remaining data movement is the mathematically required work: one
 //! accumulator fill per reduce-scatter and one contiguous output assembly
@@ -80,6 +87,23 @@ fn flat_chunks(ep: &mut Endpoint, t: &Tensor, g: usize) -> Vec<Tensor> {
         .collect()
 }
 
+/// Clamp-and-copy `parts` (group order, possibly zero-padded) into `out`
+/// (`n` valid elements): the shared assembly loop of [`assemble_chunks`]
+/// and [`assemble_chunks_pooled`], kept in one place so the fresh and
+/// pooled paths cannot diverge.
+fn assemble_into(out: &mut [f32], parts: &[Tensor], n: usize) {
+    let mut off = 0usize;
+    for p in parts {
+        let d = p.data();
+        let take = d.len().min(n - off);
+        out[off..off + take].copy_from_slice(&d[..take]);
+        off += take;
+    }
+    // Hard assert (release builds included): short input must crash at the
+    // fault site, not propagate a silently zero-padded tail.
+    assert_eq!(off, n, "assembled {off} of {n} elements");
+}
+
 /// Reassemble a tensor of shape `shape` (numel `n`) from `g` gathered
 /// chunks (group order, possibly zero-padded): one contiguous output
 /// allocation, one pass.
@@ -87,11 +111,8 @@ fn assemble_chunks(parts: &[Tensor], shape: &[usize], n: usize) -> Tensor {
     if parts.iter().any(|p| p.is_phantom()) {
         return Tensor::phantom(shape);
     }
-    let mut flat = Vec::with_capacity(parts.iter().map(|p| p.numel()).sum());
-    for p in parts {
-        flat.extend_from_slice(p.data());
-    }
-    flat.truncate(n);
+    let mut flat = vec![0.0f32; n];
+    assemble_into(&mut flat, parts, n);
     Tensor::from_vec(shape, flat)
 }
 
@@ -329,18 +350,28 @@ pub fn reduce(
     }
     let tag = ep.next_collective_tag(group);
     let vpos = (pos + g - root_pos) % g;
-    let mut acc = t.clone();
     // Bottom-up binomial tree: at round `step` the active ranks are the
     // multiples of `step`; those at odd multiples send their partial to
     // `vpos − step` (an even multiple, still active this round) and leave.
     // Nobody ever sends to a rank that has already left the collective —
     // the property that makes this safe against endpoint teardown races.
+    //
+    // Allocation discipline (mirrors the ring reduce-scatter): the first
+    // fold writes `t + incoming` into a recycled pool buffer; later folds
+    // add into that sole-owner buffer in place. A pure leaf sends `t`
+    // itself (a handle) and never touches the pool, and `t` is never
+    // copy-on-written. The accumulator is handed up with `send_owned`, so
+    // the parent's drop sends it home to this rank's pool.
+    let mut acc: Option<Tensor> = None;
     let mut step = 1usize;
     while step < g {
         if vpos % (2 * step) == step {
             let peer = vpos - step;
             let dst = group[(peer + root_pos) % g];
-            ep.send(dst, tag, &acc);
+            match acc {
+                Some(a) => ep.send_owned(dst, tag, a),
+                None => ep.send(dst, tag, t),
+            }
             return None; // partial handed up the tree; done
         }
         // vpos % (2*step) == 0: receive from vpos + step if it exists.
@@ -348,12 +379,15 @@ pub fn reduce(
         if peer < g {
             let src = group[(peer + root_pos) % g];
             let incoming = ep.recv(src, tag);
-            acc.add_assign(&incoming);
-            ep.charge_memop(acc.nominal_bytes() as f64);
+            match acc {
+                Some(ref mut a) => a.add_assign(&incoming),
+                None => acc = Some(fold_into_pooled(ep, t, &incoming)),
+            }
+            ep.charge_memop(t.nominal_bytes() as f64);
         }
         step *= 2;
     }
-    Some(acc)
+    Some(acc.unwrap_or_else(|| t.clone()))
 }
 
 /// Bandwidth-optimal broadcast for large payloads of a shape every rank
@@ -399,9 +433,17 @@ pub fn broadcast_bw(
         assert!(t.is_none(), "non-root must pass None to broadcast_bw");
         ep.recv(group[root_pos], tag)
     };
-    // All-gather phase reassembles the full payload everywhere.
-    let parts = all_gather(ep, group, &mine);
-    assemble_chunks(&parts, shape, n)
+    // All-gather phase reassembles the full payload everywhere, written
+    // straight into a pooled output buffer (the phantom path drives the
+    // chunk-collecting ring instead for identical clock/ledger charges —
+    // there are no buffers to assemble).
+    if mine.is_phantom() {
+        let parts = all_gather(ep, group, &mine);
+        return assemble_chunks(&parts, shape, n);
+    }
+    let mut out = ep.pooled_tensor(shape);
+    all_gather_into(ep, group, mine, out.data_mut());
+    out
 }
 
 /// Bandwidth-optimal reduce for large payloads: ring reduce-scatter then a
@@ -420,7 +462,24 @@ pub fn reduce_bw(
     let contrib = flat_chunks(ep, t, g);
     let mine = reduce_scatter(ep, group, contrib);
     let parts = gather(ep, group, root_pos, &mine)?;
-    Some(assemble_chunks(&parts, t.shape(), t.numel()))
+    Some(assemble_chunks_pooled(ep, &parts, t.shape(), t.numel()))
+}
+
+/// Reassemble like [`assemble_chunks`], but into a recycled pool buffer —
+/// the root-side assembly of [`reduce_bw`]. Phantom parts produce a phantom
+/// result without touching the pool.
+fn assemble_chunks_pooled(
+    ep: &mut Endpoint,
+    parts: &[Tensor],
+    shape: &[usize],
+    n: usize,
+) -> Tensor {
+    if parts.iter().any(|p| p.is_phantom()) {
+        return Tensor::phantom(shape);
+    }
+    let mut out = ep.pooled_tensor(shape);
+    assemble_into(out.data_mut(), parts, n);
+    out
 }
 
 /// Gather all contributions to `group[root_pos]` (returns `Some(parts)` in
@@ -696,6 +755,142 @@ mod tests {
         let chunks = t.split_flat(4);
         for c in &chunks {
             assert!(c.shares_storage(&t), "aligned chunks must be views");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_steady_state_is_allocation_free_after_warmup() {
+        // ROADMAP item 4, part 1: the binomial-tree reduce accumulator
+        // comes from the pool. g = 4, root 0: vpos 0 folds twice (one pool
+        // request, then in place), vpos 2 folds once (one request), vpos 1
+        // and 3 are pure leaves (zero requests) — so after warmup the hits
+        // grow by exactly {1, 0, 1, 0} per call and misses stay flat.
+        let g = 4usize;
+        let iters = 5u64;
+        let out = run_spmd(g, NetModel::zero(), move |rank, ep| {
+            let group: Vec<usize> = (0..g).collect();
+            let t = Tensor::from_vec(&[16], vec![(rank + 1) as f32; 16]);
+            let r = reduce(ep, &group, 0, &t);
+            if rank == 0 {
+                assert_eq!(r.as_ref().unwrap().data()[0], 10.0);
+            } else {
+                assert!(r.is_none());
+            }
+            drop(r);
+            ep.barrier_wait();
+            let (h0, m0) = (ep.stats.pool_hits, ep.stats.pool_misses);
+            for _ in 0..iters {
+                let r = reduce(ep, &group, 0, &t);
+                if rank == 0 {
+                    assert_eq!(r.as_ref().unwrap().data()[0], 10.0);
+                }
+                drop(r);
+                ep.barrier_wait();
+            }
+            (ep.stats.pool_hits - h0, ep.stats.pool_misses - m0)
+        });
+        for (rank, (hits, misses)) in out.iter().enumerate() {
+            assert_eq!(*misses, 0, "rank {rank}: tree reduce must recycle after warmup");
+            let expect = if rank % 2 == 0 { iters } else { 0 };
+            assert_eq!(*hits, expect, "rank {rank}: folding ranks hit the pool once per call");
+        }
+    }
+
+    #[test]
+    fn broadcast_bw_steady_state_recycles_the_assembly() {
+        // ROADMAP item 4, part 2: broadcast_bw assembles into a pooled
+        // output. Aligned payload → the root's chunks are zero-copy views,
+        // so the output assembly is the only pool request: exactly one hit
+        // per rank per call after warmup, zero misses.
+        let g = 4usize;
+        let n = 64usize;
+        let root = 1usize;
+        let iters = 5u64;
+        let out = run_spmd(g, NetModel::zero(), move |rank, ep| {
+            let group: Vec<usize> = (0..g).collect();
+            let t = Tensor::from_vec(&[n], (0..n).map(|i| i as f32).collect());
+            let run_one = |ep: &mut crate::comm::Endpoint| {
+                let arg = (rank == root).then(|| t.clone());
+                let r = broadcast_bw(ep, &group, root, arg, &[n]);
+                assert_eq!(r.data()[5], 5.0);
+                drop(r);
+                ep.barrier_wait();
+            };
+            run_one(ep); // warmup allocates the assembly buffer once
+            let (h0, m0) = (ep.stats.pool_hits, ep.stats.pool_misses);
+            for _ in 0..iters {
+                run_one(ep);
+            }
+            (ep.stats.pool_hits - h0, ep.stats.pool_misses - m0)
+        });
+        for (rank, (hits, misses)) in out.iter().enumerate() {
+            assert_eq!(*misses, 0, "rank {rank}: broadcast_bw must recycle after warmup");
+            assert_eq!(*hits, iters, "rank {rank}: one pooled assembly per call");
+        }
+    }
+
+    #[test]
+    fn misaligned_broadcast_bw_also_reaches_pool_steady_state() {
+        // n % g != 0: the root's padded chunks are pooled too; the steady
+        // state must still be allocation-free everywhere.
+        let g = 3usize;
+        let n = 7usize;
+        let iters = 5u64;
+        let out = run_spmd(g, NetModel::zero(), move |rank, ep| {
+            let group: Vec<usize> = (0..g).collect();
+            let t = Tensor::from_vec(&[n], vec![2.5; n]);
+            let run_one = |ep: &mut crate::comm::Endpoint| {
+                let arg = (rank == 0).then(|| t.clone());
+                let r = broadcast_bw(ep, &group, 0, arg, &[n]);
+                assert_eq!(r.data(), &[2.5; 7][..]);
+                drop(r);
+                ep.barrier_wait();
+            };
+            run_one(ep);
+            let m0 = ep.stats.pool_misses;
+            for _ in 0..iters {
+                run_one(ep);
+            }
+            ep.stats.pool_misses - m0
+        });
+        for (rank, misses) in out.iter().enumerate() {
+            assert_eq!(*misses, 0, "rank {rank}: padded bw chunks must recycle");
+        }
+    }
+
+    #[test]
+    fn reduce_bw_steady_state_recycles_accumulator_and_assembly() {
+        // ROADMAP item 4, part 3: reduce_bw = ring reduce-scatter (pooled
+        // accumulator on every rank) + root-side pooled assembly. Aligned
+        // payload: exactly one hit per rank per call, two at the root.
+        let g = 4usize;
+        let n = 64usize;
+        let root = 2usize;
+        let iters = 5u64;
+        let out = run_spmd(g, NetModel::zero(), move |rank, ep| {
+            let group: Vec<usize> = (0..g).collect();
+            let t = Tensor::from_vec(&[n], vec![(rank + 1) as f32; n]);
+            let run_one = |ep: &mut crate::comm::Endpoint| {
+                let r = reduce_bw(ep, &group, root, &t);
+                if rank == root {
+                    assert_eq!(r.as_ref().unwrap().data()[0], 10.0);
+                } else {
+                    assert!(r.is_none());
+                }
+                drop(r);
+                ep.barrier_wait();
+            };
+            run_one(ep);
+            let (h0, m0) = (ep.stats.pool_hits, ep.stats.pool_misses);
+            for _ in 0..iters {
+                run_one(ep);
+            }
+            (ep.stats.pool_hits - h0, ep.stats.pool_misses - m0)
+        });
+        for (rank, (hits, misses)) in out.iter().enumerate() {
+            assert_eq!(*misses, 0, "rank {rank}: reduce_bw must recycle after warmup");
+            let expect = if rank == root { 2 * iters } else { iters };
+            assert_eq!(*hits, expect, "rank {rank}: accumulator (+ root assembly) per call");
         }
     }
 

@@ -195,6 +195,10 @@ pub struct CubicConfig {
     pub edge: usize,
     /// Artifacts directory for the PJRT runtime (empty = native only).
     pub artifacts_dir: String,
+    /// Cores for the multi-threaded gemm driver (0 = auto: available
+    /// parallelism). Applied via `kernel::threads::request_threads` before
+    /// the first matmul; the `CUBIC_THREADS=` env override wins over this.
+    pub threads: usize,
 }
 
 impl Default for CubicConfig {
@@ -205,6 +209,7 @@ impl Default for CubicConfig {
             parallelism: Parallelism::ThreeD,
             edge: 2,
             artifacts_dir: String::new(),
+            threads: 0,
         }
     }
 }
@@ -286,6 +291,7 @@ impl CubicConfig {
         if let Some(d) = doc.get_str("runtime", "artifacts_dir") {
             cfg.artifacts_dir = d;
         }
+        set_usize!("runtime", "threads", cfg.threads);
         cfg.model
             .validate(cfg.parallelism, cfg.edge)
             .map_err(ConfigError)?;
@@ -359,8 +365,11 @@ seed = 7
 
 [runtime]
 artifacts_dir = "artifacts"
+threads = 4
 "#;
         let cfg = CubicConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(CubicConfig::default().threads, 0, "default must be auto");
         assert_eq!(cfg.model.layers, 3);
         assert_eq!(cfg.model.hidden, ModelConfig::tiny().hidden);
         assert_eq!(cfg.parallelism, Parallelism::ThreeD);

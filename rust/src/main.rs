@@ -37,6 +37,10 @@ COMMANDS
   artifacts       list the AOT bundle and smoke-run one artifact
                     --dir <artifacts dir> (default ./artifacts)
   help            show this text
+
+GLOBAL OPTIONS
+  --threads <n>   cores for the multi-threaded gemm driver (0 = auto,
+                  default; the CUBIC_THREADS env var overrides this)
 "#;
 
 fn build_config(args: &Args) -> Result<CubicConfig, String> {
@@ -61,6 +65,10 @@ fn build_config(args: &Args) -> Result<CubicConfig, String> {
     cfg.train.steps = args.get_usize("steps", cfg.train.steps)?;
     cfg.train.lr = args.get_f64("lr", cfg.train.lr as f64)? as f32;
     cfg.train.seed = args.get_usize("seed", cfg.train.seed as usize)? as u64;
+    cfg.threads = args.get_usize("threads", cfg.threads)?;
+    if cfg.threads > 0 {
+        cubic::tensor::kernel::threads::request_threads(cfg.threads);
+    }
     cfg.model
         .validate(cfg.parallelism, cfg.edge)
         .map_err(|e| format!("invalid config: {e}"))?;
@@ -147,6 +155,18 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Gemm thread count for commands that don't build a config (the bench
+    // tables); train/plan apply it through `build_config` so the file knob
+    // participates too. Selection latches on first matmul — see
+    // `kernel::threads::selected_threads`.
+    match args.get_usize("threads", 0) {
+        Ok(0) => {}
+        Ok(n) => cubic::tensor::kernel::threads::request_threads(n),
+        Err(e) => {
+            eprintln!("error: {e}\n\n{HELP}");
+            std::process::exit(2);
+        }
+    }
     let result = match args.command.as_deref() {
         Some("train") => cmd_train(&args),
         Some("bench-table1") => {

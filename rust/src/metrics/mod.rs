@@ -61,6 +61,31 @@ pub fn pool_allocs() -> u64 {
     POOL_ALLOCS.load(Ordering::Relaxed)
 }
 
+/// Bytes written into gemm packing panels (A micro-panels + shared B
+/// blocks), fed by the kernel driver's merged per-thread tallies — the
+/// multi-core companion of the flop counter: every participating thread
+/// tallies the panels it packed and the job's total lands here once, on
+/// completion. Useful for spotting pack-traffic regressions (a driver
+/// change that re-packs a panel per tile would blow this up long before it
+/// shows in wall-clock noise).
+static PACK_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Credit one gemm's merged packing-traffic tally (called from the kernel
+/// driver after the per-thread counters are joined).
+pub fn add_pack_bytes(bytes: u64) {
+    PACK_BYTES.fetch_add(bytes, Ordering::Relaxed);
+}
+
+/// Total bytes written into packing panels since start (or last reset).
+pub fn pack_bytes() -> u64 {
+    PACK_BYTES.load(Ordering::Relaxed)
+}
+
+/// Reset the pack-bytes counter (bench harness only; racy like the rest).
+pub fn reset_pack_bytes() {
+    PACK_BYTES.store(0, Ordering::Relaxed);
+}
+
 /// Result of one timed distributed run (virtual clocks + real traffic).
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -230,6 +255,14 @@ mod tests {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".into(), "2".into()]);
         assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn pack_bytes_counter_accumulates() {
+        // Global counter shared with concurrent tests: assert the floor.
+        let before = pack_bytes();
+        add_pack_bytes(1234);
+        assert!(pack_bytes() - before >= 1234);
     }
 
     #[test]

@@ -19,10 +19,13 @@
 //!   microkernel-aligned layout (`kc`-major, MR/NR-wide, zero-padded at the
 //!   edges) so the inner loop issues only contiguous loads regardless of the
 //!   source form (nn / nt / tn are just different pack strides).
-//! * **Cache blocking** — [`gemm_strided`] tiles the operation `NC`×`KC`×`MC`
-//!   so the packed B block lives in L2/L3 and each packed A block in L1/L2,
-//!   then sweeps the microkernel over full tiles; partial edge tiles compute
-//!   into a zero-padded register tile and write back only the valid window.
+//! * **Cache blocking** — [`gemm_strided`] tiles the operation `NC`×`KC`
+//!   so the packed B block lives in L2/L3; within a block, `MR`-row strips
+//!   of C each pack their A micro-panel (hot in L1) and sweep the
+//!   microkernel across the B panels; partial edge tiles compute into a
+//!   zero-padded register tile and write back only the valid window. The
+//!   strips are also the unit of multi-core work sharing — see
+//!   *Threading model & determinism* below.
 //! * **Runtime dispatch** — the best kernel is selected once per process
 //!   (`is_x86_feature_detected!` / `is_aarch64_feature_detected!`) into a
 //!   [`Kernel`] table entry; [`selected`] caches the choice in a `OnceLock`.
@@ -35,17 +38,48 @@
 //! zero-padded panels, so for `k <= KC` every output element is one
 //! k-sequential accumulation chain — which is what makes the parity suite's
 //! bit-for-bit comparison against [`reference`] meaningful.
+//!
+//! # Threading model & determinism
+//!
+//! Since PR 3 the cache-block driver is multi-core: [`gemm_strided`] runs on
+//! a small persistent worker pool ([`threads`]), sharding each `(jc, pc)`
+//! cache block across participants — the packed-B block is built
+//! cooperatively (atomic claims over its `NR`-wide panels, then a barrier
+//! makes it read-only), and `MR`-row strips of C are claimed with a second
+//! atomic counter, each computed from the claimant's *own* thread-local
+//! A-panel scratch. The thread count is selected **once at startup**
+//! (`CUBIC_THREADS=` override → config/CLI request → available
+//! parallelism); [`gemm_strided_t`] drives an explicit count for tests and
+//! benches.
+//!
+//! **Determinism:** every C element belongs to exactly one strip, a strip
+//! has exactly one writer per `(jc, pc)` block, packed panel contents are
+//! identical to the serial driver's, and the `pc` (k-block) accumulation
+//! loop stays outside the parallel region, separated by barriers — so each
+//! element sees the same floating-point op sequence in the same order
+//! regardless of thread count. Output is **bit-exact for every thread
+//! count** (pinned by `tests/kernel_threads.rs` across
+//! `CUBIC_THREADS ∈ {1, 2, 3, 4, 8}`), which is also what makes the
+//! pool-busy serial fallback safe: a caller that cannot get the pool runs
+//! the identical loop on its own core and produces identical bits.
+//!
+//! **Accounting:** participants keep local flop / packed-byte tallies,
+//! merged into the job once on completion; the driver adds the merged
+//! totals to the global counters (the flop counter in
+//! [`crate::tensor::matmul`], pack bytes in [`crate::metrics`]). The merged
+//! flop total equals the serial `2·m·n·k` exactly — concurrent gemms never
+//! under- or over-count.
 
 pub mod pack;
 pub mod reference;
 pub mod scalar;
+pub mod threads;
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 pub mod avx2;
 #[cfg(all(feature = "simd", target_arch = "aarch64"))]
 pub mod neon;
 
-use std::cell::RefCell;
 use std::sync::OnceLock;
 
 /// Microkernel tile height (rows of C held in registers).
@@ -57,7 +91,9 @@ pub const NR: usize = 8;
 /// accumulation is a single per-element chain (the parity suite relies on
 /// this when comparing kernels bit-for-bit).
 pub const KC: usize = 256;
-/// Cache-block height (m): rows of A packed per inner block.
+/// Historical cache-block height (m). The strip-based driver shards m at
+/// [`MR`] granularity instead (each strip's A micro-panel lives in L1);
+/// kept as the documented L2 sizing target for A-panel working sets.
 pub const MC: usize = 128;
 /// Cache-block width (n): columns of B packed per outer block.
 pub const NC: usize = 256;
@@ -139,12 +175,6 @@ pub fn reference_kernel() -> Kernel {
     Kernel { name: "reference-fma", mk: reference::microkernel }
 }
 
-thread_local! {
-    /// Per-thread packing scratch (A panels, B panels), reused across calls
-    /// so the steady-state matmul path performs no panel allocations.
-    static SCRATCH: RefCell<(Vec<f32>, Vec<f32>)> = const { RefCell::new((Vec::new(), Vec::new())) };
-}
-
 /// `C += A' · B'` where the logical operands are addressed through strides:
 /// `A'[i][kk] = a[i*ars + kk*aks]` (m×k) and `B'[kk][j] = b[kk*brs + j*bcs]`
 /// (k×n). C is row-major m×n. The three matmul forms are:
@@ -157,6 +187,12 @@ thread_local! {
 ///
 /// Accumulating (`+=`) rather than overwriting keeps k-blocking trivial;
 /// callers that want `C = A·B` pass a zeroed `c`.
+///
+/// Runs on the startup-selected thread count
+/// ([`threads::selected_threads`]) when the matmul is large enough to
+/// amortize the per-block barriers ([`threads::PAR_MIN_FLOPS`]); smaller
+/// calls, `CUBIC_THREADS=1`, and pool-busy contention all take the
+/// bit-identical serial loop (see the module docs on determinism).
 #[allow(clippy::too_many_arguments)]
 pub fn gemm_strided(
     kern: Kernel,
@@ -171,90 +207,46 @@ pub fn gemm_strided(
     bcs: usize,
     c: &mut [f32],
 ) {
+    let flops = 2 * (m as u64) * (n as u64) * (kdim as u64);
+    let t = if flops >= threads::PAR_MIN_FLOPS { threads::selected_threads() } else { 1 };
+    gemm_strided_t(kern, t, m, n, kdim, a, ars, aks, b, brs, bcs, c);
+}
+
+/// [`gemm_strided`] with an explicit thread count (no size threshold:
+/// `threads` participants are used whenever `threads > 1` and the pool is
+/// free, clamped only by the number of `MR`-row strips). Returns the flops
+/// this call executed, merged from the per-thread tallies — exactly
+/// `2·m·n·k`, which the concurrency battery asserts. The global flop /
+/// pack-byte counters are also advanced by the same amounts.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_strided_t(
+    kern: Kernel,
+    threads: usize,
+    m: usize,
+    n: usize,
+    kdim: usize,
+    a: &[f32],
+    ars: usize,
+    aks: usize,
+    b: &[f32],
+    brs: usize,
+    bcs: usize,
+    c: &mut [f32],
+) -> u64 {
     assert_eq!(c.len(), m * n, "gemm_strided: C buffer is {} elems, need {}", c.len(), m * n);
     if m == 0 || n == 0 || kdim == 0 {
-        return;
+        return 0;
     }
-    SCRATCH.with(|s| {
-        let scratch = &mut *s.borrow_mut();
-        let (ap_buf, bp_buf) = (&mut scratch.0, &mut scratch.1);
-        for jc in (0..n).step_by(NC) {
-            let nc = (jc + NC).min(n) - jc;
-            let nc_pad = nc.div_ceil(NR) * NR;
-            for pc in (0..kdim).step_by(KC) {
-                let kc = (pc + KC).min(kdim) - pc;
-                bp_buf.resize(kc * nc_pad, 0.0);
-                for (pi, jr) in (0..nc).step_by(NR).enumerate() {
-                    let nr_eff = NR.min(nc - jr);
-                    pack::pack_b(
-                        b,
-                        brs,
-                        bcs,
-                        pc,
-                        kc,
-                        jc + jr,
-                        nr_eff,
-                        &mut bp_buf[pi * kc * NR..(pi + 1) * kc * NR],
-                    );
-                }
-                for ic in (0..m).step_by(MC) {
-                    let mc = (ic + MC).min(m) - ic;
-                    let mc_pad = mc.div_ceil(MR) * MR;
-                    ap_buf.resize(kc * mc_pad, 0.0);
-                    for (pi, ir) in (0..mc).step_by(MR).enumerate() {
-                        let mr_eff = MR.min(mc - ir);
-                        pack::pack_a(
-                            a,
-                            ars,
-                            aks,
-                            ic + ir,
-                            mr_eff,
-                            pc,
-                            kc,
-                            &mut ap_buf[pi * kc * MR..(pi + 1) * kc * MR],
-                        );
-                    }
-                    for (bpi, jr) in (0..nc).step_by(NR).enumerate() {
-                        let nr_eff = NR.min(nc - jr);
-                        for (api, ir) in (0..mc).step_by(MR).enumerate() {
-                            let mr_eff = MR.min(mc - ir);
-                            let apan = ap_buf[api * kc * MR..(api + 1) * kc * MR].as_ptr();
-                            let bpan = bp_buf[bpi * kc * NR..(bpi + 1) * kc * NR].as_ptr();
-                            let (row, col) = (ic + ir, jc + jr);
-                            if mr_eff == MR && nr_eff == NR {
-                                // SAFETY: panels hold kc*MR / kc*NR packed
-                                // f32s (resized + fully written above); the
-                                // full-tile condition guarantees the MR×NR
-                                // window at c[row*n + col] with ldc = n is
-                                // in bounds; `kern` came from `available`,
-                                // so its ISA features are present.
-                                unsafe {
-                                    (kern.mk)(kc, apan, bpan, c.as_mut_ptr().add(row * n + col), n);
-                                }
-                            } else {
-                                // Edge tile: compute the full padded tile
-                                // into registers-backed scratch, write back
-                                // only the valid window. Zero-padded panel
-                                // lanes contribute exact zeros.
-                                let mut tile = [0.0f32; MR * NR];
-                                // SAFETY: as above; `tile` is an MR×NR
-                                // window with ldc = NR.
-                                unsafe {
-                                    (kern.mk)(kc, apan, bpan, tile.as_mut_ptr(), NR);
-                                }
-                                for (r, trow) in tile.chunks_exact(NR).take(mr_eff).enumerate() {
-                                    let crow = &mut c[(row + r) * n + col..][..nr_eff];
-                                    for (cv, &tv) in crow.iter_mut().zip(trow) {
-                                        *cv += tv;
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    });
+    let (flops, pack_bytes) =
+        threads::execute(kern, m, n, kdim, a, ars, aks, b, brs, bcs, c, threads);
+    debug_assert_eq!(
+        flops,
+        2 * (m as u64) * (n as u64) * (kdim as u64),
+        "merged per-thread flop tallies must equal the serial total"
+    );
+    super::matmul::add_flops(flops);
+    crate::metrics::add_pack_bytes(pack_bytes);
+    flops
 }
 
 #[cfg(test)]
@@ -360,6 +352,25 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn explicit_thread_counts_match_serial_bitwise_and_count_exact_flops() {
+        // Edge tiles in m and n plus k > KC (multi-k-block accumulation):
+        // the geometry where a threading bug would first break bit-parity.
+        let (m, n, k) = (65, 33, 2 * KC + 7);
+        let a = fill(11, m * k);
+        let b = fill(12, k * n);
+        let kern = *available().last().unwrap();
+        let mut base = vec![0.0f32; m * n];
+        let f1 = gemm_strided_t(kern, 1, m, n, k, &a, k, 1, &b, n, 1, &mut base);
+        assert_eq!(f1, 2 * (m * n * k) as u64, "serial tally must equal 2mnk");
+        for t in [2usize, 3, 8] {
+            let mut c = vec![0.0f32; m * n];
+            let ft = gemm_strided_t(kern, t, m, n, k, &a, k, 1, &b, n, 1, &mut c);
+            assert_eq!(ft, f1, "thread count {t} must merge to the serial flop total");
+            assert_eq!(c, base, "thread count {t} must be bit-exact vs serial");
         }
     }
 

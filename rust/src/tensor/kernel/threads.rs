@@ -1,0 +1,580 @@
+//! Multi-core GEMM driver: a small persistent worker pool plus the
+//! SPMD-style cache-block loop every participant (the calling thread and
+//! `t − 1` pool workers) executes cooperatively.
+//!
+//! ## Work decomposition
+//!
+//! For each `(jc, pc)` cache block of the [`super::gemm_strided`] loop nest:
+//!
+//! 1. **Shared B pack** — the packed-B block for `(jc, pc)` is built once
+//!    into a buffer shared by all participants; its `NR`-wide micro-panels
+//!    are claimed with an atomic counter, so packing itself is parallel and
+//!    every panel is written by exactly one thread. After a barrier the
+//!    block is read-only for the rest of the `(jc, pc)` phase.
+//! 2. **Strip claims** — participants claim disjoint `MR`-row strips of C
+//!    with a second atomic counter (work stealing degenerates to an atomic
+//!    fetch-add: idle threads keep claiming until the counter runs out, so
+//!    load imbalance self-corrects without deques). A claimant packs its
+//!    own A micro-panel into *its* thread-local scratch and sweeps the
+//!    microkernel across all B panels of the block.
+//! 3. **Barrier + reset** — one barrier ends the block (the shared packed-B
+//!    buffer may be overwritten next), the barrier leader resets both claim
+//!    counters, and a second barrier publishes the reset.
+//!
+//! ## Determinism (bit-exact for every thread count)
+//!
+//! Each output element belongs to exactly one `MR`-row strip, and a strip is
+//! computed by exactly one thread per `(jc, pc)` block from packed panels
+//! whose contents are identical to the serial driver's (same `pack_a` /
+//! `pack_b` calls, same zero padding). The `pc` (k-block) loop is *outside*
+//! the parallel claims and separated by barriers, so every element receives
+//! its `C +=` k-block contributions in the same ascending-`pc` order as the
+//! serial driver. Threads therefore only change *which core* computes a
+//! strip and *when* — never the per-element floating-point op sequence — and
+//! the output is bit-identical for every thread count, including 1. The
+//! parity battery in `tests/kernel_threads.rs` pins this across
+//! `CUBIC_THREADS ∈ {1, 2, 3, 4, 8}`.
+//!
+//! ## Accounting
+//!
+//! Every participant keeps *local* flop and packed-byte tallies and merges
+//! them into the job's atomics once, on completion; the driver then adds the
+//! merged totals to the global counters (`tensor::matmul` flops,
+//! `metrics::pack_bytes`). The merged flop total is exactly `2·m·n·k` — the
+//! serial number — which `tests/kernel_threads.rs` asserts under concurrent
+//! callers.
+//!
+//! ## Pool lifecycle
+//!
+//! Workers are spawned lazily up to `threads − 1` (the caller is always
+//! participant 0), parked on a condvar between jobs, and live for the
+//! process lifetime. One job runs at a time (`try_lock` gate); a caller that
+//! finds the pool busy — another rank's matmul, or a nested call — runs the
+//! identical loop serially, which is safe *because* of the bit-exactness
+//! guarantee. Thread count is selected once at startup: `CUBIC_THREADS=`
+//! overrides, then the config/CLI request ([`request_threads`]), then
+//! `std::thread::available_parallelism()`.
+
+use super::{pack, Kernel, KC, MR, NC, NR};
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Condvar, Mutex, OnceLock};
+
+/// Hard cap on pool size (defends against absurd `CUBIC_THREADS` values).
+pub const MAX_THREADS: usize = 64;
+
+/// Below this many flops (`2·m·n·k`) the auto path stays serial: the
+/// per-block barriers (~µs) would dominate the compute of small matmuls.
+/// Explicit [`super::gemm_strided_t`] calls bypass this (tests need to
+/// drive small shapes threaded).
+pub const PAR_MIN_FLOPS: u64 = 2 * 96 * 96 * 96;
+
+static REQUESTED: AtomicUsize = AtomicUsize::new(0);
+
+/// Request a thread count from config/CLI (0 = auto). Must run before the
+/// first matmul: [`selected_threads`] latches on first use and ignores
+/// later requests. `CUBIC_THREADS=` takes precedence over this.
+pub fn request_threads(n: usize) {
+    REQUESTED.store(n, Ordering::Relaxed);
+}
+
+/// The driver-wide thread count, selected once per process:
+/// `CUBIC_THREADS=` override, else the [`request_threads`] value, else
+/// `available_parallelism()`. Always in `1..=MAX_THREADS`.
+pub fn selected_threads() -> usize {
+    static SELECTED: OnceLock<usize> = OnceLock::new();
+    *SELECTED.get_or_init(|| {
+        let mut n = 0usize;
+        if let Ok(v) = std::env::var("CUBIC_THREADS") {
+            match v.trim().parse::<usize>() {
+                Ok(t) if t >= 1 => n = t,
+                _ => eprintln!("CUBIC_THREADS={v:?} invalid (want >= 1); using default"),
+            }
+        }
+        if n == 0 {
+            n = REQUESTED.load(Ordering::Relaxed);
+        }
+        if n == 0 {
+            n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        }
+        n.clamp(1, MAX_THREADS)
+    })
+}
+
+/// Jobs the pool actually ran multi-threaded (observability; the parity
+/// battery asserts this grows so thread coverage cannot silently vanish).
+static THREADED_JOBS: AtomicU64 = AtomicU64::new(0);
+/// Parallel-eligible calls that ran serially because the pool was busy
+/// (another rank's matmul in flight). Correctness is unaffected — the
+/// serial loop is bit-identical — this only tracks lost parallelism.
+static SERIAL_FALLBACKS: AtomicU64 = AtomicU64::new(0);
+
+pub fn threaded_jobs() -> u64 {
+    THREADED_JOBS.load(Ordering::Relaxed)
+}
+
+pub fn serial_fallbacks() -> u64 {
+    SERIAL_FALLBACKS.load(Ordering::Relaxed)
+}
+
+thread_local! {
+    /// Per-thread A-panel packing scratch (each participant packs the
+    /// strips it claims into its own panel — no sharing, no locks).
+    static A_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread B-block scratch. Only the *calling* thread's buffer is
+    /// used per job (resized up front, then shared read-mostly via raw
+    /// pointer); workers never touch their own B scratch.
+    static B_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Everything one gemm job shares between participants. Lives on the
+/// calling thread's stack for the duration of the job; workers receive it
+/// as a type-erased pointer and must not touch it after their final
+/// decrement (the caller blocks until all participants check out, then the
+/// frame dies).
+pub(super) struct GemmCtx {
+    kern: Kernel,
+    m: usize,
+    n: usize,
+    kdim: usize,
+    a: *const f32,
+    alen: usize,
+    ars: usize,
+    aks: usize,
+    b: *const f32,
+    blen: usize,
+    brs: usize,
+    bcs: usize,
+    c: *mut f32,
+    /// Shared packed-B block, capacity `>= min(KC,k) * min(NC, n_pad)`.
+    bp: *mut f32,
+    participants: usize,
+    barrier: Barrier,
+    panel_next: AtomicUsize,
+    strip_next: AtomicUsize,
+    flops: AtomicU64,
+    pack_bytes: AtomicU64,
+}
+
+// SAFETY: the raw pointers reference buffers that outlive the job (the
+// caller blocks in `ThreadPool::run` until every participant has finished),
+// and all concurrent access is to disjoint regions (disjoint B panels while
+// packing, disjoint C row strips while computing) or read-only (a, b, and
+// the packed B block after its barrier). The sync primitives are Sync.
+unsafe impl Sync for GemmCtx {}
+
+impl GemmCtx {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        kern: Kernel,
+        m: usize,
+        n: usize,
+        kdim: usize,
+        a: &[f32],
+        ars: usize,
+        aks: usize,
+        b: &[f32],
+        brs: usize,
+        bcs: usize,
+        c: *mut f32,
+        bp: *mut f32,
+        participants: usize,
+    ) -> GemmCtx {
+        GemmCtx {
+            kern,
+            m,
+            n,
+            kdim,
+            a: a.as_ptr(),
+            alen: a.len(),
+            ars,
+            aks,
+            b: b.as_ptr(),
+            blen: b.len(),
+            brs,
+            bcs,
+            c,
+            bp,
+            participants,
+            barrier: Barrier::new(participants),
+            panel_next: AtomicUsize::new(0),
+            strip_next: AtomicUsize::new(0),
+            flops: AtomicU64::new(0),
+            pack_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Phase barrier; a no-op for the single-participant (serial) path.
+    fn sync(&self) {
+        if self.participants > 1 {
+            self.barrier.wait();
+        }
+    }
+
+    /// Phase barrier that elects one participant (serial path: the caller).
+    fn sync_leader(&self) -> bool {
+        if self.participants > 1 {
+            self.barrier.wait().is_leader()
+        } else {
+            true
+        }
+    }
+
+    fn totals(&self) -> (u64, u64) {
+        (self.flops.load(Ordering::Relaxed), self.pack_bytes.load(Ordering::Relaxed))
+    }
+}
+
+/// The SPMD participant body: the full `(jc, pc)` cache-block loop with
+/// cooperative B packing and strip claims. Every participant — pool workers
+/// and the caller alike — runs exactly this.
+fn run_participant(ctx: &GemmCtx, _me: usize) {
+    let (m, n, kdim) = (ctx.m, ctx.n, ctx.kdim);
+    let kern = ctx.kern;
+    // SAFETY: a/b were live slices when the job was published and the
+    // publisher blocks until all participants finish (see GemmCtx).
+    let a = unsafe { std::slice::from_raw_parts(ctx.a, ctx.alen) };
+    let b = unsafe { std::slice::from_raw_parts(ctx.b, ctx.blen) };
+    let nstrips = m.div_ceil(MR);
+    let mut local_flops = 0u64;
+    let mut local_pack = 0u64;
+    A_SCRATCH.with(|s| {
+        let ap_buf = &mut *s.borrow_mut();
+        for jc in (0..n).step_by(NC) {
+            let nc = (jc + NC).min(n) - jc;
+            let npanels = nc.div_ceil(NR);
+            for pc in (0..kdim).step_by(KC) {
+                let kc = (pc + KC).min(kdim) - pc;
+                // Phase 1: cooperatively pack the shared B block. Claims
+                // are disjoint panels, so each region has one writer.
+                loop {
+                    let pi = ctx.panel_next.fetch_add(1, Ordering::Relaxed);
+                    if pi >= npanels {
+                        break;
+                    }
+                    let jr = pi * NR;
+                    let nr_eff = NR.min(nc - jr);
+                    // SAFETY: panel `pi` occupies bp[pi*kc*NR .. (pi+1)*kc*NR],
+                    // within the buffer (resized to >= kc * npanels*NR by the
+                    // caller before publishing); no other participant holds
+                    // this panel index.
+                    let dst = unsafe {
+                        std::slice::from_raw_parts_mut(ctx.bp.add(pi * kc * NR), kc * NR)
+                    };
+                    pack::pack_b(b, ctx.brs, ctx.bcs, pc, kc, jc + jr, nr_eff, dst);
+                    local_pack += (kc * NR * std::mem::size_of::<f32>()) as u64;
+                }
+                ctx.sync(); // B block fully packed before anyone reads it
+                // Phase 2: claim disjoint MR-row strips of C.
+                loop {
+                    let s = ctx.strip_next.fetch_add(1, Ordering::Relaxed);
+                    if s >= nstrips {
+                        break;
+                    }
+                    let ir = s * MR;
+                    let mr_eff = MR.min(m - ir);
+                    ap_buf.resize(kc * MR, 0.0);
+                    pack::pack_a(a, ctx.ars, ctx.aks, ir, mr_eff, pc, kc, ap_buf);
+                    local_pack += (kc * MR * std::mem::size_of::<f32>()) as u64;
+                    let apan = ap_buf.as_ptr();
+                    for pi in 0..npanels {
+                        let jr = pi * NR;
+                        let nr_eff = NR.min(nc - jr);
+                        let bpan = unsafe { ctx.bp.add(pi * kc * NR) } as *const f32;
+                        let (row, col) = (ir, jc + jr);
+                        if mr_eff == MR && nr_eff == NR {
+                            // SAFETY: panels hold kc*MR / kc*NR packed f32s
+                            // (fully written above; the barrier published
+                            // the B panels); the full-tile condition
+                            // guarantees the MR×NR window at c[row*n + col]
+                            // with ldc = n is in bounds and owned by this
+                            // strip; `kern` came from `available`, so its
+                            // ISA features are present.
+                            unsafe {
+                                (kern.mk)(kc, apan, bpan, ctx.c.add(row * n + col), n);
+                            }
+                        } else {
+                            // Edge tile: compute the full padded tile into
+                            // scratch, write back only the valid window.
+                            // Zero-padded panel lanes contribute exact zeros.
+                            let mut tile = [0.0f32; MR * NR];
+                            // SAFETY: as above; `tile` is an MR×NR window
+                            // with ldc = NR.
+                            unsafe {
+                                (kern.mk)(kc, apan, bpan, tile.as_mut_ptr(), NR);
+                            }
+                            for (r, trow) in tile.chunks_exact(NR).take(mr_eff).enumerate() {
+                                // SAFETY: rows row..row+mr_eff, cols
+                                // col..col+nr_eff are in bounds and owned by
+                                // this strip.
+                                let cp = unsafe { ctx.c.add((row + r) * n + col) };
+                                for (j, &tv) in trow.iter().take(nr_eff).enumerate() {
+                                    unsafe { *cp.add(j) += tv };
+                                }
+                            }
+                        }
+                        local_flops += 2 * (mr_eff * nr_eff * kc) as u64;
+                    }
+                }
+                // Phase 3: all tiles of this (jc, pc) block are written (the
+                // B buffer may be overwritten next block); the leader resets
+                // the claim counters and a second barrier publishes that.
+                if ctx.sync_leader() {
+                    ctx.panel_next.store(0, Ordering::Relaxed);
+                    ctx.strip_next.store(0, Ordering::Relaxed);
+                }
+                ctx.sync();
+            }
+        }
+    });
+    // Merge this participant's tallies exactly once, on completion.
+    ctx.flops.fetch_add(local_flops, Ordering::Relaxed);
+    ctx.pack_bytes.fetch_add(local_pack, Ordering::Relaxed);
+}
+
+/// A published job: type-erased participant entry point + context pointer.
+#[derive(Clone, Copy)]
+struct Job {
+    run: unsafe fn(*const (), usize),
+    ctx: *const (),
+    participants: usize,
+}
+
+// SAFETY: `ctx` points at a `GemmCtx` (Sync, see above) that the publisher
+// keeps alive until every participant has checked out.
+unsafe impl Send for Job {}
+
+unsafe fn run_erased(ctx: *const (), me: usize) {
+    run_participant(&*(ctx as *const GemmCtx), me);
+}
+
+struct Slot {
+    /// Bumped once per published job; workers latch it to run each job at
+    /// most once.
+    seq: u64,
+    job: Option<Job>,
+    /// Workers still inside the current job.
+    active: usize,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    start: Condvar,
+    done: Condvar,
+}
+
+/// The process-wide persistent gemm pool (never torn down; idle workers
+/// park on a condvar and cost nothing).
+pub(super) struct ThreadPool {
+    shared: Arc<Shared>,
+    /// Worker-spawn lock + count of workers spawned so far.
+    spawned: Mutex<usize>,
+    /// One job at a time; `try_lock` so contenders fall back to serial
+    /// instead of queueing (they have their own core to use).
+    gate: Mutex<()>,
+}
+
+fn worker_loop(shared: Arc<Shared>, idx: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut g = shared.slot.lock().expect("gemm pool poisoned");
+            loop {
+                if g.seq != seen {
+                    seen = g.seq;
+                    break g.job.filter(|j| idx < j.participants);
+                }
+                g = shared.start.wait(g).expect("gemm pool poisoned");
+            }
+        };
+        let Some(job) = job else { continue }; // not a participant this job
+        // SAFETY: the publisher keeps the ctx alive until `active` hits 0,
+        // which cannot happen before this decrement below.
+        //
+        // A panic must not unwind out of a pooled job: the barrier and
+        // `active` bookkeeping would wedge every other participant in a
+        // silent hang. Abort instead — loud, with the panic message already
+        // printed by the default hook.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (job.run)(job.ctx, idx)
+        }));
+        if result.is_err() {
+            eprintln!("gemm pool worker {idx} panicked mid-job; aborting");
+            std::process::abort();
+        }
+        let mut g = shared.slot.lock().expect("gemm pool poisoned");
+        g.active -= 1;
+        if g.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+impl ThreadPool {
+    fn new() -> ThreadPool {
+        ThreadPool {
+            shared: Arc::new(Shared {
+                slot: Mutex::new(Slot { seq: 0, job: None, active: 0 }),
+                start: Condvar::new(),
+                done: Condvar::new(),
+            }),
+            spawned: Mutex::new(0),
+            gate: Mutex::new(()),
+        }
+    }
+
+    /// Grow the pool to at least `want` workers (indices 1..=want).
+    fn ensure_workers(&self, want: usize) {
+        let mut spawned = self.spawned.lock().expect("gemm pool poisoned");
+        while *spawned < want {
+            *spawned += 1;
+            let idx = *spawned;
+            let shared = self.shared.clone();
+            std::thread::Builder::new()
+                .name(format!("cubic-gemm-{idx}"))
+                .spawn(move || worker_loop(shared, idx))
+                .expect("cannot spawn gemm worker");
+        }
+    }
+
+    /// Run `ctx` on `ctx.participants` threads (caller = participant 0).
+    /// Returns false — without running anything — if another job holds the
+    /// pool; the caller then runs the identical loop serially.
+    fn run(&self, ctx: &GemmCtx) -> bool {
+        let Ok(_gate) = self.gate.try_lock() else {
+            return false;
+        };
+        let helpers = ctx.participants - 1;
+        self.ensure_workers(helpers);
+        {
+            let mut g = self.shared.slot.lock().expect("gemm pool poisoned");
+            g.seq += 1;
+            g.active = helpers;
+            g.job = Some(Job {
+                run: run_erased,
+                ctx: ctx as *const GemmCtx as *const (),
+                participants: ctx.participants,
+            });
+            self.shared.start.notify_all();
+        }
+        // Same panic policy as the workers (see worker_loop): unwinding out
+        // of a pooled job while workers hold barrier/ctx references would
+        // deadlock them against a dead stack frame. Abort loudly instead.
+        // The serial path (no pool) propagates panics normally.
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_participant(ctx, 0);
+        }));
+        if caller.is_err() {
+            eprintln!("gemm pool caller panicked mid-job; aborting");
+            std::process::abort();
+        }
+        let mut g = self.shared.slot.lock().expect("gemm pool poisoned");
+        while g.active > 0 {
+            g = self.shared.done.wait(g).expect("gemm pool poisoned");
+        }
+        g.job = None;
+        true
+    }
+}
+
+fn pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(ThreadPool::new)
+}
+
+/// Drive one strided gemm with up to `threads` participants (clamped to the
+/// strip count), falling back to the bit-identical serial loop when
+/// `threads <= 1` or the pool is busy. Returns the merged per-thread
+/// `(flops, packed_bytes)` tallies.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn execute(
+    kern: Kernel,
+    m: usize,
+    n: usize,
+    kdim: usize,
+    a: &[f32],
+    ars: usize,
+    aks: usize,
+    b: &[f32],
+    brs: usize,
+    bcs: usize,
+    c: &mut [f32],
+    threads: usize,
+) -> (u64, u64) {
+    let want = threads.clamp(1, MAX_THREADS).min(m.div_ceil(MR));
+    B_SCRATCH.with(|s| {
+        let bp_buf = &mut *s.borrow_mut();
+        // One resize covers every (jc, pc) block of this job; the
+        // thread-local keeps its capacity, so steady state allocates 0.
+        let max_kc = KC.min(kdim);
+        let max_ncpad = NC.min(n.div_ceil(NR) * NR);
+        bp_buf.resize(max_kc * max_ncpad, 0.0);
+        let cp = c.as_mut_ptr();
+        let bpp = bp_buf.as_mut_ptr();
+        if want > 1 {
+            let ctx = GemmCtx::new(kern, m, n, kdim, a, ars, aks, b, brs, bcs, cp, bpp, want);
+            if pool().run(&ctx) {
+                THREADED_JOBS.fetch_add(1, Ordering::Relaxed);
+                return ctx.totals();
+            }
+            SERIAL_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+        }
+        let ctx = GemmCtx::new(kern, m, n, kdim, a, ars, aks, b, brs, bcs, cp, bpp, 1);
+        run_participant(&ctx, 0);
+        ctx.totals()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selected_threads_is_in_range() {
+        let t = selected_threads();
+        assert!((1..=MAX_THREADS).contains(&t), "selected {t}");
+    }
+
+    #[test]
+    fn request_after_selection_is_ignored() {
+        let before = selected_threads();
+        request_threads(MAX_THREADS + 100);
+        assert_eq!(selected_threads(), before, "selection must latch once");
+    }
+
+    #[test]
+    fn pool_busy_falls_back_without_running() {
+        // Acquire the gate ourselves (bounded retry: concurrent tests hold
+        // it only for the duration of one gemm), then verify run() refuses
+        // immediately instead of queueing or touching the job.
+        let p = pool();
+        let mut held = None;
+        for _ in 0..1000 {
+            if let Ok(g) = p.gate.try_lock() {
+                held = Some(g);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let _gate = held.expect("could not acquire the gemm pool gate in 1s");
+        let a = vec![1.0f32; 8 * 8];
+        let b = vec![1.0f32; 8 * 8];
+        let mut c = vec![0.0f32; 8 * 8];
+        let ctx = GemmCtx::new(
+            crate::tensor::kernel::selected(),
+            8,
+            8,
+            8,
+            &a,
+            8,
+            1,
+            &b,
+            8,
+            1,
+            c.as_mut_ptr(),
+            std::ptr::null_mut(),
+            2,
+        );
+        assert!(!p.run(&ctx), "run must refuse while the gate is held");
+    }
+}

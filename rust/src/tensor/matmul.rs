@@ -10,8 +10,9 @@
 //!   aarch64, portable scalar fallback) selected **once at startup** by
 //!   runtime CPU-feature detection — see `kernel::selected`;
 //! * operands packed into microkernel-aligned micro-panels per cache block
-//!   (`KC`/`MC`/`NC` tiling), so nn / nt / tn differ only in pack strides:
-//!   the inner loop never sees a transpose;
+//!   (`KC`/`NC` blocking, `MR`-row strips — the strips are also the unit of
+//!   multi-core work sharing since PR 3), so nn / nt / tn differ only in
+//!   pack strides: the inner loop never sees a transpose;
 //! * edge tiles (m, n remainders) computed against zero-padded panels and
 //!   written back through a masked copy — every (m, n, k) ≥ 1 is legal and
 //!   verified bit-for-bit against a reference kernel by
@@ -21,7 +22,13 @@
 //! global flop counter (2·M·N·K per call, read by the metrics layer) and
 //! the phantom short-circuit — phantom inputs return a phantom output of
 //! the correct shape *after* shape checking, so the simulated benches
-//! exercise the same contract the numeric path does.
+//! exercise the same contract the numeric path does. Since the PR-3
+//! multi-core driver, the counter is fed by the *driver* (`kernel`):
+//! each participating thread tallies the tiles it computed and the merged
+//! total — exactly 2·M·N·K — lands here once per call, so concurrent
+//! threaded gemms report the same flops the serial driver would
+//! (`tests/kernel_threads.rs` pins the exactness). Phantom matmuls still
+//! never touch the counter.
 //!
 //! Measured throughput lives in `BENCH_PR2.json` (per-kernel GF/s on the
 //! 256³ microbench plus the scalar-vs-SIMD ratio); design details and the
@@ -31,9 +38,12 @@ use super::kernel;
 use super::Tensor;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Global flop counter (2·M·N·K per matmul). The metrics layer reads and
-/// resets this around timed regions; relaxed ordering is fine for a counter.
-/// The companion bytes-cloned counter lives in [`crate::metrics`].
+/// Global flop counter (2·M·N·K per matmul), advanced by the kernel driver
+/// with each call's merged per-thread tally (atomic add, so concurrent
+/// gemms — whether from SPMD rank threads or the gemm pool — never lose
+/// counts). The metrics layer reads and resets this around timed regions;
+/// relaxed ordering is fine for a counter. The companion bytes-cloned
+/// counter lives in [`crate::metrics`].
 static FLOPS: AtomicU64 = AtomicU64::new(0);
 
 pub fn flops_executed() -> u64 {
@@ -44,8 +54,10 @@ pub fn reset_flops() {
     FLOPS.store(0, Ordering::Relaxed);
 }
 
-fn count(m: usize, n: usize, k: usize) {
-    FLOPS.fetch_add(2 * (m as u64) * (n as u64) * (k as u64), Ordering::Relaxed);
+/// Credit one gemm's merged flop tally (called by `kernel::gemm_strided_t`
+/// after the per-thread counters are joined).
+pub(crate) fn add_flops(flops: u64) {
+    FLOPS.fetch_add(flops, Ordering::Relaxed);
 }
 
 /// `C = A · B` for A:(m,k), B:(k,n): both operands row-major, unit column
@@ -57,7 +69,6 @@ pub fn matmul_nn(a: &Tensor, b: &Tensor) -> Tensor {
     let (Some(ad), Some(bd)) = (a.try_data(), b.try_data()) else {
         return Tensor::phantom(&[m, n]);
     };
-    count(m, n, ka);
     let mut c = vec![0.0f32; m * n];
     kernel::gemm_strided(kernel::selected(), m, n, ka, ad, ka, 1, bd, n, 1, &mut c);
     Tensor::from_vec(&[m, n], c)
@@ -73,7 +84,6 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     let (Some(ad), Some(bd)) = (a.try_data(), b.try_data()) else {
         return Tensor::phantom(&[m, n]);
     };
-    count(m, n, ka);
     let mut c = vec![0.0f32; m * n];
     kernel::gemm_strided(kernel::selected(), m, n, ka, ad, ka, 1, bd, 1, ka, &mut c);
     Tensor::from_vec(&[m, n], c)
@@ -88,7 +98,6 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
     let (Some(ad), Some(bd)) = (a.try_data(), b.try_data()) else {
         return Tensor::phantom(&[m, n]);
     };
-    count(m, n, ka);
     let mut c = vec![0.0f32; m * n];
     kernel::gemm_strided(kernel::selected(), m, n, ka, ad, 1, m, bd, n, 1, &mut c);
     Tensor::from_vec(&[m, n], c)
@@ -227,6 +236,36 @@ mod tests {
         let a = Tensor::phantom(&[4, 6]);
         let b = Tensor::phantom(&[7, 5]);
         let _ = matmul_nn(&a, &b);
+    }
+
+    #[test]
+    fn concurrent_matmuls_never_lose_flop_counts() {
+        // Rank-style threads all matmul'ing at once: each call's merged
+        // per-thread tally lands atomically, so the delta is at least the
+        // sum of the four exact totals (other tests in this process can
+        // only add more, never subtract). The shape is large enough to
+        // engage the threaded driver; contention for the gemm pool makes
+        // some callers take the serial fallback — both paths must count
+        // identically. The bit-level exactness (each call returning
+        // precisely 2mnk) is pinned in tests/kernel_threads.rs where the
+        // per-call tallies are observable.
+        let before = flops_executed();
+        let handles: Vec<_> = (0..4u64)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    // 2·128³ ≈ 4.2M flops — above kernel::threads::
+                    // PAR_MIN_FLOPS, so the auto path genuinely goes
+                    // through the pool (not the serial short-circuit).
+                    let a = randt(&[128, 128], 50 + t);
+                    let b = randt(&[128, 128], 60 + t);
+                    let _ = matmul_nn(&a, &b);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(flops_executed() - before >= 4 * 2 * 128 * 128 * 128);
     }
 
     #[test]
