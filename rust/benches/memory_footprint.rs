@@ -10,7 +10,7 @@
 
 use cubic::config::ModelConfig;
 use cubic::metrics::{fmt_bytes, Table};
-use cubic::model::{local_activation_shape, phantom_block, ParEnv};
+use cubic::model::ParEnv;
 use cubic::topology::Parallelism;
 
 fn main() {
@@ -20,9 +20,9 @@ fn main() {
         "Approach", "# GPUs", "weights/rank", "activations/rank", "total/rank", "x Seq",
     ]);
     let seq_total = {
-        let env = ParEnv::Seq;
-        let w = phantom_block(&env, &cfg, 0).numel() * 4;
-        let (r, c) = local_activation_shape(&env, rows, cfg.hidden);
+        let env = ParEnv::seq();
+        let w = env.phantom_block(&cfg).numel() * 4;
+        let (r, c) = env.activation_shape(rows, cfg.hidden);
         (w + r * c * 4) as f64
     };
     let cases = [
@@ -40,8 +40,8 @@ fn main() {
         let mut a_max = 0usize;
         for rank in 0..world {
             let env = ParEnv::new(par, edge, rank);
-            let w = phantom_block(&env, &cfg, rank).numel() * 4;
-            let (r, c) = local_activation_shape(&env, rows, cfg.hidden);
+            let w = env.phantom_block(&cfg).numel() * 4;
+            let (r, c) = env.activation_shape(rows, cfg.hidden);
             w_max = w_max.max(w);
             a_max = a_max.max(r * c * 4);
         }

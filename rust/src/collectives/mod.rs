@@ -461,8 +461,49 @@ pub fn reduce_bw(
     }
     let contrib = flat_chunks(ep, t, g);
     let mine = reduce_scatter(ep, group, contrib);
-    let parts = gather(ep, group, root_pos, &mine)?;
-    Some(assemble_chunks_pooled(ep, &parts, t.shape(), t.numel()))
+    gather_tensor(ep, group, root_pos, &mine, t.shape())
+}
+
+/// Gather equal flat chunks (one per rank, zero-padded tails allowed) to
+/// the root and reassemble them into a tensor of `shape` — the
+/// pooled-assembly form of [`gather`]: the root's output comes from its
+/// recycling pool (`assemble_chunks_pooled`), so a steady-state caller
+/// allocates nothing. Returns `Some(tensor)` at the root, `None`
+/// elsewhere. Used by [`reduce_bw`]'s root assembly and as the control-path
+/// gather for checkpoint-style global reassembly.
+pub fn gather_tensor(
+    ep: &mut Endpoint,
+    group: &[usize],
+    root_pos: usize,
+    mine: &Tensor,
+    shape: &[usize],
+) -> Option<Tensor> {
+    let n: usize = shape.iter().product();
+    let parts = gather(ep, group, root_pos, mine)?;
+    Some(assemble_chunks_pooled(ep, &parts, shape, n))
+}
+
+/// Scatter one tensor from the root as `g` equal flat chunks
+/// (`ceil(n/g)` elements each, zero-padded tail) — the pooled form of
+/// [`scatter`]: the root chunks through `flat_chunks`, so aligned
+/// payloads ship zero-copy views and misaligned payloads ship recycled
+/// pool buffers; receivers get handles. Every rank returns its chunk
+/// (the root keeps `chunks[root_pos]` without sending it anywhere).
+pub fn scatter_tensor(
+    ep: &mut Endpoint,
+    group: &[usize],
+    root_pos: usize,
+    t: Option<&Tensor>,
+    shape: &[usize],
+) -> Tensor {
+    let g = group.len();
+    // Chunking is the only scatter_tensor-specific work; the collective
+    // protocol itself is [`scatter`]'s, so the two cannot drift.
+    let parts = t.map(|t| {
+        assert_eq!(t.shape(), shape, "scatter_tensor shape mismatch");
+        flat_chunks(ep, t, g)
+    });
+    scatter(ep, group, root_pos, parts)
 }
 
 /// Reassemble like [`assemble_chunks`], but into a recycled pool buffer —
@@ -891,6 +932,91 @@ mod tests {
             assert_eq!(*misses, 0, "rank {rank}: reduce_bw must recycle after warmup");
             let expect = if rank == root { 2 * iters } else { iters };
             assert_eq!(*hits, expect, "rank {rank}: accumulator (+ root assembly) per call");
+        }
+    }
+
+    #[test]
+    fn gather_tensor_matches_gather_and_recycles_root_assembly() {
+        // ROADMAP pool follow-on: gather now assembles through
+        // assemble_chunks_pooled. Correctness: the root's assembled tensor
+        // equals the concatenation of everyone's chunks. Steady state: after
+        // one warmup, the root takes exactly one pooled buffer per call
+        // (the assembly) and misses zero; non-roots never touch the pool.
+        let g = 4usize;
+        let chunk = 16usize;
+        let root = 1usize;
+        let iters = 5u64;
+        let out = run_spmd(g, NetModel::zero(), move |rank, ep| {
+            let group: Vec<usize> = (0..g).collect();
+            let mine = Tensor::full(&[chunk], rank as f32);
+            let shape = [g * chunk];
+            let run_one = |ep: &mut crate::comm::Endpoint| {
+                let r = gather_tensor(ep, &group, root, &mine, &shape);
+                if rank == root {
+                    let r = r.as_ref().unwrap();
+                    for k in 0..g {
+                        assert_eq!(r.data()[k * chunk], k as f32, "chunk {k} misplaced");
+                    }
+                } else {
+                    assert!(r.is_none());
+                }
+                drop(r);
+                ep.barrier_wait();
+            };
+            run_one(ep); // warmup allocates the root assembly once
+            let (h0, m0) = (ep.stats.pool_hits, ep.stats.pool_misses);
+            for _ in 0..iters {
+                run_one(ep);
+            }
+            (ep.stats.pool_hits - h0, ep.stats.pool_misses - m0)
+        });
+        for (rank, (hits, misses)) in out.iter().enumerate() {
+            assert_eq!(*misses, 0, "rank {rank}: gather_tensor must recycle after warmup");
+            let expect = if rank == root { iters } else { 0 };
+            assert_eq!(*hits, expect, "rank {rank}: one pooled assembly per call at the root");
+        }
+    }
+
+    #[test]
+    fn scatter_tensor_round_trips_and_misaligned_chunks_recycle() {
+        // Aligned: every rank's chunk is a zero-copy view of the root's
+        // payload (no pool traffic at all). Misaligned: the root's padded
+        // chunks come from its pool — zero misses after warmup.
+        let g = 3usize;
+        let iters = 5u64;
+        let out = run_spmd(g, NetModel::zero(), move |rank, ep| {
+            let group: Vec<usize> = (0..g).collect();
+            // Aligned round trip (n = 12, chunk 4).
+            let t = (rank == 0)
+                .then(|| Tensor::from_vec(&[12], (0..12).map(|i| i as f32).collect()));
+            let chunk = scatter_tensor(ep, &group, 0, t.as_ref(), &[12]);
+            assert_eq!(chunk.numel(), 4);
+            assert_eq!(chunk.data()[0], (rank * 4) as f32);
+            drop(chunk);
+            ep.barrier_wait();
+            // Misaligned steady state (n = 7, chunk 3, padded).
+            let t7 = (rank == 0).then(|| Tensor::from_vec(&[7], vec![2.5; 7]));
+            let run_one = |ep: &mut crate::comm::Endpoint| {
+                let c = scatter_tensor(ep, &group, 0, t7.as_ref(), &[7]);
+                assert_eq!(c.numel(), 3);
+                if rank < 2 {
+                    assert_eq!(c.data()[0], 2.5);
+                } else {
+                    // Last chunk: one valid element + two pad zeros.
+                    assert_eq!(c.data(), &[2.5, 0.0, 0.0]);
+                }
+                drop(c);
+                ep.barrier_wait();
+            };
+            run_one(ep); // warmup allocates the root's padded chunks once
+            let m0 = ep.stats.pool_misses;
+            for _ in 0..iters {
+                run_one(ep);
+            }
+            ep.stats.pool_misses - m0
+        });
+        for (rank, misses) in out.iter().enumerate() {
+            assert_eq!(*misses, 0, "rank {rank}: padded scatter chunks must recycle");
         }
     }
 

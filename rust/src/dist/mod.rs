@@ -52,9 +52,29 @@
 //! That placement makes Algorithm 7's broadcast (along `a`, rooted at the
 //! diagonal) + all-gather (along `b`) deliver exactly the column-block
 //! slice each activation shard needs.
+//!
+//! ## The unified layout algebra: [`ShardSpec`] and [`DistTensor`]
+//!
+//! The per-dimension layouts above are *points*; [`ShardSpec`] is the
+//! spectrum. One spec = one device mesh shape ([`MeshSpec`]: a point, a
+//! `P`-line, a `q × q` grid, or a `p³` cube with block-entry directions)
+//! plus this rank's position, and it answers every placement question the
+//! model has — which shard of a weight this rank owns
+//! ([`ShardSpec::shard_weight`], keyed by the layer's [`Stage`]), which
+//! chunk of a bias/γ/β vector ([`ShardSpec::shard_vector`], keyed by
+//! [`VecRole`]), which window of a global activation
+//! ([`ShardSpec::shard_activation`]), and how to reassemble any of them
+//! from all ranks' shards (`assemble_*`). [`DistTensor`] pairs one rank's
+//! local shard with its spec so shards can travel with their layout.
+//!
+//! Everything here stays pure placement algebra: no communication. The
+//! communicating counterparts live behind
+//! [`crate::parallel::ParallelOps`], which is written *against* this
+//! module — a new parallelism is a new `MeshSpec` arm plus a new
+//! `ParallelOps` impl, never a new copy of the model.
 
 use crate::tensor::Tensor;
-use crate::topology::{Axis, Coord, Cube, Mesh};
+use crate::topology::{Axis, Coord, Cube, Mesh, Parallelism};
 
 // ---------------------------------------------------------------------
 // Direction triples
@@ -204,11 +224,29 @@ impl Layout3D {
     /// Reassemble the global `(rows, cols)` matrix from shards in rank
     /// order. Any phantom shard makes the result phantom.
     pub fn gather(&self, cube: &Cube, shards: &[Tensor], rows: usize, cols: usize) -> Tensor {
-        assert_eq!(shards.len(), cube.size(), "need one shard per rank");
         if shards.iter().any(|s| s.is_phantom()) {
+            assert_eq!(shards.len(), cube.size(), "need one shard per rank");
             return Tensor::phantom(&[rows, cols]);
         }
         let mut out = Tensor::zeros(&[rows, cols]);
+        self.gather_into(cube, shards, rows, cols, &mut out);
+        out
+    }
+
+    /// [`Layout3D::gather`] into a caller-supplied `(rows, cols)` buffer —
+    /// the hook that lets hot-loop assembly (activation gathers) reuse a
+    /// recycled pool buffer instead of a fresh allocation. All shards must
+    /// be materialized.
+    pub fn gather_into(
+        &self,
+        cube: &Cube,
+        shards: &[Tensor],
+        rows: usize,
+        cols: usize,
+        out: &mut Tensor,
+    ) {
+        assert_eq!(shards.len(), cube.size(), "need one shard per rank");
+        assert_eq!(out.shape(), &[rows, cols], "gather_into output shape mismatch");
         for (rank, shard) in shards.iter().enumerate() {
             let coord = cube.coord_of(rank);
             let (r0, c0, sr, sc) = self.shard_bounds(cube, coord, rows, cols);
@@ -220,7 +258,6 @@ impl Layout3D {
             );
             out.set_block(r0, c0, shard);
         }
-        out
     }
 }
 
@@ -375,21 +412,440 @@ impl Layout2D {
     /// Reassemble the global `(rows, cols)` matrix from blocks in rank
     /// order. Any phantom block makes the result phantom.
     pub fn gather(mesh: &Mesh, parts: &[Tensor], rows: usize, cols: usize) -> Tensor {
-        assert_eq!(parts.len(), mesh.size(), "need one block per rank");
         if parts.iter().any(|p| p.is_phantom()) {
+            assert_eq!(parts.len(), mesh.size(), "need one block per rank");
             return Tensor::phantom(&[rows, cols]);
         }
+        let mut out = Tensor::zeros(&[rows, cols]);
+        Self::gather_into(mesh, parts, rows, cols, &mut out);
+        out
+    }
+
+    /// [`Layout2D::gather`] into a caller-supplied `(rows, cols)` buffer
+    /// (see [`Layout3D::gather_into`]). All blocks must be materialized.
+    pub fn gather_into(
+        mesh: &Mesh,
+        parts: &[Tensor],
+        rows: usize,
+        cols: usize,
+        out: &mut Tensor,
+    ) {
+        assert_eq!(parts.len(), mesh.size(), "need one block per rank");
+        assert_eq!(out.shape(), &[rows, cols], "gather_into output shape mismatch");
         let q = mesh.edge();
         assert_eq!(rows % q, 0);
         assert_eq!(cols % q, 0);
         let (br, bc) = (rows / q, cols / q);
-        let mut out = Tensor::zeros(&[rows, cols]);
         for (rank, part) in parts.iter().enumerate() {
             let (row, col) = mesh.coord_of(rank);
             assert_eq!(part.shape(), &[br, bc], "rank {rank} block shape mismatch");
             out.set_block(row * br, col * bc, part);
         }
-        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// The unified layout algebra: ShardSpec + DistTensor
+// ---------------------------------------------------------------------
+
+/// Which linear of a residual branch a weight belongs to. The transformer
+/// block has exactly two linears per branch (QKV→proj, fc1→fc2); every
+/// parallelism exploits that pairing:
+///
+/// * 1-D: `Expand` weights are column-sharded (no forward comm), `Reduce`
+///   weights row-sharded (one all-reduce) — the Megatron pattern;
+/// * 3-D: `Expand` runs under the block-entry directions `d0`, `Reduce`
+///   under `d0.swapped()`, returning the activation to its entry layout
+///   (§3.2's direction flip);
+/// * Seq and 2-D treat both stages identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// First linear of a branch (hidden → wider): `w_qkv`, `w_fc1`.
+    Expand,
+    /// Second linear of a branch (back to hidden): `w_proj`, `w_fc2`.
+    Reduce,
+}
+
+/// Which kind of per-column vector a parameter is — determines its owner
+/// set and chunking under each mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VecRole {
+    /// Bias of an `Expand` linear (`b_qkv`, `b_fc1`): lives where that
+    /// layer's *output* lives (1-D: column chunks; 3-D: diagonal of
+    /// `d0.swapped()`).
+    ExpandBias,
+    /// Bias of a `Reduce` linear (`b_proj`, `b_fc2`): output is in the
+    /// block-entry layout (1-D: replicated; 3-D: diagonal of `d0`).
+    ReduceBias,
+    /// Layernorm γ/β: applied to block-entry-layout activations (same
+    /// placement as `ReduceBias`; 2-D keeps all vectors on mesh row 0).
+    Norm,
+}
+
+/// The device-mesh shape of one parallelism point. `Cube` carries the
+/// block-entry direction triple `d0`.
+#[derive(Clone, Debug)]
+pub enum MeshSpec {
+    /// Single device (the dense `Seq` reference).
+    Point,
+    /// `P`-rank line (1-D Megatron).
+    Line(usize),
+    /// `q × q` mesh (2-D Optimus/SUMMA).
+    Grid(Mesh),
+    /// `p³` cube with block-entry directions (the paper's 3-D).
+    Cube(Cube, Dirs),
+}
+
+/// One rank's complete layout knowledge: the mesh and its position on it.
+/// This is the generalization of `Layout1D/2D/3D/DiagVec3D` the model is
+/// written against — every shard/assemble question for weights, vectors
+/// and activations is answered here, so adding a parallelism never forks
+/// the model code.
+#[derive(Clone, Debug)]
+pub struct ShardSpec {
+    pub mesh: MeshSpec,
+    pub rank: usize,
+}
+
+impl ShardSpec {
+    pub fn seq() -> ShardSpec {
+        ShardSpec { mesh: MeshSpec::Point, rank: 0 }
+    }
+
+    pub fn oned(world: usize, rank: usize) -> ShardSpec {
+        assert!(rank < world);
+        ShardSpec { mesh: MeshSpec::Line(world), rank }
+    }
+
+    pub fn twod(q: usize, rank: usize) -> ShardSpec {
+        let mesh = Mesh::new(q);
+        assert!(rank < mesh.size());
+        ShardSpec { mesh: MeshSpec::Grid(mesh), rank }
+    }
+
+    /// 3-D spec under the canonical block-entry directions.
+    pub fn threed(p: usize, rank: usize) -> ShardSpec {
+        Self::threed_with_dirs(p, rank, Dirs::canonical())
+    }
+
+    pub fn threed_with_dirs(p: usize, rank: usize, d0: Dirs) -> ShardSpec {
+        d0.assert_distinct();
+        let cube = Cube::new(p);
+        assert!(rank < cube.size());
+        ShardSpec { mesh: MeshSpec::Cube(cube, d0), rank }
+    }
+
+    /// Spec for `rank` of the given parallelism/edge (the constructor the
+    /// dispatcher uses).
+    pub fn for_parallelism(par: Parallelism, edge: usize, rank: usize) -> ShardSpec {
+        match par {
+            Parallelism::Seq => Self::seq(),
+            Parallelism::OneD => Self::oned(edge, rank),
+            Parallelism::TwoD => Self::twod(edge, rank),
+            Parallelism::ThreeD => Self::threed(edge, rank),
+        }
+    }
+
+    pub fn kind(&self) -> Parallelism {
+        match &self.mesh {
+            MeshSpec::Point => Parallelism::Seq,
+            MeshSpec::Line(_) => Parallelism::OneD,
+            MeshSpec::Grid(_) => Parallelism::TwoD,
+            MeshSpec::Cube(..) => Parallelism::ThreeD,
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        match &self.mesh {
+            MeshSpec::Point => 1,
+            MeshSpec::Line(p) => *p,
+            MeshSpec::Grid(mesh) => mesh.size(),
+            MeshSpec::Cube(cube, _) => cube.size(),
+        }
+    }
+
+    /// Attention heads one rank computes locally: the mesh's head split
+    /// (1-D shards heads `P` ways even though activations stay replicated;
+    /// 2-D/3-D shard them by the mesh edge through the column split).
+    pub fn local_heads(&self, heads: usize) -> usize {
+        match &self.mesh {
+            MeshSpec::Point => heads,
+            MeshSpec::Line(p) => heads / p,
+            MeshSpec::Grid(mesh) => heads / mesh.edge(),
+            MeshSpec::Cube(cube, _) => heads / cube.edge(),
+        }
+    }
+
+    /// Does this mesh shard activations? (`false` = replicated: Seq, 1-D.)
+    pub fn shards_activation(&self) -> bool {
+        matches!(&self.mesh, MeshSpec::Grid(_) | MeshSpec::Cube(..))
+    }
+
+    /// Shape of this rank's shard of a global `(rows, cols)` activation.
+    pub fn activation_shape(&self, rows: usize, cols: usize) -> (usize, usize) {
+        match &self.mesh {
+            MeshSpec::Point | MeshSpec::Line(_) => (rows, cols),
+            MeshSpec::Grid(mesh) => {
+                let q = mesh.edge();
+                (rows / q, cols / q)
+            }
+            MeshSpec::Cube(cube, _) => {
+                let p = cube.edge();
+                (rows / (p * p), cols / p)
+            }
+        }
+    }
+
+    /// `(r0, c0, shard_rows, shard_cols)` of this rank's activation window
+    /// in the global `(rows, cols)` matrix. Panics for replicated meshes
+    /// (there is no window — the whole matrix is local).
+    pub fn activation_bounds(&self, rows: usize, cols: usize) -> (usize, usize, usize, usize) {
+        match &self.mesh {
+            MeshSpec::Point | MeshSpec::Line(_) => {
+                panic!("replicated activations have no shard window")
+            }
+            MeshSpec::Grid(mesh) => {
+                let q = mesh.edge();
+                assert_eq!(rows % q, 0);
+                assert_eq!(cols % q, 0);
+                let (row, col) = mesh.coord_of(self.rank);
+                let (sr, sc) = (rows / q, cols / q);
+                (row * sr, col * sc, sr, sc)
+            }
+            MeshSpec::Cube(cube, d0) => Layout3D::input(*d0).shard_bounds(
+                cube,
+                cube.coord_of(self.rank),
+                rows,
+                cols,
+            ),
+        }
+    }
+
+    /// This rank's shard of a global activation (compacted; replicated
+    /// meshes return a handle on the global).
+    pub fn shard_activation(&self, global: &Tensor) -> Tensor {
+        if !self.shards_activation() {
+            return global.clone();
+        }
+        let (rows, cols) = global.dims2();
+        let (r0, c0, sr, sc) = self.activation_bounds(rows, cols);
+        global.block(r0, c0, sr, sc).compact()
+    }
+
+    /// Reassemble the global `(rows, cols)` activation from all ranks'
+    /// shards in rank order (replicated meshes: the shards *are* the
+    /// global — returns shard 0).
+    pub fn assemble_activation(&self, parts: &[Tensor], rows: usize, cols: usize) -> Tensor {
+        match &self.mesh {
+            MeshSpec::Point | MeshSpec::Line(_) => parts[0].clone(),
+            MeshSpec::Grid(mesh) => Layout2D::gather(mesh, parts, rows, cols),
+            MeshSpec::Cube(cube, d0) => {
+                Layout3D::input(*d0).gather(cube, parts, rows, cols)
+            }
+        }
+    }
+
+    /// [`ShardSpec::assemble_activation`] into a caller-supplied buffer —
+    /// the pooled-assembly hook of the activation gather. Sharding meshes
+    /// only; all parts must be materialized.
+    pub fn assemble_activation_into(
+        &self,
+        parts: &[Tensor],
+        rows: usize,
+        cols: usize,
+        out: &mut Tensor,
+    ) {
+        match &self.mesh {
+            MeshSpec::Point | MeshSpec::Line(_) => {
+                panic!("replicated activations need no assembly")
+            }
+            MeshSpec::Grid(mesh) => Layout2D::gather_into(mesh, parts, rows, cols, out),
+            MeshSpec::Cube(cube, d0) => {
+                Layout3D::input(*d0).gather_into(cube, parts, rows, cols, out)
+            }
+        }
+    }
+
+    /// The 3-D direction triple a `stage` weight runs under (`None` off
+    /// the cube).
+    pub fn stage_dirs(&self, stage: Stage) -> Option<Dirs> {
+        match &self.mesh {
+            MeshSpec::Cube(_, d0) => Some(match stage {
+                Stage::Expand => *d0,
+                Stage::Reduce => d0.swapped(),
+            }),
+            _ => None,
+        }
+    }
+
+    /// This rank's shard of a global `stage` weight.
+    pub fn shard_weight(&self, stage: Stage, w: &Tensor) -> Tensor {
+        match &self.mesh {
+            MeshSpec::Point => w.clone(),
+            MeshSpec::Line(p) => match stage {
+                Stage::Expand => Layout1D::ColShard.shard_of(*p, self.rank, w),
+                Stage::Reduce => Layout1D::RowShard.shard_of(*p, self.rank, w),
+            },
+            MeshSpec::Grid(mesh) => Layout2D::shard_of(mesh, self.rank, w),
+            MeshSpec::Cube(cube, _) => {
+                let dirs = self.stage_dirs(stage).unwrap();
+                Layout3D::weight(dirs).shard_of(cube, cube.coord_of(self.rank), w)
+            }
+        }
+    }
+
+    /// Reassemble a global `(rows, cols)` `stage` weight from all ranks'
+    /// shards in rank order.
+    pub fn assemble_weight(
+        &self,
+        stage: Stage,
+        parts: &[Tensor],
+        rows: usize,
+        cols: usize,
+    ) -> Tensor {
+        match &self.mesh {
+            MeshSpec::Point => parts[0].clone(),
+            MeshSpec::Line(_) => match stage {
+                Stage::Expand => Layout1D::ColShard.gather(parts),
+                Stage::Reduce => Layout1D::RowShard.gather(parts),
+            },
+            MeshSpec::Grid(mesh) => Layout2D::gather(mesh, parts, rows, cols),
+            MeshSpec::Cube(cube, _) => {
+                let dirs = self.stage_dirs(stage).unwrap();
+                Layout3D::weight(dirs).gather(cube, parts, rows, cols)
+            }
+        }
+    }
+
+    /// Does this rank own a chunk of a `role` vector?
+    /// ([`ShardSpec::shard_vector`] returns `Some` exactly when this is
+    /// true: everywhere on Seq/1-D, mesh row 0 on 2-D, the role's
+    /// direction diagonal on 3-D.)
+    pub fn owns_vector(&self, role: VecRole) -> bool {
+        match &self.mesh {
+            MeshSpec::Point | MeshSpec::Line(_) => true,
+            MeshSpec::Grid(mesh) => mesh.coord_of(self.rank).0 == 0,
+            MeshSpec::Cube(cube, _) => {
+                DiagVec3D::for_dirs(self.vec_dirs(role)).owns(cube.coord_of(self.rank))
+            }
+        }
+    }
+
+    /// This rank's chunk of a `role` vector (`None` when this rank owns no
+    /// chunk: off mesh row 0 in 2-D, off the diagonal in 3-D).
+    pub fn shard_vector(&self, role: VecRole, v: &Tensor) -> Option<Tensor> {
+        let n = v.numel();
+        match &self.mesh {
+            MeshSpec::Point => Some(v.clone()),
+            MeshSpec::Line(p) => match role {
+                // Expand-linear outputs are column-sharded → so is the
+                // bias; one row-vector column shard via the same Layout1D
+                // the weights use.
+                VecRole::ExpandBias => Some(
+                    Layout1D::ColShard
+                        .shard_of(*p, self.rank, &v.reshape(&[1, n]))
+                        .into_reshape(&[n / p]),
+                ),
+                // Entry-layout activations are replicated → full vectors.
+                VecRole::ReduceBias | VecRole::Norm => Some(v.clone()),
+            },
+            MeshSpec::Grid(mesh) => {
+                let q = mesh.edge();
+                let (row, col) = mesh.coord_of(self.rank);
+                (row == 0).then(|| {
+                    assert_eq!(n % q, 0, "vector len {n} not divisible by q = {q}");
+                    v.reshape(&[1, n])
+                        .block(0, col * (n / q), 1, n / q)
+                        .into_reshape(&[n / q])
+                        .compact()
+                })
+            }
+            MeshSpec::Cube(cube, _) => {
+                let diag = DiagVec3D::for_dirs(self.vec_dirs(role));
+                diag.shard_of(cube, cube.coord_of(self.rank), v)
+            }
+        }
+    }
+
+    /// Reassemble a length-`n` `role` vector from all ranks' chunks in
+    /// rank order (`None` entries = non-owners).
+    pub fn assemble_vector(&self, role: VecRole, parts: &[Option<Tensor>], n: usize) -> Tensor {
+        match &self.mesh {
+            MeshSpec::Point => parts[0].clone().expect("Seq rank owns every vector"),
+            MeshSpec::Line(p) => match role {
+                VecRole::ExpandBias => {
+                    let chunks: Vec<Tensor> = parts
+                        .iter()
+                        .map(|c| {
+                            c.clone().expect("1-D rank owns its bias chunk").reshape(&[1, n / p])
+                        })
+                        .collect();
+                    Tensor::concat_cols(&chunks).into_reshape(&[n])
+                }
+                VecRole::ReduceBias | VecRole::Norm => {
+                    parts[0].clone().expect("1-D replicated vector")
+                }
+            },
+            MeshSpec::Grid(mesh) => {
+                let q = mesh.edge();
+                let chunks: Vec<Tensor> = (0..q)
+                    .map(|col| {
+                        parts[mesh.rank_of(0, col)]
+                            .clone()
+                            .expect("mesh row-0 rank owns its vector chunk")
+                            .reshape(&[1, n / q])
+                    })
+                    .collect();
+                Tensor::concat_cols(&chunks).into_reshape(&[n])
+            }
+            MeshSpec::Cube(cube, _) => {
+                DiagVec3D::for_dirs(self.vec_dirs(role)).gather(cube, parts, n)
+            }
+        }
+    }
+
+    /// The direction triple a `role` vector's diagonal lives on (3-D only).
+    fn vec_dirs(&self, role: VecRole) -> Dirs {
+        let MeshSpec::Cube(_, d0) = &self.mesh else {
+            panic!("vec_dirs is only meaningful on the cube");
+        };
+        match role {
+            VecRole::ExpandBias => d0.swapped(),
+            VecRole::ReduceBias | VecRole::Norm => *d0,
+        }
+    }
+}
+
+/// One rank's shard of a distributed tensor, paired with the layout it was
+/// cut under — the self-describing handle used at the model boundary and by
+/// the cross-parallelism parity tests. Assembly is pure: given every rank's
+/// `DistTensor` (in rank order), the global tensor is reconstructed without
+/// knowing which parallelism produced it.
+#[derive(Clone, Debug)]
+pub struct DistTensor {
+    pub local: Tensor,
+    pub spec: ShardSpec,
+}
+
+impl DistTensor {
+    /// Cut this rank's activation shard from a global matrix.
+    pub fn from_global_activation(spec: &ShardSpec, global: &Tensor) -> DistTensor {
+        DistTensor { local: spec.shard_activation(global), spec: spec.clone() }
+    }
+
+    /// Wrap an already-local activation shard.
+    pub fn from_local(spec: &ShardSpec, local: Tensor) -> DistTensor {
+        DistTensor { local, spec: spec.clone() }
+    }
+
+    /// Reassemble the global `(rows, cols)` activation from every rank's
+    /// handle (rank order). All parts must share one mesh shape.
+    pub fn assemble_activation(parts: &[DistTensor], rows: usize, cols: usize) -> Tensor {
+        assert!(!parts.is_empty());
+        let spec = &parts[0].spec;
+        assert_eq!(parts.len(), spec.world(), "need one shard per rank");
+        let locals: Vec<Tensor> = parts.iter().map(|p| p.local.clone()).collect();
+        spec.assemble_activation(&locals, rows, cols)
     }
 }
 
@@ -494,5 +950,111 @@ mod tests {
         assert_eq!(parts.len(), 4);
         assert_eq!(parts[3], t.block(4, 3, 4, 3));
         assert_eq!(Layout2D::gather(&mesh, &parts, 8, 6), t);
+    }
+
+    fn all_specs() -> Vec<Vec<ShardSpec>> {
+        vec![
+            vec![ShardSpec::seq()],
+            (0..4).map(|r| ShardSpec::oned(4, r)).collect(),
+            (0..4).map(|r| ShardSpec::twod(2, r)).collect(),
+            (0..8).map(|r| ShardSpec::threed(2, r)).collect(),
+        ]
+    }
+
+    #[test]
+    fn shard_spec_weight_round_trips_every_mesh_and_stage() {
+        let w = randt(&[8, 16], 10);
+        for ranks in all_specs() {
+            for stage in [Stage::Expand, Stage::Reduce] {
+                let parts: Vec<Tensor> =
+                    ranks.iter().map(|s| s.shard_weight(stage, &w)).collect();
+                let total: usize = parts.iter().map(|p| p.numel()).sum();
+                assert_eq!(total, w.numel(), "{:?} {stage:?} must tile exactly", ranks[0].mesh);
+                let back = ranks[0].assemble_weight(stage, &parts, 8, 16);
+                assert_eq!(back, w, "{:?} {stage:?}", ranks[0].mesh);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_spec_vector_round_trips_every_mesh_and_role() {
+        let n = 16usize;
+        let v = randt(&[n], 11);
+        for ranks in all_specs() {
+            for role in [VecRole::ExpandBias, VecRole::ReduceBias, VecRole::Norm] {
+                let parts: Vec<Option<Tensor>> =
+                    ranks.iter().map(|s| s.shard_vector(role, &v)).collect();
+                assert!(parts.iter().any(|p| p.is_some()));
+                for (s, p) in ranks.iter().zip(parts.iter()) {
+                    assert_eq!(p.is_some(), s.owns_vector(role), "{:?} {role:?}", s.mesh);
+                }
+                let back = ranks[0].assemble_vector(role, &parts, n);
+                assert_eq!(back, v, "{:?} {role:?}", ranks[0].mesh);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_spec_activation_round_trips_and_dist_tensor_assembles() {
+        let (rows, cols) = (8, 16);
+        let x = randt(&[rows, cols], 12);
+        for ranks in all_specs() {
+            let parts: Vec<DistTensor> = ranks
+                .iter()
+                .map(|s| DistTensor::from_global_activation(s, &x))
+                .collect();
+            for (s, p) in ranks.iter().zip(parts.iter()) {
+                assert_eq!(
+                    p.local.shape(),
+                    &[
+                        s.activation_shape(rows, cols).0,
+                        s.activation_shape(rows, cols).1
+                    ]
+                );
+            }
+            let back = DistTensor::assemble_activation(&parts, rows, cols);
+            assert_eq!(back, x, "{:?}", ranks[0].mesh);
+        }
+    }
+
+    #[test]
+    fn shard_spec_matches_legacy_layouts() {
+        // The unified algebra must cut the *same* shards the per-dimension
+        // layouts cut — spot-check one rank per mesh.
+        let w = randt(&[8, 16], 13);
+        let s1 = ShardSpec::oned(4, 2);
+        assert_eq!(s1.shard_weight(Stage::Expand, &w), Layout1D::ColShard.shard_of(4, 2, &w));
+        assert_eq!(s1.shard_weight(Stage::Reduce, &w), Layout1D::RowShard.shard_of(4, 2, &w));
+        let mesh = Mesh::new(2);
+        let s2 = ShardSpec::twod(2, 3);
+        assert_eq!(s2.shard_weight(Stage::Expand, &w), Layout2D::shard_of(&mesh, 3, &w));
+        let cube = Cube::new(2);
+        let d0 = Dirs::canonical();
+        let s3 = ShardSpec::threed(2, 5);
+        assert_eq!(
+            s3.shard_weight(Stage::Reduce, &w),
+            Layout3D::weight(d0.swapped()).shard_of(&cube, cube.coord_of(5), &w)
+        );
+        let v = randt(&[16], 14);
+        assert_eq!(
+            s3.shard_vector(VecRole::Norm, &v),
+            DiagVec3D::for_dirs(d0).shard_of(&cube, cube.coord_of(5), &v)
+        );
+    }
+
+    #[test]
+    fn shard_spec_phantom_flows_through_sharding() {
+        let w = Tensor::phantom(&[8, 16]);
+        let v = Tensor::phantom(&[16]);
+        for ranks in all_specs() {
+            for s in &ranks {
+                assert!(s.shard_weight(Stage::Expand, &w).is_phantom());
+                if let Some(c) = s.shard_vector(VecRole::Norm, &v) {
+                    assert!(c.is_phantom());
+                }
+                let a = Tensor::phantom(&[8, 16]);
+                assert!(s.shard_activation(&a).is_phantom());
+            }
+        }
     }
 }

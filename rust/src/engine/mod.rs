@@ -15,9 +15,7 @@
 use crate::comm::NetModel;
 use crate::config::CubicConfig;
 use crate::metrics::{RunMetrics, Stopwatch};
-use crate::model::{
-    core_bwd, core_fwd, local_activation_shape, phantom_block, BlockTensors, ParEnv,
-};
+use crate::model::{core_bwd, core_fwd, BlockTensors, ParEnv};
 use crate::spmd::run_spmd_with_stats;
 use crate::tensor::Tensor;
 use crate::topology::Parallelism;
@@ -153,13 +151,13 @@ pub fn time_core_step(
     let results = run_spmd_with_stats(world, net, move |rank, ep| {
         let env = ParEnv::new(par, edge, rank);
         let blocks: Vec<BlockTensors> =
-            (0..cfg2.layers).map(|_| phantom_block(&env, &cfg2, rank)).collect();
-        let (lr, lc) = local_activation_shape(&env, rows, cfg2.hidden);
+            (0..cfg2.layers).map(|_| env.phantom_block(&cfg2)).collect();
+        let (lr, lc) = env.activation_shape(rows, cfg2.hidden);
         let x = Tensor::phantom(&[lr, lc]);
-        let (y, caches) = core_fwd(ep, &env, &blocks, &x, &cfg2);
+        let (y, caches) = core_fwd(ep, env.ops(), &blocks, &x, &cfg2);
         let fwd_clock = ep.clock;
         let dy = Tensor::phantom(y.shape());
-        let _ = core_bwd(ep, &env, &blocks, &caches, &dy, &cfg2);
+        let _ = core_bwd(ep, env.ops(), &blocks, &caches, &dy, &cfg2);
         let bwd_clock = ep.clock;
         (fwd_clock, bwd_clock)
     });
@@ -264,7 +262,7 @@ mod checkpoint_tests {
         // Shards restore into a matching topology.
         let dense = crate::model::init_dense_blocks(&cfg.model, 123);
         let env = crate::model::ParEnv::new(crate::topology::Parallelism::ThreeD, 2, 3);
-        let mut blocks = env.shard_blocks(&dense, 3);
+        let mut blocks = env.shard_blocks(&dense);
         crate::train::checkpoint::load_rank(&dir, 3, &mut blocks).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }

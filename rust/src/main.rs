@@ -13,7 +13,7 @@ use cubic::cli::Args;
 use cubic::comm::NetModel;
 use cubic::config::{describe, CubicConfig};
 use cubic::engine::run_training;
-use cubic::model::{local_activation_shape, phantom_block, ParEnv};
+use cubic::model::ParEnv;
 use cubic::rng::Xoshiro256;
 use cubic::runtime::Runtime;
 use cubic::tensor::Tensor;
@@ -107,8 +107,8 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
     let rows = cfg.model.batch * cfg.model.seq;
     for rank in 0..world {
         let env = ParEnv::new(cfg.parallelism, cfg.edge, rank);
-        let block = phantom_block(&env, &cfg.model, rank);
-        let (ar, ac) = local_activation_shape(&env, rows, cfg.model.hidden);
+        let block = env.phantom_block(&cfg.model);
+        let (ar, ac) = env.activation_shape(rows, cfg.model.hidden);
         println!(
             "rank {rank:3}: activation {ar}x{ac}, block params {} ({} bytes), w_qkv {:?}",
             block.numel(),

@@ -1,0 +1,309 @@
+//! The one transformer block — generic over parallelism.
+//!
+//! Pre-LN block `y = xa + fc2(gelu(fc1(ln2 xa)))`, `xa = x + proj(attn(ln1
+//! x))`, written once against [`ParallelOps`]. Which collectives move the
+//! shards — none (Seq), Megatron all-reduces (1-D), SUMMA broadcasts
+//! (2-D), or the paper's gather/reduce-scatter lines (3-D) — is entirely
+//! the trait implementation's business; this file only sequences the
+//! layers and charges the env-independent memory passes (residual adds,
+//! gelu). Layer staging is the [`Stage`] pairing: each residual branch is
+//! one `Expand` then one `Reduce` linear, which returns the activation to
+//! the block-entry layout so blocks stack under every parallelism.
+//!
+//! Attention is always rank-local (complete heads × complete sequences per
+//! shard — see the weight conventions in [`crate::model`]), so it is the
+//! same code for all four kinds too.
+
+use super::{attention, BlockCache, BlockTensors};
+use crate::comm::Endpoint;
+use crate::config::ModelConfig;
+use crate::dist::Stage;
+use crate::ops::{gelu, gelu_backward};
+use crate::parallel::ParallelOps;
+use crate::tensor::Tensor;
+
+/// One transformer block forward on this rank's shard.
+pub fn block_fwd(
+    ep: &mut Endpoint,
+    ops: &dyn ParallelOps,
+    p: &BlockTensors,
+    x: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, BlockCache) {
+    let hd = cfg.hidden / cfg.heads;
+    let local_heads = ops.local_heads(cfg);
+
+    let (ln1, xhat1, istd1) =
+        ops.layernorm(ep, x, p.ln1_g.as_ref(), p.ln1_b.as_ref(), cfg.eps, cfg.hidden);
+
+    // Attention branch: Expand (QKV) → rank-local attention → Reduce (proj).
+    let qkv = ops.linear_fwd(ep, &ln1, &p.w_qkv, p.b_qkv.as_ref(), Stage::Expand);
+    let (attn_out, attn) = attention::fwd(ep, &qkv, local_heads, hd, cfg.seq);
+    let proj = ops.linear_fwd(ep, &attn_out, &p.w_proj, p.b_proj.as_ref(), Stage::Reduce);
+    let xa = x.add(&proj);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+
+    let (ln2, xhat2, istd2) =
+        ops.layernorm(ep, &xa, p.ln2_g.as_ref(), p.ln2_b.as_ref(), cfg.eps, cfg.hidden);
+
+    // MLP branch: Expand (fc1) → local gelu → Reduce (fc2).
+    let fc1_pre = ops.linear_fwd(ep, &ln2, &p.w_fc1, p.b_fc1.as_ref(), Stage::Expand);
+    let fc1_act = gelu(&fc1_pre);
+    ep.charge_memop(2.0 * fc1_pre.nominal_bytes() as f64);
+    let fc2 = ops.linear_fwd(ep, &fc1_act, &p.w_fc2, p.b_fc2.as_ref(), Stage::Reduce);
+    let y = xa.add(&fc2);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+
+    (
+        y,
+        BlockCache {
+            x: x.clone(),
+            xhat1,
+            istd1,
+            ln1,
+            attn,
+            attn_out,
+            xa,
+            xhat2,
+            istd2,
+            ln2,
+            fc1_pre,
+            fc1_act,
+        },
+    )
+}
+
+/// Block backward; returns `(dx, grads)`. Vector gradients come back with
+/// exactly the ownership pattern of the parameters (`Option` per rank), so
+/// the optimizer pairing is parallelism-agnostic too.
+pub fn block_bwd(
+    ep: &mut Endpoint,
+    ops: &dyn ParallelOps,
+    p: &BlockTensors,
+    cache: &BlockCache,
+    dy: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, BlockTensors) {
+    // y = xa + fc2(gelu(fc1(ln2(xa)))): both residual branches get dy.
+    let (d_fc1act, dw_fc2, db_fc2) =
+        ops.linear_bwd(ep, dy, &cache.fc1_act, &p.w_fc2, Stage::Reduce);
+    let d_fc1pre = gelu_backward(&d_fc1act, &cache.fc1_pre);
+    ep.charge_memop(3.0 * d_fc1act.nominal_bytes() as f64);
+    let (d_ln2, dw_fc1, db_fc1) =
+        ops.linear_bwd(ep, &d_fc1pre, &cache.ln2, &p.w_fc1, Stage::Expand);
+
+    let (d_xa_ln, dg2, db2) = ops.layernorm_backward(
+        ep, &d_ln2, &cache.xhat2, &cache.istd2, p.ln2_g.as_ref(), cfg.hidden,
+    );
+    let dxa = dy.add(&d_xa_ln);
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+
+    // xa = x + proj(attn): both branches get dxa.
+    let (d_attn, dw_proj, db_proj) =
+        ops.linear_bwd(ep, &dxa, &cache.attn_out, &p.w_proj, Stage::Reduce);
+    let d_qkv = attention::bwd(ep, &d_attn, &cache.attn);
+    let (d_ln1, dw_qkv, db_qkv) = ops.linear_bwd(ep, &d_qkv, &cache.ln1, &p.w_qkv, Stage::Expand);
+
+    let (dx_ln, dg1, db1) = ops.layernorm_backward(
+        ep, &d_ln1, &cache.xhat1, &cache.istd1, p.ln1_g.as_ref(), cfg.hidden,
+    );
+    let dx = dxa.add(&dx_ln);
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+
+    (
+        dx,
+        BlockTensors {
+            ln1_g: dg1,
+            ln1_b: db1,
+            w_qkv: dw_qkv,
+            b_qkv: db_qkv,
+            w_proj: dw_proj,
+            b_proj: db_proj,
+            ln2_g: dg2,
+            ln2_b: db2,
+            w_fc1: dw_fc1,
+            b_fc1: db_fc1,
+            w_fc2: dw_fc2,
+            b_fc2: db_fc2,
+        },
+    )
+}
+
+/// Full core forward: all blocks in sequence.
+pub fn core_fwd(
+    ep: &mut Endpoint,
+    ops: &dyn ParallelOps,
+    blocks: &[BlockTensors],
+    x: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, Vec<BlockCache>) {
+    let mut cur = x.clone();
+    let mut caches = Vec::with_capacity(blocks.len());
+    for p in blocks {
+        let (y, cache) = block_fwd(ep, ops, p, &cur, cfg);
+        caches.push(cache);
+        cur = y;
+    }
+    (cur, caches)
+}
+
+/// Full core backward: returns `(dx, per-block grads)`.
+pub fn core_bwd(
+    ep: &mut Endpoint,
+    ops: &dyn ParallelOps,
+    blocks: &[BlockTensors],
+    caches: &[BlockCache],
+    dy: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, Vec<BlockTensors>) {
+    assert_eq!(blocks.len(), caches.len());
+    let mut grads = Vec::with_capacity(blocks.len());
+    let mut cur = dy.clone();
+    for (p, cache) in blocks.iter().zip(caches.iter()).rev() {
+        let (dx, g) = block_bwd(ep, ops, p, cache, &cur, cfg);
+        grads.push(g);
+        cur = dx;
+    }
+    grads.reverse();
+    (cur, grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+    use crate::dist::ShardSpec;
+    use crate::model::{init_dense_blocks, DenseBlock};
+    use crate::parallel::seq::Seq;
+    use crate::rng::Xoshiro256;
+    use crate::spmd::run_spmd;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig::tiny()
+    }
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Tensor::randn(shape, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let cfg = tiny();
+        let dense = init_dense_blocks(&cfg, 1);
+        let x = randt(&[cfg.batch * cfg.seq, cfg.hidden], 2);
+        let x2 = x.clone();
+        let p = dense[0].shard(&ShardSpec::seq());
+        let p2 = p.clone();
+        let y1 = run_spmd(1, NetModel::zero(), move |_, ep| {
+            block_fwd(ep, &Seq::new(), &p, &x, &tiny()).0
+        })
+        .pop()
+        .unwrap();
+        let y2 = run_spmd(1, NetModel::zero(), move |_, ep| {
+            block_fwd(ep, &Seq::new(), &p2, &x2, &tiny()).0
+        })
+        .pop()
+        .unwrap();
+        assert_eq!(y1.shape(), &[cfg.batch * cfg.seq, cfg.hidden]);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn backward_input_gradient_matches_numeric() {
+        let mut cfg = tiny();
+        cfg.seq = 4;
+        cfg.batch = 1;
+        cfg.hidden = 16;
+        cfg.ffn = 32;
+        cfg.heads = 2;
+        cfg.layers = 1;
+        let dense = DenseBlock::init(&cfg, &mut Xoshiro256::seed_from_u64(3));
+        let x0 = randt(&[cfg.seq, cfg.hidden], 4);
+        let dy0 = randt(&[cfg.seq, cfg.hidden], 5);
+
+        let run_f = |xin: Tensor| -> Tensor {
+            let p = dense.shard(&ShardSpec::seq());
+            let cfg = cfg.clone();
+            run_spmd(1, NetModel::zero(), move |_, ep| {
+                block_fwd(ep, &Seq::new(), &p, &xin, &cfg).0
+            })
+            .pop()
+            .unwrap()
+        };
+        let p = dense.shard(&ShardSpec::seq());
+        let cfgc = cfg.clone();
+        let x = x0.clone();
+        let dy = dy0.clone();
+        let dx = run_spmd(1, NetModel::zero(), move |_, ep| {
+            let ops = Seq::new();
+            let (_, cache) = block_fwd(ep, &ops, &p, &x, &cfgc);
+            block_bwd(ep, &ops, &p, &cache, &dy, &cfgc).0
+        })
+        .pop()
+        .unwrap();
+
+        let h = 5e-3f32;
+        for idx in [0usize, 33, 63] {
+            let mut xp = x0.clone();
+            xp.data_mut()[idx] += h;
+            let mut xm = x0.clone();
+            xm.data_mut()[idx] -= h;
+            let num = run_f(xp).sub(&run_f(xm)).scale(1.0 / (2.0 * h)).mul(&dy0).sum();
+            let ana = dx.data()[idx];
+            assert!(
+                (num - ana).abs() < 5e-2 * (1.0 + ana.abs()),
+                "idx {idx}: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn backward_weight_gradient_matches_numeric() {
+        let mut cfg = tiny();
+        cfg.seq = 4;
+        cfg.batch = 1;
+        cfg.hidden = 8;
+        cfg.ffn = 16;
+        cfg.heads = 2;
+        cfg.layers = 1;
+        let dense = DenseBlock::init(&cfg, &mut Xoshiro256::seed_from_u64(6));
+        let x0 = randt(&[cfg.seq, cfg.hidden], 7);
+        let dy0 = randt(&[cfg.seq, cfg.hidden], 8);
+
+        let p0 = dense.shard(&ShardSpec::seq());
+        let cfgc = cfg.clone();
+        let x = x0.clone();
+        let dy = dy0.clone();
+        let grads = run_spmd(1, NetModel::zero(), move |_, ep| {
+            let ops = Seq::new();
+            let (_, cache) = block_fwd(ep, &ops, &p0, &x, &cfgc);
+            block_bwd(ep, &ops, &p0, &cache, &dy, &cfgc).1
+        })
+        .pop()
+        .unwrap();
+
+        // Perturb w_fc1[idx] and check dL = <grad, dW> numerically.
+        let h = 5e-3f32;
+        for idx in [0usize, 50, 127] {
+            let run_with = |delta: f32| -> Tensor {
+                let mut d2 = dense.clone();
+                d2.w_fc1.data_mut()[idx] += delta;
+                let p = d2.shard(&ShardSpec::seq());
+                let x = x0.clone();
+                let cfg = cfg.clone();
+                run_spmd(1, NetModel::zero(), move |_, ep| {
+                    block_fwd(ep, &Seq::new(), &p, &x, &cfg).0
+                })
+                .pop()
+                .unwrap()
+            };
+            let num = run_with(h).sub(&run_with(-h)).scale(1.0 / (2.0 * h)).mul(&dy0).sum();
+            let ana = grads.w_fc1.data()[idx];
+            assert!(
+                (num - ana).abs() < 5e-2 * (1.0 + ana.abs()),
+                "w_fc1[{idx}]: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+}

@@ -1,4 +1,4 @@
-//! The Transformer model, parameterized by parallelism.
+//! The Transformer model, parameterized by parallelism — *once*.
 //!
 //! One set of *global* parameters (deterministically initialized from a
 //! seed) can be sharded onto any of the four execution modes — `Seq`
@@ -6,6 +6,15 @@
 //! paper's `3-D` — and every mode computes the *same function* to float
 //! tolerance, which is what the cross-parallelism parity tests in
 //! `rust/tests/` pin down.
+//!
+//! Since the `ParallelOps` redesign there is exactly **one** transformer
+//! block ([`block::block_fwd`] / [`block::block_bwd`]), written against
+//! [`crate::parallel::ParallelOps`]; the per-parallelism differences live
+//! entirely in the trait implementations and in the layout algebra
+//! ([`crate::dist::ShardSpec`]). [`ParEnv`] is the thin boxed dispatcher
+//! that selects an implementation per rank, and [`DenseBlock::shard`] cuts
+//! the global parameters for any spec — there are no per-dimension model
+//! files or `to_*` converter families anymore.
 //!
 //! ## Weight conventions
 //!
@@ -23,27 +32,29 @@
 //!
 //! Every block starts with the canonical direction triple `d0`; its two
 //! linear layers per branch swap `d0 ↔ d1 = d0.swapped()` and swap back, so
-//! blocks stack with a constant layout (§3.2 of the paper). The bias of a
-//! linear layer lives on the diagonal of the *output* directions.
+//! blocks stack with a constant layout (§3.2 of the paper). In the unified
+//! API this is the [`crate::dist::Stage`] of each weight: `Expand` runs
+//! under `d0`, `Reduce` under `d1`, and biases live on the diagonal of the
+//! *output* directions ([`crate::dist::VecRole`]).
 
 pub mod attention;
-pub mod oned;
-pub mod seq;
-pub mod threed;
-pub mod twod;
+pub mod block;
+
+pub use block::{block_bwd, block_fwd, core_bwd, core_fwd};
 
 use crate::comm::Endpoint;
 use crate::config::ModelConfig;
-use crate::dist::{DiagVec3D, Dirs, Layout1D, Layout2D, Layout3D};
-use crate::parallel::{oned::Ctx1D, threed::Ctx3D, twod::Ctx2D};
+use crate::dist::{ShardSpec, Stage, VecRole};
+use crate::parallel::{ops_for, ParallelOps};
 use crate::rng::Xoshiro256;
 use crate::tensor::Tensor;
-use crate::topology::{Cube, Mesh, Parallelism};
+use crate::topology::Parallelism;
 
 /// One transformer block's tensors — used both for parameters and for
 /// gradients (same shapes, same ownership pattern). Matrix entries are
 /// always present (every rank owns a shard); vector entries are `Some` only
-/// on owning ranks (3-D: direction diagonal; 2-D: mesh row 0; 1-D/Seq: all).
+/// on owning ranks (3-D: direction diagonal; 2-D: mesh row 0; 1-D/Seq: all;
+/// 1-D expand biases: every rank owns a column chunk).
 #[derive(Clone, Debug)]
 pub struct BlockTensors {
     pub ln1_g: Option<Tensor>,
@@ -152,101 +163,49 @@ impl DenseBlock {
         }
     }
 
-    /// As `BlockTensors` with everything owned (the Seq sharding).
-    pub fn to_seq(&self) -> BlockTensors {
-        BlockTensors {
-            ln1_g: Some(self.ln1_g.clone()),
-            ln1_b: Some(self.ln1_b.clone()),
-            w_qkv: self.w_qkv.clone(),
-            b_qkv: Some(self.b_qkv.clone()),
-            w_proj: self.w_proj.clone(),
-            b_proj: Some(self.b_proj.clone()),
-            ln2_g: Some(self.ln2_g.clone()),
-            ln2_b: Some(self.ln2_b.clone()),
-            w_fc1: self.w_fc1.clone(),
-            b_fc1: Some(self.b_fc1.clone()),
-            w_fc2: self.w_fc2.clone(),
-            b_fc2: Some(self.b_fc2.clone()),
+    /// Shape-only (phantom) global parameters — the timing path at paper
+    /// scale. Sharding a phantom block through [`DenseBlock::shard`] yields
+    /// phantom shards with exactly the shapes and vector ownership of the
+    /// materialized sharding, because both flow through the same
+    /// [`ShardSpec`] algebra (there is no separate hand-maintained phantom
+    /// shape table to drift).
+    pub fn phantom(cfg: &ModelConfig) -> DenseBlock {
+        let h = cfg.hidden;
+        let f = cfg.ffn;
+        DenseBlock {
+            ln1_g: Tensor::phantom(&[h]),
+            ln1_b: Tensor::phantom(&[h]),
+            w_qkv: Tensor::phantom(&[h, 3 * h]),
+            b_qkv: Tensor::phantom(&[3 * h]),
+            w_proj: Tensor::phantom(&[h, h]),
+            b_proj: Tensor::phantom(&[h]),
+            ln2_g: Tensor::phantom(&[h]),
+            ln2_b: Tensor::phantom(&[h]),
+            w_fc1: Tensor::phantom(&[h, f]),
+            b_fc1: Tensor::phantom(&[f]),
+            w_fc2: Tensor::phantom(&[f, h]),
+            b_fc2: Tensor::phantom(&[h]),
         }
     }
 
-    /// 1-D Megatron sharding for `rank` of `world`.
-    pub fn to_oned(&self, world: usize, rank: usize) -> BlockTensors {
-        let col = Layout1D::ColShard;
-        let row = Layout1D::RowShard;
-        let vec_shard = |v: &Tensor| {
-            let n = v.numel();
-            col.shard_of(world, rank, &v.reshape(&[1, n]))
-                .into_reshape(&[n / world])
-        };
+    /// Cut this rank's shards under any layout — the single replacement for
+    /// the old `to_seq`/`to_oned`/`to_twod`/`to_threed` family. Weight
+    /// placement is keyed by the layer's [`Stage`], vector placement by its
+    /// [`VecRole`]; the spec does the rest.
+    pub fn shard(&self, spec: &ShardSpec) -> BlockTensors {
         BlockTensors {
-            ln1_g: Some(self.ln1_g.clone()),
-            ln1_b: Some(self.ln1_b.clone()),
-            w_qkv: col.shard_of(world, rank, &self.w_qkv),
-            b_qkv: Some(vec_shard(&self.b_qkv)),
-            w_proj: row.shard_of(world, rank, &self.w_proj),
-            b_proj: Some(self.b_proj.clone()),
-            ln2_g: Some(self.ln2_g.clone()),
-            ln2_b: Some(self.ln2_b.clone()),
-            w_fc1: col.shard_of(world, rank, &self.w_fc1),
-            b_fc1: Some(vec_shard(&self.b_fc1)),
-            w_fc2: row.shard_of(world, rank, &self.w_fc2),
-            b_fc2: Some(self.b_fc2.clone()),
-        }
-    }
-
-    /// 2-D SUMMA sharding: matrices in `(·/q, ·/q)` blocks, vectors as
-    /// column chunks on mesh row 0.
-    pub fn to_twod(&self, mesh: &Mesh, rank: usize) -> BlockTensors {
-        let (row, col) = mesh.coord_of(rank);
-        let q = mesh.edge();
-        let vec_chunk = |v: &Tensor| -> Option<Tensor> {
-            (row == 0).then(|| {
-                let n = v.numel();
-                v.reshape(&[1, n])
-                    .block(0, col * (n / q), 1, n / q)
-                    .into_reshape(&[n / q])
-            })
-        };
-        BlockTensors {
-            ln1_g: vec_chunk(&self.ln1_g),
-            ln1_b: vec_chunk(&self.ln1_b),
-            w_qkv: Layout2D::shard_of(mesh, rank, &self.w_qkv),
-            b_qkv: vec_chunk(&self.b_qkv),
-            w_proj: Layout2D::shard_of(mesh, rank, &self.w_proj),
-            b_proj: vec_chunk(&self.b_proj),
-            ln2_g: vec_chunk(&self.ln2_g),
-            ln2_b: vec_chunk(&self.ln2_b),
-            w_fc1: Layout2D::shard_of(mesh, rank, &self.w_fc1),
-            b_fc1: vec_chunk(&self.b_fc1),
-            w_fc2: Layout2D::shard_of(mesh, rank, &self.w_fc2),
-            b_fc2: vec_chunk(&self.b_fc2),
-        }
-    }
-
-    /// 3-D sharding under block-entry directions `d0` (paper §3.1.1/Fig. 5):
-    /// weights in `Layout3D::weight` of their layer's directions, vectors on
-    /// the diagonal of their layer's *output* directions.
-    pub fn to_threed(&self, cube: &Cube, rank: usize, d0: Dirs) -> BlockTensors {
-        let d1 = d0.swapped();
-        let coord = cube.coord_of(rank);
-        let wl0 = Layout3D::weight(d0);
-        let wl1 = Layout3D::weight(d1);
-        let diag0 = DiagVec3D::for_dirs(d0);
-        let diag1 = DiagVec3D::for_dirs(d1);
-        BlockTensors {
-            ln1_g: diag0.shard_of(cube, coord, &self.ln1_g),
-            ln1_b: diag0.shard_of(cube, coord, &self.ln1_b),
-            w_qkv: wl0.shard_of(cube, coord, &self.w_qkv),
-            b_qkv: diag1.shard_of(cube, coord, &self.b_qkv),
-            w_proj: wl1.shard_of(cube, coord, &self.w_proj),
-            b_proj: diag0.shard_of(cube, coord, &self.b_proj),
-            ln2_g: diag0.shard_of(cube, coord, &self.ln2_g),
-            ln2_b: diag0.shard_of(cube, coord, &self.ln2_b),
-            w_fc1: wl0.shard_of(cube, coord, &self.w_fc1),
-            b_fc1: diag1.shard_of(cube, coord, &self.b_fc1),
-            w_fc2: wl1.shard_of(cube, coord, &self.w_fc2),
-            b_fc2: diag0.shard_of(cube, coord, &self.b_fc2),
+            ln1_g: spec.shard_vector(VecRole::Norm, &self.ln1_g),
+            ln1_b: spec.shard_vector(VecRole::Norm, &self.ln1_b),
+            w_qkv: spec.shard_weight(Stage::Expand, &self.w_qkv),
+            b_qkv: spec.shard_vector(VecRole::ExpandBias, &self.b_qkv),
+            w_proj: spec.shard_weight(Stage::Reduce, &self.w_proj),
+            b_proj: spec.shard_vector(VecRole::ReduceBias, &self.b_proj),
+            ln2_g: spec.shard_vector(VecRole::Norm, &self.ln2_g),
+            ln2_b: spec.shard_vector(VecRole::Norm, &self.ln2_b),
+            w_fc1: spec.shard_weight(Stage::Expand, &self.w_fc1),
+            b_fc1: spec.shard_vector(VecRole::ExpandBias, &self.b_fc1),
+            w_fc2: spec.shard_weight(Stage::Reduce, &self.w_fc2),
+            b_fc2: spec.shard_vector(VecRole::ReduceBias, &self.b_fc2),
         }
     }
 }
@@ -257,58 +216,68 @@ pub fn init_dense_blocks(cfg: &ModelConfig, seed: u64) -> Vec<DenseBlock> {
     (0..cfg.layers).map(|_| DenseBlock::init(cfg, &mut rng)).collect()
 }
 
-/// Per-rank execution environment: which parallelism, with its topology
-/// context. The 3-D variant carries the block-entry directions.
-pub enum ParEnv {
-    Seq,
-    OneD(Ctx1D),
-    TwoD(Ctx2D),
-    ThreeD(Ctx3D, Dirs),
+/// Per-rank execution environment: the boxed [`ParallelOps`] dispatcher.
+/// Construction picks the implementation (`Seq`/`Ctx1D`/`Ctx2D`/`Ctx3D`)
+/// once; everything downstream — the generic block, the trainer, the
+/// engine, the benches — drives the trait object and cannot tell the
+/// parallelisms apart.
+pub struct ParEnv {
+    ops: Box<dyn ParallelOps>,
 }
 
 impl ParEnv {
     pub fn new(par: Parallelism, edge: usize, rank: usize) -> ParEnv {
-        match par {
-            Parallelism::Seq => ParEnv::Seq,
-            Parallelism::OneD => ParEnv::OneD(Ctx1D::new(edge, rank)),
-            Parallelism::TwoD => ParEnv::TwoD(Ctx2D::new(Mesh::new(edge), rank)),
-            Parallelism::ThreeD => {
-                ParEnv::ThreeD(Ctx3D::new(Cube::new(edge), rank), Dirs::canonical())
-            }
-        }
+        ParEnv { ops: ops_for(par, edge, rank) }
+    }
+
+    /// The dense single-device environment.
+    pub fn seq() -> ParEnv {
+        ParEnv::new(Parallelism::Seq, 1, 0)
+    }
+
+    /// Wrap a custom [`ParallelOps`] implementation (new parallelisms plug
+    /// in here without touching the dispatcher).
+    pub fn from_ops(ops: Box<dyn ParallelOps>) -> ParEnv {
+        ParEnv { ops }
+    }
+
+    /// The trait object the generic block drives.
+    pub fn ops(&self) -> &dyn ParallelOps {
+        &*self.ops
+    }
+
+    pub fn spec(&self) -> &ShardSpec {
+        self.ops.spec()
     }
 
     pub fn kind(&self) -> Parallelism {
-        match self {
-            ParEnv::Seq => Parallelism::Seq,
-            ParEnv::OneD(_) => Parallelism::OneD,
-            ParEnv::TwoD(_) => Parallelism::TwoD,
-            ParEnv::ThreeD(..) => Parallelism::ThreeD,
-        }
+        self.ops.kind()
+    }
+
+    /// Number of attention heads this rank computes locally.
+    pub fn local_heads(&self, cfg: &ModelConfig) -> usize {
+        self.ops.local_heads(cfg)
+    }
+
+    /// Shape of this rank's activation shard for a global `(rows, hidden)`.
+    pub fn activation_shape(&self, rows: usize, hidden: usize) -> (usize, usize) {
+        self.ops.activation_shape(rows, hidden)
     }
 
     /// Shard the global dense blocks for this rank.
-    pub fn shard_blocks(&self, dense: &[DenseBlock], rank: usize) -> Vec<BlockTensors> {
-        dense
-            .iter()
-            .map(|b| match self {
-                ParEnv::Seq => b.to_seq(),
-                ParEnv::OneD(ctx) => b.to_oned(ctx.world(), rank),
-                ParEnv::TwoD(ctx) => b.to_twod(&ctx.mesh, rank),
-                ParEnv::ThreeD(ctx, d0) => b.to_threed(&ctx.cube, rank, *d0),
-            })
-            .collect()
+    pub fn shard_blocks(&self, dense: &[DenseBlock]) -> Vec<BlockTensors> {
+        dense.iter().map(|b| self.ops.shard_block(b)).collect()
     }
 
-    /// This rank's shard of a global `(rows, hidden)` activation.
-    pub fn scatter_activation(&self, global: &Tensor, rank: usize) -> Tensor {
-        match self {
-            ParEnv::Seq | ParEnv::OneD(_) => global.clone(),
-            ParEnv::TwoD(ctx) => Layout2D::shard_of(&ctx.mesh, rank, global),
-            ParEnv::ThreeD(ctx, d0) => {
-                Layout3D::input(*d0).shard_of(&ctx.cube, ctx.cube.coord_of(rank), global)
-            }
-        }
+    /// Shape-only block shards for the timing path.
+    pub fn phantom_block(&self, cfg: &ModelConfig) -> BlockTensors {
+        self.ops.phantom_block(cfg)
+    }
+
+    /// This rank's shard of a global `(rows, hidden)` activation (written
+    /// into a recycled pool buffer on sharding meshes).
+    pub fn scatter_activation(&self, ep: &mut Endpoint, global: &Tensor) -> Tensor {
+        self.ops.scatter_activation(ep, global)
     }
 
     /// Reassemble the global activation on every rank (one all-gather over
@@ -321,131 +290,7 @@ impl ParEnv {
         rows: usize,
         cols: usize,
     ) -> Tensor {
-        match self {
-            ParEnv::Seq | ParEnv::OneD(_) => local.clone(),
-            ParEnv::TwoD(ctx) => {
-                let world: Vec<usize> = (0..ctx.mesh.size()).collect();
-                let parts = crate::collectives::all_gather(ep, &world, local);
-                Layout2D::gather(&ctx.mesh, &parts, rows, cols)
-            }
-            ParEnv::ThreeD(ctx, d0) => {
-                let world: Vec<usize> = (0..ctx.cube.size()).collect();
-                let parts = crate::collectives::all_gather(ep, &world, local);
-                Layout3D::input(*d0).gather(&ctx.cube, &parts, rows, cols)
-            }
-        }
-    }
-
-    /// Number of attention heads this rank computes locally.
-    pub fn local_heads(&self, cfg: &ModelConfig) -> usize {
-        match self {
-            ParEnv::Seq => cfg.heads,
-            ParEnv::OneD(ctx) => cfg.heads / ctx.world(),
-            ParEnv::TwoD(ctx) => cfg.heads / ctx.q(),
-            ParEnv::ThreeD(ctx, _) => cfg.heads / ctx.p(),
-        }
-    }
-}
-
-/// Shape-only (phantom) block parameters for this rank — the timing path
-/// used by the benchmark harness at paper scale, where materializing
-/// hidden-8192 weights would be pointless. Shapes and vector ownership are
-/// identical to the materialized sharding.
-pub fn phantom_block(env: &ParEnv, cfg: &ModelConfig, rank: usize) -> BlockTensors {
-    let h = cfg.hidden;
-    let f = cfg.ffn;
-    // (w_qkv, b_qkv, w_proj, b_proj, w_fc1, b_fc1, w_fc2, b_fc2, ln owner?)
-    match env {
-        ParEnv::Seq => BlockTensors {
-            ln1_g: Some(Tensor::phantom(&[h])),
-            ln1_b: Some(Tensor::phantom(&[h])),
-            w_qkv: Tensor::phantom(&[h, 3 * h]),
-            b_qkv: Some(Tensor::phantom(&[3 * h])),
-            w_proj: Tensor::phantom(&[h, h]),
-            b_proj: Some(Tensor::phantom(&[h])),
-            ln2_g: Some(Tensor::phantom(&[h])),
-            ln2_b: Some(Tensor::phantom(&[h])),
-            w_fc1: Tensor::phantom(&[h, f]),
-            b_fc1: Some(Tensor::phantom(&[f])),
-            w_fc2: Tensor::phantom(&[f, h]),
-            b_fc2: Some(Tensor::phantom(&[h])),
-        },
-        ParEnv::OneD(ctx) => {
-            let w = ctx.world();
-            BlockTensors {
-                ln1_g: Some(Tensor::phantom(&[h])),
-                ln1_b: Some(Tensor::phantom(&[h])),
-                w_qkv: Tensor::phantom(&[h, 3 * h / w]),
-                b_qkv: Some(Tensor::phantom(&[3 * h / w])),
-                w_proj: Tensor::phantom(&[h / w, h]),
-                b_proj: Some(Tensor::phantom(&[h])),
-                ln2_g: Some(Tensor::phantom(&[h])),
-                ln2_b: Some(Tensor::phantom(&[h])),
-                w_fc1: Tensor::phantom(&[h, f / w]),
-                b_fc1: Some(Tensor::phantom(&[f / w])),
-                w_fc2: Tensor::phantom(&[f / w, h]),
-                b_fc2: Some(Tensor::phantom(&[h])),
-            }
-        }
-        ParEnv::TwoD(ctx) => {
-            let q = ctx.q();
-            let own = ctx.row == 0;
-            let vec = |n: usize| own.then(|| Tensor::phantom(&[n / q]));
-            BlockTensors {
-                ln1_g: vec(h),
-                ln1_b: vec(h),
-                w_qkv: Tensor::phantom(&[h / q, 3 * h / q]),
-                b_qkv: vec(3 * h),
-                w_proj: Tensor::phantom(&[h / q, h / q]),
-                b_proj: vec(h),
-                ln2_g: vec(h),
-                ln2_b: vec(h),
-                w_fc1: Tensor::phantom(&[h / q, f / q]),
-                b_fc1: vec(3 * h).map(|_| Tensor::phantom(&[f / q])),
-                w_fc2: Tensor::phantom(&[f / q, h / q]),
-                b_fc2: vec(h),
-            }
-        }
-        ParEnv::ThreeD(ctx, d0) => {
-            let p = ctx.p();
-            let d1 = d0.swapped();
-            let coord = ctx.cube.coord_of(rank);
-            let diag0 = DiagVec3D::for_dirs(*d0);
-            let diag1 = DiagVec3D::for_dirs(d1);
-            let vec = |diag: &DiagVec3D, n: usize| {
-                diag.owns(coord).then(|| Tensor::phantom(&[n / (p * p)]))
-            };
-            let wshape = |dirs: Dirs, rows: usize, cols: usize| {
-                let (r, c) = Layout3D::weight(dirs).shard_shape(p, rows, cols);
-                Tensor::phantom(&[r, c])
-            };
-            BlockTensors {
-                ln1_g: vec(&diag0, h),
-                ln1_b: vec(&diag0, h),
-                w_qkv: wshape(*d0, h, 3 * h),
-                b_qkv: vec(&diag1, 3 * h),
-                w_proj: wshape(d1, h, h),
-                b_proj: vec(&diag0, h),
-                ln2_g: vec(&diag0, h),
-                ln2_b: vec(&diag0, h),
-                w_fc1: wshape(*d0, h, f),
-                b_fc1: vec(&diag1, f),
-                w_fc2: wshape(d1, f, h),
-                b_fc2: vec(&diag0, h),
-            }
-        }
-    }
-}
-
-/// Shape of this rank's activation shard for a global `(rows, hidden)`.
-pub fn local_activation_shape(env: &ParEnv, rows: usize, hidden: usize) -> (usize, usize) {
-    match env {
-        ParEnv::Seq | ParEnv::OneD(_) => (rows, hidden),
-        ParEnv::TwoD(ctx) => (rows / ctx.q(), hidden / ctx.q()),
-        ParEnv::ThreeD(ctx, _) => {
-            let p = ctx.p();
-            (rows / (p * p), hidden / p)
-        }
+        self.ops.gather_activation(ep, local, rows, cols)
     }
 }
 
@@ -465,79 +310,8 @@ pub struct BlockCache {
     pub fc1_act: Tensor,
 }
 
-/// Dispatch: one transformer block forward on this rank's shard.
-pub fn block_fwd(
-    ep: &mut Endpoint,
-    env: &ParEnv,
-    p: &BlockTensors,
-    x: &Tensor,
-    cfg: &ModelConfig,
-) -> (Tensor, BlockCache) {
-    match env {
-        ParEnv::Seq => seq::block_fwd(ep, p, x, cfg),
-        ParEnv::OneD(ctx) => oned::block_fwd(ep, ctx, p, x, cfg),
-        ParEnv::TwoD(ctx) => twod::block_fwd(ep, ctx, p, x, cfg),
-        ParEnv::ThreeD(ctx, d0) => threed::block_fwd(ep, ctx, p, x, cfg, *d0),
-    }
-}
-
-/// Dispatch: block backward; returns `(dx, grads)`.
-pub fn block_bwd(
-    ep: &mut Endpoint,
-    env: &ParEnv,
-    p: &BlockTensors,
-    cache: &BlockCache,
-    dy: &Tensor,
-    cfg: &ModelConfig,
-) -> (Tensor, BlockTensors) {
-    match env {
-        ParEnv::Seq => seq::block_bwd(ep, p, cache, dy, cfg),
-        ParEnv::OneD(ctx) => oned::block_bwd(ep, ctx, p, cache, dy, cfg),
-        ParEnv::TwoD(ctx) => twod::block_bwd(ep, ctx, p, cache, dy, cfg),
-        ParEnv::ThreeD(ctx, d0) => threed::block_bwd(ep, ctx, p, cache, dy, cfg, *d0),
-    }
-}
-
-/// Full core forward: all blocks in sequence.
-pub fn core_fwd(
-    ep: &mut Endpoint,
-    env: &ParEnv,
-    blocks: &[BlockTensors],
-    x: &Tensor,
-    cfg: &ModelConfig,
-) -> (Tensor, Vec<BlockCache>) {
-    let mut cur = x.clone();
-    let mut caches = Vec::with_capacity(blocks.len());
-    for p in blocks {
-        let (y, cache) = block_fwd(ep, env, p, &cur, cfg);
-        caches.push(cache);
-        cur = y;
-    }
-    (cur, caches)
-}
-
-/// Full core backward: returns `(dx, per-block grads)`.
-pub fn core_bwd(
-    ep: &mut Endpoint,
-    env: &ParEnv,
-    blocks: &[BlockTensors],
-    caches: &[BlockCache],
-    dy: &Tensor,
-    cfg: &ModelConfig,
-) -> (Tensor, Vec<BlockTensors>) {
-    assert_eq!(blocks.len(), caches.len());
-    let mut grads = Vec::with_capacity(blocks.len());
-    let mut cur = dy.clone();
-    for (p, cache) in blocks.iter().zip(caches.iter()).rev() {
-        let (dx, g) = block_bwd(ep, env, p, cache, &cur, cfg);
-        grads.push(g);
-        cur = dx;
-    }
-    grads.reverse();
-    (cur, grads)
-}
-
-/// Local layernorm forward used by the Seq/1-D paths (rows fully local).
+/// Local layernorm forward used by the Seq/1-D paths (rows fully local)
+/// and by the replicated head in [`crate::train`].
 /// Returns `(y, xhat, inv_std)`.
 pub fn local_layernorm(
     x: &Tensor,
@@ -615,7 +389,8 @@ pub fn local_layernorm_backward(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topology::Axis;
+    use crate::dist::{Dirs, Layout3D, MeshSpec};
+    use crate::topology::{Axis, Cube};
 
     fn cfg() -> ModelConfig {
         ModelConfig::tiny()
@@ -636,12 +411,10 @@ mod tests {
     fn sharding_partitions_weights_exactly_3d() {
         let cfg = cfg();
         let dense = DenseBlock::init(&cfg, &mut Xoshiro256::seed_from_u64(1));
-        let cube = Cube::new(2);
-        let d0 = Dirs::canonical();
         let mut total_w_qkv = 0;
         let mut vec_owners = 0;
         for r in 0..8 {
-            let s = dense.to_threed(&cube, r, d0);
+            let s = dense.shard(&ShardSpec::threed(2, r));
             total_w_qkv += s.w_qkv.numel();
             if s.b_qkv.is_some() {
                 vec_owners += 1;
@@ -657,33 +430,36 @@ mod tests {
     fn threed_gather_back_reconstructs_dense() {
         let cfg = cfg();
         let dense = DenseBlock::init(&cfg, &mut Xoshiro256::seed_from_u64(2));
-        let cube = Cube::new(2);
-        let d0 = Dirs::canonical();
+        let spec0 = ShardSpec::threed(2, 0);
         let shards: Vec<BlockTensors> =
-            (0..8).map(|r| dense.to_threed(&cube, r, d0)).collect();
+            (0..8).map(|r| dense.shard(&ShardSpec::threed(2, r))).collect();
         let w_shards: Vec<Tensor> = shards.iter().map(|s| s.w_qkv.clone()).collect();
-        let w = Layout3D::weight(d0).gather(&cube, &w_shards, cfg.hidden, 3 * cfg.hidden);
+        let w = spec0.assemble_weight(Stage::Expand, &w_shards, cfg.hidden, 3 * cfg.hidden);
         assert_eq!(w, dense.w_qkv);
-        // fc2 uses the swapped directions.
+        // fc2 uses the swapped directions (the Reduce stage).
         let w2_shards: Vec<Tensor> = shards.iter().map(|s| s.w_fc2.clone()).collect();
-        let w2 = Layout3D::weight(d0.swapped()).gather(&cube, &w2_shards, cfg.ffn, cfg.hidden);
+        let w2 = spec0.assemble_weight(Stage::Reduce, &w2_shards, cfg.ffn, cfg.hidden);
         assert_eq!(w2, dense.w_fc2);
+        // And the spec agrees with the raw Layout3D algebra.
+        let cube = Cube::new(2);
+        let w_direct =
+            Layout3D::weight(Dirs::canonical()).gather(&cube, &w_shards, cfg.hidden, 3 * cfg.hidden);
+        assert_eq!(w_direct, dense.w_qkv);
     }
 
     #[test]
     fn pairs_mut_yields_all_owned_params() {
         let cfg = cfg();
         let dense = DenseBlock::init(&cfg, &mut Xoshiro256::seed_from_u64(3));
-        let mut p = dense.to_seq();
-        let g = dense.to_seq();
+        let mut p = dense.shard(&ShardSpec::seq());
+        let g = dense.shard(&ShardSpec::seq());
         assert_eq!(p.pairs_mut(&g).len(), 12);
-        let cube = Cube::new(2);
-        let mut p3 = dense.to_threed(&cube, 0, Dirs::canonical());
-        let g3 = dense.to_threed(&cube, 0, Dirs::canonical());
+        let mut p3 = dense.shard(&ShardSpec::threed(2, 0));
+        let g3 = dense.shard(&ShardSpec::threed(2, 0));
         // rank 0 = coord (0,0,0): on every diagonal → owns all 8 vectors.
         assert_eq!(p3.pairs_mut(&g3).len(), 12);
-        let mut p3b = dense.to_threed(&cube, 1, Dirs::canonical());
-        let g3b = dense.to_threed(&cube, 1, Dirs::canonical());
+        let mut p3b = dense.shard(&ShardSpec::threed(2, 1));
+        let g3b = dense.shard(&ShardSpec::threed(2, 1));
         // rank 1 = coord (0,0,1): j≠l and l≠j diagonals differ per dirs.
         assert!(p3b.pairs_mut(&g3b).len() < 12);
     }
@@ -717,16 +493,55 @@ mod tests {
     }
 
     #[test]
-    fn par_env_constructors() {
+    fn par_env_constructors_dispatch_by_kind() {
         let e = ParEnv::new(Parallelism::ThreeD, 2, 5);
         assert_eq!(e.kind(), Parallelism::ThreeD);
         assert_eq!(e.local_heads(&cfg()), 2);
-        if let ParEnv::ThreeD(ctx, d0) = e {
-            assert_eq!(ctx.coord, Cube::new(2).coord_of(5));
-            assert_eq!(d0.a, Axis::Y);
-        } else {
-            panic!()
-        }
+        let MeshSpec::Cube(cube, d0) = &e.spec().mesh else {
+            panic!("3-D env must carry a cube spec");
+        };
+        assert_eq!(cube.edge(), 2);
+        assert_eq!(e.spec().rank, 5);
+        assert_eq!(d0.a, Axis::Y);
         assert_eq!(ParEnv::new(Parallelism::OneD, 4, 1).local_heads(&cfg()), 1);
+        assert_eq!(ParEnv::seq().kind(), Parallelism::Seq);
+    }
+
+    #[test]
+    fn phantom_blocks_match_materialized_shard_shapes_everywhere() {
+        // The phantom timing path and the materialized path share one
+        // sharding routine; pin that the shapes and the vector-ownership
+        // pattern agree for every parallelism and every rank.
+        let cfg = cfg();
+        let dense = DenseBlock::init(&cfg, &mut Xoshiro256::seed_from_u64(9));
+        for (par, edge) in [
+            (Parallelism::Seq, 1usize),
+            (Parallelism::OneD, 4),
+            (Parallelism::TwoD, 2),
+            (Parallelism::ThreeD, 2),
+        ] {
+            let world = par.world_size(edge);
+            for rank in 0..world {
+                let env = ParEnv::new(par, edge, rank);
+                let ph = env.phantom_block(&cfg);
+                let real = dense.shard(env.spec());
+                assert_eq!(ph.w_qkv.shape(), real.w_qkv.shape(), "{par:?} r{rank}");
+                assert_eq!(ph.w_fc2.shape(), real.w_fc2.shape(), "{par:?} r{rank}");
+                assert!(ph.w_qkv.is_phantom());
+                let vecs = [
+                    (&ph.ln1_g, &real.ln1_g),
+                    (&ph.b_qkv, &real.b_qkv),
+                    (&ph.b_proj, &real.b_proj),
+                    (&ph.b_fc1, &real.b_fc1),
+                ];
+                for (p, r) in vecs {
+                    assert_eq!(p.is_some(), r.is_some(), "{par:?} r{rank} ownership");
+                    if let (Some(p), Some(r)) = (p.as_ref(), r.as_ref()) {
+                        assert_eq!(p.shape(), r.shape(), "{par:?} r{rank}");
+                    }
+                }
+                assert_eq!(ph.numel(), real.numel(), "{par:?} r{rank}");
+            }
+        }
     }
 }

@@ -1,10 +1,254 @@
-//! Tensor-parallel linear algebra: the paper's 3-D algorithms plus the 1-D
-//! (Megatron [17]) and 2-D (Optimus/SUMMA [21]) baselines it compares with.
+//! Tensor-parallel linear algebra behind one trait: [`ParallelOps`].
 //!
-//! Each submodule implements forward *and* backward of the distributed
-//! linear operations used by the Transformer model in [`crate::model`],
-//! verified shard-for-shard against dense references in `rust/tests/`.
+//! The paper's core observation is that 1-D (Megatron [17]), 2-D
+//! (Optimus/SUMMA [21]) and the paper's 3-D parallelism are *points on one
+//! spectrum of shard layouts* — the same transformer block, the same six
+//! distributed matmul forms, the same vector/normalization ops, differing
+//! only in where shards live and which collectives move them. This module
+//! encodes that spectrum: the layout algebra is
+//! [`crate::dist::ShardSpec`]; the *communicating* operations are the
+//! [`ParallelOps`] trait, implemented once per parallelism:
+//!
+//! * [`seq::Seq`] — dense single device (the parity reference);
+//! * [`oned::Ctx1D`] — replicated activations, column/row-parallel linears;
+//! * [`twod::Ctx2D`] — everything block-distributed, SUMMA matmuls;
+//! * [`threed::Ctx3D`] — the paper's Algorithms 1–8 on the `p³` cube.
+//!
+//! The generic transformer block in [`crate::model::block`] is written
+//! against `&dyn ParallelOps` only; `crate::model::ParEnv` is the thin
+//! boxed dispatcher that picks the implementation at run time. Every
+//! implementation is verified shard-for-shard against the dense reference
+//! by `rust/tests/model_parity.rs` — one generic test over all four kinds.
+//!
+//! ## Adding a new parallelism
+//!
+//! A new decomposition (a hybrid data+tensor mesh, a 2.5-D split, …) is a
+//! *leaf*, not a fork:
+//!
+//! 1. **Layout** — add a [`crate::dist::MeshSpec`] arm and teach
+//!    [`crate::dist::ShardSpec`]'s `shard_*`/`assemble_*` methods where
+//!    weights ([`Stage`]), vectors ([`crate::dist::VecRole`]) and
+//!    activations live on the new mesh. The dist tests
+//!    (`shard_spec_*_round_trips*`) then pin `gather ∘ scatter = id` for
+//!    free.
+//! 2. **Ops** — write a context type holding the mesh + this rank's
+//!    coordinate and implement [`ParallelOps`]: the six matmul forms (or
+//!    at minimum `matmul_nn`/`matmul_nt`/`matmul_tn`), `linear_fwd/bwd`,
+//!    `vec_op`, and the layernorm pair. Provided methods (activation
+//!    scatter/gather, block sharding, phantom blocks) come from the
+//!    `ShardSpec` automatically.
+//! 3. **Dispatch** — add the arm to [`ops_for`] (and
+//!    `topology::Parallelism` if it is a genuinely new kind).
+//! 4. **Verify** — add the `(kind, edge)` pair to the generic loop in
+//!    `rust/tests/model_parity.rs`. No model code changes: the block,
+//!    trainer, engine and benches are already generic.
+//!
+//! ## Conventions shared by all implementations
+//!
+//! * Activations enter every block in the mesh's *entry layout*
+//!   (replicated / 2-D blocks / 3-D `input(d0)`); each residual branch
+//!   runs an `Expand` then a `Reduce` linear ([`Stage`]), which returns
+//!   the activation to the entry layout, so blocks stack.
+//! * Vector parameters may be owned by a subset of ranks
+//!   (`Option<Tensor>` in `BlockTensors`); non-owners pass `None` and
+//!   still participate in the collectives that materialize the vector.
+//! * Every op charges the virtual clock (`2·m·n·k` flops per matmul plus
+//!   the memory-pass costs), so phantom-mode timing is identical to the
+//!   pre-trait per-dimension implementations.
 
 pub mod oned;
+pub mod seq;
 pub mod threed;
 pub mod twod;
+
+use crate::comm::Endpoint;
+use crate::config::ModelConfig;
+use crate::dist::{ShardSpec, Stage};
+use crate::model::{BlockTensors, DenseBlock};
+use crate::tensor::Tensor;
+use crate::topology::Parallelism;
+
+/// The distributed-operation vocabulary of one parallelism point. Object
+/// safe: the model drives `&dyn ParallelOps`, so new parallelisms plug in
+/// without touching the block.
+///
+/// Required methods are the communicating kernels; provided methods are
+/// pure layout plumbing derived from [`ParallelOps::spec`].
+pub trait ParallelOps: Send + Sync {
+    /// The layout algebra of this environment (mesh shape + this rank).
+    fn spec(&self) -> &ShardSpec;
+
+    // --- distributed matmul forms ------------------------------------
+
+    /// `Y = X · W` with `x` in the stage's input layout and `w` in the
+    /// stage's weight layout; returns the stage's output-layout shard.
+    fn matmul_nn(&self, ep: &mut Endpoint, x: &Tensor, w: &Tensor, stage: Stage) -> Tensor;
+
+    /// `dX = dY · Wᵀ` — the input-gradient form of a stage linear.
+    fn matmul_nt(&self, ep: &mut Endpoint, dy: &Tensor, w: &Tensor, stage: Stage) -> Tensor;
+
+    /// `dW = Xᵀ · dY` — the weight-gradient form of a stage linear.
+    fn matmul_tn(&self, ep: &mut Endpoint, x: &Tensor, dy: &Tensor, stage: Stage) -> Tensor;
+
+    /// Fused backward of [`ParallelOps::matmul_nn`]: `(dX, dW)`.
+    /// Implementations that can share work between the two halves (3-D
+    /// shares the `dY` gather) override this.
+    fn matmul_nn_backward(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        w: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Tensor) {
+        let dx = self.matmul_nt(ep, dy, w, stage);
+        let dw = self.matmul_tn(ep, x, dy, stage);
+        (dx, dw)
+    }
+
+    // --- linear layers -----------------------------------------------
+
+    /// `Y = X·W + b`. `b` is this rank's bias shard — `None` on ranks
+    /// that own no chunk (2-D off row 0, 3-D off the diagonal); those
+    /// ranks still join the collectives that materialize the bias.
+    fn linear_fwd(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+        stage: Stage,
+    ) -> Tensor;
+
+    /// Backward of [`ParallelOps::linear_fwd`]: `(dX, dW, db)` with `db`
+    /// `Some` exactly on bias-owning ranks.
+    fn linear_bwd(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        w: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Tensor, Option<Tensor>);
+
+    // --- vector / normalization ops ----------------------------------
+
+    /// `C = A + v` (`mul = false`) or `C = A ⊙ v` per column (`mul =
+    /// true`) for an entry-layout activation `a` and a `Norm`-placed
+    /// vector chunk `v` (3-D: Algorithm 7).
+    fn vec_op(&self, ep: &mut Endpoint, a: &Tensor, v: Option<&Tensor>, mul: bool) -> Tensor;
+
+    /// Layernorm over the hidden axis of an entry-layout activation.
+    /// Returns `(y, xhat, inv_std)`; `hidden` is the *global* column
+    /// count (shards only see `hidden / head_divisor` columns).
+    #[allow(clippy::too_many_arguments)]
+    fn layernorm(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        gamma: Option<&Tensor>,
+        beta: Option<&Tensor>,
+        eps: f32,
+        hidden: usize,
+    ) -> (Tensor, Tensor, Tensor);
+
+    /// Backward of [`ParallelOps::layernorm`]: `(dx, dγ, dβ)` with the
+    /// vector grads `Some` exactly on γ/β-owning ranks.
+    #[allow(clippy::too_many_arguments)]
+    fn layernorm_backward(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        hidden: usize,
+    ) -> (Tensor, Option<Tensor>, Option<Tensor>);
+
+    // --- provided: layout plumbing derived from the spec -------------
+
+    fn kind(&self) -> Parallelism {
+        self.spec().kind()
+    }
+
+    /// Attention heads this rank computes locally.
+    fn local_heads(&self, cfg: &ModelConfig) -> usize {
+        self.spec().local_heads(cfg.heads)
+    }
+
+    /// Shape of this rank's shard of a global `(rows, cols)` activation.
+    fn activation_shape(&self, rows: usize, cols: usize) -> (usize, usize) {
+        self.spec().activation_shape(rows, cols)
+    }
+
+    /// This rank's shard of a global activation. The shard is written into
+    /// a recycled pool buffer (this runs twice per training step — the
+    /// embedding output and the head gradient — so it must not allocate in
+    /// the steady state). Replicated meshes return a zero-copy handle.
+    fn scatter_activation(&self, ep: &mut Endpoint, global: &Tensor) -> Tensor {
+        let spec = self.spec();
+        if !spec.shards_activation() {
+            return global.clone();
+        }
+        let (rows, cols) = global.dims2();
+        let (r0, c0, sr, sc) = spec.activation_bounds(rows, cols);
+        if global.is_phantom() {
+            return Tensor::phantom(&[sr, sc]);
+        }
+        let mut out = ep.pooled_tensor(&[sr, sc]);
+        global.block_into(r0, c0, sr, sc, &mut out);
+        out
+    }
+
+    /// Reassemble the global activation on every rank (one all-gather over
+    /// the world; only used at the model boundary — embedding/head — which
+    /// the paper excludes from the parallelized region). The assembly is
+    /// written into a recycled pool buffer; phantom shards drive the same
+    /// collective and return a phantom.
+    fn gather_activation(
+        &self,
+        ep: &mut Endpoint,
+        local: &Tensor,
+        rows: usize,
+        cols: usize,
+    ) -> Tensor {
+        let spec = self.spec();
+        if !spec.shards_activation() {
+            return local.clone();
+        }
+        let world: Vec<usize> = (0..spec.world()).collect();
+        let parts = crate::collectives::all_gather(ep, &world, local);
+        if parts.iter().any(|p| p.is_phantom()) {
+            return Tensor::phantom(&[rows, cols]);
+        }
+        let mut out = ep.pooled_tensor(&[rows, cols]);
+        spec.assemble_activation_into(&parts, rows, cols, &mut out);
+        out
+    }
+
+    /// This rank's shards of one dense block.
+    fn shard_block(&self, dense: &DenseBlock) -> BlockTensors {
+        dense.shard(self.spec())
+    }
+
+    /// Shape-only (phantom) block shards — the timing path at paper scale,
+    /// where materializing hidden-8192 weights would be pointless. Shapes
+    /// and vector ownership are identical to the materialized sharding
+    /// because both flow through the same `DenseBlock::shard`.
+    fn phantom_block(&self, cfg: &ModelConfig) -> BlockTensors {
+        DenseBlock::phantom(cfg).shard(self.spec())
+    }
+}
+
+/// Construct the [`ParallelOps`] implementation for a parallelism point —
+/// the single dispatch site `crate::model::ParEnv` wraps.
+pub fn ops_for(par: Parallelism, edge: usize, rank: usize) -> Box<dyn ParallelOps> {
+    match par {
+        Parallelism::Seq => Box::new(seq::Seq::new()),
+        Parallelism::OneD => Box::new(oned::Ctx1D::new(edge, rank)),
+        Parallelism::TwoD => Box::new(twod::Ctx2D::new(crate::topology::Mesh::new(edge), rank)),
+        Parallelism::ThreeD => {
+            Box::new(threed::Ctx3D::new(crate::topology::Cube::new(edge), rank))
+        }
+    }
+}

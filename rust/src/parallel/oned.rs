@@ -13,6 +13,11 @@
 
 use crate::collectives::all_reduce;
 use crate::comm::Endpoint;
+use crate::dist::{ShardSpec, Stage};
+use crate::parallel::seq::{
+    replicated_layernorm, replicated_layernorm_backward, replicated_vec_op,
+};
+use crate::parallel::ParallelOps;
 use crate::tensor::Tensor;
 
 /// Per-rank context: the ordered tensor-parallel group and this rank's
@@ -20,11 +25,16 @@ use crate::tensor::Tensor;
 pub struct Ctx1D {
     pub group: Vec<usize>,
     pub pos: usize,
+    spec: ShardSpec,
 }
 
 impl Ctx1D {
     pub fn new(world: usize, rank: usize) -> Self {
-        Ctx1D { group: (0..world).collect(), pos: rank }
+        Ctx1D {
+            group: (0..world).collect(),
+            pos: rank,
+            spec: ShardSpec::oned(world, rank),
+        }
     }
 
     pub fn world(&self) -> usize {
@@ -127,6 +137,107 @@ pub fn row_linear_bwd(
     ep.charge_memop(dy.nominal_bytes() as f64);
     let db = dy.sum_rows();
     (dx, dw, db)
+}
+
+fn req<'a>(t: Option<&'a Tensor>, name: &str) -> &'a Tensor {
+    t.unwrap_or_else(|| panic!("1-D rank owns this vector; missing {name}"))
+}
+
+/// Megatron semantics for the trait: `Expand` is the column-parallel form
+/// (no forward comm, column-sharded output), `Reduce` the row-parallel form
+/// (one all-reduce, replicated output). Activations at block entry are
+/// replicated, so layernorm and `vec_op` are purely local.
+impl ParallelOps for Ctx1D {
+    fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    fn matmul_nn(&self, ep: &mut Endpoint, x: &Tensor, w: &Tensor, stage: Stage) -> Tensor {
+        match stage {
+            Stage::Expand => col_linear_fwd(ep, self, x, w, None),
+            Stage::Reduce => row_linear_fwd(ep, self, x, w, None),
+        }
+    }
+
+    fn matmul_nt(&self, ep: &mut Endpoint, dy: &Tensor, w: &Tensor, stage: Stage) -> Tensor {
+        let (m, k) = dy.dims2();
+        let n = w.dims2().0;
+        charge_mm(ep, m, n, k);
+        let dx = dy.matmul_nt(w);
+        match stage {
+            // Column-parallel: per-rank partials of the full dX sum up.
+            Stage::Expand => all_reduce(ep, &self.group, &dx),
+            // Row-parallel: dY is replicated; dX is this rank's column shard.
+            Stage::Reduce => dx,
+        }
+    }
+
+    fn matmul_tn(&self, ep: &mut Endpoint, x: &Tensor, dy: &Tensor, _stage: Stage) -> Tensor {
+        // Both forms are local: the sharded operand pair always lines up
+        // (Expand: full X × dY column shard; Reduce: X column shard × full
+        // dY), yielding this rank's dW shard directly.
+        let (m, n) = x.dims2();
+        let k = dy.dims2().1;
+        charge_mm(ep, n, k, m);
+        x.matmul_tn(dy)
+    }
+
+    fn linear_fwd(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+        stage: Stage,
+    ) -> Tensor {
+        match stage {
+            Stage::Expand => col_linear_fwd(ep, self, x, w, Some(req(b, "bias shard"))),
+            Stage::Reduce => row_linear_fwd(ep, self, x, w, Some(req(b, "bias"))),
+        }
+    }
+
+    fn linear_bwd(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        w: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Tensor, Option<Tensor>) {
+        let (dx, dw, db) = match stage {
+            Stage::Expand => col_linear_bwd(ep, self, dy, x, w),
+            Stage::Reduce => row_linear_bwd(ep, self, dy, x, w),
+        };
+        (dx, dw, Some(db))
+    }
+
+    fn vec_op(&self, ep: &mut Endpoint, a: &Tensor, v: Option<&Tensor>, mul: bool) -> Tensor {
+        replicated_vec_op(ep, a, v, mul)
+    }
+
+    fn layernorm(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        gamma: Option<&Tensor>,
+        beta: Option<&Tensor>,
+        eps: f32,
+        _hidden: usize,
+    ) -> (Tensor, Tensor, Tensor) {
+        replicated_layernorm(ep, x, gamma, beta, eps)
+    }
+
+    fn layernorm_backward(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        _hidden: usize,
+    ) -> (Tensor, Option<Tensor>, Option<Tensor>) {
+        replicated_layernorm_backward(ep, dy, xhat, inv_std, gamma)
+    }
 }
 
 #[cfg(test)]

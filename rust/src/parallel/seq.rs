@@ -1,0 +1,159 @@
+//! The dense single-device implementation of [`ParallelOps`] — no
+//! communication, plain local linear algebra. This is the reference every
+//! distributed implementation is verified against shard-for-shard, *and* an
+//! ordinary leaf of the same trait: the generic block in
+//! [`crate::model::block`] cannot tell it apart from the 3-D cube.
+
+use crate::comm::Endpoint;
+use crate::dist::{ShardSpec, Stage};
+use crate::model::{local_layernorm, local_layernorm_backward};
+use crate::parallel::ParallelOps;
+use crate::tensor::Tensor;
+
+/// Single-device environment: every tensor is global, every op local.
+pub struct Seq {
+    spec: ShardSpec,
+}
+
+impl Seq {
+    pub fn new() -> Seq {
+        Seq { spec: ShardSpec::seq() }
+    }
+}
+
+impl Default for Seq {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn charge_mm(ep: &mut Endpoint, m: usize, n: usize, k: usize) {
+    ep.charge_flops(2.0 * m as f64 * n as f64 * k as f64);
+}
+
+fn req<'a>(t: Option<&'a Tensor>, name: &str) -> &'a Tensor {
+    t.unwrap_or_else(|| panic!("replicated rank owns every vector; missing {name}"))
+}
+
+// Local ops over replicated (fully rank-local) activations — shared by the
+// `Seq` implementation and `Ctx1D` (whose block-entry activations are also
+// replicated), so the cost charges and layernorm semantics cannot drift
+// between the two.
+
+pub(crate) fn replicated_vec_op(
+    ep: &mut Endpoint,
+    a: &Tensor,
+    v: Option<&Tensor>,
+    mul: bool,
+) -> Tensor {
+    ep.charge_memop(a.nominal_bytes() as f64);
+    let v = req(v, "vec_op vector");
+    if mul {
+        a.mul_row_vector(v)
+    } else {
+        a.add_row_vector(v)
+    }
+}
+
+pub(crate) fn replicated_layernorm(
+    ep: &mut Endpoint,
+    x: &Tensor,
+    gamma: Option<&Tensor>,
+    beta: Option<&Tensor>,
+    eps: f32,
+) -> (Tensor, Tensor, Tensor) {
+    ep.charge_memop(4.0 * x.nominal_bytes() as f64);
+    local_layernorm(x, req(gamma, "ln γ"), req(beta, "ln β"), eps)
+}
+
+pub(crate) fn replicated_layernorm_backward(
+    ep: &mut Endpoint,
+    dy: &Tensor,
+    xhat: &Tensor,
+    inv_std: &Tensor,
+    gamma: Option<&Tensor>,
+) -> (Tensor, Option<Tensor>, Option<Tensor>) {
+    ep.charge_memop(4.0 * dy.nominal_bytes() as f64);
+    let (dx, dg, db) = local_layernorm_backward(dy, xhat, inv_std, req(gamma, "ln γ"));
+    (dx, Some(dg), Some(db))
+}
+
+impl ParallelOps for Seq {
+    fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    fn matmul_nn(&self, ep: &mut Endpoint, x: &Tensor, w: &Tensor, _stage: Stage) -> Tensor {
+        let (m, n) = x.dims2();
+        let k = w.dims2().1;
+        charge_mm(ep, m, k, n);
+        x.matmul(w)
+    }
+
+    fn matmul_nt(&self, ep: &mut Endpoint, dy: &Tensor, w: &Tensor, _stage: Stage) -> Tensor {
+        let (m, k) = dy.dims2();
+        let n = w.dims2().0;
+        charge_mm(ep, m, n, k);
+        dy.matmul_nt(w)
+    }
+
+    fn matmul_tn(&self, ep: &mut Endpoint, x: &Tensor, dy: &Tensor, _stage: Stage) -> Tensor {
+        let (m, n) = x.dims2();
+        let k = dy.dims2().1;
+        charge_mm(ep, n, k, m);
+        x.matmul_tn(dy)
+    }
+
+    fn linear_fwd(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+        stage: Stage,
+    ) -> Tensor {
+        self.matmul_nn(ep, x, w, stage).add_row_vector(req(b, "bias"))
+    }
+
+    fn linear_bwd(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        w: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Tensor, Option<Tensor>) {
+        let db = dy.sum_rows();
+        let dx = self.matmul_nt(ep, dy, w, stage);
+        let dw = self.matmul_tn(ep, x, dy, stage);
+        (dx, dw, Some(db))
+    }
+
+    fn vec_op(&self, ep: &mut Endpoint, a: &Tensor, v: Option<&Tensor>, mul: bool) -> Tensor {
+        replicated_vec_op(ep, a, v, mul)
+    }
+
+    fn layernorm(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        gamma: Option<&Tensor>,
+        beta: Option<&Tensor>,
+        eps: f32,
+        _hidden: usize,
+    ) -> (Tensor, Tensor, Tensor) {
+        replicated_layernorm(ep, x, gamma, beta, eps)
+    }
+
+    fn layernorm_backward(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        _hidden: usize,
+    ) -> (Tensor, Option<Tensor>, Option<Tensor>) {
+        replicated_layernorm_backward(ep, dy, xhat, inv_std, gamma)
+    }
+}

@@ -23,25 +23,47 @@
 
 use crate::collectives::{all_gather, broadcast, reduce, reduce_scatter};
 use crate::comm::Endpoint;
-use crate::dist::{DiagVec3D, Dirs, Layout3D, Split};
+use crate::dist::{DiagVec3D, Dirs, Layout3D, ShardSpec, Split, Stage};
+use crate::parallel::ParallelOps;
 use crate::tensor::Tensor;
 use crate::topology::{Coord, Cube};
 
-/// Per-rank context for 3-D operations: the cube geometry and this rank's
-/// coordinate. Construct once per worker with [`Ctx3D::new`].
+/// Per-rank context for 3-D operations: the cube geometry, this rank's
+/// coordinate, and the block-entry direction triple `d0` the trait
+/// implementation stages its layers under. Construct once per worker with
+/// [`Ctx3D::new`] (canonical `d0`) or [`Ctx3D::with_dirs`]. The free
+/// functions below take explicit `dirs` and ignore `d0` — they are the
+/// paper's raw Algorithms 1–8; `d0` only anchors the [`ParallelOps`] view.
 pub struct Ctx3D {
     pub cube: Cube,
     pub coord: Coord,
+    pub d0: Dirs,
+    spec: ShardSpec,
 }
 
 impl Ctx3D {
     pub fn new(cube: Cube, rank: usize) -> Self {
+        Self::with_dirs(cube, rank, Dirs::canonical())
+    }
+
+    pub fn with_dirs(cube: Cube, rank: usize, d0: Dirs) -> Self {
+        d0.assert_distinct();
         let coord = cube.coord_of(rank);
-        Ctx3D { cube, coord }
+        let spec = ShardSpec::threed_with_dirs(cube.edge(), rank, d0);
+        Ctx3D { cube, coord, d0, spec }
     }
 
     pub fn p(&self) -> usize {
         self.cube.edge()
+    }
+
+    /// The direction triple a `stage` linear runs under: `Expand` uses the
+    /// block-entry `d0`, `Reduce` the swapped triple — so two chained
+    /// linears return the activation to its entry layout (§3.2). Delegates
+    /// to [`ShardSpec::stage_dirs`] so the layout and ops sides share one
+    /// Stage→Dirs mapping.
+    pub fn stage_dirs(&self, stage: Stage) -> Dirs {
+        self.spec.stage_dirs(stage).expect("cube spec always has dirs")
     }
 }
 
@@ -155,9 +177,21 @@ pub fn mm_nn_backward(
     dirs.assert_distinct();
     // Shared gather: Ċ along dC merges the output's inner row split.
     let dc_full = gather_merge(ep, ctx, dc, Layout3D::output(dirs), dirs.c); // (M/p, K/p)
+    let da = da_from_dc_full(ep, ctx, &dc_full, b, dirs);
+    let db = db_from_dc_full(ep, ctx, &dc_full, a, dirs);
+    (da, db)
+}
 
-    // Ȧ = Ċ·Bᵀ : gather B along dB (merging its inner col split), local NT,
-    // reduce-scatter along dA splitting rows -> input layout.
+/// `Ȧ = Ċ·Bᵀ` from the already-gathered `Ċ`: gather B along dB (merging
+/// its inner col split), local NT, reduce-scatter along dA splitting rows
+/// → input layout.
+fn da_from_dc_full(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    dc_full: &Tensor,
+    b: &Tensor,
+    dirs: Dirs,
+) -> Tensor {
     let b_full = gather_merge(ep, ctx, b, Layout3D::weight(dirs), dirs.b); // (N/p, K/p)
     {
         let (m, kk) = dc_full.dims2();
@@ -165,20 +199,57 @@ pub fn mm_nn_backward(
         charge_mm(ep, m, n, kk);
     }
     let da_partial = dc_full.matmul_nt(&b_full); // (M/p, N/p)
-    let da = reduce_scatter_split(ep, ctx, da_partial, dirs.a, true);
+    reduce_scatter_split(ep, ctx, da_partial, dirs.a, true)
+}
 
-    // Ḃ = Aᵀ·Ċ : gather A along dA, local TN, reduce-scatter along dB
-    // splitting *columns* -> weight layout (cols split Two(dA, dB)).
+/// `Ḃ = Aᵀ·Ċ` from the already-gathered `Ċ`: gather A along dA, local TN,
+/// reduce-scatter along dB splitting *columns* → weight layout (cols split
+/// `Two(dA, dB)`).
+fn db_from_dc_full(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    dc_full: &Tensor,
+    a: &Tensor,
+    dirs: Dirs,
+) -> Tensor {
     let a_full = gather_merge(ep, ctx, a, Layout3D::input(dirs), dirs.a); // (M/p, N/p)
     {
         let (m, n) = a_full.dims2();
         let kk = dc_full.dims2().1;
         charge_mm(ep, n, kk, m);
     }
-    let db_partial = a_full.matmul_tn(&dc_full); // (N/p, K/p)
-    let db = reduce_scatter_split(ep, ctx, db_partial, dirs.b, false);
+    let db_partial = a_full.matmul_tn(dc_full); // (N/p, K/p)
+    reduce_scatter_split(ep, ctx, db_partial, dirs.b, false)
+}
 
-    (da, db)
+/// The `Ȧ = Ċ·Bᵀ` half of Algorithm 2 on its own — the standalone
+/// input-gradient form ([`crate::parallel::ParallelOps::matmul_nt`]).
+/// [`mm_nn_backward`] fuses both halves to share the `Ċ` gather; use it
+/// when both gradients are needed.
+pub fn mm_nn_backward_da(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    dc: &Tensor,
+    b: &Tensor,
+    dirs: Dirs,
+) -> Tensor {
+    dirs.assert_distinct();
+    let dc_full = gather_merge(ep, ctx, dc, Layout3D::output(dirs), dirs.c); // (M/p, K/p)
+    da_from_dc_full(ep, ctx, &dc_full, b, dirs)
+}
+
+/// The `Ḃ = Aᵀ·Ċ` half of Algorithm 2 on its own — the standalone
+/// weight-gradient form ([`crate::parallel::ParallelOps::matmul_tn`]).
+pub fn mm_nn_backward_db(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    dc: &Tensor,
+    a: &Tensor,
+    dirs: Dirs,
+) -> Tensor {
+    dirs.assert_distinct();
+    let dc_full = gather_merge(ep, ctx, dc, Layout3D::output(dirs), dirs.c); // (M/p, K/p)
+    db_from_dc_full(ep, ctx, &dc_full, a, dirs)
 }
 
 // ---------------------------------------------------------------------
@@ -555,6 +626,98 @@ pub fn layernorm_backward(
     };
     ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
     (dx, dgamma, dbeta)
+}
+
+/// The paper's semantics for the trait: a `stage` linear is Algorithm 1
+/// under [`Ctx3D::stage_dirs`] with its bias applied by Algorithm 7 under
+/// the *output* directions; backward is Algorithm 8 then Algorithm 2 (the
+/// fused form, sharing the `dY` gather). Layernorm and `vec_op` operate on
+/// entry-layout (`input(d0)`) activations.
+impl ParallelOps for Ctx3D {
+    fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    fn matmul_nn(&self, ep: &mut Endpoint, x: &Tensor, w: &Tensor, stage: Stage) -> Tensor {
+        mm_nn(ep, self, x, w, self.stage_dirs(stage))
+    }
+
+    fn matmul_nt(&self, ep: &mut Endpoint, dy: &Tensor, w: &Tensor, stage: Stage) -> Tensor {
+        mm_nn_backward_da(ep, self, dy, w, self.stage_dirs(stage))
+    }
+
+    fn matmul_tn(&self, ep: &mut Endpoint, x: &Tensor, dy: &Tensor, stage: Stage) -> Tensor {
+        mm_nn_backward_db(ep, self, dy, x, self.stage_dirs(stage))
+    }
+
+    fn matmul_nn_backward(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        w: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Tensor) {
+        mm_nn_backward(ep, self, dy, x, w, self.stage_dirs(stage))
+    }
+
+    fn linear_fwd(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+        stage: Stage,
+    ) -> Tensor {
+        let dirs = self.stage_dirs(stage);
+        let y = mm_nn(ep, self, x, w, dirs);
+        // Bias lives on the diagonal of the *output* directions (Fig. 5).
+        vec_op(ep, self, &y, b, dirs.swapped(), false)
+    }
+
+    fn linear_bwd(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        w: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Tensor, Option<Tensor>) {
+        let dirs = self.stage_dirs(stage);
+        // Algorithm 8 under the output directions, then the fused
+        // Algorithm 2 (shared dY gather) under the layer's own directions.
+        let (d_mm, db) = add_vec_backward(ep, self, dy, dirs.swapped());
+        let (dx, dw) = mm_nn_backward(ep, self, &d_mm, x, w, dirs);
+        (dx, dw, db)
+    }
+
+    fn vec_op(&self, ep: &mut Endpoint, a: &Tensor, v: Option<&Tensor>, mul: bool) -> Tensor {
+        vec_op(ep, self, a, v, self.d0, mul)
+    }
+
+    fn layernorm(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        gamma: Option<&Tensor>,
+        beta: Option<&Tensor>,
+        eps: f32,
+        hidden: usize,
+    ) -> (Tensor, Tensor, Tensor) {
+        layernorm(ep, self, x, gamma, beta, self.d0, eps, hidden)
+    }
+
+    fn layernorm_backward(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        hidden: usize,
+    ) -> (Tensor, Option<Tensor>, Option<Tensor>) {
+        layernorm_backward(ep, self, dy, xhat, inv_std, gamma, self.d0, hidden)
+    }
 }
 
 #[cfg(test)]

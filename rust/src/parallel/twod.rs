@@ -18,6 +18,8 @@
 
 use crate::collectives::{all_reduce, broadcast, broadcast_bw, reduce_bw};
 use crate::comm::Endpoint;
+use crate::dist::{ShardSpec, Stage};
+use crate::parallel::ParallelOps;
 use crate::tensor::Tensor;
 use crate::topology::Mesh;
 
@@ -26,12 +28,14 @@ pub struct Ctx2D {
     pub mesh: Mesh,
     pub row: usize,
     pub col: usize,
+    spec: ShardSpec,
 }
 
 impl Ctx2D {
     pub fn new(mesh: Mesh, rank: usize) -> Self {
         let (row, col) = mesh.coord_of(rank);
-        Ctx2D { mesh, row, col }
+        let spec = ShardSpec::twod(mesh.edge(), rank);
+        Ctx2D { mesh, row, col, spec }
     }
 
     pub fn q(&self) -> usize {
@@ -235,10 +239,8 @@ pub fn layernorm_backward(
     xhat: &Tensor,
     inv_std: &Tensor,
     gamma_chunk: Option<&Tensor>,
-    eps_unused: f32,
     n_global_cols: usize,
 ) -> (Tensor, Option<Tensor>, Option<Tensor>) {
-    let _ = eps_unused;
     let (rows, cols) = dy.dims2();
     ep.charge_memop(3.0 * dy.nominal_bytes() as f64);
     let dbeta = reduce_bw(ep, &ctx.col_group(), 0, &dy.sum_rows());
@@ -274,6 +276,83 @@ pub fn layernorm_backward(
     };
     ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
     (dx, dgamma, dbeta)
+}
+
+/// SUMMA semantics for the trait: both stages run the same block-distributed
+/// forms (the mesh has no column/row asymmetry); biases and γ/β live on mesh
+/// row 0 and are broadcast down columns on use.
+impl ParallelOps for Ctx2D {
+    fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    fn matmul_nn(&self, ep: &mut Endpoint, x: &Tensor, w: &Tensor, _stage: Stage) -> Tensor {
+        summa_nn(ep, self, x, w)
+    }
+
+    fn matmul_nt(&self, ep: &mut Endpoint, dy: &Tensor, w: &Tensor, _stage: Stage) -> Tensor {
+        summa_nt(ep, self, dy, w)
+    }
+
+    fn matmul_tn(&self, ep: &mut Endpoint, x: &Tensor, dy: &Tensor, _stage: Stage) -> Tensor {
+        summa_tn(ep, self, x, dy)
+    }
+
+    fn linear_fwd(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+        _stage: Stage,
+    ) -> Tensor {
+        linear_fwd(ep, self, x, w, b, true)
+    }
+
+    fn linear_bwd(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        w: &Tensor,
+        _stage: Stage,
+    ) -> (Tensor, Tensor, Option<Tensor>) {
+        linear_bwd(ep, self, dy, x, w)
+    }
+
+    fn vec_op(&self, ep: &mut Endpoint, a: &Tensor, v: Option<&Tensor>, mul: bool) -> Tensor {
+        let full = bcast_bias(ep, self, v);
+        ep.charge_memop(a.nominal_bytes() as f64);
+        if mul {
+            a.mul_row_vector(&full)
+        } else {
+            a.add_row_vector(&full)
+        }
+    }
+
+    fn layernorm(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        gamma: Option<&Tensor>,
+        beta: Option<&Tensor>,
+        eps: f32,
+        hidden: usize,
+    ) -> (Tensor, Tensor, Tensor) {
+        layernorm(ep, self, x, gamma, beta, eps, hidden)
+    }
+
+    fn layernorm_backward(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        hidden: usize,
+    ) -> (Tensor, Option<Tensor>, Option<Tensor>) {
+        layernorm_backward(ep, self, dy, xhat, inv_std, gamma, hidden)
+    }
 }
 
 #[cfg(test)]

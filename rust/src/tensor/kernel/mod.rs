@@ -42,21 +42,24 @@
 //! # Threading model & determinism
 //!
 //! Since PR 3 the cache-block driver is multi-core: [`gemm_strided`] runs on
-//! a small persistent worker pool ([`threads`]), sharding each `(jc, pc)`
-//! cache block across participants — the packed-B block is built
-//! cooperatively (atomic claims over its `NR`-wide panels, then a barrier
-//! makes it read-only), and `MR`-row strips of C are claimed with a second
-//! atomic counter, each computed from the claimant's *own* thread-local
-//! A-panel scratch. The thread count is selected **once at startup**
-//! (`CUBIC_THREADS=` override → config/CLI request → available
-//! parallelism); [`gemm_strided_t`] drives an explicit count for tests and
-//! benches.
+//! a small persistent worker pool ([`threads`]), sharding each
+//! `(stripe, pc)` phase across participants — the n axis is cut into
+//! [`JC_STRIPE`]-wide stripes of `NC` blocks, the stripe's packed-B panels
+//! are built cooperatively (atomic claims over `NR`-wide panels, then a
+//! barrier makes them read-only), and `(NC-block, MR-strip)` *tiles* of C
+//! are claimed with a second atomic counter, each computed from the
+//! claimant's *own* thread-local A-panel scratch. Tile (not just
+//! row-strip) claims are what keep wide-n/short-m gemms on every core.
+//! The thread count is selected **once at startup** (`CUBIC_THREADS=`
+//! override → config/CLI request → available parallelism);
+//! [`gemm_strided_t`] drives an explicit count for tests and benches.
 //!
-//! **Determinism:** every C element belongs to exactly one strip, a strip
-//! has exactly one writer per `(jc, pc)` block, packed panel contents are
-//! identical to the serial driver's, and the `pc` (k-block) accumulation
-//! loop stays outside the parallel region, separated by barriers — so each
-//! element sees the same floating-point op sequence in the same order
+//! **Determinism:** every C element belongs to exactly one tile per phase,
+//! a tile has exactly one writer, packed panel contents are identical to
+//! the serial driver's, and the `pc` (k-block) accumulation loop stays
+//! outside the parallel region, separated by barriers (stripes partition
+//! the columns, so they never reorder an element's contributions) — so
+//! each element sees the same floating-point op sequence in the same order
 //! regardless of thread count. Output is **bit-exact for every thread
 //! count** (pinned by `tests/kernel_threads.rs` across
 //! `CUBIC_THREADS ∈ {1, 2, 3, 4, 8}`), which is also what makes the
@@ -97,6 +100,14 @@ pub const KC: usize = 256;
 pub const MC: usize = 128;
 /// Cache-block width (n): columns of B packed per outer block.
 pub const NC: usize = 256;
+
+/// Columns of B packed per *parallel stripe* — the width of the shared
+/// packed-B buffer the threaded driver claims work from. A stripe holds
+/// `JC_STRIPE / NC` cache blocks, so wide-n/short-m gemms expose
+/// `(m/MR) · (stripe_cols/NC)` parallel tiles per k-phase instead of the
+/// old per-`NC`-block `m/MR`. Bounded so the shared buffer stays ≤
+/// `KC · JC_STRIPE` floats (4 MiB) regardless of n.
+pub const JC_STRIPE: usize = NC * 16;
 
 /// A packed-panel microkernel:
 /// `C[MR×NR] += Apanel(kc×MR) · Bpanel(kc×NR)`, with C at row stride `ldc`.

@@ -4,36 +4,43 @@
 //!
 //! ## Work decomposition
 //!
-//! For each `(jc, pc)` cache block of the [`super::gemm_strided`] loop nest:
+//! The n axis is cut into [`JC_STRIPE`]-wide *stripes* (16 `NC` cache
+//! blocks; the last stripe may be ragged). For each `(stripe, pc)` phase of
+//! the [`super::gemm_strided`] loop nest:
 //!
-//! 1. **Shared B pack** — the packed-B block for `(jc, pc)` is built once
-//!    into a buffer shared by all participants; its `NR`-wide micro-panels
-//!    are claimed with an atomic counter, so packing itself is parallel and
-//!    every panel is written by exactly one thread. After a barrier the
-//!    block is read-only for the rest of the `(jc, pc)` phase.
-//! 2. **Strip claims** — participants claim disjoint `MR`-row strips of C
-//!    with a second atomic counter (work stealing degenerates to an atomic
-//!    fetch-add: idle threads keep claiming until the counter runs out, so
-//!    load imbalance self-corrects without deques). A claimant packs its
-//!    own A micro-panel into *its* thread-local scratch and sweeps the
-//!    microkernel across all B panels of the block.
-//! 3. **Barrier + reset** — one barrier ends the block (the shared packed-B
-//!    buffer may be overwritten next), the barrier leader resets both claim
+//! 1. **Shared B pack** — the packed-B panels of the whole stripe are built
+//!    once into a buffer shared by all participants; its `NR`-wide
+//!    micro-panels are claimed with an atomic counter, so packing itself is
+//!    parallel and every panel is written by exactly one thread. After a
+//!    barrier the stripe is read-only for the rest of the phase.
+//! 2. **Tile claims** — participants claim disjoint `(NC-block, MR-strip)`
+//!    tiles of C with a second atomic counter (work stealing degenerates to
+//!    an atomic fetch-add: idle threads keep claiming until the counter
+//!    runs out, so load imbalance self-corrects without deques). A claimant
+//!    packs its own A micro-panel into *its* thread-local scratch and
+//!    sweeps the microkernel across its block's B panels. Claiming tiles —
+//!    not just row strips — is what keeps wide-n/short-m gemms parallel:
+//!    an 8-row, 4096-column gemm exposes 16 tiles per phase where the old
+//!    per-`NC`-block strip claims exposed one.
+//! 3. **Barrier + reset** — one barrier ends the phase (the shared packed-B
+//!    stripe may be overwritten next), the barrier leader resets both claim
 //!    counters, and a second barrier publishes the reset.
 //!
 //! ## Determinism (bit-exact for every thread count)
 //!
-//! Each output element belongs to exactly one `MR`-row strip, and a strip is
-//! computed by exactly one thread per `(jc, pc)` block from packed panels
-//! whose contents are identical to the serial driver's (same `pack_a` /
-//! `pack_b` calls, same zero padding). The `pc` (k-block) loop is *outside*
-//! the parallel claims and separated by barriers, so every element receives
-//! its `C +=` k-block contributions in the same ascending-`pc` order as the
-//! serial driver. Threads therefore only change *which core* computes a
-//! strip and *when* — never the per-element floating-point op sequence — and
-//! the output is bit-identical for every thread count, including 1. The
-//! parity battery in `tests/kernel_threads.rs` pins this across
-//! `CUBIC_THREADS ∈ {1, 2, 3, 4, 8}`.
+//! Each output element belongs to exactly one tile per phase, and a tile is
+//! computed by exactly one thread from packed panels whose contents are
+//! identical to the serial driver's (same `pack_a` / `pack_b` calls, same
+//! zero padding). The `pc` (k-block) loop is *outside* the parallel claims
+//! and separated by barriers, so every element receives its `C +=` k-block
+//! contributions in the same ascending-`pc` order as the serial driver —
+//! and stripes partition the columns, so striping never reorders any
+//! element's contributions either. Threads therefore only change *which
+//! core* computes a tile and *when* — never the per-element floating-point
+//! op sequence — and the output is bit-identical for every thread count,
+//! including 1. The parity battery in `tests/kernel_threads.rs` pins this
+//! across `CUBIC_THREADS ∈ {1, 2, 3, 4, 8}`, including wide-n/short-m
+//! shapes and n spanning multiple stripes.
 //!
 //! ## Accounting
 //!
@@ -55,7 +62,7 @@
 //! overrides, then the config/CLI request ([`request_threads`]), then
 //! `std::thread::available_parallelism()`.
 
-use super::{pack, Kernel, KC, MR, NC, NR};
+use super::{pack, Kernel, JC_STRIPE, KC, MR, NC, NR};
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Barrier, Condvar, Mutex, OnceLock};
@@ -146,7 +153,7 @@ pub(super) struct GemmCtx {
     brs: usize,
     bcs: usize,
     c: *mut f32,
-    /// Shared packed-B block, capacity `>= min(KC,k) * min(NC, n_pad)`.
+    /// Shared packed-B stripe, capacity `>= min(KC,k) * min(JC_STRIPE, n_pad)`.
     bp: *mut f32,
     participants: usize,
     barrier: Barrier,
@@ -225,9 +232,9 @@ impl GemmCtx {
     }
 }
 
-/// The SPMD participant body: the full `(jc, pc)` cache-block loop with
-/// cooperative B packing and strip claims. Every participant — pool workers
-/// and the caller alike — runs exactly this.
+/// The SPMD participant body: the full `(stripe, pc)` phase loop with
+/// cooperative B packing and `(NC-block, MR-strip)` tile claims. Every
+/// participant — pool workers and the caller alike — runs exactly this.
 fn run_participant(ctx: &GemmCtx, _me: usize) {
     let (m, n, kdim) = (ctx.m, ctx.n, ctx.kdim);
     let kern = ctx.kern;
@@ -240,12 +247,13 @@ fn run_participant(ctx: &GemmCtx, _me: usize) {
     let mut local_pack = 0u64;
     A_SCRATCH.with(|s| {
         let ap_buf = &mut *s.borrow_mut();
-        for jc in (0..n).step_by(NC) {
-            let nc = (jc + NC).min(n) - jc;
-            let npanels = nc.div_ceil(NR);
+        for jcs in (0..n).step_by(JC_STRIPE) {
+            let ncs = (jcs + JC_STRIPE).min(n) - jcs; // stripe width
+            let npanels = ncs.div_ceil(NR);
+            let njb = ncs.div_ceil(NC); // NC cache blocks in the stripe
             for pc in (0..kdim).step_by(KC) {
                 let kc = (pc + KC).min(kdim) - pc;
-                // Phase 1: cooperatively pack the shared B block. Claims
+                // Phase 1: cooperatively pack the stripe's B panels. Claims
                 // are disjoint panels, so each region has one writer.
                 loop {
                     let pi = ctx.panel_next.fetch_add(1, Ordering::Relaxed);
@@ -253,7 +261,7 @@ fn run_participant(ctx: &GemmCtx, _me: usize) {
                         break;
                     }
                     let jr = pi * NR;
-                    let nr_eff = NR.min(nc - jr);
+                    let nr_eff = NR.min(ncs - jr);
                     // SAFETY: panel `pi` occupies bp[pi*kc*NR .. (pi+1)*kc*NR],
                     // within the buffer (resized to >= kc * npanels*NR by the
                     // caller before publishing); no other participant holds
@@ -261,34 +269,43 @@ fn run_participant(ctx: &GemmCtx, _me: usize) {
                     let dst = unsafe {
                         std::slice::from_raw_parts_mut(ctx.bp.add(pi * kc * NR), kc * NR)
                     };
-                    pack::pack_b(b, ctx.brs, ctx.bcs, pc, kc, jc + jr, nr_eff, dst);
+                    pack::pack_b(b, ctx.brs, ctx.bcs, pc, kc, jcs + jr, nr_eff, dst);
                     local_pack += (kc * NR * std::mem::size_of::<f32>()) as u64;
                 }
-                ctx.sync(); // B block fully packed before anyone reads it
-                // Phase 2: claim disjoint MR-row strips of C.
+                ctx.sync(); // the stripe is fully packed before anyone reads it
+                // Phase 2: claim disjoint (NC-block, MR-strip) tiles of C.
+                // Consecutive claims walk strips within one block first, so
+                // a thread keeps reusing the same hot B panels.
+                let ntiles = njb * nstrips;
                 loop {
-                    let s = ctx.strip_next.fetch_add(1, Ordering::Relaxed);
-                    if s >= nstrips {
+                    let t = ctx.strip_next.fetch_add(1, Ordering::Relaxed);
+                    if t >= ntiles {
                         break;
                     }
-                    let ir = s * MR;
+                    let jb = t / nstrips;
+                    let strip = t % nstrips;
+                    let jc = jb * NC; // stripe-relative block start
+                    let nc = (jc + NC).min(ncs) - jc;
+                    let ir = strip * MR;
                     let mr_eff = MR.min(m - ir);
                     ap_buf.resize(kc * MR, 0.0);
                     pack::pack_a(a, ctx.ars, ctx.aks, ir, mr_eff, pc, kc, ap_buf);
                     local_pack += (kc * MR * std::mem::size_of::<f32>()) as u64;
                     let apan = ap_buf.as_ptr();
-                    for pi in 0..npanels {
+                    // NC % NR == 0, so block panel indices are contiguous.
+                    let p0 = jc / NR;
+                    for pi in p0..p0 + nc.div_ceil(NR) {
                         let jr = pi * NR;
-                        let nr_eff = NR.min(nc - jr);
+                        let nr_eff = NR.min(ncs - jr);
                         let bpan = unsafe { ctx.bp.add(pi * kc * NR) } as *const f32;
-                        let (row, col) = (ir, jc + jr);
+                        let (row, col) = (ir, jcs + jr);
                         if mr_eff == MR && nr_eff == NR {
                             // SAFETY: panels hold kc*MR / kc*NR packed f32s
                             // (fully written above; the barrier published
                             // the B panels); the full-tile condition
                             // guarantees the MR×NR window at c[row*n + col]
                             // with ldc = n is in bounds and owned by this
-                            // strip; `kern` came from `available`, so its
+                            // tile; `kern` came from `available`, so its
                             // ISA features are present.
                             unsafe {
                                 (kern.mk)(kc, apan, bpan, ctx.c.add(row * n + col), n);
@@ -306,7 +323,7 @@ fn run_participant(ctx: &GemmCtx, _me: usize) {
                             for (r, trow) in tile.chunks_exact(NR).take(mr_eff).enumerate() {
                                 // SAFETY: rows row..row+mr_eff, cols
                                 // col..col+nr_eff are in bounds and owned by
-                                // this strip.
+                                // this tile.
                                 let cp = unsafe { ctx.c.add((row + r) * n + col) };
                                 for (j, &tv) in trow.iter().take(nr_eff).enumerate() {
                                     unsafe { *cp.add(j) += tv };
@@ -316,9 +333,10 @@ fn run_participant(ctx: &GemmCtx, _me: usize) {
                         local_flops += 2 * (mr_eff * nr_eff * kc) as u64;
                     }
                 }
-                // Phase 3: all tiles of this (jc, pc) block are written (the
-                // B buffer may be overwritten next block); the leader resets
-                // the claim counters and a second barrier publishes that.
+                // Phase 3: all tiles of this (stripe, pc) phase are written
+                // (the B buffer may be overwritten next phase); the leader
+                // resets the claim counters and a second barrier publishes
+                // that.
                 if ctx.sync_leader() {
                     ctx.panel_next.store(0, Ordering::Relaxed);
                     ctx.strip_next.store(0, Ordering::Relaxed);
@@ -501,14 +519,20 @@ pub(super) fn execute(
     c: &mut [f32],
     threads: usize,
 ) -> (u64, u64) {
-    let want = threads.clamp(1, MAX_THREADS).min(m.div_ceil(MR));
+    // Participants are capped by the tiles one phase can expose: row strips
+    // × NC blocks, with the block count bounded by a stripe's width
+    // (wide-n/short-m gemms get their parallelism from the block axis —
+    // the ROADMAP follow-on).
+    let want = threads
+        .clamp(1, MAX_THREADS)
+        .min(m.div_ceil(MR) * n.div_ceil(NC).min(JC_STRIPE / NC));
     B_SCRATCH.with(|s| {
         let bp_buf = &mut *s.borrow_mut();
-        // One resize covers every (jc, pc) block of this job; the
+        // One resize covers every (stripe, pc) phase of this job; the
         // thread-local keeps its capacity, so steady state allocates 0.
         let max_kc = KC.min(kdim);
-        let max_ncpad = NC.min(n.div_ceil(NR) * NR);
-        bp_buf.resize(max_kc * max_ncpad, 0.0);
+        let max_stripe_pad = JC_STRIPE.min(n.div_ceil(NR) * NR);
+        bp_buf.resize(max_kc * max_stripe_pad, 0.0);
         let cp = c.as_mut_ptr();
         let bpp = bp_buf.as_mut_ptr();
         if want > 1 {

@@ -389,6 +389,27 @@ impl Tensor {
         Tensor::from_vec(&[rows, cols], out)
     }
 
+    /// Copy the sub-block `[r0..r0+rows, c0..c0+cols]` into a
+    /// caller-supplied `(rows, cols)` tensor — the pooled-buffer
+    /// counterpart of [`Tensor::block`] + [`Tensor::compact`], used by
+    /// the activation scatter so a recycled buffer can receive the window
+    /// without a fresh allocation. Phantom source leaves `out` untouched.
+    pub fn block_into(&self, r0: usize, c0: usize, rows: usize, cols: usize, out: &mut Tensor) {
+        let (r, c) = self.dims2();
+        assert!(r0 + rows <= r && c0 + cols <= c,
+            "block_into [{r0}+{rows}, {c0}+{cols}] out of bounds for {:?}", self.shape);
+        assert_eq!(out.shape(), &[rows, cols], "block_into output shape mismatch");
+        if self.is_phantom() {
+            return;
+        }
+        let dst = out.data_mut();
+        let src = self.data();
+        for i in 0..rows {
+            let soff = (r0 + i) * c + c0;
+            dst[i * cols..(i + 1) * cols].copy_from_slice(&src[soff..soff + cols]);
+        }
+    }
+
     /// Write `src` into the sub-block at `[r0, c0]` of a rank-2 tensor.
     /// Copy-on-write: if `src` is a view of this tensor's own buffer, the
     /// un-share happens first, so `src` is read as a consistent snapshot.

@@ -233,16 +233,16 @@ mod tests {
         let dense = init_dense_blocks(&cfg, 5);
         for rank in 0..8 {
             let env = ParEnv::new(Parallelism::ThreeD, 2, rank);
-            let blocks = env.shard_blocks(&dense, rank);
+            let blocks = env.shard_blocks(&dense);
             save_rank(&dir, rank, &blocks, &[]).unwrap();
         }
         // Load into freshly re-inited (different-seed) shards; must equal
         // the original shards afterwards.
         for rank in 0..8 {
             let env = ParEnv::new(Parallelism::ThreeD, 2, rank);
-            let want = env.shard_blocks(&dense, rank);
+            let want = env.shard_blocks(&dense);
             let other = init_dense_blocks(&cfg, 99);
-            let mut got = env.shard_blocks(&other, rank);
+            let mut got = env.shard_blocks(&other);
             load_rank(&dir, rank, &mut got).unwrap();
             for (g, w) in got.iter().zip(want.iter()) {
                 assert_eq!(g.w_qkv, w.w_qkv);
@@ -259,11 +259,11 @@ mod tests {
         let cfg = ModelConfig::tiny();
         let dense = init_dense_blocks(&cfg, 5);
         let env = ParEnv::new(Parallelism::ThreeD, 2, 0);
-        let blocks = env.shard_blocks(&dense, 0);
+        let blocks = env.shard_blocks(&dense);
         save_rank(&dir, 0, &blocks, &[]).unwrap();
         // Loading rank 0's 3-D shards into a Seq model must fail on shape.
         let env_seq = ParEnv::new(Parallelism::Seq, 1, 0);
-        let mut seq_blocks = env_seq.shard_blocks(&dense, 0);
+        let mut seq_blocks = env_seq.shard_blocks(&dense);
         assert!(load_rank(&dir, 0, &mut seq_blocks).is_err());
     }
 }

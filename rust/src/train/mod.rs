@@ -205,7 +205,7 @@ impl TrainerRank {
     pub fn new(cfg: &CubicConfig, rank: usize) -> TrainerRank {
         let env = ParEnv::new(cfg.parallelism, cfg.edge, rank);
         let dense = crate::model::init_dense_blocks(&cfg.model, cfg.train.seed);
-        let blocks = env.shard_blocks(&dense, rank);
+        let blocks = env.shard_blocks(&dense);
         // Boundary layers: identical init on every rank.
         let mut brng = Xoshiro256::seed_from_u64(cfg.train.seed ^ 0xB0DA0);
         let emb = Embedding::init(&cfg.model, &mut brng);
@@ -254,10 +254,10 @@ impl TrainerRank {
 
         // Boundary: replicated embedding.
         let x_global = self.emb.fwd(&tokens, m.seq);
-        let x_local = self.env.scatter_activation(&x_global, self.rank);
+        let x_local = self.env.scatter_activation(ep, &x_global);
 
         // Distributed core.
-        let (y_local, caches) = core_fwd(ep, &self.env, &self.blocks, &x_local, m);
+        let (y_local, caches) = core_fwd(ep, self.env.ops(), &self.blocks, &x_local, m);
         let y_global = self.env.gather_activation(ep, &y_local, rows, m.hidden);
 
         // Boundary: replicated head + loss (identical on all ranks).
@@ -265,9 +265,9 @@ impl TrainerRank {
             self.head.loss_and_grads(&y_global, &targets, m.eps);
 
         // Distributed backward.
-        let dy_local = self.env.scatter_activation(&dy_global, self.rank);
+        let dy_local = self.env.scatter_activation(ep, &dy_global);
         let (dx_local, block_grads) =
-            core_bwd(ep, &self.env, &self.blocks, &caches, &dy_local, m);
+            core_bwd(ep, self.env.ops(), &self.blocks, &caches, &dy_local, m);
 
         // Boundary backward: embedding grads from the gathered dx.
         let dx_global = self.env.gather_activation(ep, &dx_local, rows, m.hidden);

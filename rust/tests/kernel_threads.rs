@@ -20,7 +20,7 @@ use cubic::comm::pool::{BufferPool, Takeout};
 use cubic::comm::NetModel;
 use cubic::rng::Xoshiro256;
 use cubic::spmd::run_spmd;
-use cubic::tensor::kernel::{self, gemm_strided_t, Kernel, KC};
+use cubic::tensor::kernel::{self, gemm_strided_t, Kernel, JC_STRIPE, KC, NC};
 use cubic::tensor::Tensor;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -139,6 +139,49 @@ fn thread_parity_256_cube_all_forms() {
     for form in [Form::Nn, Form::Nt, Form::Tn] {
         check_parity(kern, form, 256, 256, 256);
     }
+}
+
+#[test]
+fn thread_parity_wide_n_short_m_all_forms() {
+    // The jc-parallel geometry (ROADMAP follow-on): few (or one) MR row
+    // strips but many NC blocks, so all the parallelism comes from the
+    // block axis of the tile claims. Includes an n that crosses a stripe
+    // boundary with a ragged tail, and k > KC for the multi-k-block
+    // accumulation order.
+    let kern = kernel::selected();
+    for form in [Form::Nn, Form::Nt, Form::Tn] {
+        check_parity(kern, form, 8, 4 * NC, 64); // one strip, four blocks
+        check_parity(kern, form, 1, 3 * NC + 5, 33); // single-row, ragged block
+        check_parity(kern, form, 16, 2 * NC + 7, KC + 3);
+    }
+    // Stripe-boundary crossing: n > JC_STRIPE forces two (stripe, pc)
+    // phases with a ragged second stripe. One form keeps the sweep cheap.
+    check_parity(kern, Form::Nn, 4, JC_STRIPE + NC + 5, 17);
+}
+
+#[test]
+fn wide_n_short_m_engages_threads() {
+    // m = 8 is a single MR strip: the pre-stripe driver clamped this shape
+    // to one participant and always ran serial. Tile claims must now put
+    // it on the pool whenever the pool is free.
+    let kern = kernel::selected();
+    let (m, n, k) = (8, 8 * NC, 128);
+    let a = fill(31, m * k);
+    let b = fill(32, k * n);
+    let mut base = vec![0.0f32; m * n];
+    gemm_strided_t(kern, 1, m, n, k, &a, k, 1, &b, n, 1, &mut base);
+    let mut ok = false;
+    for _ in 0..50 {
+        let before = kernel::threads::threaded_jobs();
+        let mut c = vec![0.0f32; m * n];
+        gemm_strided_t(kern, 4, m, n, k, &a, k, 1, &b, n, 1, &mut c);
+        assert_eq!(c, base, "threaded wide-n run must stay bit-exact");
+        if kernel::threads::threaded_jobs() > before {
+            ok = true;
+            break;
+        }
+    }
+    assert!(ok, "wide-n/short-m gemm never ran threaded — jc parallelism is broken");
 }
 
 #[test]

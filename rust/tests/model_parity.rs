@@ -2,16 +2,31 @@
 //! SAME function under Seq, 1-D, 2-D and 3-D parallelism — outputs AND all
 //! gradients match the dense reference shard-for-shard, and end-to-end
 //! training produces the same loss curve under every parallelism.
+//!
+//! Since the `ParallelOps` redesign this is ONE generic test: the same
+//! loop drives every parallelism through the trait object, and the same
+//! `ShardSpec`/`DistTensor` assembly reconstructs globals from shards —
+//! no per-dimension gather code. Adding a parallelism means adding one
+//! `(kind, edge)` pair to `ALL_ENVS`.
 
-use cubic::comm::NetModel;
+use cubic::comm::{Endpoint, NetModel};
 use cubic::config::{CubicConfig, ModelConfig, TrainConfig};
-use cubic::dist::{DiagVec3D, Dirs, Layout2D, Layout3D};
+use cubic::dist::{DistTensor, ShardSpec, Stage, VecRole};
 use cubic::engine::run_training;
 use cubic::model::{self, BlockTensors, ParEnv};
+use cubic::parallel::{ops_for, ParallelOps};
 use cubic::rng::Xoshiro256;
 use cubic::spmd::run_spmd;
 use cubic::tensor::Tensor;
-use cubic::topology::{Cube, Mesh, Parallelism};
+use cubic::topology::Parallelism;
+
+/// Every parallelism point the crate implements, with its test edge.
+const ALL_ENVS: [(Parallelism, usize); 4] = [
+    (Parallelism::Seq, 1),
+    (Parallelism::OneD, 4),
+    (Parallelism::TwoD, 2),
+    (Parallelism::ThreeD, 2),
+];
 
 fn tiny() -> ModelConfig {
     ModelConfig { layers: 2, ..ModelConfig::tiny() }
@@ -30,20 +45,22 @@ fn seq_reference(
     seed: u64,
 ) -> (Tensor, Tensor, Vec<BlockTensors>) {
     let dense = model::init_dense_blocks(cfg, seed);
-    let blocks: Vec<BlockTensors> = dense.iter().map(|b| b.to_seq()).collect();
+    let blocks: Vec<BlockTensors> =
+        dense.iter().map(|b| b.shard(&ShardSpec::seq())).collect();
     let cfg = cfg.clone();
     let x = x.clone();
     let dy = dy.clone();
     run_spmd(1, NetModel::zero(), move |_, ep| {
-        let env = ParEnv::Seq;
-        let (y, caches) = model::core_fwd(ep, &env, &blocks, &x, &cfg);
-        let (dx, grads) = model::core_bwd(ep, &env, &blocks, &caches, &dy, &cfg);
+        let env = ParEnv::seq();
+        let (y, caches) = model::core_fwd(ep, env.ops(), &blocks, &x, &cfg);
+        let (dx, grads) = model::core_bwd(ep, env.ops(), &blocks, &caches, &dy, &cfg);
         (y, dx, grads)
     })
     .pop()
     .unwrap()
 }
 
+/// Run the core fwd+bwd under one parallelism; per-rank `(y, dx, grads)`.
 fn run_par(
     cfg: &ModelConfig,
     par: Parallelism,
@@ -59,131 +76,244 @@ fn run_par(
     run_spmd(world, NetModel::zero(), move |rank, ep| {
         let env = ParEnv::new(par, edge, rank);
         let dense = model::init_dense_blocks(&cfg2, seed);
-        let blocks = env.shard_blocks(&dense, rank);
-        let xl = env.scatter_activation(&x, rank);
-        let dyl = env.scatter_activation(&dy, rank);
-        let (y, caches) = model::core_fwd(ep, &env, &blocks, &xl, &cfg2);
-        let (dx, grads) = model::core_bwd(ep, &env, &blocks, &caches, &dyl, &cfg2);
+        let blocks = env.shard_blocks(&dense);
+        let xl = env.scatter_activation(ep, &x);
+        let dyl = env.scatter_activation(ep, &dy);
+        let (y, caches) = model::core_fwd(ep, env.ops(), &blocks, &xl, &cfg2);
+        let (dx, grads) = model::core_bwd(ep, env.ops(), &blocks, &caches, &dyl, &cfg2);
         (y, dx, grads)
     })
 }
 
 const TOL: f32 = 3e-3;
 
+type MatGet = fn(&BlockTensors) -> &Tensor;
+type VecGet = fn(&BlockTensors) -> &Option<Tensor>;
+
 #[test]
-fn oned_core_matches_seq_reference() {
+fn every_parallelism_matches_seq_reference() {
     let cfg = tiny();
+    let (h, f) = (cfg.hidden, cfg.ffn);
     let rows = cfg.batch * cfg.seq;
-    let x = randt(&[rows, cfg.hidden], 1);
-    let dy = randt(&[rows, cfg.hidden], 2);
+    let x = randt(&[rows, h], 1);
+    let dy = randt(&[rows, h], 2);
     let (y_ref, dx_ref, g_ref) = seq_reference(&cfg, &x, &dy, 42);
-    let out = run_par(&cfg, Parallelism::OneD, 4, &x, &dy, 42);
-    // Activations replicated: every rank must match the reference.
-    for (rank, (y, dx, grads)) in out.iter().enumerate() {
-        assert!(y.max_abs_diff(&y_ref) < TOL, "rank {rank} y");
-        assert!(dx.max_abs_diff(&dx_ref) < TOL, "rank {rank} dx");
-        // Replicated vector grads (ln, b_proj, b_fc2) must match directly.
+
+    let mats: [(&str, Stage, usize, usize, MatGet); 4] = [
+        ("w_qkv", Stage::Expand, h, 3 * h, |b| &b.w_qkv),
+        ("w_proj", Stage::Reduce, h, h, |b| &b.w_proj),
+        ("w_fc1", Stage::Expand, h, f, |b| &b.w_fc1),
+        ("w_fc2", Stage::Reduce, f, h, |b| &b.w_fc2),
+    ];
+    let vecs: [(&str, VecRole, usize, VecGet); 8] = [
+        ("ln1_g", VecRole::Norm, h, |b| &b.ln1_g),
+        ("ln1_b", VecRole::Norm, h, |b| &b.ln1_b),
+        ("b_qkv", VecRole::ExpandBias, 3 * h, |b| &b.b_qkv),
+        ("b_proj", VecRole::ReduceBias, h, |b| &b.b_proj),
+        ("ln2_g", VecRole::Norm, h, |b| &b.ln2_g),
+        ("ln2_b", VecRole::Norm, h, |b| &b.ln2_b),
+        ("b_fc1", VecRole::ExpandBias, f, |b| &b.b_fc1),
+        ("b_fc2", VecRole::ReduceBias, h, |b| &b.b_fc2),
+    ];
+
+    for (par, edge) in ALL_ENVS {
+        let world = par.world_size(edge);
+        let spec0 = ShardSpec::for_parallelism(par, edge, 0);
+        let out = run_par(&cfg, par, edge, &x, &dy, 42);
+
+        // Output and input gradient reassemble from every rank's shard.
+        let assemble = |pick: fn(&(Tensor, Tensor, Vec<BlockTensors>)) -> &Tensor| {
+            let parts: Vec<DistTensor> = out
+                .iter()
+                .enumerate()
+                .map(|(r, o)| {
+                    DistTensor::from_local(
+                        &ShardSpec::for_parallelism(par, edge, r),
+                        pick(o).clone(),
+                    )
+                })
+                .collect();
+            DistTensor::assemble_activation(&parts, rows, h)
+        };
+        let y = assemble(|o| &o.0);
+        let dx = assemble(|o| &o.1);
+        assert!(y.max_abs_diff(&y_ref) < TOL, "{par:?} y: {}", y.max_abs_diff(&y_ref));
+        assert!(dx.max_abs_diff(&dx_ref) < TOL, "{par:?} dx: {}", dx.max_abs_diff(&dx_ref));
+        // Replicated-activation meshes must agree on *every* rank, not
+        // just rank 0.
+        if !spec0.shards_activation() {
+            for (rank, (yr, dxr, _)) in out.iter().enumerate() {
+                assert!(yr.max_abs_diff(&y_ref) < TOL, "{par:?} rank {rank} y");
+                assert!(dxr.max_abs_diff(&dx_ref) < TOL, "{par:?} rank {rank} dx");
+            }
+        }
+
+        // Every weight gradient of every layer reassembles to the dense
+        // gradient under its stage layout.
         for l in 0..cfg.layers {
-            let g = &grads[l];
-            let r = &g_ref[l];
-            assert!(
-                g.ln1_g.as_ref().unwrap().max_abs_diff(r.ln1_g.as_ref().unwrap()) < TOL,
-                "rank {rank} layer {l} ln1_g"
+            for (name, stage, wr, wc, get) in mats {
+                let parts: Vec<Tensor> =
+                    out.iter().map(|(_, _, g)| get(&g[l]).clone()).collect();
+                let total: usize = parts.iter().map(|p| p.numel()).sum();
+                assert_eq!(total, wr * wc, "{par:?} layer {l} {name} must tile");
+                let got = spec0.assemble_weight(stage, &parts, wr, wc);
+                let want = get(&g_ref[l]);
+                assert!(
+                    got.max_abs_diff(want) < TOL,
+                    "{par:?} layer {l} {name}: {}",
+                    got.max_abs_diff(want)
+                );
+            }
+            // Every vector gradient too, with the ownership pattern the
+            // spec prescribes.
+            for (name, role, n, get) in vecs {
+                let parts: Vec<Option<Tensor>> =
+                    out.iter().map(|(_, _, g)| get(&g[l]).clone()).collect();
+                for (rank, p) in parts.iter().enumerate() {
+                    let owns = ShardSpec::for_parallelism(par, edge, rank).owns_vector(role);
+                    assert_eq!(p.is_some(), owns, "{par:?} layer {l} {name} rank {rank}");
+                }
+                let got = spec0.assemble_vector(role, &parts, n);
+                let want = get(&g_ref[l]).as_ref().unwrap();
+                assert!(
+                    got.max_abs_diff(want) < TOL,
+                    "{par:?} layer {l} {name}: {}",
+                    got.max_abs_diff(want)
+                );
+            }
+        }
+        assert_eq!(world, out.len());
+    }
+}
+
+#[test]
+fn matmul_forms_compose_and_match_dense() {
+    // Pin the trait-level matmul primitives the generic block does not
+    // exercise directly (it goes through linear_fwd/bwd): two chained
+    // matmul_nn calls (Expand then Reduce) must return the activation to
+    // the entry layout, and the nt/tn forms must produce the dense input
+    // and weight gradients under each stage's layout. Every intermediate
+    // is consumed by a further trait op, so the per-stage output layouts
+    // (1-D column shards, 3-D swapped directions) are verified by
+    // composition rather than bespoke gathers.
+    let (rows, h, f) = (8usize, 16usize, 32usize);
+    let x = randt(&[rows, h], 21);
+    let w1 = randt(&[h, f], 22);
+    let w2 = randt(&[f, h], 23);
+    let dy = randt(&[rows, h], 24);
+    let hmid_ref = x.matmul(&w1);
+    let y_ref = hmid_ref.matmul(&w2);
+    let dh_ref = dy.matmul_nt(&w2);
+    let dx_ref = dh_ref.matmul_nt(&w1);
+    let dw2_ref = hmid_ref.matmul_tn(&dy);
+    let dw1_ref = x.matmul_tn(&dh_ref);
+
+    for (par, edge) in ALL_ENVS {
+        let world = par.world_size(edge);
+        let (x2, w1c, w2c, dy2) = (x.clone(), w1.clone(), w2.clone(), dy.clone());
+        let out = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let ops: Box<dyn ParallelOps> = ops_for(par, edge, rank);
+            let spec = ops.spec().clone();
+            let xl = ops.scatter_activation(ep, &x2);
+            let dyl = ops.scatter_activation(ep, &dy2);
+            let w1s = spec.shard_weight(Stage::Expand, &w1c);
+            let w2s = spec.shard_weight(Stage::Reduce, &w2c);
+            // Forward: Expand then Reduce lands back in the entry layout.
+            let hmid = ops.matmul_nn(ep, &xl, &w1s, Stage::Expand);
+            let y = ops.matmul_nn(ep, &hmid, &w2s, Stage::Reduce);
+            // Input grads: Reduce-nt then Expand-nt retraces the layouts.
+            let dh = ops.matmul_nt(ep, &dyl, &w2s, Stage::Reduce);
+            let dx = ops.matmul_nt(ep, &dh, &w1s, Stage::Expand);
+            // Weight grads in each stage's own weight layout.
+            let dw2 = ops.matmul_tn(ep, &hmid, &dyl, Stage::Reduce);
+            let dw1 = ops.matmul_tn(ep, &xl, &dh, Stage::Expand);
+            (y, dx, dw1, dw2)
+        });
+        let spec0 = ShardSpec::for_parallelism(par, edge, 0);
+        let acts = |pick: fn(&(Tensor, Tensor, Tensor, Tensor)) -> &Tensor| {
+            let parts: Vec<Tensor> = out.iter().map(|o| pick(o).clone()).collect();
+            spec0.assemble_activation(&parts, rows, h)
+        };
+        let y = acts(|o| &o.0);
+        let dx = acts(|o| &o.1);
+        assert!(y.max_abs_diff(&y_ref) < TOL, "{par:?} y: {}", y.max_abs_diff(&y_ref));
+        assert!(dx.max_abs_diff(&dx_ref) < TOL, "{par:?} dx: {}", dx.max_abs_diff(&dx_ref));
+        let dw1_parts: Vec<Tensor> = out.iter().map(|o| o.2.clone()).collect();
+        let dw1 = spec0.assemble_weight(Stage::Expand, &dw1_parts, h, f);
+        assert!(dw1.max_abs_diff(&dw1_ref) < TOL, "{par:?} dw1: {}", dw1.max_abs_diff(&dw1_ref));
+        let dw2_parts: Vec<Tensor> = out.iter().map(|o| o.3.clone()).collect();
+        let dw2 = spec0.assemble_weight(Stage::Reduce, &dw2_parts, f, h);
+        assert!(dw2.max_abs_diff(&dw2_ref) < TOL, "{par:?} dw2: {}", dw2.max_abs_diff(&dw2_ref));
+    }
+}
+
+#[test]
+fn trait_object_dispatch_smoke() {
+    // Drive each implementation strictly through `Box<dyn ParallelOps>`
+    // (the dispatch ParEnv uses): provided layout methods and a
+    // dynamically-dispatched vec_op must agree with the dense result.
+    let (rows, cols) = (8usize, 16usize);
+    let global = randt(&[rows, cols], 7);
+    let v = randt(&[cols], 8);
+    let want = global.add_row_vector(&v);
+    for (par, edge) in ALL_ENVS {
+        let world = par.world_size(edge);
+        let g2 = global.clone();
+        let v2 = v.clone();
+        let out = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let ops: Box<dyn ParallelOps> = ops_for(par, edge, rank);
+            assert_eq!(ops.kind(), par);
+            assert_eq!(ops.spec().world(), world);
+            assert_eq!(ops.spec().rank, rank);
+            let xl = ops.scatter_activation(ep, &g2);
+            assert_eq!(
+                xl.shape(),
+                &[
+                    ops.activation_shape(rows, cols).0,
+                    ops.activation_shape(rows, cols).1
+                ]
             );
+            let chunk = ops.spec().shard_vector(VecRole::Norm, &v2);
+            let y = ops.vec_op(ep, &xl, chunk.as_ref(), false);
+            ops.gather_activation(ep, &y, rows, cols)
+        });
+        for (rank, got) in out.iter().enumerate() {
             assert!(
-                g.b_proj.as_ref().unwrap().max_abs_diff(r.b_proj.as_ref().unwrap()) < TOL,
-                "rank {rank} layer {l} b_proj"
+                got.max_abs_diff(&want) < 1e-5,
+                "{par:?} rank {rank}: dyn vec_op mismatch"
             );
         }
     }
-    // Sharded weight grads reassemble to the dense grads.
-    for l in 0..cfg.layers {
-        let wq: Vec<Tensor> = out.iter().map(|(_, _, g)| g[l].w_qkv.clone()).collect();
-        let wq = cubic::dist::Layout1D::ColShard.gather(&wq);
-        assert!(wq.max_abs_diff(&g_ref[l].w_qkv) < TOL, "layer {l} w_qkv");
-        let w2: Vec<Tensor> = out.iter().map(|(_, _, g)| g[l].w_fc2.clone()).collect();
-        let w2 = cubic::dist::Layout1D::RowShard.gather(&w2);
-        assert!(w2.max_abs_diff(&g_ref[l].w_fc2) < TOL, "layer {l} w_fc2");
-    }
 }
 
 #[test]
-fn twod_core_matches_seq_reference() {
-    let cfg = tiny();
-    let rows = cfg.batch * cfg.seq;
-    let mesh = Mesh::new(2);
-    let x = randt(&[rows, cfg.hidden], 3);
-    let dy = randt(&[rows, cfg.hidden], 4);
-    let (y_ref, dx_ref, g_ref) = seq_reference(&cfg, &x, &dy, 43);
-    let out = run_par(&cfg, Parallelism::TwoD, 2, &x, &dy, 43);
-    let y_shards: Vec<Tensor> = out.iter().map(|(y, _, _)| y.clone()).collect();
-    let y = Layout2D::gather(&mesh, &y_shards, rows, cfg.hidden);
-    assert!(y.max_abs_diff(&y_ref) < TOL, "y");
-    let dx_shards: Vec<Tensor> = out.iter().map(|(_, dx, _)| dx.clone()).collect();
-    let dx = Layout2D::gather(&mesh, &dx_shards, rows, cfg.hidden);
-    assert!(dx.max_abs_diff(&dx_ref) < TOL, "dx");
-    for l in 0..cfg.layers {
-        let wq: Vec<Tensor> = out.iter().map(|(_, _, g)| g[l].w_qkv.clone()).collect();
-        let wq = Layout2D::gather(&mesh, &wq, cfg.hidden, 3 * cfg.hidden);
-        assert!(wq.max_abs_diff(&g_ref[l].w_qkv) < TOL, "layer {l} w_qkv");
-        // Bias grads live on mesh row 0 as column chunks.
-        let q = 2;
-        let bq: Vec<Tensor> = (0..q)
-            .map(|c| out[c].2[l].b_qkv.as_ref().unwrap().reshape(&[1, 3 * cfg.hidden / q]))
-            .collect();
-        let bq = Tensor::concat_cols(&bq);
-        assert!(
-            bq.max_abs_diff(&g_ref[l].b_qkv.as_ref().unwrap().reshape(&[1, 3 * cfg.hidden]))
-                < TOL,
-            "layer {l} b_qkv"
-        );
-    }
-}
-
-#[test]
-fn threed_core_matches_seq_reference() {
-    let cfg = tiny();
-    let rows = cfg.batch * cfg.seq;
-    let cube = Cube::new(2);
-    let d0 = Dirs::canonical();
-    let x = randt(&[rows, cfg.hidden], 5);
-    let dy = randt(&[rows, cfg.hidden], 6);
-    let (y_ref, dx_ref, g_ref) = seq_reference(&cfg, &x, &dy, 44);
-    let out = run_par(&cfg, Parallelism::ThreeD, 2, &x, &dy, 44);
-    let y_shards: Vec<Tensor> = out.iter().map(|(y, _, _)| y.clone()).collect();
-    let y = Layout3D::input(d0).gather(&cube, &y_shards, rows, cfg.hidden);
-    assert!(y.max_abs_diff(&y_ref) < TOL, "y: {}", y.max_abs_diff(&y_ref));
-    let dx_shards: Vec<Tensor> = out.iter().map(|(_, dx, _)| dx.clone()).collect();
-    let dx = Layout3D::input(d0).gather(&cube, &dx_shards, rows, cfg.hidden);
-    assert!(dx.max_abs_diff(&dx_ref) < TOL, "dx: {}", dx.max_abs_diff(&dx_ref));
-    let d1 = d0.swapped();
-    for l in 0..cfg.layers {
-        // Weight grads reassemble under their layer's layouts.
-        let wq: Vec<Tensor> = out.iter().map(|(_, _, g)| g[l].w_qkv.clone()).collect();
-        let wq = Layout3D::weight(d0).gather(&cube, &wq, cfg.hidden, 3 * cfg.hidden);
-        assert!(wq.max_abs_diff(&g_ref[l].w_qkv) < TOL, "layer {l} w_qkv");
-        let wp: Vec<Tensor> = out.iter().map(|(_, _, g)| g[l].w_proj.clone()).collect();
-        let wp = Layout3D::weight(d1).gather(&cube, &wp, cfg.hidden, cfg.hidden);
-        assert!(wp.max_abs_diff(&g_ref[l].w_proj) < TOL, "layer {l} w_proj");
-        let w1: Vec<Tensor> = out.iter().map(|(_, _, g)| g[l].w_fc1.clone()).collect();
-        let w1 = Layout3D::weight(d0).gather(&cube, &w1, cfg.hidden, cfg.ffn);
-        assert!(w1.max_abs_diff(&g_ref[l].w_fc1) < TOL, "layer {l} w_fc1");
-        let w2: Vec<Tensor> = out.iter().map(|(_, _, g)| g[l].w_fc2.clone()).collect();
-        let w2 = Layout3D::weight(d1).gather(&cube, &w2, cfg.ffn, cfg.hidden);
-        assert!(w2.max_abs_diff(&g_ref[l].w_fc2) < TOL, "layer {l} w_fc2");
-        // Vector grads reassemble from the diagonals.
-        let bq: Vec<Option<Tensor>> = out.iter().map(|(_, _, g)| g[l].b_qkv.clone()).collect();
-        let bq = DiagVec3D::for_dirs(d1).gather(&cube, &bq, 3 * cfg.hidden);
-        assert!(
-            bq.max_abs_diff(g_ref[l].b_qkv.as_ref().unwrap()) < TOL,
-            "layer {l} b_qkv"
-        );
-        let g1: Vec<Option<Tensor>> = out.iter().map(|(_, _, g)| g[l].ln1_g.clone()).collect();
-        let g1 = DiagVec3D::for_dirs(d0).gather(&cube, &g1, cfg.hidden);
-        assert!(
-            g1.max_abs_diff(g_ref[l].ln1_g.as_ref().unwrap()) < TOL,
-            "layer {l} ln1_g"
-        );
+fn activation_scatter_gather_steady_state_recycles() {
+    // The pooled boundary path (ROADMAP pool follow-on): on a sharding
+    // mesh, scatter_activation cuts the window into a pooled buffer and
+    // gather_activation assembles into one — after warmup each call pair
+    // takes exactly two pooled buffers and allocates nothing.
+    let iters = 5u64;
+    let out = run_spmd(4, NetModel::zero(), move |rank, ep| {
+        let env = ParEnv::new(Parallelism::TwoD, 2, rank);
+        let global = Tensor::full(&[8, 16], 2.0);
+        let run_one = |ep: &mut Endpoint| {
+            let xl = env.scatter_activation(ep, &global);
+            let back = env.gather_activation(ep, &xl, 8, 16);
+            assert_eq!(back.data()[0], 2.0);
+            drop(back);
+            drop(xl);
+            ep.barrier_wait();
+        };
+        run_one(ep); // warmup allocates the shard + assembly buffers once
+        let (h0, m0) = (ep.stats.pool_hits, ep.stats.pool_misses);
+        for _ in 0..iters {
+            run_one(ep);
+        }
+        (ep.stats.pool_hits - h0, ep.stats.pool_misses - m0)
+    });
+    for (rank, (hits, misses)) in out.iter().enumerate() {
+        assert_eq!(*misses, 0, "rank {rank}: boundary path must not allocate after warmup");
+        assert_eq!(*hits, 2 * iters, "rank {rank}: one pooled scatter + one pooled gather");
     }
 }
 
@@ -201,15 +331,13 @@ fn training_loss_curves_identical_across_parallelisms() {
         artifacts_dir: String::new(),
     };
     let seq = run_training(&mk(Parallelism::Seq, 1), NetModel::zero()).unwrap();
-    let d1 = run_training(&mk(Parallelism::OneD, 4), NetModel::zero()).unwrap();
-    let d2 = run_training(&mk(Parallelism::TwoD, 2), NetModel::zero()).unwrap();
-    let d3 = run_training(&mk(Parallelism::ThreeD, 2), NetModel::zero()).unwrap();
-    for (name, rep) in [("1d", &d1), ("2d", &d2), ("3d", &d3)] {
+    for (par, edge) in &ALL_ENVS[1..] {
+        let rep = run_training(&mk(*par, *edge), NetModel::zero()).unwrap();
         assert_eq!(rep.losses.len(), seq.losses.len());
         for (s, (a, b)) in rep.losses.iter().zip(seq.losses.iter()).enumerate() {
             assert!(
                 (a - b).abs() < 2e-2 * (1.0 + b.abs()),
-                "{name} step {s}: {a} vs seq {b}"
+                "{par:?} step {s}: {a} vs seq {b}"
             );
         }
     }

@@ -174,11 +174,11 @@ fn pjrt_fused_block_matches_rust_seq_model() {
     // Rust Seq reference. NOTE python attention concatenates head outputs
     // in head order and w_proj rows are head-ordered the same way, so no
     // permutation is needed on the output side.
-    let p = dense.to_seq();
+    let p = dense.shard(&cubic::dist::ShardSpec::seq());
     let cfg2 = cfg.clone();
     let want = run_spmd(1, cubic::comm::NetModel::zero(), move |_, ep| {
-        let env = ParEnv::Seq;
-        model::core_fwd(ep, &env, &[p.clone()], &x, &cfg2).0
+        let env = ParEnv::seq();
+        model::core_fwd(ep, env.ops(), &[p.clone()], &x, &cfg2).0
     })
     .pop()
     .unwrap();
