@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         train: TrainConfig { steps: 20, lr: 2e-3, warmup: 4, ..Default::default() },
         parallelism: Parallelism::ThreeD,
         edge: 2,
-        artifacts_dir: String::new(),
+        ..CubicConfig::default()
     };
     let report = run_training(&cfg, NetModel::longhorn_v100())?;
     println!(

@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         },
         parallelism: par,
         edge,
-        artifacts_dir: String::new(),
+        ..CubicConfig::default()
     };
     println!("training {}", cubic::config::describe(&cfg));
     println!(

@@ -13,7 +13,7 @@ use cubic::comm::NetModel;
 use cubic::config::ModelConfig;
 use cubic::engine::time_core_step;
 use cubic::metrics::{fmt_bytes, Table};
-use cubic::topology::Parallelism;
+use cubic::topology::{HybridInner, Parallelism};
 
 fn main() {
     let mut t = Table::new(&[
@@ -27,6 +27,10 @@ fn main() {
         (Parallelism::TwoD, 8), // 64
         (Parallelism::ThreeD, 2), // 8
         (Parallelism::ThreeD, 4), // 64
+        (Parallelism::TwoFiveD { depth: 2 }, 2), // 8: between 2-D and 3-D
+        (Parallelism::TwoFiveD { depth: 4 }, 4), // 64
+        (Parallelism::Hybrid { replicas: 2, inner: HybridInner::TwoD }, 2), // 8
+        (Parallelism::Hybrid { replicas: 4, inner: HybridInner::TwoD }, 4), // 64
     ];
     for (par, edge) in cases {
         let world = par.world_size(edge);

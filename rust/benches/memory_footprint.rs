@@ -11,7 +11,7 @@
 use cubic::config::ModelConfig;
 use cubic::metrics::{fmt_bytes, Table};
 use cubic::model::ParEnv;
-use cubic::topology::Parallelism;
+use cubic::topology::{HybridInner, Parallelism};
 
 fn main() {
     let cfg = ModelConfig { layers: 1, ..ModelConfig::paper(4096, 16) };
@@ -32,6 +32,12 @@ fn main() {
         (Parallelism::TwoD, 8),
         (Parallelism::ThreeD, 2),
         (Parallelism::ThreeD, 4),
+        // 2.5-D holds weights at 1/P but activations at 1/p² (d-fold
+        // replicated) — the Tesseract memory side of the trade-off.
+        (Parallelism::TwoFiveD { depth: 4 }, 4), // 64
+        // Hybrid replicates weights per data-parallel replica and splits
+        // batch rows.
+        (Parallelism::Hybrid { replicas: 4, inner: HybridInner::TwoD }, 4), // 64
     ];
     for (par, edge) in cases {
         let world = par.world_size(edge);

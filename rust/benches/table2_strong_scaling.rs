@@ -2,10 +2,17 @@
 //! (hidden 3072, seq 512), 8 → 64 GPUs; headline claim: 3-D beats 1-D by
 //! 2.32× and 2-D by 1.57× in average step time at 64 GPUs.
 //!
+//! Also times the two post-paper meshes (2.5-D Tesseract and the hybrid
+//! data×tensor group) on the same fixed problem at 64 GPUs, so the
+//! spectrum ranks at equal world size.
+//!
 //! Run: `cargo bench --bench table2_strong_scaling`
 
 use cubic::bench::{render, run_rows, strong_scaling_speedups, table2_rows};
 use cubic::comm::NetModel;
+use cubic::config::ModelConfig;
+use cubic::engine::time_core_step;
+use cubic::topology::{HybridInner, Parallelism};
 
 fn main() {
     let net = NetModel::longhorn_v100();
@@ -19,6 +26,27 @@ fn main() {
     println!("- 3-D vs 1-D: {s1:.2}x measured (paper 2.32x = 0.550/0.237·…; raw 0.550/0.359 = 1.53x)");
     println!("- 3-D vs 2-D: {s2:.2}x measured (paper 1.57x; raw 0.497/0.359 = 1.38x)");
     println!("\nShape criteria: 3-D fastest at 64 GPUs; 2-D scales down with P while 1-D plateaus.");
+
+    // Post-paper meshes on the fixed problem at 64 GPUs (batch 24 like the
+    // 2-D/3-D rows; 2.5-D as 4x4x4, hybrid as 4 replicas x 4x4 SUMMA).
+    println!("\n### Beyond the paper: 2.5-D and hybrid at 64 GPUs (same problem)\n");
+    let cfg = ModelConfig { layers: cubic::bench::LAYERS, ..ModelConfig::paper(3072, 24) };
+    for (label, par, edge) in [
+        ("2.5d 4x4x4", Parallelism::TwoFiveD { depth: 4 }, 4usize),
+        (
+            "hybrid 4x(4x4)",
+            Parallelism::Hybrid { replicas: 4, inner: HybridInner::TwoD },
+            4,
+        ),
+    ] {
+        let t = time_core_step(&cfg, par, edge, net.clone()).expect("timing run failed");
+        println!(
+            "- {label}: fwd {:.3}s bwd {:.3}s avg step {:.4}s",
+            t.forward_s,
+            t.backward_s,
+            t.avg_step_time(24)
+        );
+    }
     // Timing sweeps are phantom-mode: no tensor data may be copied.
     assert_eq!(cubic::metrics::bytes_cloned(), 0, "phantom sweeps must not clone tensor data");
 }

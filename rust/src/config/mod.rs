@@ -106,14 +106,44 @@ impl ModelConfig {
     }
 
     /// Check divisibility constraints for running under `par` at `edge`.
+    ///
+    /// The attention-head constraint is derived from the layout algebra
+    /// (`ShardSpec::head_divisor`) for every kind, so `validate` and the
+    /// runtime head split cannot drift: a mesh whose column split does not
+    /// divide `heads` is a plan-level error here instead of a silent
+    /// truncation at shard time (`ShardSpec::local_heads` additionally
+    /// panics on the same condition as defense in depth).
     pub fn validate(&self, par: Parallelism, edge: usize) -> Result<(), String> {
+        // Degenerate mesh parameters are config errors, not internal
+        // asserts (the ShardSpec constructors below would panic on them).
+        match par {
+            Parallelism::TwoFiveD { depth } if depth == 0 => {
+                return Err("2.5-D depth must be >= 1".into());
+            }
+            Parallelism::Hybrid { replicas, .. } if replicas == 0 => {
+                return Err("hybrid replicas must be >= 1".into());
+            }
+            Parallelism::Hybrid {
+                inner: crate::topology::HybridInner::TwoFiveD { depth },
+                ..
+            } if depth == 0 => {
+                return Err("2.5-D depth must be >= 1".into());
+            }
+            _ => {}
+        }
+        let div = crate::dist::ShardSpec::for_parallelism(par, edge, 0).head_divisor();
+        if self.heads % div != 0 {
+            return Err(format!(
+                "heads {} not divisible by head divisor {div} of the {} mesh ({})",
+                self.heads,
+                par.name(),
+                par.mesh_desc(edge),
+            ));
+        }
         let p = edge;
         match par {
             Parallelism::Seq => Ok(()),
             Parallelism::OneD => {
-                if self.heads % p != 0 {
-                    return Err(format!("heads {} % P {} != 0", self.heads, p));
-                }
                 if self.ffn % p != 0 || self.hidden % p != 0 {
                     return Err(format!("hidden/ffn must divide P {}", p));
                 }
@@ -122,9 +152,6 @@ impl ModelConfig {
             Parallelism::TwoD => {
                 if self.batch % p != 0 {
                     return Err(format!("batch {} % q {} != 0", self.batch, p));
-                }
-                if self.heads % p != 0 {
-                    return Err(format!("heads {} % q {} != 0", self.heads, p));
                 }
                 if self.hidden % (p * p) != 0 || self.ffn % (p * p) != 0 {
                     return Err(format!("hidden/ffn must divide q² = {}", p * p));
@@ -135,13 +162,33 @@ impl ModelConfig {
                 if self.batch % (p * p) != 0 {
                     return Err(format!("batch {} % p² {} != 0", self.batch, p * p));
                 }
-                if self.heads % p != 0 {
-                    return Err(format!("heads {} % p {} != 0", self.heads, p));
-                }
                 if self.hidden % (p * p) != 0 || self.ffn % (p * p) != 0 {
                     return Err(format!("hidden/ffn must divide p² = {}", p * p));
                 }
                 Ok(())
+            }
+            Parallelism::TwoFiveD { depth } => {
+                let d = depth;
+                if self.batch % p != 0 {
+                    return Err(format!("batch {} % p {} != 0", self.batch, p));
+                }
+                if self.hidden % (p * p) != 0 || self.ffn % (p * p) != 0 {
+                    return Err(format!("hidden/ffn must divide p² = {}", p * p));
+                }
+                if self.hidden % (d * p) != 0 || self.ffn % (d * p) != 0 {
+                    return Err(format!("hidden/ffn must divide depth·p = {}", d * p));
+                }
+                Ok(())
+            }
+            Parallelism::Hybrid { replicas, inner } => {
+                if self.batch % replicas != 0 {
+                    return Err(format!("batch {} % replicas {} != 0", self.batch, replicas));
+                }
+                // Each replica runs the inner mesh on batch/replicas.
+                let per_replica = ModelConfig { batch: self.batch / replicas, ..self.clone() };
+                per_replica
+                    .validate(inner.as_parallelism(), edge)
+                    .map_err(|e| format!("inner {}: {e}", inner.as_parallelism().name()))
             }
         }
     }
@@ -265,6 +312,17 @@ impl CubicConfig {
                 .ok_or_else(|| ConfigError(format!("unknown parallelism {p:?}")))?;
         }
         set_usize!("parallel", "edge", cfg.edge);
+        if let Some(d) = doc.get_int("parallel", "depth") {
+            // Range-check before the cast: a negative TOML value must be a
+            // config error, not a usize wraparound.
+            let d = usize::try_from(d).map_err(|_| ConfigError(format!("depth {d} < 1")))?;
+            cfg.parallelism.set_depth(d).map_err(ConfigError)?;
+        }
+        if let Some(r) = doc.get_int("parallel", "replicas") {
+            let r =
+                usize::try_from(r).map_err(|_| ConfigError(format!("replicas {r} < 1")))?;
+            cfg.parallelism.set_replicas(r).map_err(ConfigError)?;
+        }
 
         set_usize!("train", "steps", cfg.train.steps);
         set_usize!("train", "warmup", cfg.train.warmup);
@@ -318,6 +376,8 @@ pub fn describe(cfg: &CubicConfig) -> String {
 mod tests {
     use super::*;
 
+    use crate::topology::HybridInner;
+
     #[test]
     fn presets_validate_under_their_parallelisms() {
         assert!(ModelConfig::tiny().validate(Parallelism::ThreeD, 2).is_ok());
@@ -325,6 +385,13 @@ mod tests {
         assert!(ModelConfig::tiny().validate(Parallelism::OneD, 4).is_ok());
         assert!(ModelConfig::charlm().validate(Parallelism::ThreeD, 2).is_ok());
         assert!(ModelConfig::large100m().validate(Parallelism::ThreeD, 2).is_ok());
+        assert!(ModelConfig::tiny().validate(Parallelism::TwoFiveD { depth: 2 }, 2).is_ok());
+        assert!(ModelConfig::tiny()
+            .validate(Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD }, 2)
+            .is_ok());
+        assert!(ModelConfig::charlm()
+            .validate(Parallelism::Hybrid { replicas: 2, inner: HybridInner::TwoD }, 2)
+            .is_ok());
     }
 
     #[test]
@@ -335,6 +402,42 @@ mod tests {
         m.batch = 4;
         m.heads = 3;
         assert!(m.validate(Parallelism::ThreeD, 2).is_err());
+    }
+
+    #[test]
+    fn head_divisor_errors_are_plan_level_not_truncation() {
+        // The satellite fix: a mesh whose column split does not divide
+        // `heads` must be rejected by validate (which the `plan` command
+        // runs) — previously `local_heads` silently truncated.
+        let mut m = ModelConfig::tiny(); // 4 heads
+        // 2.5-D at p=2, depth=4 splits heads 8 ways: 4 % 8 != 0.
+        let err = m.validate(Parallelism::TwoFiveD { depth: 4 }, 2).unwrap_err();
+        assert!(err.contains("head divisor"), "{err}");
+        // Hybrid inherits the inner divisor: 2 × 1-D(8) splits heads 8 ways.
+        let err = m
+            .validate(Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD }, 8)
+            .unwrap_err();
+        assert!(err.contains("head divisor"), "{err}");
+        // Replicas must divide the batch.
+        m.batch = 3;
+        assert!(m
+            .validate(Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD }, 2)
+            .is_err());
+    }
+
+    #[test]
+    fn hybrid_validates_inner_on_per_replica_batch() {
+        // 2-D inner needs batch % q per *replica*: total batch 4 over 2
+        // replicas leaves 2 per replica, which q=2 accepts.
+        let m = ModelConfig::tiny();
+        assert!(m
+            .validate(Parallelism::Hybrid { replicas: 2, inner: HybridInner::TwoD }, 2)
+            .is_ok());
+        // 4 replicas leave batch 1 per replica: 1 % 2 != 0 → rejected.
+        let err = m
+            .validate(Parallelism::Hybrid { replicas: 4, inner: HybridInner::TwoD }, 2)
+            .unwrap_err();
+        assert!(err.contains("inner 2d"), "{err}");
     }
 
     #[test]
@@ -388,5 +491,44 @@ threads = 4
         // tiny batch=4 cannot run 3-D at edge 4 (needs batch % 16 == 0).
         let bad = "[model]\npreset = \"tiny\"\n[parallel]\nkind = \"3d\"\nedge = 4";
         assert!(CubicConfig::from_toml(bad).is_err());
+        // depth/replicas keys only apply to their kinds.
+        assert!(CubicConfig::from_toml("[parallel]\nkind = \"3d\"\ndepth = 2").is_err());
+        assert!(CubicConfig::from_toml("[parallel]\nkind = \"2.5d\"\nreplicas = 2").is_err());
+    }
+
+    #[test]
+    fn two_five_d_and_hybrid_toml_round_trip() {
+        let cfg = CubicConfig::from_toml(
+            "[parallel]\nkind = \"2.5d\"\nedge = 2\ndepth = 2",
+        )
+        .unwrap();
+        assert_eq!(cfg.parallelism, Parallelism::TwoFiveD { depth: 2 });
+        assert_eq!(cfg.parallelism.world_size(cfg.edge), 8);
+        let cfg = CubicConfig::from_toml(
+            "[parallel]\nkind = \"hybrid2d\"\nedge = 2\nreplicas = 2\n[model]\npreset = \"charlm\"",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.parallelism,
+            Parallelism::Hybrid { replicas: 2, inner: crate::topology::HybridInner::TwoD }
+        );
+        assert_eq!(cfg.parallelism.world_size(cfg.edge), 8);
+        // depth reaches a hybrid2.5d inner too (charlm: heads 4 % (2·2)=0,
+        // batch 8 → 4 per replica, hidden 128 / ffn 512 divide d·p and p²).
+        let cfg = CubicConfig::from_toml(
+            "[parallel]\nkind = \"hybrid2.5d\"\nedge = 2\ndepth = 2\nreplicas = 2\n\
+             [model]\npreset = \"charlm\"",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.parallelism,
+            Parallelism::Hybrid {
+                replicas: 2,
+                inner: crate::topology::HybridInner::TwoFiveD { depth: 2 },
+            }
+        );
+        assert_eq!(cfg.parallelism.world_size(cfg.edge), 16);
+        // Degenerate parameters are config errors, not panics.
+        assert!(ModelConfig::tiny().validate(Parallelism::TwoFiveD { depth: 0 }, 2).is_err());
     }
 }

@@ -122,6 +122,110 @@ pub enum Approach {
     ThreeD,
 }
 
+/// Per-rank bytes sent by one `broadcast_bw` (scatter + ring all-gather) of
+/// `elems` elements over `g` ranks. Every member forwards `g−1` chunks on
+/// the gather ring; the root additionally sends `g−1` chunks in the scatter
+/// phase. Averaged over a full SUMMA sweep each rank roots exactly once, so
+/// the `root` flag lets callers sum the two roles exactly.
+pub fn broadcast_bw_bytes_per_rank(g: u64, elems: u64, root: bool) -> u64 {
+    if g <= 1 {
+        return 0;
+    }
+    let chunk = elems.div_ceil(g);
+    let gather = (g - 1) * chunk * W;
+    if root {
+        2 * gather
+    } else {
+        gather
+    }
+}
+
+/// **2-D SUMMA forward matmul**: exact per-rank bytes sent by `summa_nn`
+/// for per-rank operand blocks of `a_blk`/`b_blk` elements on a `q × q`
+/// grid. Each of the `q` steps broadcasts one A panel along the row and one
+/// B panel along the column via `broadcast_bw`; every rank is the A-root
+/// exactly once (`t == col`) and the B-root exactly once (`t == row`), so
+/// the total is uniform across ranks.
+pub fn summa_nn_bytes_per_rank(q: u64, a_blk: u64, b_blk: u64) -> u64 {
+    let non_root = (q - 1)
+        * (broadcast_bw_bytes_per_rank(q, a_blk, false)
+            + broadcast_bw_bytes_per_rank(q, b_blk, false));
+    let root = broadcast_bw_bytes_per_rank(q, a_blk, true)
+        + broadcast_bw_bytes_per_rank(q, b_blk, true);
+    non_root + root
+}
+
+/// Which linear of a residual branch a 2.5-D matmul runs as (mirrors
+/// `crate::dist::Stage` without importing the layout module into every
+/// formula call site).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TessStage {
+    /// Depth-column-slabbed weight: per-layer SUMMA only.
+    Expand,
+    /// Depth-row-slabbed weight: per-layer SUMMA + depth all-reduce.
+    Reduce,
+}
+
+/// **2.5-D Tesseract forward matmul**: exact per-rank bytes sent for
+/// `C(M,K) = A(M,N)·B(N,K)` on a `p × p × d` mesh.
+///
+/// `Expand` runs SUMMA on the layer's column slab (`B` blocks are
+/// `(N/p, K/(d·p))`) with no depth traffic; `Reduce` runs SUMMA on the
+/// row slab (`A` blocks `(M/p, N/(d·p))`, `B` blocks `(N/(d·p), K/p)`)
+/// and closes with a ring all-reduce of the `(M/p, K/p)` output block
+/// over the `d` depth layers — the Tesseract trade: the slab SUMMA moves
+/// `1/d` of 2-D's weight-side panel bytes, the depth all-reduce adds an
+/// activation-sized term 2-D does not have.
+pub fn mm25d_fwd_bytes_per_rank(p: u64, d: u64, m: u64, n: u64, k: u64, stage: TessStage) -> u64 {
+    match stage {
+        TessStage::Expand => {
+            let a_blk = (m / p) * (n / p);
+            let b_blk = (n / p) * (k / (d * p));
+            summa_nn_bytes_per_rank(p, a_blk, b_blk)
+        }
+        TessStage::Reduce => {
+            let a_blk = (m / p) * (n / (d * p));
+            let b_blk = (n / (d * p)) * (k / p);
+            let c_blk = (m / p) * (k / p);
+            summa_nn_bytes_per_rank(p, a_blk, b_blk) + ring_all_reduce_bytes(d, c_blk)
+        }
+    }
+}
+
+/// **Hybrid gradient sync**: per-rank bytes sent by the replica-group
+/// all-reduce of a weight/vector gradient shard of `elems` elements over
+/// `r` replicas — the only communication the hybrid wrapper adds on top of
+/// its inner mesh.
+pub fn hybrid_grad_sync_bytes_per_rank(r: u64, elems: u64) -> u64 {
+    ring_all_reduce_bytes(r, elems)
+}
+
+/// 2.5-D per-rank weight memory: `1/(p²·d)` of every weight (perfect
+/// balance, like every tensor mesh).
+pub fn mm25d_weight_bytes_per_rank(p: u64, d: u64, n: u64, k: u64) -> u64 {
+    n * k * W / (p * p * d)
+}
+
+/// 2.5-D per-rank *activation* memory: `1/p²` of the global activation —
+/// replicated `d` times across depth layers. At equal world size this is
+/// `d ×` the 2-D figure: the memory side of the Tesseract trade-off.
+pub fn mm25d_activation_bytes_per_rank(p: u64, _d: u64, m: u64, n: u64) -> u64 {
+    m * n * W / (p * p)
+}
+
+/// Hybrid per-rank weight memory: replicas do not shard weights, so each
+/// rank stores `1/inner_world` of every weight regardless of `r`.
+pub fn hybrid_weight_bytes_per_rank(inner_world: u64, n: u64, k: u64) -> u64 {
+    n * k * W / inner_world
+}
+
+/// Hybrid per-rank activation memory: batch rows split `r` ways, then the
+/// inner mesh's activation division (`inner_act_div` = 1 for a 1-D inner,
+/// `q²` for 2-D, `p³` for 3-D, `p²` for 2.5-D).
+pub fn hybrid_activation_bytes_per_rank(r: u64, inner_act_div: u64, m: u64, n: u64) -> u64 {
+    m * n * W / (r * inner_act_div)
+}
+
 /// Predicted virtual time of the 3-D forward matmul under `net` — the
 /// closed form the engine's emergent ring timing should approach on a flat
 /// network (unit-tested to a few percent).
@@ -185,6 +289,90 @@ mod tests {
         for (rank, &got) in measured.iter().enumerate() {
             assert_eq!(got, want, "rank {rank}");
         }
+    }
+
+    #[test]
+    fn mm25d_fwd_bytes_match_engine_ledger_exactly() {
+        // Run the 2.5-D trait matmul in phantom mode for both stages and
+        // compare the measured per-rank bytes with the closed form — the
+        // costmodel-vs-measured pin for the Tesseract mesh.
+        use crate::dist::{ShardSpec, Stage};
+        use crate::parallel::twofived::Ctx25D;
+        use crate::parallel::ParallelOps;
+        let (p, d) = (2usize, 2usize);
+        let world = p * p * d;
+        let (m, n, k) = (16usize, 32usize, 64usize);
+        for (stage, tess_stage) in
+            [(Stage::Expand, TessStage::Expand), (Stage::Reduce, TessStage::Reduce)]
+        {
+            let measured =
+                run_spmd(world, NetModel::flat(0.0, 1e9, f64::INFINITY), move |rank, ep| {
+                    let ctx = Ctx25D::new(p, d, rank);
+                    let spec = ShardSpec::twofived(p, d, rank);
+                    // Shape-only operands cut by the same layout algebra
+                    // the model uses.
+                    let x_shape = match stage {
+                        Stage::Expand => (m / p, n / p),
+                        Stage::Reduce => (m / p, n / (d * p)),
+                    };
+                    let x = Tensor::phantom(&[x_shape.0, x_shape.1]);
+                    let w = spec.shard_weight(stage, &Tensor::phantom(&[n, k]));
+                    let _ = ctx.matmul_nn(ep, &x, &w, stage);
+                    ep.stats.bytes_sent
+                });
+            let want = mm25d_fwd_bytes_per_rank(
+                p as u64, d as u64, m as u64, n as u64, k as u64, tess_stage,
+            );
+            for (rank, &got) in measured.iter().enumerate() {
+                assert_eq!(got, want, "rank {rank} stage {stage:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_grad_sync_bytes_match_engine_ledger_exactly() {
+        // Inner 1-D weight-grad forms are communication-free, so the entire
+        // matmul_tn traffic of the hybrid leaf is the replica all-reduce —
+        // measure it and pin the closed form.
+        use crate::dist::Stage;
+        use crate::parallel::hybrid::Hybrid;
+        use crate::parallel::ParallelOps;
+        use crate::topology::HybridInner;
+        let (r, e) = (2usize, 2usize);
+        let world = r * e;
+        let (m, n, k) = (8usize, 16usize, 32usize);
+        let measured = run_spmd(world, NetModel::flat(0.0, 1e9, f64::INFINITY), move |rank, ep| {
+            let ops = Hybrid::for_kind(r, HybridInner::OneD, e, rank);
+            let x = Tensor::phantom(&[m / r, n]);
+            let dy = Tensor::phantom(&[m / r, k / e]);
+            let _ = ops.matmul_tn(ep, &x, &dy, Stage::Expand);
+            ep.stats.bytes_sent
+        });
+        let want = hybrid_grad_sync_bytes_per_rank(r as u64, (n * k / e) as u64);
+        assert!(want > 0);
+        for (rank, &got) in measured.iter().enumerate() {
+            assert_eq!(got, want, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn new_mesh_memory_formulas_match_shard_shapes() {
+        // The closed-form memory predictions must agree with the shapes the
+        // layout algebra actually cuts.
+        use crate::dist::{MeshSpec, ShardSpec, Stage};
+        let (p, d) = (2u64, 2u64);
+        let (m, n, k) = (16u64, 32u64, 64u64);
+        let spec = ShardSpec::twofived(p as usize, d as usize, 0);
+        let w = Tensor::phantom(&[n as usize, k as usize]);
+        let shard = spec.shard_weight(Stage::Expand, &w);
+        assert_eq!(shard.numel() as u64 * 4, mm25d_weight_bytes_per_rank(p, d, n, k));
+        let (ar, ac) = spec.activation_shape(m as usize, n as usize);
+        assert_eq!((ar * ac) as u64 * 4, mm25d_activation_bytes_per_rank(p, d, m, n));
+        let hspec = ShardSpec::hybrid(2, MeshSpec::Line(2), 0);
+        let hshard = hspec.shard_weight(Stage::Expand, &w);
+        assert_eq!(hshard.numel() as u64 * 4, hybrid_weight_bytes_per_rank(2, n, k));
+        let (hr, hc) = hspec.activation_shape(m as usize, n as usize);
+        assert_eq!((hr * hc) as u64 * 4, hybrid_activation_bytes_per_rank(2, 1, m, n));
     }
 
     #[test]

@@ -57,9 +57,11 @@
 //!
 //! The per-dimension layouts above are *points*; [`ShardSpec`] is the
 //! spectrum. One spec = one device mesh shape ([`MeshSpec`]: a point, a
-//! `P`-line, a `q × q` grid, or a `p³` cube with block-entry directions)
-//! plus this rank's position, and it answers every placement question the
-//! model has — which shard of a weight this rank owns
+//! `P`-line, a `q × q` grid, a `p³` cube with block-entry directions, a
+//! `p × p × d` 2.5-D Tesseract, or a hybrid of `r` data-parallel replicas
+//! around any of those — see the [`MeshSpec`] docs for the 2.5-D
+//! memory/communication trade-off table) plus this rank's position, and it
+//! answers every placement question the model has — which shard of a weight this rank owns
 //! ([`ShardSpec::shard_weight`], keyed by the layer's [`Stage`]), which
 //! chunk of a bias/γ/β vector ([`ShardSpec::shard_vector`], keyed by
 //! [`VecRole`]), which window of a global activation
@@ -74,7 +76,7 @@
 //! `ParallelOps` impl, never a new copy of the model.
 
 use crate::tensor::Tensor;
-use crate::topology::{Axis, Coord, Cube, Mesh, Parallelism};
+use crate::topology::{Axis, Coord, Cube, HybridInner, Mesh, Parallelism};
 
 // ---------------------------------------------------------------------
 // Direction triples
@@ -484,6 +486,42 @@ pub enum VecRole {
 
 /// The device-mesh shape of one parallelism point. `Cube` carries the
 /// block-entry direction triple `d0`.
+///
+/// ## The 2.5-D Tesseract mesh (`Tess`)
+///
+/// A `p × p × d` mesh: `d` depth layers, each holding a SUMMA `p × p`
+/// grid. Activations are block-distributed over the grid and **replicated
+/// across depth layers**; weights shard **across** depth — each layer owns
+/// `1/d` of a stage's weight (the `Expand` weight column-slabbed, the
+/// `Reduce` weight row-slabbed, Megatron-style along the depth axis) and
+/// 2-D blocks it over its grid. One depth all-reduce closes each residual
+/// branch forward (after the `Reduce` linear) and one backward (after the
+/// `Expand` input gradient).
+///
+/// Memory/communication trade-off at equal world size `P` (per rank, one
+/// `M×N` activation and an `N×K` weight; the §Comparison axis between
+/// Optimus and the paper's 3-D):
+///
+/// | mesh               | weight mem | activation mem | matmul comm volume  |
+/// |--------------------|------------|----------------|---------------------|
+/// | 2-D (`q²=P`)       | `NK/P`     | `MN/P`         | `O(1/√P)` broadcasts |
+/// | 2.5-D (`p²d=P`)    | `NK/P`     | `MN/p²` (d×)   | `O(1/(p√d))` + depth all-reduce `O(MK/p²)` |
+/// | 3-D (`p³=P`)       | `NK/P`     | `MN/P`         | `O(P^{-2/3})`       |
+///
+/// Growing `d` at fixed `P` shrinks the SUMMA grid (fewer, larger panel
+/// broadcasts and cheaper weight-side traffic) at the cost of `d`-fold
+/// activation replication — exactly Tesseract's knob between 2-D (`d = 1`)
+/// and activation-light 3-D.
+///
+/// ## The hybrid data×tensor mesh (`Hybrid`)
+///
+/// `r` data-parallel replicas around *any* inner tensor mesh. Batch rows
+/// split across replicas (each replica computes `1/r` of the batch on its
+/// own copy of the weights, sharded by the inner mesh); weight and vector
+/// gradients are all-reduced over the replica groups at the block-backward
+/// weight-grad boundary, so replicas stay bit-consistent. This is the
+/// Megatron-LM-style outer data-parallel group (Narayanan et al.) as one
+/// more leaf of the same spectrum.
 #[derive(Clone, Debug)]
 pub enum MeshSpec {
     /// Single device (the dense `Seq` reference).
@@ -494,6 +532,38 @@ pub enum MeshSpec {
     Grid(Mesh),
     /// `p³` cube with block-entry directions (the paper's 3-D).
     Cube(Cube, Dirs),
+    /// `p × p × d` Tesseract: `d` depth layers of SUMMA `p × p` grids
+    /// (2.5-D). Rank layout: `rank = layer·p² + grid_rank` (grid row-major).
+    Tess(Mesh, usize),
+    /// `r` data-parallel replicas around an inner tensor mesh. Rank layout:
+    /// `rank = replica·inner_world + inner_rank`. The inner mesh must be a
+    /// tensor mesh (`Line`/`Grid`/`Cube`/`Tess`) — no nesting, no `Point`.
+    Hybrid(usize, Box<MeshSpec>),
+}
+
+impl MeshSpec {
+    /// Total ranks of this mesh.
+    pub fn world(&self) -> usize {
+        match self {
+            MeshSpec::Point => 1,
+            MeshSpec::Line(p) => *p,
+            MeshSpec::Grid(mesh) => mesh.size(),
+            MeshSpec::Cube(cube, _) => cube.size(),
+            MeshSpec::Tess(mesh, d) => mesh.size() * d,
+            MeshSpec::Hybrid(r, inner) => r * inner.world(),
+        }
+    }
+}
+
+/// The inner mesh of a hybrid decomposition for a given edge parameter
+/// (shared with [`ShardSpec::for_parallelism`] so the two cannot drift).
+pub fn mesh_for_inner(inner: HybridInner, edge: usize) -> MeshSpec {
+    match inner {
+        HybridInner::OneD => MeshSpec::Line(edge),
+        HybridInner::TwoD => MeshSpec::Grid(Mesh::new(edge)),
+        HybridInner::ThreeD => MeshSpec::Cube(Cube::new(edge), Dirs::canonical()),
+        HybridInner::TwoFiveD { depth } => MeshSpec::Tess(Mesh::new(edge), depth),
+    }
 }
 
 /// One rank's complete layout knowledge: the mesh and its position on it.
@@ -535,6 +605,26 @@ impl ShardSpec {
         ShardSpec { mesh: MeshSpec::Cube(cube, d0), rank }
     }
 
+    /// 2.5-D Tesseract spec: `d` depth layers of `p × p` SUMMA grids.
+    pub fn twofived(p: usize, d: usize, rank: usize) -> ShardSpec {
+        assert!(p >= 1 && d >= 1, "2.5-D mesh needs p >= 1 and depth >= 1");
+        let mesh = Mesh::new(p);
+        assert!(rank < mesh.size() * d);
+        ShardSpec { mesh: MeshSpec::Tess(mesh, d), rank }
+    }
+
+    /// Hybrid spec: `replicas` data-parallel copies of `inner` (which must
+    /// be a tensor mesh — `Line`/`Grid`/`Cube`/`Tess`).
+    pub fn hybrid(replicas: usize, inner: MeshSpec, rank: usize) -> ShardSpec {
+        assert!(replicas >= 1, "hybrid needs at least one replica");
+        assert!(
+            !matches!(inner, MeshSpec::Point | MeshSpec::Hybrid(..)),
+            "hybrid inner must be a tensor mesh (no Point, no nesting)"
+        );
+        assert!(rank < replicas * inner.world());
+        ShardSpec { mesh: MeshSpec::Hybrid(replicas, Box::new(inner)), rank }
+    }
+
     /// Spec for `rank` of the given parallelism/edge (the constructor the
     /// dispatcher uses).
     pub fn for_parallelism(par: Parallelism, edge: usize, rank: usize) -> ShardSpec {
@@ -543,6 +633,10 @@ impl ShardSpec {
             Parallelism::OneD => Self::oned(edge, rank),
             Parallelism::TwoD => Self::twod(edge, rank),
             Parallelism::ThreeD => Self::threed(edge, rank),
+            Parallelism::TwoFiveD { depth } => Self::twofived(edge, depth, rank),
+            Parallelism::Hybrid { replicas, inner } => {
+                Self::hybrid(replicas, mesh_for_inner(inner, edge), rank)
+            }
         }
     }
 
@@ -552,33 +646,91 @@ impl ShardSpec {
             MeshSpec::Line(_) => Parallelism::OneD,
             MeshSpec::Grid(_) => Parallelism::TwoD,
             MeshSpec::Cube(..) => Parallelism::ThreeD,
+            MeshSpec::Tess(_, d) => Parallelism::TwoFiveD { depth: *d },
+            MeshSpec::Hybrid(r, inner) => {
+                let inner = match inner.as_ref() {
+                    MeshSpec::Line(_) => HybridInner::OneD,
+                    MeshSpec::Grid(_) => HybridInner::TwoD,
+                    MeshSpec::Cube(..) => HybridInner::ThreeD,
+                    MeshSpec::Tess(_, d) => HybridInner::TwoFiveD { depth: *d },
+                    MeshSpec::Point | MeshSpec::Hybrid(..) => {
+                        unreachable!("constructor rejects Point/Hybrid inners")
+                    }
+                };
+                Parallelism::Hybrid { replicas: *r, inner }
+            }
         }
     }
 
     pub fn world(&self) -> usize {
+        self.mesh.world()
+    }
+
+    /// `(layer, grid_row, grid_col)` of this rank on a Tess mesh.
+    fn tess_coords(&self) -> (usize, usize, usize) {
+        let MeshSpec::Tess(mesh, _) = &self.mesh else {
+            panic!("tess_coords on a non-Tess mesh");
+        };
+        let (row, col) = mesh.coord_of(self.rank % mesh.size());
+        (self.rank / mesh.size(), row, col)
+    }
+
+    /// `(replica, inner spec)` of this rank on a hybrid mesh.
+    fn hybrid_parts(&self) -> (usize, ShardSpec) {
+        let MeshSpec::Hybrid(_, inner) = &self.mesh else {
+            panic!("hybrid_parts on a non-hybrid mesh");
+        };
+        let iw = inner.world();
+        (self.rank / iw, ShardSpec { mesh: inner.as_ref().clone(), rank: self.rank % iw })
+    }
+
+    /// How the mesh divides attention heads: the column-split factor of an
+    /// `Expand` weight (1-D: `P`; 2-D/3-D: the edge; 2.5-D: `depth·p` —
+    /// depth slabs of grid-blocked columns; hybrid: the inner divisor).
+    pub fn head_divisor(&self) -> usize {
         match &self.mesh {
             MeshSpec::Point => 1,
             MeshSpec::Line(p) => *p,
-            MeshSpec::Grid(mesh) => mesh.size(),
-            MeshSpec::Cube(cube, _) => cube.size(),
+            MeshSpec::Grid(mesh) => mesh.edge(),
+            MeshSpec::Cube(cube, _) => cube.edge(),
+            MeshSpec::Tess(mesh, d) => mesh.edge() * d,
+            MeshSpec::Hybrid(_, _) => self.hybrid_parts().1.head_divisor(),
         }
     }
 
-    /// Attention heads one rank computes locally: the mesh's head split
-    /// (1-D shards heads `P` ways even though activations stay replicated;
-    /// 2-D/3-D shard them by the mesh edge through the column split).
+    /// Attention heads one rank computes locally: `heads / head_divisor()`.
+    /// Panics when the mesh does not divide `heads` — silently truncating
+    /// here would drop heads; `ModelConfig::validate` reports the same
+    /// condition as a plan-level error before any rank gets this far.
     pub fn local_heads(&self, heads: usize) -> usize {
+        let div = self.head_divisor();
+        assert_eq!(
+            heads % div,
+            0,
+            "heads {heads} not divisible by head divisor {div} of {:?}",
+            self.kind()
+        );
+        heads / div
+    }
+
+    /// How many full copies of a weight the whole mesh stores (1 for every
+    /// pure tensor mesh; `r` per hybrid level — data-parallel replicas each
+    /// hold a complete inner-sharded copy). The cross-parallelism tests use
+    /// this to assert exact tiling in the presence of replication.
+    pub fn weight_replicas(&self) -> usize {
         match &self.mesh {
-            MeshSpec::Point => heads,
-            MeshSpec::Line(p) => heads / p,
-            MeshSpec::Grid(mesh) => heads / mesh.edge(),
-            MeshSpec::Cube(cube, _) => heads / cube.edge(),
+            MeshSpec::Hybrid(r, _) => r * self.hybrid_parts().1.weight_replicas(),
+            _ => 1,
         }
     }
 
-    /// Does this mesh shard activations? (`false` = replicated: Seq, 1-D.)
+    /// Does this mesh shard activations? (`false` = replicated: Seq, 1-D.
+    /// Tess shards over its grids; hybrid always shards batch rows.)
     pub fn shards_activation(&self) -> bool {
-        matches!(&self.mesh, MeshSpec::Grid(_) | MeshSpec::Cube(..))
+        matches!(
+            &self.mesh,
+            MeshSpec::Grid(_) | MeshSpec::Cube(..) | MeshSpec::Tess(..) | MeshSpec::Hybrid(..)
+        )
     }
 
     /// Shape of this rank's shard of a global `(rows, cols)` activation.
@@ -592,6 +744,16 @@ impl ShardSpec {
             MeshSpec::Cube(cube, _) => {
                 let p = cube.edge();
                 (rows / (p * p), cols / p)
+            }
+            // Depth layers replicate the grid-blocked activation.
+            MeshSpec::Tess(mesh, _) => {
+                let p = mesh.edge();
+                (rows / p, cols / p)
+            }
+            // Replicas split batch rows; the inner mesh shards the rest.
+            MeshSpec::Hybrid(r, _) => {
+                let (_, inner) = self.hybrid_parts();
+                inner.activation_shape(rows / r, cols)
             }
         }
     }
@@ -618,6 +780,25 @@ impl ShardSpec {
                 rows,
                 cols,
             ),
+            MeshSpec::Tess(mesh, _) => {
+                let p = mesh.edge();
+                assert_eq!(rows % p, 0);
+                assert_eq!(cols % p, 0);
+                let (_, row, col) = self.tess_coords();
+                let (sr, sc) = (rows / p, cols / p);
+                (row * sr, col * sc, sr, sc)
+            }
+            MeshSpec::Hybrid(r, _) => {
+                assert_eq!(rows % r, 0, "rows {rows} not divisible by replicas {r}");
+                let (replica, inner) = self.hybrid_parts();
+                let slab = rows / r;
+                let (r0, c0, sr, sc) = if inner.shards_activation() {
+                    inner.activation_bounds(slab, cols)
+                } else {
+                    (0, 0, slab, cols)
+                };
+                (replica * slab + r0, c0, sr, sc)
+            }
         }
     }
 
@@ -634,13 +815,31 @@ impl ShardSpec {
 
     /// Reassemble the global `(rows, cols)` activation from all ranks'
     /// shards in rank order (replicated meshes: the shards *are* the
-    /// global — returns shard 0).
+    /// global — returns shard 0; Tess uses depth layer 0's grid; hybrid
+    /// stacks the replicas' row slabs).
     pub fn assemble_activation(&self, parts: &[Tensor], rows: usize, cols: usize) -> Tensor {
         match &self.mesh {
             MeshSpec::Point | MeshSpec::Line(_) => parts[0].clone(),
             MeshSpec::Grid(mesh) => Layout2D::gather(mesh, parts, rows, cols),
             MeshSpec::Cube(cube, d0) => {
                 Layout3D::input(*d0).gather(cube, parts, rows, cols)
+            }
+            MeshSpec::Tess(mesh, d) => {
+                assert_eq!(parts.len(), mesh.size() * d, "need one shard per rank");
+                Layout2D::gather(mesh, &parts[..mesh.size()], rows, cols)
+            }
+            MeshSpec::Hybrid(r, inner) => {
+                let iw = inner.world();
+                assert_eq!(parts.len(), r * iw, "need one shard per rank");
+                assert_eq!(rows % r, 0);
+                let slab = rows / r;
+                let inner0 = ShardSpec { mesh: inner.as_ref().clone(), rank: 0 };
+                let slabs: Vec<Tensor> = (0..*r)
+                    .map(|k| {
+                        inner0.assemble_activation(&parts[k * iw..(k + 1) * iw], slab, cols)
+                    })
+                    .collect();
+                Tensor::concat_rows(&slabs)
             }
         }
     }
@@ -663,6 +862,38 @@ impl ShardSpec {
             MeshSpec::Cube(cube, d0) => {
                 Layout3D::input(*d0).gather_into(cube, parts, rows, cols, out)
             }
+            MeshSpec::Tess(mesh, d) => {
+                assert_eq!(parts.len(), mesh.size() * d, "need one shard per rank");
+                Layout2D::gather_into(mesh, &parts[..mesh.size()], rows, cols, out)
+            }
+            MeshSpec::Hybrid(r, inner) => {
+                let iw = inner.world();
+                assert_eq!(parts.len(), r * iw, "need one shard per rank");
+                assert_eq!(out.shape(), &[rows, cols], "gather_into output shape mismatch");
+                assert_eq!(rows % r, 0);
+                let slab = rows / r;
+                // Write every shard straight into its window of `out` —
+                // no intermediate slab assembly, keeping this per-step
+                // gather path allocation-free like the other arms. One
+                // stack-only inner-spec clone; replicated inners only need
+                // their first rank's (identical) slab.
+                let mut ispec = ShardSpec { mesh: inner.as_ref().clone(), rank: 0 };
+                let inner_shards = ispec.shards_activation();
+                for (rank, part) in parts.iter().enumerate() {
+                    if !inner_shards && rank % iw != 0 {
+                        continue;
+                    }
+                    let replica = rank / iw;
+                    let (r0, c0, sr, sc) = if inner_shards {
+                        ispec.rank = rank % iw;
+                        ispec.activation_bounds(slab, cols)
+                    } else {
+                        (0, 0, slab, cols)
+                    };
+                    assert_eq!(part.shape(), &[sr, sc], "rank {rank} shard shape mismatch");
+                    out.set_block(replica * slab + r0, c0, part);
+                }
+            }
         }
     }
 
@@ -675,6 +906,39 @@ impl ShardSpec {
                 Stage::Reduce => d0.swapped(),
             }),
             _ => None,
+        }
+    }
+
+    /// `(r0, c0, shard_rows, shard_cols)` of the `stage`-weight block a
+    /// Tess rank owns in the global `(rows, cols)` weight: the `Expand`
+    /// weight is column-slabbed across depth layers (each layer owns
+    /// `cols/d` columns, Megatron column-parallel along depth), the
+    /// `Reduce` weight row-slabbed (`rows/d` rows); the layer's slab is
+    /// 2-D blocked over its grid.
+    fn tess_weight_bounds(
+        &self,
+        stage: Stage,
+        rows: usize,
+        cols: usize,
+    ) -> (usize, usize, usize, usize) {
+        let MeshSpec::Tess(mesh, d) = &self.mesh else {
+            panic!("tess_weight_bounds on a non-Tess mesh");
+        };
+        let p = mesh.edge();
+        let (layer, row, col) = self.tess_coords();
+        match stage {
+            Stage::Expand => {
+                assert_eq!(rows % p, 0, "weight rows {rows} not divisible by p {p}");
+                assert_eq!(cols % (d * p), 0, "weight cols {cols} not divisible by d·p");
+                let (sr, sc) = (rows / p, cols / (d * p));
+                (row * sr, layer * (cols / d) + col * sc, sr, sc)
+            }
+            Stage::Reduce => {
+                assert_eq!(rows % (d * p), 0, "weight rows {rows} not divisible by d·p");
+                assert_eq!(cols % p, 0, "weight cols {cols} not divisible by p {p}");
+                let (sr, sc) = (rows / (d * p), cols / p);
+                (layer * (rows / d) + row * sr, col * sc, sr, sc)
+            }
         }
     }
 
@@ -691,11 +955,19 @@ impl ShardSpec {
                 let dirs = self.stage_dirs(stage).unwrap();
                 Layout3D::weight(dirs).shard_of(cube, cube.coord_of(self.rank), w)
             }
+            MeshSpec::Tess(..) => {
+                let (rows, cols) = w.dims2();
+                let (r0, c0, sr, sc) = self.tess_weight_bounds(stage, rows, cols);
+                w.block(r0, c0, sr, sc).compact()
+            }
+            // Every replica holds a full inner-sharded copy.
+            MeshSpec::Hybrid(..) => self.hybrid_parts().1.shard_weight(stage, w),
         }
     }
 
     /// Reassemble a global `(rows, cols)` `stage` weight from all ranks'
-    /// shards in rank order.
+    /// shards in rank order (hybrid meshes reassemble from replica 0 — the
+    /// other replicas hold identical copies).
     pub fn assemble_weight(
         &self,
         stage: Stage,
@@ -714,6 +986,27 @@ impl ShardSpec {
                 let dirs = self.stage_dirs(stage).unwrap();
                 Layout3D::weight(dirs).gather(cube, parts, rows, cols)
             }
+            MeshSpec::Tess(mesh, d) => {
+                let world = mesh.size() * d;
+                assert_eq!(parts.len(), world, "need one shard per rank");
+                if parts.iter().any(|s| s.is_phantom()) {
+                    return Tensor::phantom(&[rows, cols]);
+                }
+                let mut out = Tensor::zeros(&[rows, cols]);
+                for (rank, shard) in parts.iter().enumerate() {
+                    let spec = ShardSpec { mesh: self.mesh.clone(), rank };
+                    let (r0, c0, sr, sc) = spec.tess_weight_bounds(stage, rows, cols);
+                    assert_eq!(shard.shape(), &[sr, sc], "rank {rank} shard shape mismatch");
+                    out.set_block(r0, c0, shard);
+                }
+                out
+            }
+            MeshSpec::Hybrid(r, inner) => {
+                let iw = inner.world();
+                assert_eq!(parts.len(), r * iw, "need one shard per rank");
+                let inner0 = ShardSpec { mesh: inner.as_ref().clone(), rank: 0 };
+                inner0.assemble_weight(stage, &parts[..iw], rows, cols)
+            }
         }
     }
 
@@ -728,6 +1021,10 @@ impl ShardSpec {
             MeshSpec::Cube(cube, _) => {
                 DiagVec3D::for_dirs(self.vec_dirs(role)).owns(cube.coord_of(self.rank))
             }
+            // Grid row 0 of every depth layer (Expand biases: each layer
+            // owns its own slab; Reduce/Norm vectors: replicated copies).
+            MeshSpec::Tess(..) => self.tess_coords().1 == 0,
+            MeshSpec::Hybrid(..) => self.hybrid_parts().1.owns_vector(role),
         }
     }
 
@@ -764,6 +1061,28 @@ impl ShardSpec {
                 let diag = DiagVec3D::for_dirs(self.vec_dirs(role));
                 diag.shard_of(cube, cube.coord_of(self.rank), v)
             }
+            MeshSpec::Tess(mesh, d) => {
+                let p = mesh.edge();
+                let (layer, row, col) = self.tess_coords();
+                (row == 0).then(|| {
+                    let (off, chunk) = match role {
+                        // Expand outputs are depth-slabbed → so is the bias:
+                        // this layer's slab, grid-column chunk within it.
+                        VecRole::ExpandBias => {
+                            assert_eq!(n % (d * p), 0, "vector len {n} not divisible by d·p");
+                            (layer * (n / d) + col * (n / (d * p)), n / (d * p))
+                        }
+                        // Entry-layout activations replicate across depth →
+                        // every layer stores the same grid-chunked vector.
+                        VecRole::ReduceBias | VecRole::Norm => {
+                            assert_eq!(n % p, 0, "vector len {n} not divisible by p = {p}");
+                            (col * (n / p), n / p)
+                        }
+                    };
+                    v.reshape(&[1, n]).block(0, off, 1, chunk).into_reshape(&[chunk]).compact()
+                })
+            }
+            MeshSpec::Hybrid(..) => self.hybrid_parts().1.shard_vector(role, v),
         }
     }
 
@@ -800,6 +1119,46 @@ impl ShardSpec {
             }
             MeshSpec::Cube(cube, _) => {
                 DiagVec3D::for_dirs(self.vec_dirs(role)).gather(cube, parts, n)
+            }
+            MeshSpec::Tess(mesh, d) => {
+                let p = mesh.edge();
+                assert_eq!(parts.len(), mesh.size() * d, "need one entry per rank");
+                match role {
+                    // Depth-major slabs, grid-column chunks within each.
+                    VecRole::ExpandBias => {
+                        let chunk = n / (d * p);
+                        let chunks: Vec<Tensor> = (0..*d)
+                            .flat_map(|layer| {
+                                (0..p).map(move |col| layer * mesh.size() + mesh.rank_of(0, col))
+                            })
+                            .map(|rank| {
+                                parts[rank]
+                                    .clone()
+                                    .expect("grid row-0 rank owns its bias chunk")
+                                    .reshape(&[1, chunk])
+                            })
+                            .collect();
+                        Tensor::concat_cols(&chunks).into_reshape(&[n])
+                    }
+                    // Replicated across depth: layer 0's grid row suffices.
+                    VecRole::ReduceBias | VecRole::Norm => {
+                        let chunks: Vec<Tensor> = (0..p)
+                            .map(|col| {
+                                parts[mesh.rank_of(0, col)]
+                                    .clone()
+                                    .expect("grid row-0 rank owns its vector chunk")
+                                    .reshape(&[1, n / p])
+                            })
+                            .collect();
+                        Tensor::concat_cols(&chunks).into_reshape(&[n])
+                    }
+                }
+            }
+            MeshSpec::Hybrid(r, inner) => {
+                let iw = inner.world();
+                assert_eq!(parts.len(), r * iw, "need one entry per rank");
+                let inner0 = ShardSpec { mesh: inner.as_ref().clone(), rank: 0 };
+                inner0.assemble_vector(role, &parts[..iw], n)
             }
         }
     }
@@ -958,6 +1317,8 @@ mod tests {
             (0..4).map(|r| ShardSpec::oned(4, r)).collect(),
             (0..4).map(|r| ShardSpec::twod(2, r)).collect(),
             (0..8).map(|r| ShardSpec::threed(2, r)).collect(),
+            (0..8).map(|r| ShardSpec::twofived(2, 2, r)).collect(),
+            (0..4).map(|r| ShardSpec::hybrid(2, MeshSpec::Line(2), r)).collect(),
         ]
     }
 
@@ -969,7 +1330,14 @@ mod tests {
                 let parts: Vec<Tensor> =
                     ranks.iter().map(|s| s.shard_weight(stage, &w)).collect();
                 let total: usize = parts.iter().map(|p| p.numel()).sum();
-                assert_eq!(total, w.numel(), "{:?} {stage:?} must tile exactly", ranks[0].mesh);
+                // Pure tensor meshes tile the weight exactly once; hybrid
+                // meshes store one full copy per data-parallel replica.
+                assert_eq!(
+                    total,
+                    w.numel() * ranks[0].weight_replicas(),
+                    "{:?} {stage:?} must tile exactly (× replicas)",
+                    ranks[0].mesh
+                );
                 let back = ranks[0].assemble_weight(stage, &parts, 8, 16);
                 assert_eq!(back, w, "{:?} {stage:?}", ranks[0].mesh);
             }
@@ -1040,6 +1408,72 @@ mod tests {
             s3.shard_vector(VecRole::Norm, &v),
             DiagVec3D::for_dirs(d0).shard_of(&cube, cube.coord_of(5), &v)
         );
+    }
+
+    #[test]
+    fn tess_weight_slabs_match_megatron_of_summa() {
+        // The 2.5-D layout is 1-D (depth) ∘ 2-D (grid): the Expand weight's
+        // layer-l slab equals the ColShard slab, and the block within it the
+        // Layout2D block of that slab.
+        let (p, d) = (2usize, 2usize);
+        let mesh = Mesh::new(p);
+        let w = randt(&[8, 16], 20);
+        for layer in 0..d {
+            let slab = Layout1D::ColShard.shard_of(d, layer, &w);
+            for grid_rank in 0..mesh.size() {
+                let spec = ShardSpec::twofived(p, d, layer * mesh.size() + grid_rank);
+                assert_eq!(
+                    spec.shard_weight(Stage::Expand, &w),
+                    Layout2D::shard_of(&mesh, grid_rank, &slab),
+                    "layer {layer} grid {grid_rank}"
+                );
+            }
+            let rslab = Layout1D::RowShard.shard_of(d, layer, &w);
+            for grid_rank in 0..mesh.size() {
+                let spec = ShardSpec::twofived(p, d, layer * mesh.size() + grid_rank);
+                assert_eq!(
+                    spec.shard_weight(Stage::Reduce, &w),
+                    Layout2D::shard_of(&mesh, grid_rank, &rslab),
+                    "layer {layer} grid {grid_rank}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_replicas_share_weights_and_split_rows() {
+        let spec_a = ShardSpec::hybrid(2, MeshSpec::Line(2), 1); // replica 0, line 1
+        let spec_b = ShardSpec::hybrid(2, MeshSpec::Line(2), 3); // replica 1, line 1
+        let w = randt(&[8, 16], 21);
+        assert_eq!(
+            spec_a.shard_weight(Stage::Expand, &w),
+            spec_b.shard_weight(Stage::Expand, &w),
+            "replicas hold identical weight copies"
+        );
+        assert_eq!(spec_a.weight_replicas(), 2);
+        let x = randt(&[8, 16], 22);
+        // Replica 0 gets rows 0..4, replica 1 rows 4..8 (inner 1-D
+        // replicates within the replica).
+        assert_eq!(spec_a.activation_bounds(8, 16), (0, 0, 4, 16));
+        assert_eq!(spec_b.activation_bounds(8, 16), (4, 0, 4, 16));
+        assert_eq!(spec_a.shard_activation(&x), x.block(0, 0, 4, 16).compact());
+        assert_eq!(spec_b.shard_activation(&x), x.block(4, 0, 4, 16).compact());
+    }
+
+    #[test]
+    fn local_heads_rejects_non_dividing_meshes() {
+        // The satellite fix: no silent truncation of head counts.
+        assert_eq!(ShardSpec::twofived(2, 2, 0).head_divisor(), 4);
+        assert_eq!(ShardSpec::twofived(2, 2, 0).local_heads(8), 2);
+        assert_eq!(
+            ShardSpec::hybrid(2, MeshSpec::Line(4), 0).head_divisor(),
+            4,
+            "replicas do not split heads"
+        );
+        let result = std::panic::catch_unwind(|| ShardSpec::twofived(2, 2, 0).local_heads(6));
+        assert!(result.is_err(), "6 heads on a 2x2x2 mesh must panic, not truncate");
+        let result = std::panic::catch_unwind(|| ShardSpec::oned(3, 0).local_heads(4));
+        assert!(result.is_err(), "4 heads on a 3-line must panic, not truncate");
     }
 
     #[test]

@@ -188,7 +188,7 @@ mod tests {
             train: TrainConfig { steps: 12, lr: 3e-3, warmup: 2, ..Default::default() },
             parallelism: Parallelism::Seq,
             edge: 1,
-            artifacts_dir: String::new(),
+            ..CubicConfig::default()
         };
         let rep = run_training(&cfg, NetModel::zero()).unwrap();
         assert_eq!(rep.losses.len(), 12);
@@ -226,6 +226,14 @@ mod tests {
             (Parallelism::OneD, 8),
             (Parallelism::TwoD, 2),
             (Parallelism::ThreeD, 2),
+            (Parallelism::TwoFiveD { depth: 2 }, 2),
+            (
+                Parallelism::Hybrid {
+                    replicas: 2,
+                    inner: crate::topology::HybridInner::TwoD,
+                },
+                2,
+            ),
         ] {
             let t = time_core_step(&cfg, par, edge, NetModel::longhorn_v100()).unwrap();
             let ratio = t.backward_s / t.forward_s;
@@ -251,7 +259,7 @@ mod checkpoint_tests {
             train: TrainConfig { steps: 3, ..Default::default() },
             parallelism: crate::topology::Parallelism::ThreeD,
             edge: 2,
-            artifacts_dir: String::new(),
+            ..CubicConfig::default()
         };
         let rep = run_training_with_checkpoint(&cfg, NetModel::zero(), &dir).unwrap();
         assert_eq!(rep.losses.len(), 3);

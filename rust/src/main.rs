@@ -27,13 +27,18 @@ COMMANDS
   train           train on the simulated cluster with real numerics
                     --config <file.toml>     load a config file
                     --save-dir <dir>         write rank-sharded checkpoints
-                    --parallelism seq|1d|2d|3d (default 3d)
+                    --parallelism seq|1d|2d|3d|2.5d|hybrid[1d|2d|3d] (default 3d)
                     --edge <n>               topology edge (default 2)
+                    --depth <n>              2.5-D depth layers (default 2)
+                    --replicas <n>           hybrid data-parallel replicas (default 2)
                     --model tiny|charlm|large100m (default tiny)
                     --steps <n> --lr <f> --seed <n>
   bench-table1    regenerate paper Table 1 (weak scaling)
   bench-table2    regenerate paper Table 2 (strong scaling + speedups)
-  plan            print the per-rank shard plan for a config
+  plan            print the per-rank shard plan for a config, or — with
+                  --world <n> — the cross-kind comparison table (every
+                  parallelism kind decomposed at exactly n ranks, ranked
+                  by phantom-mode step time)
   artifacts       list the AOT bundle and smoke-run one artifact
                     --dir <artifacts dir> (default ./artifacts)
   help            show this text
@@ -60,6 +65,14 @@ fn build_config(args: &Args) -> Result<CubicConfig, String> {
     if let Some(p) = args.get("parallelism") {
         cfg.parallelism =
             Parallelism::parse(&p).ok_or_else(|| format!("unknown parallelism {p:?}"))?;
+    }
+    if let Some(d) = args.get("depth") {
+        let d: usize = d.parse().map_err(|e| format!("--depth {d:?}: {e}"))?;
+        cfg.parallelism.set_depth(d).map_err(|e| format!("--depth: {e}"))?;
+    }
+    if let Some(r) = args.get("replicas") {
+        let r: usize = r.parse().map_err(|e| format!("--replicas {r:?}: {e}"))?;
+        cfg.parallelism.set_replicas(r).map_err(|e| format!("--replicas: {e}"))?;
     }
     cfg.edge = args.get_usize("edge", cfg.edge)?;
     cfg.train.steps = args.get_usize("steps", cfg.train.steps)?;
@@ -101,6 +114,10 @@ fn cmd_train(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_plan(args: &Args) -> Result<(), String> {
+    let world = args.get_usize("world", 0)?;
+    if world > 0 {
+        return cmd_plan_world(world);
+    }
     let cfg = build_config(args)?;
     println!("plan for {}", describe(&cfg));
     let world = cfg.parallelism.world_size(cfg.edge);
@@ -116,6 +133,64 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
             block.w_qkv.shape(),
         );
     }
+    Ok(())
+}
+
+/// `plan --world N`: one row per parallelism kind with an exact
+/// decomposition at `N` ranks (plus the `seq` single-device baseline),
+/// ranked by phantom-mode virtual step time on the calibrated network —
+/// per-rank memory from the real shard shapes, per-rank communication from
+/// the engine's traffic ledger. This is how 2-D vs 2.5-D vs 3-D vs hybrid
+/// compare at equal world size before committing to a topology.
+fn cmd_plan_world(world: usize) -> Result<(), String> {
+    use cubic::metrics::{fmt_bytes, Table};
+    let cfg = cubic::config::ModelConfig::paper(4096, world.max(16));
+    let rows = cfg.batch * cfg.seq;
+    println!(
+        "plan comparison at world size {world} (hidden {}, batch {}, seq {}, 1 layer)\n",
+        cfg.hidden, cfg.batch, cfg.seq
+    );
+    let mut t = Table::new(&[
+        "Kind", "Mesh", "Ranks", "weights/rank", "acts/rank", "comm bytes/rank", "virtual step",
+    ]);
+    let mut rows_out: Vec<(f64, [String; 7])> = Vec::new();
+    for cand in cubic::topology::plan_candidates(world) {
+        let (par, edge) = (cand.par, cand.edge);
+        if let Err(e) = cfg.validate(par, edge) {
+            println!("  (skipping {} {}: {e})", par.name(), par.mesh_desc(edge));
+            continue;
+        }
+        let w = par.world_size(edge);
+        let mut w_max = 0usize;
+        let mut a_max = 0usize;
+        for rank in 0..w {
+            let env = ParEnv::new(par, edge, rank);
+            w_max = w_max.max(env.phantom_block(&cfg).numel() * 4);
+            let (ar, ac) = env.activation_shape(rows, cfg.hidden);
+            a_max = a_max.max(ar * ac * 4);
+        }
+        let timing = cubic::engine::time_core_step(&cfg, par, edge, NetModel::longhorn_v100())
+            .map_err(|e| e.to_string())?;
+        let step = timing.forward_s + timing.backward_s;
+        rows_out.push((
+            step,
+            [
+                par.name().to_string(),
+                par.mesh_desc(edge),
+                w.to_string(),
+                fmt_bytes(w_max as u64),
+                fmt_bytes(a_max as u64),
+                fmt_bytes(timing.metrics.total_bytes / w.max(1) as u64),
+                format!("{step:.4}s"),
+            ],
+        ));
+    }
+    // Fastest mesh first — the documented ranking.
+    rows_out.sort_by(|a, b| a.0.total_cmp(&b.0));
+    for (_, cells) in &rows_out {
+        t.row(cells);
+    }
+    println!("{}", t.to_markdown());
     Ok(())
 }
 

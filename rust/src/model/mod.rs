@@ -1,10 +1,11 @@
 //! The Transformer model, parameterized by parallelism — *once*.
 //!
 //! One set of *global* parameters (deterministically initialized from a
-//! seed) can be sharded onto any of the four execution modes — `Seq`
-//! (dense single device), `1-D` (Megatron), `2-D` (Optimus/SUMMA) and the
-//! paper's `3-D` — and every mode computes the *same function* to float
-//! tolerance, which is what the cross-parallelism parity tests in
+//! seed) can be sharded onto any of the six execution modes — `Seq`
+//! (dense single device), `1-D` (Megatron), `2-D` (Optimus/SUMMA), the
+//! paper's `3-D`, the Tesseract-style `2.5-D`, and the hybrid
+//! data×tensor mesh — and every mode computes the *same function* to
+//! float tolerance, which is what the cross-parallelism parity tests in
 //! `rust/tests/` pin down.
 //!
 //! Since the `ParallelOps` redesign there is exactly **one** transformer
@@ -519,6 +520,14 @@ mod tests {
             (Parallelism::OneD, 4),
             (Parallelism::TwoD, 2),
             (Parallelism::ThreeD, 2),
+            (Parallelism::TwoFiveD { depth: 2 }, 2),
+            (
+                Parallelism::Hybrid {
+                    replicas: 2,
+                    inner: crate::topology::HybridInner::OneD,
+                },
+                2,
+            ),
         ] {
             let world = par.world_size(edge);
             for rank in 0..world {

@@ -12,36 +12,63 @@
 //! * [`seq::Seq`] — dense single device (the parity reference);
 //! * [`oned::Ctx1D`] — replicated activations, column/row-parallel linears;
 //! * [`twod::Ctx2D`] — everything block-distributed, SUMMA matmuls;
-//! * [`threed::Ctx3D`] — the paper's Algorithms 1–8 on the `p³` cube.
+//! * [`threed::Ctx3D`] — the paper's Algorithms 1–8 on the `p³` cube;
+//! * [`twofived::Ctx25D`] — Tesseract-style 2.5-D: `d` stacked SUMMA
+//!   grids, weights depth-slabbed, one depth all-reduce per residual
+//!   branch;
+//! * [`hybrid::Hybrid`] — `r` data-parallel replicas wrapping any boxed
+//!   inner leaf, adding replica-group gradient all-reduces.
 //!
 //! The generic transformer block in [`crate::model::block`] is written
 //! against `&dyn ParallelOps` only; `crate::model::ParEnv` is the thin
 //! boxed dispatcher that picks the implementation at run time. Every
 //! implementation is verified shard-for-shard against the dense reference
-//! by `rust/tests/model_parity.rs` — one generic test over all four kinds.
+//! by `rust/tests/model_parity.rs` — one generic test over all six kinds.
 //!
 //! ## Adding a new parallelism
 //!
-//! A new decomposition (a hybrid data+tensor mesh, a 2.5-D split, …) is a
-//! *leaf*, not a fork:
+//! A new decomposition is a *leaf*, not a fork. The two newest leaves are
+//! worked examples of the two shapes a leaf can take — a genuinely new
+//! mesh (2.5-D) and a wrapper around existing leaves (hybrid):
 //!
 //! 1. **Layout** — add a [`crate::dist::MeshSpec`] arm and teach
 //!    [`crate::dist::ShardSpec`]'s `shard_*`/`assemble_*` methods where
 //!    weights ([`Stage`]), vectors ([`crate::dist::VecRole`]) and
 //!    activations live on the new mesh. The dist tests
 //!    (`shard_spec_*_round_trips*`) then pin `gather ∘ scatter = id` for
-//!    free.
+//!    free. *2.5-D example:* `MeshSpec::Tess(grid, depth)` composes two
+//!    existing layouts — `Layout1D` slabs across depth, `Layout2D` blocks
+//!    within a layer — so `tess_weight_bounds` is ~20 lines of offset
+//!    arithmetic. *Hybrid example:* `MeshSpec::Hybrid(r, inner)` delegates
+//!    every question to the boxed inner mesh after peeling the replica
+//!    index off the rank (plus a row-slab offset for activations); if your
+//!    mesh replicates weights, also override `weight_replicas` so the
+//!    parity tiling checks stay exact.
 //! 2. **Ops** — write a context type holding the mesh + this rank's
 //!    coordinate and implement [`ParallelOps`]: the six matmul forms (or
 //!    at minimum `matmul_nn`/`matmul_nt`/`matmul_tn`), `linear_fwd/bwd`,
 //!    `vec_op`, and the layernorm pair. Provided methods (activation
 //!    scatter/gather, block sharding, phantom blocks) come from the
-//!    `ShardSpec` automatically.
+//!    `ShardSpec` automatically. *2.5-D example:* [`twofived::Ctx25D`]
+//!    reuses the 2-D module's SUMMA free functions on a grid embedded at
+//!    rank base `layer·p²` and adds one depth all-reduce per `Reduce`
+//!    forward / `Expand` backward. *Hybrid example:* [`hybrid::Hybrid`]
+//!    holds a `Box<dyn ParallelOps>` built with a rank base of
+//!    `replica·inner_world` (every leaf has a `with_base` constructor for
+//!    exactly this) and post-processes only the weight/vector gradients
+//!    with `all_reduce` over the replica group — the wrapper pattern: no
+//!    inner code changes at all.
 //! 3. **Dispatch** — add the arm to [`ops_for`] (and
-//!    `topology::Parallelism` if it is a genuinely new kind).
-//! 4. **Verify** — add the `(kind, edge)` pair to the generic loop in
-//!    `rust/tests/model_parity.rs`. No model code changes: the block,
-//!    trainer, engine and benches are already generic.
+//!    `topology::Parallelism` if it is a genuinely new kind; parameterized
+//!    kinds like `TwoFiveD { depth }` carry their extra shape data in the
+//!    enum so every `(kind, edge)` call site keeps working).
+//! 4. **Verify** — add the `(kind, edge)` pair to `ALL_ENVS` in
+//!    `rust/tests/model_parity.rs` and (for fast CI fail) a
+//!    `new_leaf_*`-prefixed test naming it. No model code changes: the
+//!    block, trainer, engine and benches are already generic. If the mesh
+//!    has a nontrivial comm profile, mirror it in `crate::costmodel` and
+//!    pin the formula against the phantom-mode ledger like
+//!    `mm25d_fwd_bytes_match_engine_ledger_exactly` does.
 //!
 //! ## Conventions shared by all implementations
 //!
@@ -56,10 +83,12 @@
 //!   the memory-pass costs), so phantom-mode timing is identical to the
 //!   pre-trait per-dimension implementations.
 
+pub mod hybrid;
 pub mod oned;
 pub mod seq;
 pub mod threed;
 pub mod twod;
+pub mod twofived;
 
 use crate::comm::Endpoint;
 use crate::config::ModelConfig;
@@ -249,6 +278,10 @@ pub fn ops_for(par: Parallelism, edge: usize, rank: usize) -> Box<dyn ParallelOp
         Parallelism::TwoD => Box::new(twod::Ctx2D::new(crate::topology::Mesh::new(edge), rank)),
         Parallelism::ThreeD => {
             Box::new(threed::Ctx3D::new(crate::topology::Cube::new(edge), rank))
+        }
+        Parallelism::TwoFiveD { depth } => Box::new(twofived::Ctx25D::new(edge, depth, rank)),
+        Parallelism::Hybrid { replicas, inner } => {
+            Box::new(hybrid::Hybrid::for_kind(replicas, inner, edge, rank))
         }
     }
 }

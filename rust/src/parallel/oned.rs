@@ -30,8 +30,17 @@ pub struct Ctx1D {
 
 impl Ctx1D {
     pub fn new(world: usize, rank: usize) -> Self {
+        Self::with_base(world, rank, 0)
+    }
+
+    /// Like [`Ctx1D::new`] but the `world` group occupies global ranks
+    /// `base..base + world` — the hook that lets an outer mesh (a hybrid
+    /// replica group) embed 1-D lines anywhere in the rank space. `rank` is
+    /// the line-local position; the endpoint's global rank must be
+    /// `base + rank`.
+    pub fn with_base(world: usize, rank: usize, base: usize) -> Self {
         Ctx1D {
-            group: (0..world).collect(),
+            group: (base..base + world).collect(),
             pos: rank,
             spec: ShardSpec::oned(world, rank),
         }

@@ -38,6 +38,7 @@ pub struct Ctx3D {
     pub cube: Cube,
     pub coord: Coord,
     pub d0: Dirs,
+    base: usize,
     spec: ShardSpec,
 }
 
@@ -47,14 +48,34 @@ impl Ctx3D {
     }
 
     pub fn with_dirs(cube: Cube, rank: usize, d0: Dirs) -> Self {
+        Self::with_dirs_base(cube, rank, d0, 0)
+    }
+
+    /// Like [`Ctx3D::with_dirs`] but the cube occupies global ranks
+    /// `base..base + p³` — the hook that lets a hybrid replica group embed
+    /// cubes anywhere in the rank space. `rank` is cube-local; the
+    /// endpoint's global rank must be `base + rank`.
+    pub fn with_dirs_base(cube: Cube, rank: usize, d0: Dirs, base: usize) -> Self {
         d0.assert_distinct();
         let coord = cube.coord_of(rank);
         let spec = ShardSpec::threed_with_dirs(cube.edge(), rank, d0);
-        Ctx3D { cube, coord, d0, spec }
+        Ctx3D { cube, coord, d0, base, spec }
     }
 
     pub fn p(&self) -> usize {
         self.cube.edge()
+    }
+
+    /// The global ranks of the axis-aligned line through this rank's
+    /// coordinate (the cube's line offset by `base`). All collectives in
+    /// this module go through here so embedded cubes talk to the right
+    /// endpoints.
+    fn line(&self, axis: crate::topology::Axis) -> Vec<usize> {
+        self.cube
+            .line(self.coord, axis)
+            .into_iter()
+            .map(|r| r + self.base)
+            .collect()
     }
 
     /// The direction triple a `stage` linear runs under: `Expand` uses the
@@ -101,7 +122,7 @@ pub fn gather_merge(
     layout: Layout3D,
     axis: crate::topology::Axis,
 ) -> Tensor {
-    let group = ctx.cube.line(ctx.coord, axis);
+    let group = ctx.line(axis);
     let parts = all_gather(ep, &group, shard);
     merge_parts(parts, layout, axis)
 }
@@ -130,7 +151,7 @@ pub fn reduce_scatter_split(
     axis: crate::topology::Axis,
     split_rows: bool,
 ) -> Tensor {
-    let group = ctx.cube.line(ctx.coord, axis);
+    let group = ctx.line(axis);
     let chunks = if split_rows {
         partial.split_rows(ctx.p())
     } else {
@@ -388,7 +409,7 @@ pub fn gather_vec(
         DiagVec3D::for_dirs(dirs).owns(ctx.coord),
         ctx.coord.axis(dirs.a) == ctx.coord.axis(dirs.c)
     );
-    let line_a = ctx.cube.line(ctx.coord, dirs.a);
+    let line_a = ctx.line(dirs.a);
     let root_pos = ctx.coord.axis(dirs.c);
     let mine = if ctx.cube.pos_in_line(ctx.coord, dirs.a) == root_pos {
         Some(
@@ -402,7 +423,7 @@ pub fn gather_vec(
     };
     let chunk = broadcast(ep, &line_a, root_pos, mine);
     // All-gather along dB and flatten into the full per-column-block vector.
-    let line_b = ctx.cube.line(ctx.coord, dirs.b);
+    let line_b = ctx.line(dirs.b);
     let parts = all_gather(ep, &line_b, &chunk);
     if parts.iter().any(|p| p.is_phantom()) {
         let n: usize = parts.iter().map(|p| p.numel()).sum();
@@ -473,7 +494,7 @@ fn vec_grad(ep: &mut Endpoint, ctx: &Ctx3D, g: &Tensor, dirs: Dirs) -> Option<Te
     ep.charge_memop(g.nominal_bytes() as f64);
     let local = g.sum_rows(); // (cols,)
     // Reduce along dA to the diagonal member (pos = coord(dirs.c)).
-    let line_a = ctx.cube.line(ctx.coord, dirs.a);
+    let line_a = ctx.line(dirs.a);
     let root_pos = ctx.coord.axis(dirs.c);
     let at_diag = reduce(ep, &line_a, root_pos, &local);
     // Diagonal owners split the column-block vector over the dB line and
@@ -482,7 +503,7 @@ fn vec_grad(ep: &mut Endpoint, ctx: &Ctx3D, g: &Tensor, dirs: Dirs) -> Option<Te
     // are shared along the dB line), so the collective's participants agree.
     match at_diag {
         Some(v) => {
-            let line_b = ctx.cube.line(ctx.coord, dirs.b);
+            let line_b = ctx.line(dirs.b);
             let n = v.numel();
             assert_eq!(n % p, 0);
             let chunks = v.reshape(&[p, n / p]).split_rows(p);
@@ -522,7 +543,7 @@ pub fn layernorm(
     n_global_cols: usize,
 ) -> (Tensor, Tensor, Tensor) {
     let (rows, _cols) = x.dims2();
-    let line_c = ctx.cube.line(ctx.coord, dirs.c);
+    let line_c = ctx.line(dirs.c);
     // Stack local row-sums and row-sumsqs into one tensor -> one all-reduce.
     let stats = if x.is_phantom() {
         Tensor::phantom(&[2, rows])
@@ -594,7 +615,7 @@ pub fn layernorm_backward(
     ep.charge_memop(3.0 * dy.nominal_bytes() as f64);
 
     // Row reductions of g and g ⊙ xhat, all-reduced over the dC line.
-    let line_c = ctx.cube.line(ctx.coord, dirs.c);
+    let line_c = ctx.line(dirs.c);
     let stats = if g.is_phantom() || xhat.is_phantom() {
         Tensor::phantom(&[2, rows])
     } else {

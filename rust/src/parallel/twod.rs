@@ -23,19 +23,29 @@ use crate::parallel::ParallelOps;
 use crate::tensor::Tensor;
 use crate::topology::Mesh;
 
-/// Per-rank context on the `q × q` mesh.
+/// Per-rank context on the `q × q` mesh. `base` offsets the grid's ranks
+/// into the global rank space (0 for the stand-alone 2-D leaf; the 2.5-D
+/// Tesseract and hybrid wrappers embed grids at non-zero bases).
 pub struct Ctx2D {
     pub mesh: Mesh,
     pub row: usize,
     pub col: usize,
+    base: usize,
     spec: ShardSpec,
 }
 
 impl Ctx2D {
     pub fn new(mesh: Mesh, rank: usize) -> Self {
+        Self::with_base(mesh, rank, 0)
+    }
+
+    /// Like [`Ctx2D::new`] but the grid occupies global ranks
+    /// `base..base + q²` (row-major). `rank` is the grid-local rank; the
+    /// endpoint's global rank must be `base + rank`.
+    pub fn with_base(mesh: Mesh, rank: usize, base: usize) -> Self {
         let (row, col) = mesh.coord_of(rank);
         let spec = ShardSpec::twod(mesh.edge(), rank);
-        Ctx2D { mesh, row, col, spec }
+        Ctx2D { mesh, row, col, base, spec }
     }
 
     pub fn q(&self) -> usize {
@@ -43,11 +53,11 @@ impl Ctx2D {
     }
 
     fn row_group(&self) -> Vec<usize> {
-        self.mesh.row_group(self.row)
+        self.mesh.row_group(self.row).into_iter().map(|r| r + self.base).collect()
     }
 
     fn col_group(&self) -> Vec<usize> {
-        self.mesh.col_group(self.col)
+        self.mesh.col_group(self.col).into_iter().map(|r| r + self.base).collect()
     }
 }
 
@@ -133,6 +143,26 @@ pub fn summa_tn(ep: &mut Endpoint, ctx: &Ctx2D, a: &Tensor, b: &Tensor) -> Tenso
 /// mesh row 0 (`b_chunk` is `Some` only at `row == 0`).
 pub fn bcast_bias(ep: &mut Endpoint, ctx: &Ctx2D, b_chunk: Option<&Tensor>) -> Tensor {
     broadcast(ep, &ctx.col_group(), 0, b_chunk.map(|b| b.clone()))
+}
+
+/// `C = A + v` / `C = A ⊙ v` for a block-distributed activation and a
+/// row-0-stored vector: broadcast the chunk down the mesh column, apply
+/// locally. Shared by the 2-D leaf and the 2.5-D leaf (whose per-layer
+/// grids use the same placement), so the cost accounting cannot drift.
+pub fn vec_op(
+    ep: &mut Endpoint,
+    ctx: &Ctx2D,
+    a: &Tensor,
+    v: Option<&Tensor>,
+    mul: bool,
+) -> Tensor {
+    let full = bcast_bias(ep, ctx, v);
+    ep.charge_memop(a.nominal_bytes() as f64);
+    if mul {
+        a.mul_row_vector(&full)
+    } else {
+        a.add_row_vector(&full)
+    }
 }
 
 /// 2-D linear forward `Y = X·W + b`. All blocks `(·/q, ·/q)`; bias stored on
@@ -321,13 +351,7 @@ impl ParallelOps for Ctx2D {
     }
 
     fn vec_op(&self, ep: &mut Endpoint, a: &Tensor, v: Option<&Tensor>, mul: bool) -> Tensor {
-        let full = bcast_bias(ep, self, v);
-        ep.charge_memop(a.nominal_bytes() as f64);
-        if mul {
-            a.mul_row_vector(&full)
-        } else {
-            a.add_row_vector(&full)
-        }
+        vec_op(ep, self, a, v, mul)
     }
 
     fn layernorm(

@@ -1,0 +1,312 @@
+//! 2.5-D tensor parallelism — Tesseract-style depth-stacked SUMMA.
+//!
+//! The `p × p × d` mesh holds `d` depth layers, each a SUMMA `p × p` grid
+//! (see [`crate::dist::MeshSpec::Tess`] for the layout and the
+//! memory/communication trade-off table). The decomposition is exactly
+//! 1-D Megatron **along the depth axis** composed with 2-D SUMMA **within
+//! each layer**:
+//!
+//! * the `Expand` weight is column-slabbed across depth (each layer owns
+//!   `1/d` of the output columns — no forward depth communication, the
+//!   hidden activation comes out depth-slabbed);
+//! * the `Reduce` weight is row-slabbed across depth (each layer consumes
+//!   its slab of the hidden activation and contributes a partial product);
+//!   one **depth all-reduce** sums the partials, returning the activation
+//!   to its entry layout — the all-reduce that closes each residual branch
+//!   forward. Backward mirrors it: the `Expand` input gradient is the
+//!   depth all-reduce of per-layer partials.
+//!
+//! Within a layer every matmul is the 2-D module's SUMMA on the slab
+//! shapes, over grids embedded at rank base `layer · p²` — the same code
+//! path as the stand-alone 2-D leaf, so the two cannot drift. Entry-layout
+//! activations are replicated across depth, so layernorm and `vec_op` are
+//! purely per-layer (identical results on every layer by construction).
+//!
+//! Exact per-rank communication volume is mirrored in closed form by
+//! `crate::costmodel::mm25d_fwd_bytes_per_rank` and pinned against the
+//! engine ledger by the costmodel tests.
+
+use crate::collectives::all_reduce;
+use crate::comm::Endpoint;
+use crate::dist::{ShardSpec, Stage};
+use crate::parallel::twod::{self, bcast_bias, summa_nn, summa_nt, summa_tn, Ctx2D};
+use crate::parallel::ParallelOps;
+use crate::tensor::Tensor;
+use crate::topology::Mesh;
+
+/// Per-rank context on the `p × p × d` Tesseract mesh.
+pub struct Ctx25D {
+    /// This rank's grid, embedded at global base `base + layer · p²`.
+    grid: Ctx2D,
+    layer: usize,
+    depth: usize,
+    grid_rank: usize,
+    /// Global rank of `(layer 0, grid rank 0)` — non-zero when a hybrid
+    /// replica group embeds this mesh.
+    base: usize,
+    spec: ShardSpec,
+}
+
+impl Ctx25D {
+    pub fn new(p: usize, depth: usize, rank: usize) -> Self {
+        Self::with_base(p, depth, rank, 0)
+    }
+
+    /// Like [`Ctx25D::new`] but the mesh occupies global ranks
+    /// `base..base + p²·depth`. `rank` is mesh-local; the endpoint's global
+    /// rank must be `base + rank`.
+    pub fn with_base(p: usize, depth: usize, rank: usize, base: usize) -> Self {
+        assert!(depth >= 1, "2.5-D mesh needs depth >= 1");
+        let mesh = Mesh::new(p);
+        assert!(rank < mesh.size() * depth);
+        let layer = rank / mesh.size();
+        let grid_rank = rank % mesh.size();
+        let grid = Ctx2D::with_base(mesh, grid_rank, base + layer * p * p);
+        let spec = ShardSpec::twofived(p, depth, rank);
+        Ctx25D { grid, layer, depth, grid_rank, base, spec }
+    }
+
+    pub fn p(&self) -> usize {
+        self.grid.q()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// This rank's depth layer (also its position in the depth group).
+    pub fn layer(&self) -> usize {
+        self.layer
+    }
+
+    /// The global ranks holding this rank's grid position on every depth
+    /// layer, ordered by layer — the group of the residual-branch
+    /// all-reduce. This rank sits at position `layer`.
+    fn depth_group(&self) -> Vec<usize> {
+        let p2 = self.p() * self.p();
+        (0..self.depth).map(|l| self.base + l * p2 + self.grid_rank).collect()
+    }
+}
+
+impl ParallelOps for Ctx25D {
+    fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    fn matmul_nn(&self, ep: &mut Endpoint, x: &Tensor, w: &Tensor, stage: Stage) -> Tensor {
+        match stage {
+            // Column-slabbed weight: the layer's SUMMA yields its slab of
+            // the output — no depth communication (Megatron column form).
+            Stage::Expand => summa_nn(ep, &self.grid, x, w),
+            // Row-slabbed weight: per-layer partials sum over depth
+            // (Megatron row form — the branch-closing all-reduce).
+            Stage::Reduce => {
+                let partial = summa_nn(ep, &self.grid, x, w);
+                all_reduce(ep, &self.depth_group(), &partial)
+            }
+        }
+    }
+
+    fn matmul_nt(&self, ep: &mut Endpoint, dy: &Tensor, w: &Tensor, stage: Stage) -> Tensor {
+        match stage {
+            // dX of a column-slabbed linear: per-layer partials of the full
+            // input gradient sum over depth (the backward all-reduce).
+            Stage::Expand => {
+                let partial = summa_nt(ep, &self.grid, dy, w);
+                all_reduce(ep, &self.depth_group(), &partial)
+            }
+            // dX of a row-slabbed linear: dY is depth-replicated; the
+            // layer's SUMMA yields its slab of dX directly.
+            Stage::Reduce => summa_nt(ep, &self.grid, dy, w),
+        }
+    }
+
+    fn matmul_tn(&self, ep: &mut Endpoint, x: &Tensor, dy: &Tensor, _stage: Stage) -> Tensor {
+        // Both weight-gradient forms are depth-local: the slabbed operand
+        // pair always lines up (Expand: replicated X × the layer's dY slab;
+        // Reduce: the layer's X slab × replicated dY), yielding the layer's
+        // weight-slab gradient from its own SUMMA.
+        summa_tn(ep, &self.grid, x, dy)
+    }
+
+    fn linear_fwd(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+        stage: Stage,
+    ) -> Tensor {
+        match stage {
+            // 2-D linear within the layer; the bias slab chunk lives on the
+            // layer's grid row 0 like every Optimus vector.
+            Stage::Expand => twod::linear_fwd(ep, &self.grid, x, w, b, true),
+            Stage::Reduce => {
+                let y = self.matmul_nn(ep, x, w, stage);
+                let bias = bcast_bias(ep, &self.grid, b);
+                ep.charge_memop(y.nominal_bytes() as f64);
+                y.add_row_vector(&bias)
+            }
+        }
+    }
+
+    fn linear_bwd(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        w: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Tensor, Option<Tensor>) {
+        let (dx, dw, db) = twod::linear_bwd(ep, &self.grid, dy, x, w);
+        match stage {
+            Stage::Expand => (all_reduce(ep, &self.depth_group(), &dx), dw, db),
+            Stage::Reduce => (dx, dw, db),
+        }
+    }
+
+    fn vec_op(&self, ep: &mut Endpoint, a: &Tensor, v: Option<&Tensor>, mul: bool) -> Tensor {
+        twod::vec_op(ep, &self.grid, a, v, mul)
+    }
+
+    fn layernorm(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        gamma: Option<&Tensor>,
+        beta: Option<&Tensor>,
+        eps: f32,
+        hidden: usize,
+    ) -> (Tensor, Tensor, Tensor) {
+        twod::layernorm(ep, &self.grid, x, gamma, beta, eps, hidden)
+    }
+
+    fn layernorm_backward(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        hidden: usize,
+    ) -> (Tensor, Option<Tensor>, Option<Tensor>) {
+        twod::layernorm_backward(ep, &self.grid, dy, xhat, inv_std, gamma, hidden)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+    use crate::dist::{DistTensor, VecRole};
+    use crate::rng::Xoshiro256;
+    use crate::spmd::run_spmd;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Tensor::randn(shape, 1.0, &mut rng)
+    }
+
+    #[test]
+    fn expand_then_reduce_matmul_matches_dense() {
+        // A residual branch's two linears: Expand (depth-column-slabbed)
+        // then Reduce (depth-row-slabbed) must return the entry layout with
+        // the dense product, closing with one depth all-reduce.
+        let (p, d) = (2usize, 2usize);
+        let world = p * p * d;
+        let (m, n, k) = (8usize, 16usize, 32usize);
+        let x = randt(&[m, n], 1);
+        let w1 = randt(&[n, k], 2);
+        let w2 = randt(&[k, n], 3);
+        let y_ref = x.matmul(&w1).matmul(&w2);
+        let (x2, w1c, w2c) = (x.clone(), w1.clone(), w2.clone());
+        let out = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx25D::new(p, d, rank);
+            let xl = ctx.spec().shard_activation(&x2);
+            let w1s = ctx.spec().shard_weight(Stage::Expand, &w1c);
+            let w2s = ctx.spec().shard_weight(Stage::Reduce, &w2c);
+            let h = ctx.matmul_nn(ep, &xl, &w1s, Stage::Expand);
+            ctx.matmul_nn(ep, &h, &w2s, Stage::Reduce)
+        });
+        let parts: Vec<DistTensor> = out
+            .into_iter()
+            .enumerate()
+            .map(|(r, t)| DistTensor::from_local(&ShardSpec::twofived(p, d, r), t))
+            .collect();
+        let y = DistTensor::assemble_activation(&parts, m, n);
+        assert!(y.max_abs_diff(&y_ref) < 1e-3, "{}", y.max_abs_diff(&y_ref));
+    }
+
+    #[test]
+    fn depth_one_degenerates_to_two_d() {
+        // d = 1 must be bit-compatible with the plain 2-D leaf: same
+        // shards, same SUMMA, and the depth all-reduce a no-op.
+        let p = 2usize;
+        let (m, n, k) = (8usize, 8usize, 8usize);
+        let x = randt(&[m, n], 4);
+        let w = randt(&[n, k], 5);
+        let (x2, wc) = (x.clone(), w.clone());
+        let tess = run_spmd(p * p, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx25D::new(p, 1, rank);
+            let xl = ctx.spec().shard_activation(&x2);
+            let ws = ctx.spec().shard_weight(Stage::Reduce, &wc);
+            ctx.matmul_nn(ep, &xl, &ws, Stage::Reduce)
+        });
+        let (x3, wc2) = (x.clone(), w.clone());
+        let twod_out = run_spmd(p * p, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx2D::new(Mesh::new(p), rank);
+            let xl = ctx.spec().shard_activation(&x3);
+            let ws = ctx.spec().shard_weight(Stage::Reduce, &wc2);
+            ctx.matmul_nn(ep, &xl, &ws, Stage::Reduce)
+        });
+        for (rank, (a, b)) in tess.iter().zip(twod_out.iter()).enumerate() {
+            assert_eq!(a, b, "rank {rank}: d=1 must equal the 2-D leaf bitwise");
+        }
+    }
+
+    #[test]
+    fn vec_op_matches_dense_on_every_layer() {
+        let (p, d) = (2usize, 2usize);
+        let world = p * p * d;
+        let (m, n) = (8usize, 16usize);
+        let a = randt(&[m, n], 6);
+        let v = randt(&[n], 7);
+        let want = a.add_row_vector(&v);
+        let (a2, v2) = (a.clone(), v.clone());
+        let out = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let ctx = Ctx25D::new(p, d, rank);
+            let al = ctx.spec().shard_activation(&a2);
+            let chunk = ctx.spec().shard_vector(VecRole::Norm, &v2);
+            ctx.vec_op(ep, &al, chunk.as_ref(), false)
+        });
+        // Every depth layer computes the same grid-blocked result: gather
+        // each layer's p² blocks through the plain 2-D layout.
+        let mesh = Mesh::new(p);
+        for layer in 0..d {
+            let parts = &out[layer * p * p..(layer + 1) * p * p];
+            let got = crate::dist::Layout2D::gather(&mesh, parts, m, n);
+            assert!(got.max_abs_diff(&want) < 1e-5, "layer {layer}");
+        }
+    }
+
+    #[test]
+    fn phantom_mode_charges_time_and_depth_allreduce_bytes() {
+        let (p, d) = (2usize, 2usize);
+        let world = p * p * d;
+        let out = run_spmd(world, NetModel::longhorn_v100(), move |rank, ep| {
+            let ctx = Ctx25D::new(p, d, rank);
+            // Reduce-stage shapes: x slab blocks (M/p, N/(d·p)), w slab
+            // blocks (N/(d·p), K/p).
+            let x = Tensor::phantom(&[64, 32]);
+            let w = Tensor::phantom(&[32, 64]);
+            let y = ctx.matmul_nn(ep, &x, &w, Stage::Reduce);
+            (y.is_phantom(), y.shape().to_vec(), ep.clock, ep.stats.bytes_sent)
+        });
+        for (ph, shape, clock, bytes) in out {
+            assert!(ph);
+            assert_eq!(shape, vec![64, 64]);
+            assert!(clock > 0.0, "virtual time must advance in phantom mode");
+            assert!(bytes > 0, "SUMMA + depth all-reduce must move bytes");
+        }
+    }
+}

@@ -186,6 +186,33 @@ impl Line {
     }
 }
 
+/// The inner tensor mesh of a hybrid data×tensor decomposition. A strict
+/// subset of [`Parallelism`] (no `Seq`, no nested hybrids) so hybrid specs
+/// stay one level deep and `Copy`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HybridInner {
+    /// 1-D Megatron line.
+    OneD,
+    /// 2-D SUMMA grid.
+    TwoD,
+    /// 3-D cube.
+    ThreeD,
+    /// 2.5-D Tesseract (`depth` stacked SUMMA grids).
+    TwoFiveD { depth: usize },
+}
+
+impl HybridInner {
+    /// The stand-alone parallelism this inner mesh corresponds to.
+    pub fn as_parallelism(&self) -> Parallelism {
+        match self {
+            HybridInner::OneD => Parallelism::OneD,
+            HybridInner::TwoD => Parallelism::TwoD,
+            HybridInner::ThreeD => Parallelism::ThreeD,
+            HybridInner::TwoFiveD { depth } => Parallelism::TwoFiveD { depth: *depth },
+        }
+    }
+}
+
 /// Which parallelism a model/run uses; carried through configs and the CLI.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Parallelism {
@@ -197,22 +224,33 @@ pub enum Parallelism {
     TwoD,
     /// The paper's load-balanced 3-D tensor parallelism.
     ThreeD,
+    /// Tesseract-style 2.5-D: `depth` stacked `edge × edge` SUMMA grids.
+    /// Weights shard across the depth axis, activations replicate per layer.
+    TwoFiveD { depth: usize },
+    /// Data-parallel outer group of `replicas` around an inner tensor mesh
+    /// (the inner mesh uses the run's `edge` parameter).
+    Hybrid { replicas: usize, inner: HybridInner },
 }
 
 impl Parallelism {
     /// World size for a given "edge" parameter: 1-D uses `P = edge`, 2-D
-    /// `P = edge²`, 3-D `P = edge³`.
+    /// `P = edge²`, 3-D `P = edge³`, 2.5-D `P = edge²·depth`, hybrid
+    /// `P = replicas · inner(edge)`.
     pub fn world_size(&self, edge: usize) -> usize {
         match self {
             Parallelism::Seq => 1,
             Parallelism::OneD => edge,
             Parallelism::TwoD => edge * edge,
             Parallelism::ThreeD => edge * edge * edge,
+            Parallelism::TwoFiveD { depth } => edge * edge * depth,
+            Parallelism::Hybrid { replicas, inner } => {
+                replicas * inner.as_parallelism().world_size(edge)
+            }
         }
     }
 
-    /// Edge parameter for a given world size; `None` if the world size is
-    /// not a perfect square/cube as required.
+    /// Edge parameter for a given world size; `None` if the world size does
+    /// not factor as the kind requires (square, cube, `p²·depth`, …).
     pub fn edge_for_world(&self, world: usize) -> Option<usize> {
         match self {
             Parallelism::Seq => (world == 1).then_some(1),
@@ -225,6 +263,18 @@ impl Parallelism {
                 let p = (world as f64).cbrt().round() as usize;
                 (p * p * p == world).then_some(p)
             }
+            Parallelism::TwoFiveD { depth } => {
+                if *depth == 0 || world % depth != 0 {
+                    return None;
+                }
+                Parallelism::TwoD.edge_for_world(world / depth)
+            }
+            Parallelism::Hybrid { replicas, inner } => {
+                if *replicas == 0 || world % replicas != 0 {
+                    return None;
+                }
+                inner.as_parallelism().edge_for_world(world / replicas)
+            }
         }
     }
 
@@ -234,18 +284,167 @@ impl Parallelism {
             Parallelism::OneD => "1d",
             Parallelism::TwoD => "2d",
             Parallelism::ThreeD => "3d",
+            Parallelism::TwoFiveD { .. } => "2.5d",
+            Parallelism::Hybrid { .. } => "hybrid",
         }
     }
 
+    /// Human description of the device mesh at a given edge, e.g. `8x8`,
+    /// `4x4x4`, `4x4x2` (2.5-D), `2x(4x4)` (hybrid).
+    pub fn mesh_desc(&self, edge: usize) -> String {
+        match self {
+            Parallelism::Seq => "1".to_string(),
+            Parallelism::OneD => edge.to_string(),
+            Parallelism::TwoD => format!("{edge}x{edge}"),
+            Parallelism::ThreeD => format!("{edge}x{edge}x{edge}"),
+            Parallelism::TwoFiveD { depth } => format!("{edge}x{edge}x{depth}"),
+            Parallelism::Hybrid { replicas, inner } => {
+                format!("{replicas}x({})", inner.as_parallelism().mesh_desc(edge))
+            }
+        }
+    }
+
+    /// Override the 2.5-D depth (including a hybrid's 2.5-D inner) — the
+    /// one implementation behind the `--depth` CLI flag and the
+    /// `[parallel] depth` TOML key, so their kind checks cannot drift.
+    pub fn set_depth(&mut self, d: usize) -> Result<(), String> {
+        if d == 0 {
+            return Err("2.5-D depth must be >= 1".into());
+        }
+        match self {
+            Parallelism::TwoFiveD { depth }
+            | Parallelism::Hybrid { inner: HybridInner::TwoFiveD { depth }, .. } => {
+                *depth = d;
+                Ok(())
+            }
+            _ => Err("depth only applies to 2.5d kinds (incl. hybrid2.5d)".into()),
+        }
+    }
+
+    /// Override the hybrid replica count — shared by `--replicas` and the
+    /// `[parallel] replicas` TOML key.
+    pub fn set_replicas(&mut self, r: usize) -> Result<(), String> {
+        if r == 0 {
+            return Err("hybrid replicas must be >= 1".into());
+        }
+        match self {
+            Parallelism::Hybrid { replicas, .. } => {
+                *replicas = r;
+                Ok(())
+            }
+            _ => Err("replicas only applies to hybrid kinds".into()),
+        }
+    }
+
+    /// Parse a CLI/config spelling. 2.5-D defaults to depth 2 and hybrid to
+    /// 2 replicas; `[parallel] depth`/`replicas` config keys (or the
+    /// matching CLI flags) override the defaults after parsing.
     pub fn parse(s: &str) -> Option<Parallelism> {
         match s {
             "seq" => Some(Parallelism::Seq),
             "1d" | "oned" => Some(Parallelism::OneD),
             "2d" | "twod" => Some(Parallelism::TwoD),
             "3d" | "threed" => Some(Parallelism::ThreeD),
+            "2.5d" | "25d" | "tess" | "twofived" => Some(Parallelism::TwoFiveD { depth: 2 }),
+            "hybrid" | "hybrid1d" => {
+                Some(Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD })
+            }
+            "hybrid2d" => Some(Parallelism::Hybrid { replicas: 2, inner: HybridInner::TwoD }),
+            "hybrid3d" => Some(Parallelism::Hybrid { replicas: 2, inner: HybridInner::ThreeD }),
+            "hybrid2.5d" => Some(Parallelism::Hybrid {
+                replicas: 2,
+                inner: HybridInner::TwoFiveD { depth: 2 },
+            }),
             _ => None,
         }
     }
+}
+
+/// One parallelism kind with a concrete decomposition at some world size —
+/// a row of the `cubic plan --world N` comparison table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanCandidate {
+    pub par: Parallelism,
+    pub edge: usize,
+}
+
+impl PlanCandidate {
+    pub fn world(&self) -> usize {
+        self.par.world_size(self.edge)
+    }
+}
+
+/// Enumerate, for every parallelism kind the crate implements, a canonical
+/// decomposition at exactly `world` ranks (the `Seq` baseline is always
+/// included at world 1). Kinds with no exact decomposition at `world` are
+/// omitted:
+///
+/// * 2-D needs a square, 3-D a cube;
+/// * 2.5-D picks the largest grid edge `p ≥ 2` with `p² | world` and a
+///   depth `world / p² ≥ 2` (depth 1 would just be 2-D);
+/// * hybrid picks the smallest replica count `r ≥ 2` whose inner world
+///   `world / r` is a square (inner 2-D), then a cube (inner 3-D), then —
+///   for even worlds — falls back to `2 × 1-D`.
+pub fn plan_candidates(world: usize) -> Vec<PlanCandidate> {
+    let mut out = vec![PlanCandidate { par: Parallelism::Seq, edge: 1 }];
+    if world >= 2 {
+        out.push(PlanCandidate { par: Parallelism::OneD, edge: world });
+    }
+    if let Some(q) = Parallelism::TwoD.edge_for_world(world) {
+        if q >= 2 {
+            out.push(PlanCandidate { par: Parallelism::TwoD, edge: q });
+        }
+    }
+    if let Some(p) = Parallelism::ThreeD.edge_for_world(world) {
+        if p >= 2 {
+            out.push(PlanCandidate { par: Parallelism::ThreeD, edge: p });
+        }
+    }
+    // 2.5-D: largest p with p² | world and depth ≥ 2.
+    let mut best: Option<(usize, usize)> = None;
+    for p in 2..=world {
+        if p * p > world {
+            break;
+        }
+        if world % (p * p) == 0 && world / (p * p) >= 2 {
+            best = Some((p, world / (p * p)));
+        }
+    }
+    if let Some((p, depth)) = best {
+        out.push(PlanCandidate { par: Parallelism::TwoFiveD { depth }, edge: p });
+    }
+    // Hybrid: smallest r ≥ 2 with a square inner, then a cubic inner, then
+    // 2 × 1-D for even worlds.
+    let hybrid = (2..=world / 2)
+        .filter(|r| world % r == 0)
+        .find_map(|r| {
+            Parallelism::TwoD.edge_for_world(world / r).and_then(|q| {
+                (q >= 2).then_some(PlanCandidate {
+                    par: Parallelism::Hybrid { replicas: r, inner: HybridInner::TwoD },
+                    edge: q,
+                })
+            })
+        })
+        .or_else(|| {
+            (2..=world / 2).filter(|r| world % r == 0).find_map(|r| {
+                Parallelism::ThreeD.edge_for_world(world / r).and_then(|p| {
+                    (p >= 2).then_some(PlanCandidate {
+                        par: Parallelism::Hybrid { replicas: r, inner: HybridInner::ThreeD },
+                        edge: p,
+                    })
+                })
+            })
+        })
+        .or_else(|| {
+            (world % 2 == 0 && world >= 4).then_some(PlanCandidate {
+                par: Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD },
+                edge: world / 2,
+            })
+        });
+    if let Some(h) = hybrid {
+        out.push(h);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -331,5 +530,65 @@ mod tests {
         assert_eq!(Parallelism::ThreeD.edge_for_world(10), None);
         assert_eq!(Parallelism::parse("3d"), Some(Parallelism::ThreeD));
         assert_eq!(Parallelism::parse("bogus"), None);
+    }
+
+    #[test]
+    fn two_five_d_and_hybrid_world_size_and_edge() {
+        let tess = Parallelism::TwoFiveD { depth: 2 };
+        assert_eq!(tess.world_size(4), 32);
+        assert_eq!(tess.edge_for_world(32), Some(4));
+        assert_eq!(tess.edge_for_world(12), None);
+        let hyb = Parallelism::Hybrid { replicas: 2, inner: HybridInner::TwoD };
+        assert_eq!(hyb.world_size(4), 32);
+        assert_eq!(hyb.edge_for_world(32), Some(4));
+        assert_eq!(hyb.edge_for_world(30), None);
+        assert_eq!(Parallelism::parse("2.5d"), Some(Parallelism::TwoFiveD { depth: 2 }));
+        assert_eq!(
+            Parallelism::parse("hybrid"),
+            Some(Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD })
+        );
+        assert_eq!(tess.name(), "2.5d");
+        assert_eq!(hyb.name(), "hybrid");
+        assert_eq!(tess.mesh_desc(4), "4x4x2");
+        assert_eq!(hyb.mesh_desc(4), "2x(4x4)");
+    }
+
+    #[test]
+    fn plan_candidates_cover_all_kinds_at_64() {
+        let cands = plan_candidates(64);
+        let names: Vec<&str> = cands.iter().map(|c| c.par.name()).collect();
+        for want in ["seq", "1d", "2d", "3d", "2.5d", "hybrid"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        for c in &cands {
+            if c.par != Parallelism::Seq {
+                assert_eq!(c.world(), 64, "{:?}", c.par);
+            }
+        }
+        // Canonical picks: the largest 2.5-D grid and the smallest square
+        // hybrid replica group.
+        assert!(cands
+            .contains(&PlanCandidate { par: Parallelism::TwoFiveD { depth: 4 }, edge: 4 }));
+        assert!(cands.contains(&PlanCandidate {
+            par: Parallelism::Hybrid { replicas: 4, inner: HybridInner::TwoD },
+            edge: 4,
+        }));
+    }
+
+    #[test]
+    fn plan_candidates_fall_back_to_1d_hybrid() {
+        // world 8: no square inner (4 is square → r=2 works actually), use 24:
+        // 24/r square needs r=6 (4=2²); check the scan finds it.
+        let cands = plan_candidates(24);
+        assert!(cands.contains(&PlanCandidate {
+            par: Parallelism::Hybrid { replicas: 6, inner: HybridInner::TwoD },
+            edge: 2,
+        }));
+        // world 6: 3 is neither square nor cube → 2 × 1-D(3).
+        let cands = plan_candidates(6);
+        assert!(cands.contains(&PlanCandidate {
+            par: Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD },
+            edge: 3,
+        }));
     }
 }

@@ -1,13 +1,15 @@
 //! The headline correctness result: the full Transformer core computes the
-//! SAME function under Seq, 1-D, 2-D and 3-D parallelism — outputs AND all
-//! gradients match the dense reference shard-for-shard, and end-to-end
-//! training produces the same loss curve under every parallelism.
+//! SAME function under Seq, 1-D, 2-D, 2.5-D, 3-D and hybrid data×tensor
+//! parallelism — outputs AND all gradients match the dense reference
+//! shard-for-shard, and end-to-end training produces the same loss curve
+//! under every parallelism.
 //!
-//! Since the `ParallelOps` redesign this is ONE generic test: the same
+//! Since the `ParallelOps` redesign this is ONE generic check: the same
 //! loop drives every parallelism through the trait object, and the same
 //! `ShardSpec`/`DistTensor` assembly reconstructs globals from shards —
 //! no per-dimension gather code. Adding a parallelism means adding one
-//! `(kind, edge)` pair to `ALL_ENVS`.
+//! `(kind, edge)` pair to `ALL_ENVS` plus a `new_leaf_*` test naming it
+//! (CI runs the `new_leaf` filter before the full suites for fast fail).
 
 use cubic::comm::{Endpoint, NetModel};
 use cubic::config::{CubicConfig, ModelConfig, TrainConfig};
@@ -18,14 +20,16 @@ use cubic::parallel::{ops_for, ParallelOps};
 use cubic::rng::Xoshiro256;
 use cubic::spmd::run_spmd;
 use cubic::tensor::Tensor;
-use cubic::topology::Parallelism;
+use cubic::topology::{HybridInner, Parallelism};
 
 /// Every parallelism point the crate implements, with its test edge.
-const ALL_ENVS: [(Parallelism, usize); 4] = [
+const ALL_ENVS: [(Parallelism, usize); 6] = [
     (Parallelism::Seq, 1),
     (Parallelism::OneD, 4),
     (Parallelism::TwoD, 2),
     (Parallelism::ThreeD, 2),
+    (Parallelism::TwoFiveD { depth: 2 }, 2),
+    (Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD }, 2),
 ];
 
 fn tiny() -> ModelConfig {
@@ -90,8 +94,11 @@ const TOL: f32 = 3e-3;
 type MatGet = fn(&BlockTensors) -> &Tensor;
 type VecGet = fn(&BlockTensors) -> &Option<Tensor>;
 
-#[test]
-fn every_parallelism_matches_seq_reference() {
+/// The generic shard-for-shard parity check for one parallelism point:
+/// outputs, input grads, all 4 weight grads and all 8 vector grads per
+/// layer reassemble to the dense reference through the spec's own layout
+/// algebra.
+fn check_matches_seq_reference(par: Parallelism, edge: usize) {
     let cfg = tiny();
     let (h, f) = (cfg.hidden, cfg.ffn);
     let rows = cfg.batch * cfg.seq;
@@ -116,74 +123,112 @@ fn every_parallelism_matches_seq_reference() {
         ("b_fc2", VecRole::ReduceBias, h, |b| &b.b_fc2),
     ];
 
-    for (par, edge) in ALL_ENVS {
-        let world = par.world_size(edge);
-        let spec0 = ShardSpec::for_parallelism(par, edge, 0);
-        let out = run_par(&cfg, par, edge, &x, &dy, 42);
+    let world = par.world_size(edge);
+    let spec0 = ShardSpec::for_parallelism(par, edge, 0);
+    let out = run_par(&cfg, par, edge, &x, &dy, 42);
 
-        // Output and input gradient reassemble from every rank's shard.
-        let assemble = |pick: fn(&(Tensor, Tensor, Vec<BlockTensors>)) -> &Tensor| {
-            let parts: Vec<DistTensor> = out
-                .iter()
-                .enumerate()
-                .map(|(r, o)| {
-                    DistTensor::from_local(
-                        &ShardSpec::for_parallelism(par, edge, r),
-                        pick(o).clone(),
-                    )
-                })
-                .collect();
-            DistTensor::assemble_activation(&parts, rows, h)
-        };
-        let y = assemble(|o| &o.0);
-        let dx = assemble(|o| &o.1);
-        assert!(y.max_abs_diff(&y_ref) < TOL, "{par:?} y: {}", y.max_abs_diff(&y_ref));
-        assert!(dx.max_abs_diff(&dx_ref) < TOL, "{par:?} dx: {}", dx.max_abs_diff(&dx_ref));
-        // Replicated-activation meshes must agree on *every* rank, not
-        // just rank 0.
-        if !spec0.shards_activation() {
-            for (rank, (yr, dxr, _)) in out.iter().enumerate() {
-                assert!(yr.max_abs_diff(&y_ref) < TOL, "{par:?} rank {rank} y");
-                assert!(dxr.max_abs_diff(&dx_ref) < TOL, "{par:?} rank {rank} dx");
-            }
+    // Output and input gradient reassemble from every rank's shard.
+    let assemble = |pick: fn(&(Tensor, Tensor, Vec<BlockTensors>)) -> &Tensor| {
+        let parts: Vec<DistTensor> = out
+            .iter()
+            .enumerate()
+            .map(|(r, o)| {
+                DistTensor::from_local(
+                    &ShardSpec::for_parallelism(par, edge, r),
+                    pick(o).clone(),
+                )
+            })
+            .collect();
+        DistTensor::assemble_activation(&parts, rows, h)
+    };
+    let y = assemble(|o| &o.0);
+    let dx = assemble(|o| &o.1);
+    assert!(y.max_abs_diff(&y_ref) < TOL, "{par:?} y: {}", y.max_abs_diff(&y_ref));
+    assert!(dx.max_abs_diff(&dx_ref) < TOL, "{par:?} dx: {}", dx.max_abs_diff(&dx_ref));
+    // Replicated-activation meshes must agree on *every* rank, not
+    // just rank 0.
+    if !spec0.shards_activation() {
+        for (rank, (yr, dxr, _)) in out.iter().enumerate() {
+            assert!(yr.max_abs_diff(&y_ref) < TOL, "{par:?} rank {rank} y");
+            assert!(dxr.max_abs_diff(&dx_ref) < TOL, "{par:?} rank {rank} dx");
         }
-
-        // Every weight gradient of every layer reassembles to the dense
-        // gradient under its stage layout.
-        for l in 0..cfg.layers {
-            for (name, stage, wr, wc, get) in mats {
-                let parts: Vec<Tensor> =
-                    out.iter().map(|(_, _, g)| get(&g[l]).clone()).collect();
-                let total: usize = parts.iter().map(|p| p.numel()).sum();
-                assert_eq!(total, wr * wc, "{par:?} layer {l} {name} must tile");
-                let got = spec0.assemble_weight(stage, &parts, wr, wc);
-                let want = get(&g_ref[l]);
-                assert!(
-                    got.max_abs_diff(want) < TOL,
-                    "{par:?} layer {l} {name}: {}",
-                    got.max_abs_diff(want)
-                );
-            }
-            // Every vector gradient too, with the ownership pattern the
-            // spec prescribes.
-            for (name, role, n, get) in vecs {
-                let parts: Vec<Option<Tensor>> =
-                    out.iter().map(|(_, _, g)| get(&g[l]).clone()).collect();
-                for (rank, p) in parts.iter().enumerate() {
-                    let owns = ShardSpec::for_parallelism(par, edge, rank).owns_vector(role);
-                    assert_eq!(p.is_some(), owns, "{par:?} layer {l} {name} rank {rank}");
-                }
-                let got = spec0.assemble_vector(role, &parts, n);
-                let want = get(&g_ref[l]).as_ref().unwrap();
-                assert!(
-                    got.max_abs_diff(want) < TOL,
-                    "{par:?} layer {l} {name}: {}",
-                    got.max_abs_diff(want)
-                );
-            }
-        }
-        assert_eq!(world, out.len());
     }
+
+    // Every weight gradient of every layer reassembles to the dense
+    // gradient under its stage layout. Pure tensor meshes tile each
+    // weight exactly once; hybrid meshes hold one synced copy per
+    // data-parallel replica.
+    for l in 0..cfg.layers {
+        for (name, stage, wr, wc, get) in mats {
+            let parts: Vec<Tensor> =
+                out.iter().map(|(_, _, g)| get(&g[l]).clone()).collect();
+            let total: usize = parts.iter().map(|p| p.numel()).sum();
+            assert_eq!(
+                total,
+                wr * wc * spec0.weight_replicas(),
+                "{par:?} layer {l} {name} must tile (× replicas)"
+            );
+            let got = spec0.assemble_weight(stage, &parts, wr, wc);
+            let want = get(&g_ref[l]);
+            assert!(
+                got.max_abs_diff(want) < TOL,
+                "{par:?} layer {l} {name}: {}",
+                got.max_abs_diff(want)
+            );
+        }
+        // Every vector gradient too, with the ownership pattern the
+        // spec prescribes.
+        for (name, role, n, get) in vecs {
+            let parts: Vec<Option<Tensor>> =
+                out.iter().map(|(_, _, g)| get(&g[l]).clone()).collect();
+            for (rank, p) in parts.iter().enumerate() {
+                let owns = ShardSpec::for_parallelism(par, edge, rank).owns_vector(role);
+                assert_eq!(p.is_some(), owns, "{par:?} layer {l} {name} rank {rank}");
+            }
+            let got = spec0.assemble_vector(role, &parts, n);
+            let want = get(&g_ref[l]).as_ref().unwrap();
+            assert!(
+                got.max_abs_diff(want) < TOL,
+                "{par:?} layer {l} {name}: {}",
+                got.max_abs_diff(want)
+            );
+        }
+    }
+    assert_eq!(world, out.len());
+}
+
+#[test]
+fn every_parallelism_matches_seq_reference() {
+    for (par, edge) in ALL_ENVS {
+        check_matches_seq_reference(par, edge);
+    }
+}
+
+// The two newest leaves also get named tests so CI can run
+// `cargo test --test model_parity new_leaf` as a fast-fail gate before the
+// full dual-thread suites.
+
+#[test]
+fn new_leaf_two_five_d_matches_seq_reference() {
+    check_matches_seq_reference(Parallelism::TwoFiveD { depth: 2 }, 2);
+}
+
+#[test]
+fn new_leaf_hybrid_matches_seq_reference() {
+    check_matches_seq_reference(
+        Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD },
+        2,
+    );
+}
+
+#[test]
+fn new_leaf_hybrid_two_d_inner_matches_seq_reference() {
+    // The wrapper must compose with a sharding inner mesh too: 2 replicas
+    // around a 2×2 SUMMA grid (world 8).
+    check_matches_seq_reference(
+        Parallelism::Hybrid { replicas: 2, inner: HybridInner::TwoD },
+        2,
+    );
 }
 
 #[test]
@@ -194,8 +239,8 @@ fn matmul_forms_compose_and_match_dense() {
     // the entry layout, and the nt/tn forms must produce the dense input
     // and weight gradients under each stage's layout. Every intermediate
     // is consumed by a further trait op, so the per-stage output layouts
-    // (1-D column shards, 3-D swapped directions) are verified by
-    // composition rather than bespoke gathers.
+    // (1-D column shards, 2.5-D depth slabs, 3-D swapped directions) are
+    // verified by composition rather than bespoke gathers.
     let (rows, h, f) = (8usize, 16usize, 32usize);
     let x = randt(&[rows, h], 21);
     let w1 = randt(&[h, f], 22);
@@ -328,7 +373,7 @@ fn training_loss_curves_identical_across_parallelisms() {
         train: train.clone(),
         parallelism: par,
         edge,
-        artifacts_dir: String::new(),
+        ..CubicConfig::default()
     };
     let seq = run_training(&mk(Parallelism::Seq, 1), NetModel::zero()).unwrap();
     for (par, edge) in &ALL_ENVS[1..] {
