@@ -583,6 +583,75 @@ pub fn scatter(
     }
 }
 
+// --- non-blocking collectives (compute/comm overlap) ---------------------
+//
+// The `iall_*` forms run the *identical* synchronous algorithm — same
+// reduction order, same participant set, same per-collective tag sequence,
+// so results and the traffic ledger are bit-for-bit those of the blocking
+// calls — inside an [`Endpoint::defer`] window: the clock cost rides the
+// endpoint's comm timeline and the returned [`PendingColl`] joins it.
+// With `CUBIC_OVERLAP=0` they degenerate to the blocking schedule exactly.
+
+/// Completion handle for a non-blocking collective. Owns the result (the
+/// collective's pooled output buffer travels with the handle); `wait`
+/// joins the clock ticket and releases it. Dropping a handle without
+/// waiting leaves the ticket for [`Endpoint::join_all`] at the step
+/// boundary — the value is still valid, only the clock join is pending.
+#[must_use = "wait() joins the comm-timeline ticket (or let join_all retire it)"]
+pub struct PendingColl<T> {
+    value: T,
+    ticket: Option<u64>,
+}
+
+impl<T> PendingColl<T> {
+    /// Join the collective on the compute timeline and take the result:
+    /// `clock = max(clock, finish)`, with the stall split into exposed vs
+    /// overlapped comm (see the `comm` module docs).
+    pub fn wait(self, ep: &mut Endpoint) -> T {
+        if let Some(id) = self.ticket {
+            ep.join_ticket(id);
+        }
+        self.value
+    }
+
+    /// Take the result *without* joining the clock ticket — the issue-site
+    /// pattern: values are needed by the next layer's bookkeeping while
+    /// the virtual transfer keeps riding the comm timeline until
+    /// [`Endpoint::drain_ready`] / [`Endpoint::join_all`].
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+
+    /// True when a comm-timeline ticket is in flight (overlap on).
+    pub fn is_deferred(&self) -> bool {
+        self.ticket.is_some()
+    }
+}
+
+impl Endpoint {
+    /// Non-blocking [`all_reduce`] over `group`.
+    pub fn iall_reduce(&mut self, group: &[usize], t: &Tensor) -> PendingColl<Tensor> {
+        let (value, ticket) = self.defer(|ep| all_reduce(ep, group, t));
+        PendingColl { value, ticket }
+    }
+
+    /// Non-blocking [`reduce_scatter`] over `group`.
+    pub fn ireduce_scatter(
+        &mut self,
+        group: &[usize],
+        contrib: Vec<Tensor>,
+    ) -> PendingColl<Tensor> {
+        let (value, ticket) = self.defer(|ep| reduce_scatter(ep, group, contrib));
+        PendingColl { value, ticket }
+    }
+
+    /// Non-blocking [`all_gather`] over `group`.
+    pub fn iall_gather(&mut self, group: &[usize], mine: &Tensor) -> PendingColl<Vec<Tensor>> {
+        let (value, ticket) = self.defer(|ep| all_gather(ep, group, mine));
+        PendingColl { value, ticket }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1072,6 +1141,97 @@ mod tests {
         assert_eq!(ar.data(), &[1.0, 2.0]);
         assert_eq!(bc.data(), &[1.0, 2.0]);
         assert_eq!(*sent, 0);
+    }
+
+    #[test]
+    fn iall_reduce_is_bitwise_identical_to_blocking_in_both_modes() {
+        for overlap in [false, true] {
+            let mut net = NetModel::zero();
+            net.overlap = overlap;
+            let out = run_spmd(3, net, move |rank, ep| {
+                let group = vec![0, 1, 2];
+                let t = Tensor::from_vec(
+                    &[7],
+                    (0..7).map(|i| ((rank * 7 + i) as f32).sin()).collect(),
+                );
+                let sync = all_reduce(ep, &group, &t);
+                let pend = ep.iall_reduce(&group, &t).wait(ep);
+                (sync, pend)
+            });
+            for (sync, pend) in out {
+                assert_eq!(
+                    sync.data(),
+                    pend.data(),
+                    "overlap={overlap}: deferred schedule must be bit-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multiple_pending_collectives_ride_in_flight() {
+        let mut net = NetModel::flat(0.0, 1e9, 1e12);
+        net.overlap = true;
+        let out = run_spmd(2, net, |rank, ep| {
+            let group = vec![0, 1];
+            let a = Tensor::from_vec(&[4], vec![rank as f32 + 1.0; 4]);
+            let b = Tensor::from_vec(&[4], vec![(rank as f32 + 1.0) * 10.0; 4]);
+            let pa = ep.iall_reduce(&group, &a);
+            let pb = ep.iall_reduce(&group, &b);
+            assert!(pa.is_deferred() && pb.is_deferred());
+            assert_eq!(ep.pending_colls(), 2, "both handles must be in flight");
+            let ra = pa.wait(ep);
+            let rb = pb.wait(ep);
+            assert_eq!(ep.pending_colls(), 0);
+            (ra, rb)
+        });
+        for (ra, rb) in out {
+            assert_eq!(ra.data(), &[3.0; 4]);
+            assert_eq!(rb.data(), &[30.0; 4]);
+        }
+    }
+
+    #[test]
+    fn ireduce_scatter_and_iall_gather_match_blocking() {
+        let mut net = NetModel::zero();
+        net.overlap = true;
+        let out = run_spmd(3, net, |rank, ep| {
+            let group = vec![0, 1, 2];
+            let contrib: Vec<Tensor> = (0..3)
+                .map(|k| Tensor::from_vec(&[2], vec![(rank + k * 100) as f32; 2]))
+                .collect();
+            let mine = ep.ireduce_scatter(&group, contrib).wait(ep);
+            let parts = ep.iall_gather(&group, &mine).wait(ep);
+            parts.iter().map(|p| p.data()[0]).collect::<Vec<_>>()
+        });
+        for r in out {
+            assert_eq!(r, vec![3.0, 303.0, 603.0]);
+        }
+    }
+
+    #[test]
+    fn pending_all_reduce_steady_state_recycles() {
+        // In-flight collective buffers must keep hitting the pool: after
+        // one warmup call, 10 deferred all-reduces = 20 pool hits (the RS
+        // accumulator + the AG assembly per call) and zero allocations.
+        let mut net = NetModel::flat(0.0, 1e9, 1e12);
+        net.overlap = true;
+        let iters = 10u64;
+        let out = run_spmd(2, net, move |_, ep| {
+            let group = vec![0, 1];
+            let t = Tensor::from_vec(&[64], vec![1.0; 64]);
+            let _ = ep.iall_reduce(&group, &t).wait(ep); // warmup
+            let (h0, m0) = (ep.stats.pool_hits, ep.stats.pool_misses);
+            for _ in 0..iters {
+                let _r = ep.iall_reduce(&group, &t).wait(ep);
+            }
+            ep.join_all();
+            (ep.stats.pool_hits - h0, ep.stats.pool_misses - m0)
+        });
+        for (hits, misses) in out {
+            assert_eq!(misses, 0, "pending-collective steady state must not allocate");
+            assert_eq!(hits, 2 * iters, "two pooled buffers per aligned all-reduce");
+        }
     }
 }
 

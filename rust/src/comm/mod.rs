@@ -15,6 +15,39 @@
 //! broadcast), and the virtual time of the full schedule emerges from clock
 //! piggybacking — the same way a discrete-event simulator would compute it,
 //! but on the actual production code path. See DESIGN.md §1 and §5.
+//!
+//! ## Overlap & the virtual clock
+//!
+//! Real runtimes hide gradient synchronization behind the next layer's
+//! compute; a single per-rank clock cannot express that, so each endpoint
+//! carries **two timelines**:
+//!
+//! * `clock` — the *compute* timeline: GEMMs, memops, and any collective
+//!   the caller runs synchronously.
+//! * `comm_clock` — the *communication* timeline: one virtual NIC/stream
+//!   per rank, so deferred collectives serialize against each other but
+//!   run concurrently with compute.
+//!
+//! A deferred collective ([`Endpoint::defer`], or the `iall_*` wrappers in
+//! [`crate::collectives`]) executes its data movement **at issue time** —
+//! reduction order and participant sets are exactly those of the
+//! synchronous schedule, so results are bit-identical by construction —
+//! but its *clock cost* is moved onto the comm timeline: the compute clock
+//! is rewound to the issue point, the collective occupies
+//! `[max(comm_clock, issue), …)` on the comm timeline, and a
+//! [`CommTicket`] records its finish time. Joining a ticket
+//! ([`Endpoint::drain_ready`] / [`Endpoint::join_all`] /
+//! `PendingColl::wait`) advances `clock = max(clock, finish)`; only the
+//! stall actually suffered at the join is **exposed** communication, the
+//! rest was hidden behind compute. [`CommStats`] splits `comm_time` into
+//! `exposed_comm_time` + `overlapped_comm_time` (an exact partition:
+//! `exposed + overlapped == comm_time` always).
+//!
+//! The `CUBIC_OVERLAP={0,1}` environment knob (default `1`; also a config
+//! key and `--overlap` CLI option, env wins) selects between the
+//! overlapped and fully serialized schedules; with overlap off, `defer`
+//! degenerates to running the collective inline and every ticket is a
+//! no-op, reproducing the pre-overlap clock exactly.
 
 use crate::tensor::Tensor;
 use std::collections::{HashMap, VecDeque};
@@ -50,6 +83,27 @@ pub struct NetModel {
     pub flops_rate: f64,
     /// Effective device memory bandwidth (bytes/s) for elementwise ops.
     pub mem_bw: f64,
+    /// Model compute/comm overlap for deferred collectives (the
+    /// two-timeline scheme — see the module docs). Constructors default
+    /// this from `CUBIC_OVERLAP` (unset ⇒ on); tests pin a schedule by
+    /// setting the field directly.
+    pub overlap: bool,
+}
+
+/// `CUBIC_OVERLAP` parsed: `Some(false)` for `0/false/off`, `Some(true)`
+/// for `1/true/on`, `None` when unset (or unparseable, with a warning).
+pub fn overlap_env() -> Option<bool> {
+    match std::env::var("CUBIC_OVERLAP") {
+        Ok(v) => match v.trim() {
+            "0" | "false" | "off" => Some(false),
+            "1" | "true" | "on" => Some(true),
+            other => {
+                eprintln!("CUBIC_OVERLAP={other:?} invalid (want 0 or 1); ignoring");
+                None
+            }
+        },
+        Err(_) => None,
+    }
 }
 
 impl NetModel {
@@ -66,6 +120,7 @@ impl NetModel {
             // paper's PyTorch fp32 path achieves; fitted in costmodel tests.
             flops_rate: 9.5e12,
             mem_bw: 750.0e9,
+            overlap: overlap_env().unwrap_or(true),
         }
     }
 
@@ -81,7 +136,15 @@ impl NetModel {
             coll_overhead: 0.0,
             flops_rate,
             mem_bw: f64::INFINITY,
+            overlap: overlap_env().unwrap_or(true),
         }
+    }
+
+    /// Set the overlap knob from config/CLI; the `CUBIC_OVERLAP`
+    /// environment variable wins over the requested value (mirrors the
+    /// `CUBIC_THREADS` precedence).
+    pub fn set_overlap(&mut self, requested: bool) {
+        self.overlap = overlap_env().unwrap_or(requested);
     }
 
     /// Zero-cost model: virtual clocks never advance. Used by correctness
@@ -151,6 +214,13 @@ pub struct CommStats {
     pub inter_node_bytes: u64,
     /// Virtual seconds spent waiting on communication (recv-side).
     pub comm_time: f64,
+    /// The part of `comm_time` the compute timeline actually stalled on:
+    /// synchronous collectives in full, plus the join-point stall of
+    /// deferred ones. Invariant: `exposed + overlapped == comm_time`.
+    pub exposed_comm_time: f64,
+    /// The part of `comm_time` hidden behind compute by deferred
+    /// collectives (shifted out of `exposed_comm_time` at the join).
+    pub overlapped_comm_time: f64,
     /// Virtual seconds spent in local compute charges.
     pub compute_time: f64,
     /// Scratch-buffer requests served by the recycling pool (no heap
@@ -169,6 +239,8 @@ impl CommStats {
         self.bytes_sent += other.bytes_sent;
         self.inter_node_bytes += other.inter_node_bytes;
         self.comm_time = self.comm_time.max(other.comm_time);
+        self.exposed_comm_time = self.exposed_comm_time.max(other.exposed_comm_time);
+        self.overlapped_comm_time = self.overlapped_comm_time.max(other.overlapped_comm_time);
         self.compute_time = self.compute_time.max(other.compute_time);
         self.pool_hits += other.pool_hits;
         self.pool_misses += other.pool_misses;
@@ -223,11 +295,15 @@ impl World {
             net: self.net.clone(),
             barrier: self.barrier.clone(),
             clock: 0.0,
+            comm_clock: 0.0,
             stats: CommStats::default(),
             stash: HashMap::new(),
             group_seqs: HashMap::new(),
             world_id: self.world_id,
             pool: BufferPool::new(),
+            deferred: VecDeque::new(),
+            next_ticket: 0,
+            in_defer: false,
         }
     }
 
@@ -237,6 +313,21 @@ impl World {
     }
 }
 
+/// An in-flight deferred collective on the comm timeline: when it finishes
+/// there and how much `comm_time` it charged at issue. Clock-only — the
+/// data already moved at issue time (see the module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct CommTicket {
+    /// Monotonic per-endpoint id; `PendingColl::wait` joins by id.
+    id: u64,
+    /// Completion time on the comm timeline. Monotone across the queue
+    /// (the comm timeline serializes), so draining is O(1) amortized.
+    finish: f64,
+    /// `comm_time` charged while the collective ran; the join splits this
+    /// into exposed (stalled-on) and overlapped (hidden) parts.
+    comm_elapsed: f64,
+}
+
 /// One rank's view of the world: mailbox, peers, virtual clock, ledger.
 pub struct Endpoint {
     rank: usize,
@@ -244,8 +335,11 @@ pub struct Endpoint {
     tx: Vec<Sender<Message>>,
     net: Arc<NetModel>,
     barrier: Arc<Barrier>,
-    /// Virtual time (seconds) at this rank.
+    /// Virtual time (seconds) at this rank — the *compute* timeline.
     pub clock: f64,
+    /// The *communication* timeline: deferred collectives serialize here
+    /// (one virtual NIC/stream per rank) while `clock` keeps computing.
+    pub comm_clock: f64,
     pub stats: CommStats,
     /// Out-of-order arrivals parked until someone asks for them. Per-key
     /// FIFO: `VecDeque` so draining is O(1) per message even under heavy
@@ -259,6 +353,13 @@ pub struct Endpoint {
     /// accumulators, all-gather output assemblies, padded chunks). See
     /// [`pool::BufferPool`].
     pool: BufferPool,
+    /// In-flight deferred collectives, FIFO by comm-timeline finish time.
+    deferred: VecDeque<CommTicket>,
+    /// Next [`CommTicket::id`].
+    next_ticket: u64,
+    /// Re-entrancy guard: a collective issued *inside* a deferred window
+    /// runs inline on that window (no nested ticket).
+    in_defer: bool,
 }
 
 impl Endpoint {
@@ -292,6 +393,7 @@ impl Endpoint {
         if oh > 0.0 {
             self.clock += oh;
             self.stats.comm_time += oh;
+            self.stats.exposed_comm_time += oh;
         }
         // FNV-1a over the ordered membership, world id mixed in.
         let mut h: u64 = 0xcbf29ce484222325 ^ self.world_id;
@@ -366,6 +468,7 @@ impl Endpoint {
         let arrive = msg.clock + hop;
         if arrive > self.clock {
             self.stats.comm_time += arrive - self.clock;
+            self.stats.exposed_comm_time += arrive - self.clock;
             self.clock = arrive;
         }
         msg.payload
@@ -388,8 +491,93 @@ impl Endpoint {
         let floor = start + floor_cost;
         if floor > self.clock {
             self.stats.comm_time += floor - self.clock;
+            self.stats.exposed_comm_time += floor - self.clock;
             self.clock = floor;
         }
+    }
+
+    // --- deferred collectives (compute/comm overlap) ------------------
+
+    /// Run `f` (a collective) as a *deferred* operation: the data moves
+    /// now — bit-identical to the synchronous schedule — but the clock
+    /// cost lands on the comm timeline instead of stalling compute. The
+    /// issue-time charges keep `comm_time` and `exposed_comm_time` in
+    /// sync; the join reclassifies the hidden part as overlapped.
+    ///
+    /// Returns `f`'s result plus the [`CommTicket`] id when a ticket was
+    /// queued (`None` with overlap off, or inside another deferred
+    /// window, where `f` just runs inline). Callers either hold the id in
+    /// a `PendingColl` and join it explicitly, or rely on
+    /// [`Endpoint::drain_ready`] / [`Endpoint::join_all`].
+    pub fn defer<R>(&mut self, f: impl FnOnce(&mut Endpoint) -> R) -> (R, Option<u64>) {
+        if !self.net.overlap || self.in_defer {
+            return (f(self), None);
+        }
+        self.in_defer = true;
+        let t0 = self.clock;
+        let comm_t0 = self.stats.comm_time;
+        let out = f(self);
+        self.in_defer = false;
+        let dur = self.clock - t0;
+        let comm_elapsed = self.stats.comm_time - comm_t0;
+        // Rewind the compute timeline to the issue point; the collective
+        // occupies [max(comm_clock, issue), +dur) on the comm timeline.
+        self.clock = t0;
+        let start = if self.comm_clock > t0 { self.comm_clock } else { t0 };
+        let finish = start + dur;
+        self.comm_clock = finish;
+        let id = self.next_ticket;
+        self.next_ticket += 1;
+        self.deferred.push_back(CommTicket { id, finish, comm_elapsed });
+        (out, Some(id))
+    }
+
+    /// Join the oldest in-flight ticket: advance `clock` to its finish and
+    /// split its `comm_time` into the stall actually suffered here
+    /// (exposed) and the part hidden behind compute (overlapped). Stall in
+    /// excess of the ticket's comm charge is in-collective compute,
+    /// already in `compute_time`.
+    fn join_front(&mut self) {
+        let Some(t) = self.deferred.pop_front() else { return };
+        let stall = (t.finish - self.clock).max(0.0);
+        let overlapped = t.comm_elapsed - stall.min(t.comm_elapsed);
+        self.stats.exposed_comm_time -= overlapped;
+        self.stats.overlapped_comm_time += overlapped;
+        if t.finish > self.clock {
+            self.clock = t.finish;
+        }
+    }
+
+    /// Retire every in-flight ticket that has already finished on the comm
+    /// timeline — zero compute-clock cost, pure bookkeeping. Called
+    /// between backward layers so the queue stays shallow. O(1) amortized:
+    /// finish times are monotone, so this stops at the first unfinished
+    /// ticket.
+    pub fn drain_ready(&mut self) {
+        while self.deferred.front().is_some_and(|t| t.finish <= self.clock) {
+            self.join_front();
+        }
+    }
+
+    /// Join *all* in-flight tickets (the optimizer boundary): the compute
+    /// clock waits for the comm timeline to drain.
+    pub fn join_all(&mut self) {
+        while !self.deferred.is_empty() {
+            self.join_front();
+        }
+    }
+
+    /// Join tickets up to and including `id` (FIFO — earlier tickets
+    /// finish earlier on the serialized comm timeline).
+    pub fn join_ticket(&mut self, id: u64) {
+        while self.deferred.front().is_some_and(|t| t.id <= id) {
+            self.join_front();
+        }
+    }
+
+    /// In-flight deferred collectives (diagnostics/tests).
+    pub fn pending_colls(&self) -> usize {
+        self.deferred.len()
     }
 
     /// Charge local matmul/elementwise compute time to the virtual clock.
@@ -578,5 +766,137 @@ mod tests {
         let mut world = World::new(2, NetModel::zero());
         let _a = world.endpoint(0);
         let _b = world.endpoint(0);
+    }
+
+    /// 1000-elem tensor = 4000 bytes at 1e9 B/s: 4 µs per hop.
+    fn overlap_pair(overlap: bool) -> (Endpoint, Endpoint) {
+        let mut net = NetModel::flat(0.0, 1e9, 1e12);
+        net.overlap = overlap;
+        let mut world = World::new(2, net);
+        (world.endpoint(0), world.endpoint(1))
+    }
+
+    #[test]
+    fn deferred_recv_hides_comm_behind_compute() {
+        let (mut e0, mut e1) = overlap_pair(true);
+        let h = thread::spawn(move || {
+            e0.send(1, 1, &Tensor::phantom(&[1000]));
+        });
+        let (_t, ticket) = e1.defer(|ep| ep.recv(0, 1));
+        assert!(ticket.is_some());
+        // Compute clock rewound to the issue point; comm timeline holds
+        // the 4 µs transfer.
+        assert_eq!(e1.clock, 0.0);
+        assert!((e1.comm_clock - 4e-6).abs() < 1e-15);
+        assert_eq!(e1.pending_colls(), 1);
+        e1.charge_flops(10e6); // 10 µs of compute at 1e12 flop/s
+        e1.drain_ready();
+        assert_eq!(e1.pending_colls(), 0);
+        // Fully hidden: no stall, all 4 µs reclassified as overlapped.
+        assert!((e1.clock - 10e-6).abs() < 1e-15);
+        assert!((e1.stats.comm_time - 4e-6).abs() < 1e-15);
+        assert!((e1.stats.overlapped_comm_time - 4e-6).abs() < 1e-15);
+        assert!(e1.stats.exposed_comm_time.abs() < 1e-15);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn deferred_recv_exposes_stall_when_nothing_hides_it() {
+        let (mut e0, mut e1) = overlap_pair(true);
+        let h = thread::spawn(move || {
+            e0.send(1, 1, &Tensor::phantom(&[1000]));
+        });
+        let (_t, _) = e1.defer(|ep| ep.recv(0, 1));
+        e1.join_all(); // no compute issued: the full 4 µs is exposed
+        assert!((e1.clock - 4e-6).abs() < 1e-15);
+        assert!((e1.stats.exposed_comm_time - 4e-6).abs() < 1e-15);
+        assert!(e1.stats.overlapped_comm_time.abs() < 1e-15);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn comm_timeline_serializes_in_flight_tickets() {
+        let (mut e0, mut e1) = overlap_pair(true);
+        let h = thread::spawn(move || {
+            e0.send(1, 1, &Tensor::phantom(&[1000]));
+            e0.send(1, 2, &Tensor::phantom(&[1000]));
+        });
+        let (_a, _) = e1.defer(|ep| ep.recv(0, 1));
+        let (_b, _) = e1.defer(|ep| ep.recv(0, 2));
+        // Both issued at t=0; the comm timeline runs them back to back:
+        // finishes at 4 µs and 8 µs.
+        assert!((e1.comm_clock - 8e-6).abs() < 1e-15);
+        e1.charge_flops(5e6); // 5 µs of compute
+        e1.join_all();
+        // Ticket 1 (finish 4 µs < clock 5 µs) fully overlapped; ticket 2
+        // stalls 3 µs: exposed 3 µs, overlapped 1 µs; clock = 8 µs.
+        assert!((e1.clock - 8e-6).abs() < 1e-14);
+        assert!((e1.stats.comm_time - 8e-6).abs() < 1e-14);
+        assert!((e1.stats.exposed_comm_time - 3e-6).abs() < 1e-14);
+        assert!((e1.stats.overlapped_comm_time - 5e-6).abs() < 1e-14);
+        let s = &e1.stats;
+        assert!(
+            (s.exposed_comm_time + s.overlapped_comm_time - s.comm_time).abs() < 1e-14,
+            "exposed + overlapped must partition comm_time"
+        );
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn overlap_off_runs_inline_with_no_tickets() {
+        let (mut e0, mut e1) = overlap_pair(false);
+        let h = thread::spawn(move || {
+            e0.send(1, 1, &Tensor::phantom(&[1000]));
+        });
+        let (_t, ticket) = e1.defer(|ep| ep.recv(0, 1));
+        assert!(ticket.is_none());
+        assert_eq!(e1.pending_colls(), 0);
+        // Serialized: the clock advanced inline and all comm is exposed.
+        assert!((e1.clock - 4e-6).abs() < 1e-15);
+        assert!((e1.stats.exposed_comm_time - 4e-6).abs() < 1e-15);
+        assert!(e1.stats.overlapped_comm_time.abs() < 1e-15);
+        e1.join_all(); // no-op
+        assert!((e1.clock - 4e-6).abs() < 1e-15);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn nested_defer_runs_inline_on_the_outer_window() {
+        let (mut e0, mut e1) = overlap_pair(true);
+        let h = thread::spawn(move || {
+            e0.send(1, 1, &Tensor::phantom(&[1000]));
+            e0.send(1, 2, &Tensor::phantom(&[1000]));
+        });
+        let ((_a, inner_ticket), outer_ticket) = e1.defer(|ep| {
+            let _x = ep.recv(0, 1);
+            ep.defer(|ep2| ep2.recv(0, 2))
+        });
+        assert!(outer_ticket.is_some());
+        assert!(inner_ticket.is_none(), "nested window must not double-book");
+        assert_eq!(e1.pending_colls(), 1);
+        e1.join_all();
+        assert!((e1.clock - 8e-6).abs() < 1e-14);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn join_ticket_drains_the_fifo_prefix() {
+        let (mut e0, mut e1) = overlap_pair(true);
+        let h = thread::spawn(move || {
+            for tag in 1..=3u64 {
+                e0.send(1, tag, &Tensor::phantom(&[1000]));
+            }
+        });
+        let (_a, t1) = e1.defer(|ep| ep.recv(0, 1));
+        let (_b, t2) = e1.defer(|ep| ep.recv(0, 2));
+        let (_c, _t3) = e1.defer(|ep| ep.recv(0, 3));
+        e1.join_ticket(t2.unwrap());
+        assert_eq!(e1.pending_colls(), 1);
+        assert!((e1.clock - 8e-6).abs() < 1e-14);
+        e1.join_ticket(t1.unwrap()); // already joined: no-op
+        assert_eq!(e1.pending_colls(), 1);
+        e1.join_all();
+        assert!((e1.clock - 12e-6).abs() < 1e-14);
+        h.join().unwrap();
     }
 }

@@ -8,10 +8,16 @@
 //! **zero** f32-buffer allocations (asserted per-endpoint by the
 //! collectives tests and exactly, process-wide, by the microbench).
 //!
-//! Mechanics: [`BufferPool::take`] hands out a `Vec<f32>` from the shared
-//! [`FreeList`], best-fit by capacity (smallest buffer that holds the
-//! request, so a chunk-sized request cannot poach the full-payload buffer
-//! and force it to reallocate). Tensors built over pooled buffers
+//! Mechanics: [`BufferPool::take`] hands out a `Vec<f32>` best-fit by
+//! capacity (smallest buffer that holds the request, so a chunk-sized
+//! request cannot poach the full-payload buffer and force it to
+//! reallocate). Returned buffers land on the shared [`FreeList`] (a flat
+//! `Vec` — the type tensors reclaim to from any thread); `take` drains
+//! that list into a private capacity-ordered index (`BTreeMap<capacity,
+//! bucket>`) and answers best-fit queries from the index in O(log m)
+//! instead of rescanning the whole free list per request — with many
+//! collectives in flight the old linear scan rescanned every parked
+//! buffer on every take. Tensors built over pooled buffers
 //! ([`Tensor::from_pooled`]) push the buffer back onto the free list when
 //! their *last* handle drops — which for ring collectives is routinely on a
 //! different rank's thread, hence the `Arc<Mutex<..>>` free list rather
@@ -24,11 +30,23 @@
 //! are O(group size) pointers and are not routed through the pool.
 
 use crate::tensor::{FreeList, Tensor};
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 /// A recycling pool of f32 buffers, owned by one [`super::Endpoint`].
 pub struct BufferPool {
     free: FreeList,
+    /// Capacity-ordered view of the parked buffers, fed by draining
+    /// `free`. Behind a (private, uncontended) mutex only because
+    /// `take(&self)` works through the shared-endpoint borrow.
+    index: Mutex<Index>,
+}
+
+/// Capacity-ordered buckets + a running count (for [`BufferPool::idle`]).
+#[derive(Default)]
+struct Index {
+    by_cap: BTreeMap<usize, Vec<Vec<f32>>>,
+    count: usize,
 }
 
 /// What a [`BufferPool::take`] had to do to satisfy the request — the
@@ -50,7 +68,10 @@ impl Default for BufferPool {
 
 impl BufferPool {
     pub fn new() -> Self {
-        BufferPool { free: Arc::new(Mutex::new(Vec::new())) }
+        BufferPool {
+            free: Arc::new(Mutex::new(Vec::new())),
+            index: Mutex::new(Index::default()),
+        }
     }
 
     /// The shared free list pooled tensors return their buffers to.
@@ -58,31 +79,39 @@ impl BufferPool {
         &self.free
     }
 
-    /// Buffers currently parked in the free list (diagnostics/tests).
+    /// Buffers currently parked in the pool (diagnostics/tests): freshly
+    /// returned ones still on the free list plus the indexed ones.
     pub fn idle(&self) -> usize {
-        self.free.lock().map(|q| q.len()).unwrap_or(0)
+        let returned = self.free.lock().map(|q| q.len()).unwrap_or(0);
+        returned + self.index.lock().map(|ix| ix.count).unwrap_or(0)
     }
 
-    /// A buffer of exactly `n` elements. Best-fit from the free list when
+    /// A buffer of exactly `n` elements. Best-fit from the pool when
     /// possible (`Takeout::Recycled`), freshly allocated otherwise.
     /// Recycled contents are unspecified beyond length `n` being zeroed on
     /// *growth* only — callers must overwrite every element they read.
     pub fn take(&self, n: usize) -> (Vec<f32>, Takeout) {
-        let mut free = self.free.lock().expect("buffer pool poisoned");
-        let mut best: Option<(usize, usize)> = None; // (index, capacity)
-        for (i, b) in free.iter().enumerate() {
-            let cap = b.capacity();
-            let better = match best {
-                None => cap >= n,
-                Some((_, c)) => cap >= n && cap < c,
-            };
-            if better {
-                best = Some((i, cap));
+        let mut ix = self.index.lock().expect("buffer pool poisoned");
+        // Drain freshly returned buffers into the capacity index: O(1)
+        // amortized per buffer lifecycle, so a take never rescans buffers
+        // parked by earlier iterations.
+        {
+            let mut free = self.free.lock().expect("buffer pool poisoned");
+            for b in free.drain(..) {
+                ix.by_cap.entry(b.capacity()).or_default().push(b);
+                ix.count += 1;
             }
         }
-        match best {
-            Some((i, _)) => {
-                let mut v = free.swap_remove(i);
+        // Best fit = smallest capacity >= n: one ordered-map seek.
+        let cap = ix.by_cap.range(n..).next().map(|(&c, _)| c);
+        match cap {
+            Some(c) => {
+                let bucket = ix.by_cap.get_mut(&c).expect("bucket vanished");
+                let mut v = bucket.pop().expect("empty bucket in index");
+                if bucket.is_empty() {
+                    ix.by_cap.remove(&c);
+                }
+                ix.count -= 1;
                 // Within capacity: resize never reallocates here.
                 v.resize(n, 0.0);
                 (v, Takeout::Recycled)
@@ -132,6 +161,23 @@ mod tests {
         let (b, how) = pool.take(64);
         assert_eq!(how, Takeout::Recycled);
         assert_eq!(b.len(), 64);
+    }
+
+    #[test]
+    fn capacity_index_serves_many_in_flight_sizes_best_fit() {
+        // The many-in-flight-collectives shape: dozens of parked buffers
+        // of distinct sizes. Every request must still recycle the exact
+        // best-fit capacity (now via one ordered-map seek, not a scan).
+        let pool = BufferPool::new();
+        let handles: Vec<_> = (1..=32).map(|i| pool.tensor(&[i * 8]).0).collect();
+        drop(handles);
+        assert_eq!(pool.idle(), 32);
+        for i in (1..=32).rev() {
+            let (b, how) = pool.take(i * 8);
+            assert_eq!(how, Takeout::Recycled);
+            assert_eq!(b.capacity(), i * 8, "best fit must pick the exact size");
+        }
+        assert_eq!(pool.idle(), 0);
     }
 
     #[test]

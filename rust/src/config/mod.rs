@@ -246,6 +246,12 @@ pub struct CubicConfig {
     /// parallelism). Applied via `kernel::threads::request_threads` before
     /// the first matmul; the `CUBIC_THREADS=` env override wins over this.
     pub threads: usize,
+    /// Overlap deferred collectives with compute on the virtual clock (the
+    /// two-timeline scheme — see `comm` module docs). Applied via
+    /// `NetModel::set_overlap`; the `CUBIC_OVERLAP=` env override wins over
+    /// this, mirroring `CUBIC_THREADS`. Numerics are bit-identical either
+    /// way — the knob only changes the timing model.
+    pub overlap: bool,
 }
 
 impl Default for CubicConfig {
@@ -257,6 +263,7 @@ impl Default for CubicConfig {
             edge: 2,
             artifacts_dir: String::new(),
             threads: 0,
+            overlap: true,
         }
     }
 }
@@ -350,6 +357,9 @@ impl CubicConfig {
             cfg.artifacts_dir = d;
         }
         set_usize!("runtime", "threads", cfg.threads);
+        if let Some(v) = doc.get_bool("runtime", "overlap") {
+            cfg.overlap = v;
+        }
         cfg.model
             .validate(cfg.parallelism, cfg.edge)
             .map_err(ConfigError)?;
@@ -469,10 +479,13 @@ seed = 7
 [runtime]
 artifacts_dir = "artifacts"
 threads = 4
+overlap = false
 "#;
         let cfg = CubicConfig::from_toml(text).unwrap();
         assert_eq!(cfg.threads, 4);
         assert_eq!(CubicConfig::default().threads, 0, "default must be auto");
+        assert!(!cfg.overlap, "[runtime] overlap = false must parse");
+        assert!(CubicConfig::default().overlap, "overlap defaults on");
         assert_eq!(cfg.model.layers, 3);
         assert_eq!(cfg.model.hidden, ModelConfig::tiny().hidden);
         assert_eq!(cfg.parallelism, Parallelism::ThreeD);

@@ -158,6 +158,10 @@ pub fn time_core_step(
         let fwd_clock = ep.clock;
         let dy = Tensor::phantom(y.shape());
         let _ = core_bwd(ep, env.ops(), &blocks, &caches, &dy, &cfg2);
+        // The optimizer boundary: deferred grad syncs still in flight must
+        // land before the step ends, so backward time includes whatever
+        // communication the compute could not hide.
+        ep.join_all();
         let bwd_clock = ep.clock;
         (fwd_clock, bwd_clock)
     });

@@ -46,6 +46,9 @@ COMMANDS
 GLOBAL OPTIONS
   --threads <n>   cores for the multi-threaded gemm driver (0 = auto,
                   default; the CUBIC_THREADS env var overrides this)
+  --overlap <0|1> overlap deferred collectives with compute on the virtual
+                  clock (default 1; the CUBIC_OVERLAP env var overrides
+                  this; numerics are bit-identical either way)
 "#;
 
 fn build_config(args: &Args) -> Result<CubicConfig, String> {
@@ -82,6 +85,7 @@ fn build_config(args: &Args) -> Result<CubicConfig, String> {
     if cfg.threads > 0 {
         cubic::tensor::kernel::threads::request_threads(cfg.threads);
     }
+    cfg.overlap = args.get_usize("overlap", cfg.overlap as usize)? != 0;
     cfg.model
         .validate(cfg.parallelism, cfg.edge)
         .map_err(|e| format!("invalid config: {e}"))?;
@@ -92,11 +96,13 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     let cfg = build_config(args)?;
     let save_dir = args.get("save-dir");
     eprintln!("training {}", describe(&cfg));
+    let mut net = NetModel::longhorn_v100();
+    net.set_overlap(cfg.overlap);
     let report = if let Some(dir) = save_dir {
-        cubic::engine::run_training_with_checkpoint(&cfg, NetModel::longhorn_v100(), std::path::Path::new(&dir))
+        cubic::engine::run_training_with_checkpoint(&cfg, net, std::path::Path::new(&dir))
             .map_err(|e| e.to_string())?
     } else {
-        run_training(&cfg, NetModel::longhorn_v100()).map_err(|e| e.to_string())?
+        run_training(&cfg, net).map_err(|e| e.to_string())?
     };
     for (s, loss) in report.losses.iter().enumerate() {
         if s % cfg.train.log_every == 0 || s + 1 == report.losses.len() {
@@ -116,7 +122,8 @@ fn cmd_train(args: &Args) -> Result<(), String> {
 fn cmd_plan(args: &Args) -> Result<(), String> {
     let world = args.get_usize("world", 0)?;
     if world > 0 {
-        return cmd_plan_world(world);
+        let overlap = args.get_usize("overlap", 1)? != 0;
+        return cmd_plan_world(world, overlap);
     }
     let cfg = build_config(args)?;
     println!("plan for {}", describe(&cfg));
@@ -142,18 +149,26 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
 /// per-rank memory from the real shard shapes, per-rank communication from
 /// the engine's traffic ledger. This is how 2-D vs 2.5-D vs 3-D vs hybrid
 /// compare at equal world size before committing to a topology.
-fn cmd_plan_world(world: usize) -> Result<(), String> {
+fn cmd_plan_world(world: usize, overlap: bool) -> Result<(), String> {
     use cubic::metrics::{fmt_bytes, Table};
     let cfg = cubic::config::ModelConfig::paper(4096, world.max(16));
     let rows = cfg.batch * cfg.seq;
+    let mut net = NetModel::longhorn_v100();
+    net.set_overlap(overlap);
     println!(
-        "plan comparison at world size {world} (hidden {}, batch {}, seq {}, 1 layer)\n",
-        cfg.hidden, cfg.batch, cfg.seq
+        "plan comparison at world size {world} (hidden {}, batch {}, seq {}, 1 layer)\n\
+         ranked by {} step time{}\n",
+        cfg.hidden,
+        cfg.batch,
+        cfg.seq,
+        if net.overlap { "overlapped" } else { "serialized" },
+        if net.overlap { " (deferred grad syncs hidden behind compute)" } else { "" },
     );
     let mut t = Table::new(&[
-        "Kind", "Mesh", "Ranks", "weights/rank", "acts/rank", "comm bytes/rank", "virtual step",
+        "Kind", "Mesh", "Ranks", "weights/rank", "acts/rank", "comm bytes/rank",
+        "exposed comm", "virtual step",
     ]);
-    let mut rows_out: Vec<(f64, [String; 7])> = Vec::new();
+    let mut rows_out: Vec<(f64, [String; 8])> = Vec::new();
     for cand in cubic::topology::plan_candidates(world) {
         let (par, edge) = (cand.par, cand.edge);
         if let Err(e) = cfg.validate(par, edge) {
@@ -169,7 +184,7 @@ fn cmd_plan_world(world: usize) -> Result<(), String> {
             let (ar, ac) = env.activation_shape(rows, cfg.hidden);
             a_max = a_max.max(ar * ac * 4);
         }
-        let timing = cubic::engine::time_core_step(&cfg, par, edge, NetModel::longhorn_v100())
+        let timing = cubic::engine::time_core_step(&cfg, par, edge, net.clone())
             .map_err(|e| e.to_string())?;
         let step = timing.forward_s + timing.backward_s;
         rows_out.push((
@@ -181,6 +196,7 @@ fn cmd_plan_world(world: usize) -> Result<(), String> {
                 fmt_bytes(w_max as u64),
                 fmt_bytes(a_max as u64),
                 fmt_bytes(timing.metrics.total_bytes / w.max(1) as u64),
+                format!("{:.4}s", timing.metrics.exposed_comm_time),
                 format!("{step:.4}s"),
             ],
         ));

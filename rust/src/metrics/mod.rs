@@ -95,6 +95,13 @@ pub struct RunMetrics {
     pub compute_time: f64,
     /// Max per-rank comm share.
     pub comm_time: f64,
+    /// Max per-rank *exposed* comm (the part compute actually stalled on).
+    /// Note: each field is max-merged independently, so the per-rank
+    /// identity `exposed + overlapped == comm_time` holds per endpoint,
+    /// not necessarily between these three maxima.
+    pub exposed_comm_time: f64,
+    /// Max per-rank comm hidden behind compute by deferred collectives.
+    pub overlapped_comm_time: f64,
     /// Total bytes sent across all ranks.
     pub total_bytes: u64,
     /// Bytes that crossed node boundaries.
@@ -113,6 +120,8 @@ impl RunMetrics {
             m.virtual_time = m.virtual_time.max(*clock);
             m.compute_time = m.compute_time.max(s.compute_time);
             m.comm_time = m.comm_time.max(s.comm_time);
+            m.exposed_comm_time = m.exposed_comm_time.max(s.exposed_comm_time);
+            m.overlapped_comm_time = m.overlapped_comm_time.max(s.overlapped_comm_time);
             m.total_bytes += s.bytes_sent;
             m.inter_node_bytes += s.inter_node_bytes;
             m.messages += s.messages_sent;

@@ -148,6 +148,14 @@ pub fn core_fwd(
 }
 
 /// Full core backward: returns `(dx, per-block grads)`.
+///
+/// Weight-grad syncs issued by layer `L` (the hybrid replica all-reduces —
+/// deferred collectives on the comm timeline) overlap layer `L−1`'s GEMMs:
+/// after each block the finished tickets are retired with
+/// [`Endpoint::drain_ready`] (pure bookkeeping, zero compute-clock cost),
+/// and whatever is still in flight after the last block is the caller's to
+/// join — [`crate::train`] and [`crate::engine`] call
+/// [`Endpoint::join_all`] at the optimizer boundary.
 pub fn core_bwd(
     ep: &mut Endpoint,
     ops: &dyn ParallelOps,
@@ -163,6 +171,7 @@ pub fn core_bwd(
         let (dx, g) = block_bwd(ep, ops, p, cache, &cur, cfg);
         grads.push(g);
         cur = dx;
+        ep.drain_ready();
     }
     grads.reverse();
     (cur, grads)

@@ -21,6 +21,15 @@
 //! rank, i.e. `iw` disjoint all-reduce rings of size `r` — the Megatron-LM
 //! data-parallel group layout (Narayanan et al., "Efficient Large-Scale
 //! Language Model Training on GPU Clusters").
+//!
+//! **Overlap.** The replica gradient all-reduce is the one collective in
+//! the whole tree whose result is not needed until the optimizer step, so
+//! [`Hybrid::grad_sync`] issues it as a deferred collective
+//! ([`crate::comm::Endpoint::defer`]): on the virtual clock it rides the
+//! endpoint's comm timeline behind the next layer's backward GEMMs instead
+//! of stalling the compute timeline. Every inner-mesh collective delegated
+//! below stays blocking — those sit on the critical path (see the overlap
+//! notes in each leaf module).
 
 use crate::collectives::all_reduce;
 use crate::comm::Endpoint;
@@ -71,8 +80,19 @@ impl Hybrid {
 
     /// Sum a weight/vector gradient over the replica group — the one piece
     /// of communication this wrapper adds.
+    ///
+    /// This is the hideable boundary of the backward pass: the summed
+    /// gradient is not needed until the optimizer, so the all-reduce is
+    /// issued as a *deferred* collective ([`Endpoint::defer`]) — the data
+    /// moves now (bit-identical reduction order) and the returned tensor
+    /// is immediately valid, while the clock cost rides the endpoint's
+    /// comm timeline behind layer `L−1`'s GEMMs. `core_bwd` retires
+    /// finished tickets between layers and the trainer's
+    /// [`Endpoint::join_all`] at the optimizer boundary catches the rest.
+    /// With `CUBIC_OVERLAP=0` this is exactly the old blocking all-reduce.
     fn grad_sync(&self, ep: &mut Endpoint, g: &Tensor) -> Tensor {
-        all_reduce(ep, &self.replica_group, g)
+        let (summed, _ticket) = ep.defer(|ep| all_reduce(ep, &self.replica_group, g));
+        summed
     }
 }
 

@@ -10,6 +10,13 @@
 //! Per-block communication: 2 all-reduces of the full activation forward,
 //! 2 backward — the `O(1)`-in-`P` bandwidth profile the paper's Tables 1–2
 //! show losing to 2-D/3-D at large `P`.
+//!
+//! **Overlap.** Both all-reduces sum *activation* partials that the very
+//! next op consumes, and the weight gradients are rank-local (each rank
+//! owns its shard outright) — there is nothing to defer, so this leaf's
+//! clock is identical under `CUBIC_OVERLAP=0` and `=1`. The hideable
+//! boundary only appears when the hybrid wrapper adds replica grad syncs
+//! around this mesh.
 
 use crate::collectives::all_reduce;
 use crate::comm::Endpoint;

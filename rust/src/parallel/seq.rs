@@ -3,6 +3,11 @@
 //! distributed implementation is verified against shard-for-shard, *and* an
 //! ordinary leaf of the same trait: the generic block in
 //! [`crate::model::block`] cannot tell it apart from the 3-D cube.
+//!
+//! **Overlap.** This leaf performs no communication at all, so the
+//! compute/comm overlap machinery ([`crate::comm::Endpoint::defer`]) is a
+//! no-op here: `CUBIC_OVERLAP` cannot change its clock, which is what makes
+//! it the stable baseline of the `plan` table under either schedule.
 
 use crate::comm::Endpoint;
 use crate::dist::{ShardSpec, Stage};

@@ -20,6 +20,14 @@
 //!
 //! The correctness of each composition is pinned shard-for-shard against a
 //! dense reference in `rust/tests/dist_matmul.rs`.
+//!
+//! **Overlap.** Every collective here feeds the move that follows it —
+//! gather-merge produces the local matmul's operands, reduce-scatter-split
+//! produces the shard the next algorithm reads — and the weight-grad
+//! outputs land already in their owner's layout, so nothing in this leaf
+//! is deferrable and its clock is `CUBIC_OVERLAP`-invariant. Deferred
+//! collectives enter only via the hybrid wrapper's replica grad syncs
+//! around the cube.
 
 use crate::collectives::{all_gather, broadcast, reduce, reduce_scatter};
 use crate::comm::Endpoint;

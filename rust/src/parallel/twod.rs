@@ -15,6 +15,14 @@
 //!
 //! Bias vectors are stored on mesh row 0 (split by column block) and
 //! broadcast down columns when needed, matching Optimus.
+//!
+//! **Overlap.** SUMMA's broadcasts and reduces are critical-path by
+//! construction — step `s+1`'s local product consumes step `s`'s panels,
+//! and the weight-grad reduces (`summa_tn`) deliver the shard the owner
+//! rank needs before the optimizer's *next* use of the same buffer in the
+//! following SUMMA step. None of it is deferrable, so this leaf's clock is
+//! `CUBIC_OVERLAP`-invariant; overlap wins come from the hybrid wrapper's
+//! replica grad syncs around the grid.
 
 use crate::collectives::{all_reduce, broadcast, broadcast_bw, reduce_bw};
 use crate::comm::Endpoint;

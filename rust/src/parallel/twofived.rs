@@ -25,6 +25,14 @@
 //! Exact per-rank communication volume is mirrored in closed form by
 //! `crate::costmodel::mm25d_fwd_bytes_per_rank` and pinned against the
 //! engine ledger by the costmodel tests.
+//!
+//! **Overlap.** The depth all-reduces look like data-parallel grad syncs
+//! but are *activation* sums: the residual branch (forward) and the
+//! `Expand` input gradient (backward) are consumed by the immediately
+//! following op, so they stay blocking — deferring them would only move
+//! the stall to the next instruction. Like the other tensor meshes, this
+//! leaf's clock is `CUBIC_OVERLAP`-invariant; the hideable boundary is the
+//! hybrid wrapper's replica grad sync.
 
 use crate::collectives::all_reduce;
 use crate::comm::Endpoint;

@@ -53,13 +53,18 @@
 //!
 //! ## Pool lifecycle
 //!
-//! Workers are spawned lazily up to `threads − 1` (the caller is always
-//! participant 0), parked on a condvar between jobs, and live for the
-//! process lifetime. One job runs at a time (`try_lock` gate); a caller that
-//! finds the pool busy — another rank's matmul, or a nested call — runs the
-//! identical loop serially, which is safe *because* of the bit-exactness
-//! guarantee. Thread count is selected once at startup: `CUBIC_THREADS=`
-//! overrides, then the config/CLI request ([`request_threads`]), then
+//! Workers are spawned lazily on demand, parked on per-worker mailbox
+//! condvars between jobs, and live for the process lifetime. Concurrent
+//! callers *split* the pool instead of racing for it: each job leases its
+//! fair share of the worker budget (`MAX_THREADS − 1` divided by the jobs
+//! in flight), spawning new workers as needed up to the budget, so two
+//! ranks' matmuls run threaded side by side where the old single-job gate
+//! forced one of them serial. A caller whose lease comes back empty
+//! (budget exhausted) runs the identical loop serially, which is safe
+//! *because* of the bit-exactness guarantee — participant count never
+//! changes the per-element floating-point op sequence. Thread count is
+//! selected once at startup: `CUBIC_THREADS=` overrides, then the
+//! config/CLI request ([`request_threads`]), then
 //! `std::thread::available_parallelism()`.
 
 use super::{pack, Kernel, JC_STRIPE, KC, MR, NC, NR};
@@ -111,9 +116,10 @@ pub fn selected_threads() -> usize {
 /// Jobs the pool actually ran multi-threaded (observability; the parity
 /// battery asserts this grows so thread coverage cannot silently vanish).
 static THREADED_JOBS: AtomicU64 = AtomicU64::new(0);
-/// Parallel-eligible calls that ran serially because the pool was busy
-/// (another rank's matmul in flight). Correctness is unaffected — the
-/// serial loop is bit-identical — this only tracks lost parallelism.
+/// Parallel-eligible calls whose worker lease came back empty (the fair
+/// share of the worker budget rounded to zero under heavy job concurrency).
+/// Correctness is unaffected — the serial loop is bit-identical — this only
+/// tracks lost parallelism.
 static SERIAL_FALLBACKS: AtomicU64 = AtomicU64::new(0);
 
 pub fn threaded_jobs() -> u64 {
@@ -164,7 +170,8 @@ pub(super) struct GemmCtx {
 }
 
 // SAFETY: the raw pointers reference buffers that outlive the job (the
-// caller blocks in `ThreadPool::run` until every participant has finished),
+// caller blocks in `ThreadPool::run_leased` until every participant has
+// finished),
 // and all concurrent access is to disjoint regions (disjoint B panels while
 // packing, disjoint C row strips while computing) or read-only (a, b, and
 // the packed B block after its barrier). The sync primitives are Sync.
@@ -355,125 +362,185 @@ fn run_participant(ctx: &GemmCtx, _me: usize) {
 struct Job {
     run: unsafe fn(*const (), usize),
     ctx: *const (),
-    participants: usize,
 }
-
-// SAFETY: `ctx` points at a `GemmCtx` (Sync, see above) that the publisher
-// keeps alive until every participant has checked out.
-unsafe impl Send for Job {}
 
 unsafe fn run_erased(ctx: *const (), me: usize) {
     run_participant(&*(ctx as *const GemmCtx), me);
 }
 
-struct Slot {
-    /// Bumped once per published job; workers latch it to run each job at
-    /// most once.
-    seq: u64,
-    job: Option<Job>,
-    /// Workers still inside the current job.
-    active: usize,
+/// Per-job completion latch, living on the publishing caller's stack: the
+/// caller blocks until every leased worker has decremented it, so the
+/// `GemmCtx` frame (and this latch) outlive all worker access.
+struct JobDone {
+    remaining: Mutex<usize>,
+    cv: Condvar,
 }
 
-struct Shared {
-    slot: Mutex<Slot>,
-    start: Condvar,
-    done: Condvar,
+impl JobDone {
+    fn signal(&self) {
+        let mut g = self.remaining.lock().expect("gemm pool poisoned");
+        *g -= 1;
+        if *g == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.remaining.lock().expect("gemm pool poisoned");
+        while *g > 0 {
+            g = self.cv.wait(g).expect("gemm pool poisoned");
+        }
+    }
+}
+
+/// One leased worker's marching orders: the job plus *this worker's*
+/// participant index and the publisher's completion latch.
+#[derive(Clone, Copy)]
+struct Assignment {
+    job: Job,
+    me: usize,
+    done: *const JobDone,
+}
+
+// SAFETY: `job.ctx` points at a `GemmCtx` (Sync, see above) and `done` at a
+// `JobDone`, both on the publisher's stack; the publisher blocks in
+// `run_leased` until every assignee has signalled `done`, so neither is
+// freed while a worker can still reach it.
+unsafe impl Send for Assignment {}
+
+/// A worker's parking spot: at most one assignment in flight (workers only
+/// return to the free list after finishing, so a parked mailbox is empty).
+#[derive(Default)]
+struct Mailbox {
+    slot: Mutex<Option<Assignment>>,
+    bell: Condvar,
+}
+
+/// State shared between the pool handle and its workers.
+struct PoolShared {
+    /// Indices of workers that are parked and leasable.
+    free: Mutex<Vec<usize>>,
+    /// One mailbox per spawned worker, indexed by worker id.
+    mailboxes: Mutex<Vec<Arc<Mailbox>>>,
 }
 
 /// The process-wide persistent gemm pool (never torn down; idle workers
-/// park on a condvar and cost nothing).
+/// park on their mailbox condvars and cost nothing). Concurrent jobs each
+/// lease a fair share of the worker budget — see the module docs.
 pub(super) struct ThreadPool {
-    shared: Arc<Shared>,
-    /// Worker-spawn lock + count of workers spawned so far.
-    spawned: Mutex<usize>,
-    /// One job at a time; `try_lock` so contenders fall back to serial
-    /// instead of queueing (they have their own core to use).
-    gate: Mutex<()>,
+    shared: Arc<PoolShared>,
+    /// Jobs currently holding (or acquiring) a lease; the fair-share
+    /// denominator.
+    active_jobs: AtomicUsize,
 }
 
-fn worker_loop(shared: Arc<Shared>, idx: usize) {
-    let mut seen = 0u64;
+fn worker_loop(shared: Arc<PoolShared>, mailbox: Arc<Mailbox>, idx: usize) {
     loop {
-        let job = {
-            let mut g = shared.slot.lock().expect("gemm pool poisoned");
+        let a = {
+            let mut g = mailbox.slot.lock().expect("gemm pool poisoned");
             loop {
-                if g.seq != seen {
-                    seen = g.seq;
-                    break g.job.filter(|j| idx < j.participants);
+                if let Some(a) = g.take() {
+                    break a;
                 }
-                g = shared.start.wait(g).expect("gemm pool poisoned");
+                g = mailbox.bell.wait(g).expect("gemm pool poisoned");
             }
         };
-        let Some(job) = job else { continue }; // not a participant this job
-        // SAFETY: the publisher keeps the ctx alive until `active` hits 0,
-        // which cannot happen before this decrement below.
+        // SAFETY: the publisher keeps ctx + done alive until this worker
+        // signals `done` below.
         //
         // A panic must not unwind out of a pooled job: the barrier and
-        // `active` bookkeeping would wedge every other participant in a
+        // latch bookkeeping would wedge every other participant in a
         // silent hang. Abort instead — loud, with the panic message already
         // printed by the default hook.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
-            (job.run)(job.ctx, idx)
+            (a.job.run)(a.job.ctx, a.me)
         }));
         if result.is_err() {
             eprintln!("gemm pool worker {idx} panicked mid-job; aborting");
             std::process::abort();
         }
-        let mut g = shared.slot.lock().expect("gemm pool poisoned");
-        g.active -= 1;
-        if g.active == 0 {
-            shared.done.notify_all();
-        }
+        // Back on the market before signalling, so a caller woken by the
+        // latch already sees this worker leasable.
+        shared.free.lock().expect("gemm pool poisoned").push(idx);
+        // SAFETY: `done` is still alive — the publisher cannot return from
+        // `run_leased` until this signal lands.
+        unsafe { (*a.done).signal() };
     }
 }
 
 impl ThreadPool {
     fn new() -> ThreadPool {
         ThreadPool {
-            shared: Arc::new(Shared {
-                slot: Mutex::new(Slot { seq: 0, job: None, active: 0 }),
-                start: Condvar::new(),
-                done: Condvar::new(),
+            shared: Arc::new(PoolShared {
+                free: Mutex::new(Vec::new()),
+                mailboxes: Mutex::new(Vec::new()),
             }),
-            spawned: Mutex::new(0),
-            gate: Mutex::new(()),
+            active_jobs: AtomicUsize::new(0),
         }
     }
 
-    /// Grow the pool to at least `want` workers (indices 1..=want).
-    fn ensure_workers(&self, want: usize) {
-        let mut spawned = self.spawned.lock().expect("gemm pool poisoned");
-        while *spawned < want {
-            *spawned += 1;
-            let idx = *spawned;
+    /// Lease up to `desired` helper workers for one job, capped at the
+    /// job's fair share of the worker budget (`MAX_THREADS − 1` divided by
+    /// the jobs in flight) and spawning new workers up to the budget when
+    /// the free list runs short. Registers the job in `active_jobs` even
+    /// when the lease is empty — every `lease` must be paired with a
+    /// [`Self::finish_job`].
+    fn lease(&self, desired: usize) -> Vec<usize> {
+        let active = self.active_jobs.fetch_add(1, Ordering::SeqCst) + 1;
+        let budget = MAX_THREADS - 1;
+        let take = desired.min(budget / active);
+        if take == 0 {
+            return Vec::new();
+        }
+        let mut free = self.shared.free.lock().expect("gemm pool poisoned");
+        if free.len() < take {
+            self.spawn_workers(take - free.len(), &mut free);
+        }
+        let n = take.min(free.len());
+        let at = free.len() - n;
+        free.split_off(at)
+    }
+
+    /// Unregister a job from the fair-share denominator (pairs with
+    /// [`Self::lease`]; call after the job — threaded or fallen-back —
+    /// is done).
+    fn finish_job(&self) {
+        self.active_jobs.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Spawn up to `need` new workers (bounded by the worker budget) and
+    /// add them to the free list the caller holds locked.
+    fn spawn_workers(&self, need: usize, free: &mut Vec<usize>) {
+        let mut reg = self.shared.mailboxes.lock().expect("gemm pool poisoned");
+        for _ in 0..need {
+            if reg.len() >= MAX_THREADS - 1 {
+                break;
+            }
+            let idx = reg.len();
+            let mailbox = Arc::new(Mailbox::default());
+            reg.push(mailbox.clone());
             let shared = self.shared.clone();
             std::thread::Builder::new()
                 .name(format!("cubic-gemm-{idx}"))
-                .spawn(move || worker_loop(shared, idx))
+                .spawn(move || worker_loop(shared, mailbox, idx))
                 .expect("cannot spawn gemm worker");
+            free.push(idx);
         }
     }
 
-    /// Run `ctx` on `ctx.participants` threads (caller = participant 0).
-    /// Returns false — without running anything — if another job holds the
-    /// pool; the caller then runs the identical loop serially.
-    fn run(&self, ctx: &GemmCtx) -> bool {
-        let Ok(_gate) = self.gate.try_lock() else {
-            return false;
-        };
-        let helpers = ctx.participants - 1;
-        self.ensure_workers(helpers);
-        {
-            let mut g = self.shared.slot.lock().expect("gemm pool poisoned");
-            g.seq += 1;
-            g.active = helpers;
-            g.job = Some(Job {
-                run: run_erased,
-                ctx: ctx as *const GemmCtx as *const (),
-                participants: ctx.participants,
-            });
-            self.shared.start.notify_all();
+    /// Run `ctx` on the leased workers plus the calling thread; requires
+    /// `ctx.participants == lease.len() + 1` (caller = participant 0).
+    /// Blocks until every participant has finished.
+    fn run_leased(&self, ctx: &GemmCtx, lease: &[usize]) {
+        debug_assert_eq!(ctx.participants, lease.len() + 1);
+        let done = JobDone { remaining: Mutex::new(lease.len()), cv: Condvar::new() };
+        let job = Job { run: run_erased, ctx: ctx as *const GemmCtx as *const () };
+        for (i, &w) in lease.iter().enumerate() {
+            let mailbox =
+                self.shared.mailboxes.lock().expect("gemm pool poisoned")[w].clone();
+            let mut g = mailbox.slot.lock().expect("gemm pool poisoned");
+            *g = Some(Assignment { job, me: i + 1, done: &done });
+            mailbox.bell.notify_one();
         }
         // Same panic policy as the workers (see worker_loop): unwinding out
         // of a pooled job while workers hold barrier/ctx references would
@@ -486,12 +553,7 @@ impl ThreadPool {
             eprintln!("gemm pool caller panicked mid-job; aborting");
             std::process::abort();
         }
-        let mut g = self.shared.slot.lock().expect("gemm pool poisoned");
-        while g.active > 0 {
-            g = self.shared.done.wait(g).expect("gemm pool poisoned");
-        }
-        g.job = None;
-        true
+        done.wait();
     }
 }
 
@@ -501,9 +563,10 @@ fn pool() -> &'static ThreadPool {
 }
 
 /// Drive one strided gemm with up to `threads` participants (clamped to the
-/// strip count), falling back to the bit-identical serial loop when
-/// `threads <= 1` or the pool is busy. Returns the merged per-thread
-/// `(flops, packed_bytes)` tallies.
+/// strip count and the job's fair share of the worker pool), falling back
+/// to the bit-identical serial loop when `threads <= 1` or the lease comes
+/// back empty. Returns the merged per-thread `(flops, packed_bytes)`
+/// tallies.
 #[allow(clippy::too_many_arguments)]
 pub(super) fn execute(
     kern: Kernel,
@@ -536,12 +599,23 @@ pub(super) fn execute(
         let cp = c.as_mut_ptr();
         let bpp = bp_buf.as_mut_ptr();
         if want > 1 {
-            let ctx = GemmCtx::new(kern, m, n, kdim, a, ars, aks, b, brs, bcs, cp, bpp, want);
-            if pool().run(&ctx) {
+            let p = pool();
+            let lease = p.lease(want - 1);
+            if lease.is_empty() {
+                SERIAL_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+            } else {
+                // The lease may be smaller than asked (fair share under
+                // concurrent jobs) — any participant count is bit-exact.
+                let ctx = GemmCtx::new(
+                    kern, m, n, kdim, a, ars, aks, b, brs, bcs, cp, bpp,
+                    lease.len() + 1,
+                );
+                p.run_leased(&ctx, &lease);
+                p.finish_job();
                 THREADED_JOBS.fetch_add(1, Ordering::Relaxed);
                 return ctx.totals();
             }
-            SERIAL_FALLBACKS.fetch_add(1, Ordering::Relaxed);
+            p.finish_job();
         }
         let ctx = GemmCtx::new(kern, m, n, kdim, a, ars, aks, b, brs, bcs, cp, bpp, 1);
         run_participant(&ctx, 0);
@@ -567,23 +641,33 @@ mod tests {
     }
 
     #[test]
-    fn pool_busy_falls_back_without_running() {
-        // Acquire the gate ourselves (bounded retry: concurrent tests hold
-        // it only for the duration of one gemm), then verify run() refuses
-        // immediately instead of queueing or touching the job.
+    fn saturated_pool_leases_nothing_and_falls_back() {
+        // Inflate the job counter past the worker budget so the fair share
+        // rounds to zero: the lease must come back empty (the serial-
+        // fallback path) without spawning or blocking. Concurrent gemms in
+        // this process may transiently fall back serial during this window,
+        // which is bit-exact by construction.
         let p = pool();
-        let mut held = None;
-        for _ in 0..1000 {
-            if let Ok(g) = p.gate.try_lock() {
-                held = Some(g);
-                break;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(1));
+        p.active_jobs.fetch_add(MAX_THREADS, Ordering::SeqCst);
+        let lease = p.lease(4);
+        assert!(lease.is_empty(), "fair share at saturation must be zero");
+        p.finish_job();
+        p.active_jobs.fetch_sub(MAX_THREADS, Ordering::SeqCst);
+    }
+
+    #[test]
+    fn leased_workers_run_the_job_and_return_to_the_pool() {
+        let p = pool();
+        let lease = p.lease(2);
+        if lease.is_empty() {
+            // A concurrent saturation test can empty the fair share.
+            p.finish_job();
+            return;
         }
-        let _gate = held.expect("could not acquire the gemm pool gate in 1s");
         let a = vec![1.0f32; 8 * 8];
         let b = vec![1.0f32; 8 * 8];
         let mut c = vec![0.0f32; 8 * 8];
+        let mut bp = vec![0.0f32; KC * JC_STRIPE];
         let ctx = GemmCtx::new(
             crate::tensor::kernel::selected(),
             8,
@@ -596,9 +680,24 @@ mod tests {
             8,
             1,
             c.as_mut_ptr(),
-            std::ptr::null_mut(),
-            2,
+            bp.as_mut_ptr(),
+            lease.len() + 1,
         );
-        assert!(!p.run(&ctx), "run must refuse while the gate is held");
+        p.run_leased(&ctx, &lease);
+        p.finish_job();
+        // 8×8 all-ones product: every element is exactly 8.
+        assert!(c.iter().all(|&v| v == 8.0), "{c:?}");
+        assert_eq!(ctx.totals().0, 2 * 8 * 8 * 8, "exact serial flop total");
+        // The leased workers must come back on the market (bounded retry —
+        // they re-register just before signalling completion, and other
+        // tests may lease them in between).
+        for _ in 0..1000 {
+            let free = p.shared.free.lock().unwrap().len();
+            if free > 0 {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        panic!("leased workers never returned to the free list");
     }
 }

@@ -273,6 +273,11 @@ impl TrainerRank {
         let dx_global = self.env.gather_activation(ep, &dx_local, rows, m.hidden);
         let (d_table, d_pos) = self.emb.bwd(&tokens, m.seq, &dx_global);
 
+        // Optimizer boundary: every in-flight deferred grad sync must have
+        // landed on the compute clock before the update is applied (the
+        // gradients themselves are already valid — tickets are clock-only).
+        ep.join_all();
+
         // Optimizer.
         let lr = lr_at(&self.cfg.train, step);
         let mut pairs: Vec<(&mut Tensor, &Tensor)> = Vec::new();

@@ -211,9 +211,10 @@ fn threaded_jobs_actually_ran() {
 fn concurrent_gemms_report_exact_serial_flop_totals() {
     // Four caller threads, each running several threaded gemms: every call
     // must return exactly 2·m·n·k (merged per-thread tallies), and the
-    // global counter must have advanced by at least the sum. Pool
-    // contention forces a mix of threaded and serial-fallback executions —
-    // both must count identically.
+    // global counter must have advanced by at least the sum. Fair-share
+    // leasing usually gives every caller a slice of the pool, but a
+    // saturated pool still yields empty-lease serial fallbacks — both
+    // paths must count identically.
     let kern = kernel::selected();
     let (m, n, k) = (128, 96, 64);
     let per_call = 2 * (m * n * k) as u64;
@@ -241,6 +242,60 @@ fn concurrent_gemms_report_exact_serial_flop_totals() {
     }
     // Other tests in this binary may add flops concurrently, never remove.
     assert!(cubic::tensor::matmul_flops() - before >= total);
+}
+
+#[test]
+fn concurrent_callers_both_lease_workers() {
+    // Fair-share leasing (the ROADMAP housekeeping item this PR closes):
+    // two callers issuing threaded gemms at the same instant must BOTH run
+    // on pool workers — the pool splits its worker budget between jobs in
+    // flight instead of handing the whole pool to the first caller and
+    // dropping the second to the serial fallback. Each round gates both
+    // gemms between barriers so they overlap, reading the threaded-job
+    // counter before either starts and after both finish; one round in 50
+    // where the counter advanced by two proves the split. Bit-exactness
+    // is asserted every round regardless, because a lease of any size
+    // (including the empty-lease serial fallback) computes identical bits.
+    let kern = kernel::selected();
+    let (m, n, k) = (256, 128, 128);
+    let rounds = 50usize;
+    let barrier = Arc::new(std::sync::Barrier::new(2));
+    let both_threaded = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..2u64)
+        .map(|t| {
+            let barrier = Arc::clone(&barrier);
+            let both_threaded = Arc::clone(&both_threaded);
+            std::thread::spawn(move || {
+                let a = fill(300 + t, m * k);
+                let b = fill(400 + t, k * n);
+                let mut base = vec![0.0f32; m * n];
+                gemm_strided_t(kern, 1, m, n, k, &a, k, 1, &b, n, 1, &mut base);
+                for _ in 0..rounds {
+                    barrier.wait();
+                    let before = kernel::threads::threaded_jobs();
+                    // Second barrier: neither gemm starts until both callers
+                    // have read `before`, so neither read can miss the other
+                    // caller's increment.
+                    barrier.wait();
+                    let mut c = vec![0.0f32; m * n];
+                    gemm_strided_t(kern, 4, m, n, k, &a, k, 1, &b, n, 1, &mut c);
+                    assert_eq!(c, base, "caller {t}: concurrent gemm must stay bit-exact");
+                    barrier.wait();
+                    if kernel::threads::threaded_jobs() - before >= 2 {
+                        both_threaded.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(
+        both_threaded.load(Ordering::Relaxed) > 0,
+        "two concurrent callers never both ran threaded in {rounds} rounds — \
+         the fair-share worker split is broken (one caller hogs the pool)"
+    );
 }
 
 #[test]

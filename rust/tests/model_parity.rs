@@ -73,11 +73,25 @@ fn run_par(
     dy: &Tensor,
     seed: u64,
 ) -> Vec<(Tensor, Tensor, Vec<BlockTensors>)> {
+    run_par_net(cfg, par, edge, x, dy, seed, NetModel::zero())
+}
+
+/// [`run_par`] under an explicit network model (the overlap sweep pins
+/// both schedules with it).
+fn run_par_net(
+    cfg: &ModelConfig,
+    par: Parallelism,
+    edge: usize,
+    x: &Tensor,
+    dy: &Tensor,
+    seed: u64,
+    net: NetModel,
+) -> Vec<(Tensor, Tensor, Vec<BlockTensors>)> {
     let world = par.world_size(edge);
     let cfg2 = cfg.clone();
     let x = x.clone();
     let dy = dy.clone();
-    run_spmd(world, NetModel::zero(), move |rank, ep| {
+    run_spmd(world, net, move |rank, ep| {
         let env = ParEnv::new(par, edge, rank);
         let dense = model::init_dense_blocks(&cfg2, seed);
         let blocks = env.shard_blocks(&dense);
@@ -359,6 +373,106 @@ fn activation_scatter_gather_steady_state_recycles() {
     for (rank, (hits, misses)) in out.iter().enumerate() {
         assert_eq!(*misses, 0, "rank {rank}: boundary path must not allocate after warmup");
         assert_eq!(*hits, 2 * iters, "rank {rank}: one pooled scatter + one pooled gather");
+    }
+}
+
+#[test]
+fn overlap_vs_serialized_is_bitwise_identical_for_every_kind() {
+    // The tentpole's bit-exactness-by-construction claim, pinned: deferred
+    // collectives move data at issue time and only the *clock* is
+    // re-timed, so the overlapped and serialized schedules must produce
+    // bitwise-identical outputs, input grads, and every weight/vector grad
+    // on every rank of every mesh kind. `overlap` is set directly on the
+    // NetModel so this holds under either CUBIC_OVERLAP CI leg.
+    let cfg = tiny();
+    let rows = cfg.batch * cfg.seq;
+    let x = randt(&[rows, cfg.hidden], 5);
+    let dy = randt(&[rows, cfg.hidden], 6);
+    let net_with = |overlap: bool| {
+        let mut net = NetModel::zero();
+        net.overlap = overlap;
+        net
+    };
+    let mats: [(&str, MatGet); 4] = [
+        ("w_qkv", |b| &b.w_qkv),
+        ("w_proj", |b| &b.w_proj),
+        ("w_fc1", |b| &b.w_fc1),
+        ("w_fc2", |b| &b.w_fc2),
+    ];
+    let vecs: [(&str, VecGet); 8] = [
+        ("ln1_g", |b| &b.ln1_g),
+        ("ln1_b", |b| &b.ln1_b),
+        ("b_qkv", |b| &b.b_qkv),
+        ("b_proj", |b| &b.b_proj),
+        ("ln2_g", |b| &b.ln2_g),
+        ("ln2_b", |b| &b.ln2_b),
+        ("b_fc1", |b| &b.b_fc1),
+        ("b_fc2", |b| &b.b_fc2),
+    ];
+    for (par, edge) in ALL_ENVS {
+        let serial = run_par_net(&cfg, par, edge, &x, &dy, 42, net_with(false));
+        let overlapped = run_par_net(&cfg, par, edge, &x, &dy, 42, net_with(true));
+        for (rank, (s, o)) in serial.iter().zip(&overlapped).enumerate() {
+            assert_eq!(s.0.data(), o.0.data(), "{par:?} rank {rank} y");
+            assert_eq!(s.1.data(), o.1.data(), "{par:?} rank {rank} dx");
+            for (l, (gs, go)) in s.2.iter().zip(&o.2).enumerate() {
+                for (name, get) in mats {
+                    assert_eq!(
+                        get(gs).data(),
+                        get(go).data(),
+                        "{par:?} rank {rank} layer {l} {name}"
+                    );
+                }
+                for (name, get) in vecs {
+                    match (get(gs), get(go)) {
+                        (Some(a), Some(b)) => assert_eq!(
+                            a.data(),
+                            b.data(),
+                            "{par:?} rank {rank} layer {l} {name}"
+                        ),
+                        (None, None) => {}
+                        _ => panic!("{par:?} rank {rank} layer {l} {name}: ownership differs"),
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn in_flight_collective_buffers_steady_state_recycle() {
+    // Pending collectives own their pooled buffers while deferred; after a
+    // one-iteration warmup, a loop keeping two all-reduces in flight must
+    // recycle every buffer (0 allocations, exactly 2 pooled takes per
+    // aligned all-reduce).
+    let iters = 5u64;
+    let mut net = NetModel::zero();
+    net.overlap = true; // in-flight handles regardless of CUBIC_OVERLAP
+    let out = run_spmd(2, net, move |_rank, ep| {
+        let t = Tensor::full(&[64], 1.0);
+        let run_one = |ep: &mut Endpoint| {
+            let p1 = ep.iall_reduce(&[0, 1], &t);
+            let p2 = ep.iall_reduce(&[0, 1], &t);
+            assert!(p1.is_deferred() && p2.is_deferred());
+            assert_eq!(ep.pending_colls(), 2);
+            let a = p1.wait(ep);
+            let b = p2.wait(ep);
+            assert_eq!(a.data()[0], 2.0);
+            assert_eq!(b.data()[0], 2.0);
+            drop(a); // release the pooled buffers before the next round
+            drop(b);
+            ep.barrier_wait();
+        };
+        run_one(ep); // warmup allocates the round's buffers once
+        let (h0, m0) = (ep.stats.pool_hits, ep.stats.pool_misses);
+        for _ in 0..iters {
+            run_one(ep);
+        }
+        (ep.stats.pool_hits - h0, ep.stats.pool_misses - m0)
+    });
+    for (rank, (hits, misses)) in out.iter().enumerate() {
+        assert_eq!(*misses, 0, "rank {rank}: in-flight path must not allocate after warmup");
+        assert_eq!(*hits, 2 * 2 * iters, "rank {rank}: 2 pooled takes per all-reduce");
     }
 }
 
