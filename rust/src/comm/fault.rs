@@ -1,0 +1,299 @@
+//! Deterministic fault injection for the virtual-clock transport.
+//!
+//! A [`FaultPlan`] installed on a [`crate::comm::World`] injects three
+//! failure classes into every endpoint it hands out, all derived from a
+//! seed so the same plan replays the same faults:
+//!
+//! * **Message drops** — each `(src, dst, tag)` delivery is preceded by a
+//!   deterministic number of dropped attempts (a stateless hash over
+//!   `(seed, generation, src, dst, tag, attempt)` thresholded against
+//!   `drop_p`). The receiver pays one exponentially backed-off retry
+//!   interval of *virtual* time per dropped attempt; `max_retries`
+//!   consecutive drops surface as [`CommError::Timeout`].
+//! * **Link delay (stragglers)** — extra per-hop latency on selected
+//!   `(src, dst)` links, charged on the virtual clock exactly like
+//!   `hop_cost`, so a slow rank shows up in the step-time ledger instead
+//!   of being invisible.
+//! * **Rank crashes** — a rank scheduled to crash at step `S` completes
+//!   steps `< S`, broadcasts an obituary, and aborts. Crashes fire only in
+//!   generation 0 (the first life of the world); recovered generations
+//!   replay clean, which is what makes the recovery determinism pin
+//!   testable.
+//!
+//! Faults are *clock-and-control-plane only*: payload data is never
+//! corrupted, so any run that survives injection is bit-identical in its
+//! numerics to the fault-free run — only clocks and the retry/timeout
+//! counters differ. A world with no plan installed takes the exact legacy
+//! code path (clock included).
+//!
+//! The `generation` salt exists so a deterministic plan cannot re-fail a
+//! recovered run forever: after a restart the supervisor bumps the
+//! generation, which reshuffles the drop pattern while staying fully
+//! reproducible.
+
+use std::fmt;
+
+/// Reserved tag for death announcements. Obituaries bypass fault
+/// injection, carry no payload bytes, and are processed by the receive
+/// loop on arrival (never stashed).
+pub const OBITUARY_TAG: u64 = u64::MAX;
+
+/// Typed communication failure surfaced by the fallible receive path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CommError {
+    /// The peer we are waiting on announced its death (crash or abort).
+    PeerDead { rank: usize, peer: usize, tag: u64 },
+    /// Delivery of `(src, tag)` exhausted its retry budget, or the
+    /// wall-clock hang watchdog fired. `pending` lists the `(src, tag)`
+    /// keys parked in the stash at the time — the mismatched-tag deadlock
+    /// diagnosis.
+    Timeout {
+        rank: usize,
+        src: usize,
+        tag: u64,
+        attempts: u32,
+        pending: Vec<(usize, u64)>,
+    },
+    /// This rank was scheduled to crash at `step` by the fault plan.
+    Crashed { rank: usize, step: usize },
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::PeerDead { rank, peer, tag } => {
+                write!(f, "rank {rank}: peer {peer} died while waiting for tag {tag:#x}")
+            }
+            CommError::Timeout { rank, src, tag, attempts, pending } => {
+                write!(
+                    f,
+                    "rank {rank}: recv (src {src}, tag {tag:#x}) timed out after {attempts} \
+                     attempts; pending stash tags: {pending:?}"
+                )
+            }
+            CommError::Crashed { rank, step } => {
+                write!(f, "rank {rank}: injected crash at step {step}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+/// Panic payload used to unwind a rank out of a collective on an
+/// unrecoverable comm error — the NCCL async-error/abort pattern: the
+/// erroring endpoint broadcasts its obituary, then aborts the rank;
+/// [`catch_comm`] at the step boundary downcasts the unwind back into a
+/// typed per-rank `Result`.
+pub struct CommAbort(pub CommError);
+
+/// Run `f`, converting a [`CommAbort`] unwind into `Err(CommError)`.
+/// Any other panic is resumed untouched, so real assertion failures still
+/// surface as test failures. This is the fallible entry point for the
+/// whole blocking comm API: wrap a collective (or a full training step)
+/// and a dead peer becomes a clean per-rank error instead of a hang.
+pub fn catch_comm<R>(f: impl FnOnce() -> R) -> Result<R, CommError> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(r) => Ok(r),
+        Err(payload) => match payload.downcast::<CommAbort>() {
+            Ok(abort) => Err(abort.0),
+            Err(other) => std::panic::resume_unwind(other),
+        },
+    }
+}
+
+/// Install (once per process) a panic hook that silences [`CommAbort`]
+/// unwinds — they are control flow, not failures — while chaining every
+/// other panic to the previous hook.
+pub fn install_quiet_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<CommAbort>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Extra latency on a link; `None` endpoints match any rank.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkDelay {
+    pub src: Option<usize>,
+    pub dst: Option<usize>,
+    /// Extra virtual seconds added to every hop on the matching link.
+    pub extra: f64,
+}
+
+/// Seeded, deterministic fault schedule for one world.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Recovery generation this plan instance drives (0 = first life).
+    /// Salted into the drop hash so restarts reshuffle the drop pattern.
+    pub generation: u64,
+    /// Per-attempt drop probability in `[0, 1]`.
+    pub drop_p: f64,
+    /// Consecutive dropped attempts before a delivery gives up.
+    pub max_retries: u32,
+    /// Virtual seconds charged for the first retry interval; attempt `i`
+    /// waits `retry_timeout · 2^i` (bounded exponential backoff).
+    pub retry_timeout: f64,
+    /// `(rank, step)` crash schedule; fires in generation 0 only.
+    pub crashes: Vec<(usize, usize)>,
+    /// Straggler links.
+    pub delays: Vec<LinkDelay>,
+    /// Supervisor bound on restart generations before giving up.
+    pub max_recoveries: usize,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            generation: 0,
+            drop_p: 0.0,
+            max_retries: 4,
+            retry_timeout: 1e-3,
+            crashes: Vec::new(),
+            delays: Vec::new(),
+            max_recoveries: 3,
+        }
+    }
+}
+
+/// splitmix64 finalizer — the avalanche stage used throughout the crate's
+/// seeding paths; good enough to decorrelate adjacent tags.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// The same plan re-keyed for recovery generation `g`.
+    pub fn with_generation(mut self, g: u64) -> FaultPlan {
+        self.generation = g;
+        self
+    }
+
+    /// Does `rank` crash at the top of `step` under this plan? Crashes are
+    /// one-shot: generation 0 only.
+    pub fn crashes_at(&self, rank: usize, step: usize) -> bool {
+        self.generation == 0 && self.crashes.iter().any(|&(r, s)| r == rank && s == step)
+    }
+
+    /// Uniform-in-`[0,1)` hash of one delivery attempt.
+    fn attempt_unit(&self, src: usize, dst: usize, tag: u64, attempt: u32) -> f64 {
+        let h = mix64(
+            self.seed
+                ^ mix64(self.generation)
+                ^ mix64((src as u64) << 32 | dst as u64)
+                ^ mix64(tag)
+                ^ mix64(0xA77E0 + attempt as u64),
+        );
+        // 53 high bits → exact double in [0, 1).
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Number of consecutive dropped attempts preceding the delivery of
+    /// `(src → dst, tag)`; saturates at `max_retries` (= delivery failed).
+    pub fn drops_for(&self, src: usize, dst: usize, tag: u64) -> u32 {
+        if self.drop_p <= 0.0 {
+            return 0;
+        }
+        let mut n = 0;
+        while n < self.max_retries && self.attempt_unit(src, dst, tag, n) < self.drop_p {
+            n += 1;
+        }
+        n
+    }
+
+    /// Total virtual-clock stall for `drops` backed-off retry intervals:
+    /// `retry_timeout · (2^drops − 1)`.
+    pub fn retry_stall(&self, drops: u32) -> f64 {
+        self.retry_timeout * ((1u64 << drops.min(62)) - 1) as f64
+    }
+
+    /// Extra straggler latency on the `src → dst` link.
+    pub fn link_delay(&self, src: usize, dst: usize) -> f64 {
+        self.delays
+            .iter()
+            .filter(|d| d.src.is_none_or(|s| s == src) && d.dst.is_none_or(|t| t == dst))
+            .map(|d| d.extra)
+            .sum()
+    }
+
+    /// Any fault configured at all? (An inactive plan is not installed, so
+    /// the fault-free path stays on the legacy code path bit-for-bit.)
+    pub fn is_active(&self) -> bool {
+        self.drop_p > 0.0 || !self.crashes.is_empty() || !self.delays.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drops_are_deterministic_and_generation_salted() {
+        let plan = FaultPlan { seed: 7, drop_p: 0.5, ..Default::default() };
+        let a = plan.drops_for(0, 1, 123);
+        let b = plan.drops_for(0, 1, 123);
+        assert_eq!(a, b, "same plan must replay the same drops");
+        // Across many tags both outcomes occur at p = 0.5.
+        let hits: u32 = (0..200).map(|t| plan.drops_for(0, 1, t).min(1)).sum();
+        assert!(hits > 50 && hits < 150, "drop rate implausible: {hits}/200");
+        // A new generation reshuffles the pattern (some tag must differ).
+        let g1 = plan.clone().with_generation(1);
+        assert!(
+            (0..200).any(|t| plan.drops_for(0, 1, t) != g1.drops_for(0, 1, t)),
+            "generation salt must change the drop pattern"
+        );
+    }
+
+    #[test]
+    fn drop_p_one_exhausts_retries() {
+        let plan = FaultPlan { drop_p: 1.0, max_retries: 3, ..Default::default() };
+        assert_eq!(plan.drops_for(4, 2, 99), 3);
+        assert!((plan.retry_stall(3) - plan.retry_timeout * 7.0).abs() < 1e-15);
+        let clean = FaultPlan::default();
+        assert_eq!(clean.drops_for(4, 2, 99), 0);
+        assert_eq!(clean.retry_stall(0), 0.0);
+    }
+
+    #[test]
+    fn crashes_fire_in_generation_zero_only() {
+        let plan = FaultPlan { crashes: vec![(2, 5)], ..Default::default() };
+        assert!(plan.crashes_at(2, 5));
+        assert!(!plan.crashes_at(2, 4));
+        assert!(!plan.crashes_at(1, 5));
+        assert!(!plan.clone().with_generation(1).crashes_at(2, 5));
+    }
+
+    #[test]
+    fn link_delays_match_wildcards() {
+        let plan = FaultPlan {
+            delays: vec![
+                LinkDelay { src: Some(0), dst: None, extra: 1e-3 },
+                LinkDelay { src: Some(0), dst: Some(2), extra: 5e-3 },
+            ],
+            ..Default::default()
+        };
+        assert!((plan.link_delay(0, 1) - 1e-3).abs() < 1e-15);
+        assert!((plan.link_delay(0, 2) - 6e-3).abs() < 1e-15);
+        assert_eq!(plan.link_delay(1, 0), 0.0);
+    }
+
+    #[test]
+    fn catch_comm_converts_aborts_and_passes_values() {
+        assert_eq!(catch_comm(|| 42).unwrap(), 42);
+        let err = catch_comm(|| -> u32 {
+            std::panic::panic_any(CommAbort(CommError::Crashed { rank: 3, step: 1 }))
+        })
+        .unwrap_err();
+        assert_eq!(err, CommError::Crashed { rank: 3, step: 1 });
+    }
+}

@@ -48,15 +48,65 @@
 //! overlapped and fully serialized schedules; with overlap off, `defer`
 //! degenerates to running the collective inline and every ticket is a
 //! no-op, reproducing the pre-overlap clock exactly.
+//!
+//! ## Failure model & recovery
+//!
+//! A seeded [`fault::FaultPlan`] installed via [`World::install_faults`]
+//! turns the transport fallible. The fault taxonomy (all deterministic in
+//! the seed, so the whole matrix is CI-able):
+//!
+//! * **Drops / retries** — each delivery of `(src → dst, tag)` is preceded
+//!   by a hash-determined number of dropped attempts; the receiver pays
+//!   exponentially backed-off retry intervals of *virtual* time
+//!   (`retry_timeout · (2ⁿ − 1)`), counted exactly in
+//!   [`CommStats::retries`] / [`CommStats::fault_stall_time`]. Exhausting
+//!   `max_retries` surfaces [`fault::CommError::Timeout`].
+//! * **Stragglers** — per-link extra latency charged on the virtual clock
+//!   exactly like `hop_cost`, so slow links show up in the step ledger.
+//! * **Crashes** — [`Endpoint::maybe_crash`] fires at the top of a
+//!   scheduled step (generation 0 only): the rank broadcasts an
+//!   **obituary** (reserved tag `u64::MAX`, sent raw — no stats, no
+//!   injection) and unwinds with a [`fault::CommAbort`] payload.
+//!
+//! Error propagation is the NCCL async-error/abort pattern rather than
+//! `Result`-plumbing through every collective: [`Endpoint::try_recv`] is
+//! the fallible primitive; the infallible [`Endpoint::recv`] wraps it and,
+//! on error, broadcasts this rank's own obituary (so blocked peers cascade
+//! instead of deadlocking) and aborts the rank. [`fault::catch_comm`] at a
+//! step boundary downcasts the unwind back into a typed per-rank
+//! `Result<_, CommError>`. Obituaries are processed inside the receive
+//! loop (never stashed); because the mpsc channel is FIFO per sender, data
+//! a peer sent *before* dying is still drained first, and only then does
+//! the receiver see [`fault::CommError::PeerDead`]. A wall-clock watchdog
+//! (`CUBIC_HANG_TIMEOUT`, default 60 s) backstops genuine deadlocks: the
+//! timeout error lists the expected `(src, tag)` and every key parked in
+//! the stash, turning a frozen CI leg into a diagnosable failure.
+//!
+//! Recovery (driven by `engine::run_training_supervised`): on a detected
+//! rank failure every rank's outcome is collected at the step boundary;
+//! survivors either keep their in-memory state, restore from the last
+//! crash-consistent checkpoint, or — on `Hybrid(r, inner)` meshes with a
+//! healthy counterpart replica — **adopt** weights/optimizer state donated
+//! over the comm layer by the surviving replica (no disk round-trip).
+//! Faults never touch payload bytes, so a recovered run is bit-identical
+//! to the fault-free run; with no plan installed every path below is the
+//! exact legacy code path, clock included. ROADMAP item 4's real
+//! transport inherits this whole layer: the typed errors, the
+//! obituary/abort protocol, and the retry/backoff envelope are the wire
+//! contract, with only the drop *source* changing from a seeded hash to
+//! the network.
 
 use crate::tensor::Tensor;
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Barrier};
+use std::time::Duration;
 
+pub mod fault;
 pub mod pool;
 
+use fault::{CommAbort, CommError, FaultPlan, OBITUARY_TAG};
 use pool::{BufferPool, Takeout};
 
 /// Hierarchical α-β network + device compute model.
@@ -231,6 +281,15 @@ pub struct CommStats {
     /// steady state this stops growing after the first iteration — the
     /// zero-allocation pin of the hot path.
     pub pool_misses: u64,
+    /// Dropped delivery attempts this endpoint retried through (fault
+    /// injection). Exact and deterministic in the plan seed.
+    pub retries: u64,
+    /// Receives that gave up: retry budget exhausted or the wall-clock
+    /// hang watchdog fired.
+    pub timeouts: u64,
+    /// Virtual seconds of retry/backoff stall charged by fault injection
+    /// (a sub-account of `comm_time`).
+    pub fault_stall_time: f64,
 }
 
 impl CommStats {
@@ -244,6 +303,9 @@ impl CommStats {
         self.compute_time = self.compute_time.max(other.compute_time);
         self.pool_hits += other.pool_hits;
         self.pool_misses += other.pool_misses;
+        self.retries += other.retries;
+        self.timeouts += other.timeouts;
+        self.fault_stall_time = self.fault_stall_time.max(other.fault_stall_time);
     }
 }
 
@@ -258,6 +320,7 @@ pub struct World {
     net: Arc<NetModel>,
     barrier: Arc<Barrier>,
     world_id: u64,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl World {
@@ -275,7 +338,16 @@ impl World {
             net: Arc::new(net),
             barrier: Arc::new(Barrier::new(size)),
             world_id: WORLD_ID.fetch_add(1, Ordering::Relaxed),
+            faults: None,
         }
+    }
+
+    /// Install a fault plan on every endpoint this world hands out, and
+    /// silence the [`CommAbort`] control-flow unwinds it will cause. With
+    /// no plan installed the transport is the exact legacy code path.
+    pub fn install_faults(&mut self, plan: FaultPlan) {
+        fault::install_quiet_hook();
+        self.faults = Some(Arc::new(plan));
     }
 
     pub fn size(&self) -> usize {
@@ -304,6 +376,10 @@ impl World {
             deferred: VecDeque::new(),
             next_ticket: 0,
             in_defer: false,
+            faults: self.faults.clone(),
+            dead_peers: HashSet::new(),
+            hang_timeout: hang_timeout_env(),
+            obituary_sent: false,
         }
     }
 
@@ -360,6 +436,26 @@ pub struct Endpoint {
     /// Re-entrancy guard: a collective issued *inside* a deferred window
     /// runs inline on that window (no nested ticket).
     in_defer: bool,
+    /// Installed fault plan; `None` keeps every path on the legacy code.
+    faults: Option<Arc<FaultPlan>>,
+    /// Ranks whose obituary this endpoint has seen.
+    dead_peers: HashSet<usize>,
+    /// Wall-clock watchdog for a blocking receive (`CUBIC_HANG_TIMEOUT`).
+    hang_timeout: Duration,
+    /// This rank already broadcast its own obituary (idempotence guard).
+    obituary_sent: bool,
+}
+
+/// `CUBIC_HANG_TIMEOUT` (seconds, f64) — wall-clock watchdog on blocking
+/// receives; defaults to 60 s, generous enough that it only fires on a
+/// genuine deadlock or dead peer.
+fn hang_timeout_env() -> Duration {
+    std::env::var("CUBIC_HANG_TIMEOUT")
+        .ok()
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .filter(|s| *s > 0.0)
+        .map(Duration::from_secs_f64)
+        .unwrap_or(Duration::from_secs(60))
 }
 
 impl Endpoint {
@@ -434,17 +530,62 @@ impl Endpoint {
             clock: self.clock,
             payload: t,
         };
-        // A send can only fail if the peer's receiver was dropped, which
-        // means the worker panicked; propagate as a panic here too so the
-        // engine's join sees it.
-        self.tx[dst]
-            .send(msg)
-            .unwrap_or_else(|_| panic!("rank {} cannot reach rank {dst} (worker died)", self.rank));
+        // A send can only fail if the peer's receiver was dropped. Under a
+        // fault plan that is an expected rank death: drop the message
+        // silently — the obituary (or the next receive involving that
+        // peer) surfaces the failure where it can be handled. Without a
+        // plan it means a worker panicked; keep the loud legacy behavior.
+        if self.tx[dst].send(msg).is_err() && self.faults.is_none() {
+            panic!("rank {} cannot reach rank {dst} (worker died)", self.rank);
+        }
     }
 
     /// Blocking receive of the message `(src, tag)`; other arrivals are
-    /// stashed. Advances the virtual clock by the α-β hop cost.
+    /// stashed. Advances the virtual clock by the α-β hop cost. On a comm
+    /// failure (dead peer, exhausted retries, watchdog) this broadcasts
+    /// the rank's own obituary and unwinds with [`CommAbort`] — see
+    /// [`fault::catch_comm`] for the fallible boundary; use
+    /// [`Endpoint::try_recv`] for a local `Result`.
     pub fn recv(&mut self, src: usize, tag: u64) -> Tensor {
+        match self.try_recv(src, tag) {
+            Ok(t) => t,
+            Err(e) => self.abort(e),
+        }
+    }
+
+    /// Fallible receive: the primitive behind [`Endpoint::recv`]. Applies
+    /// the installed fault plan (drop/retry stalls, straggler delay,
+    /// obituary handling) and returns a typed [`CommError`] instead of
+    /// unwinding.
+    pub fn try_recv(&mut self, src: usize, tag: u64) -> Result<Tensor, CommError> {
+        // Injected drops: the delivery is dropped `drops` times before one
+        // attempt gets through; the receiver pays one backed-off retry
+        // interval of virtual time per drop (the sender sent exactly once
+        // — drops are a clock-and-counter fiction, never a data change).
+        let mut stall = 0.0;
+        if let Some(plan) = self.faults.clone() {
+            let drops = plan.drops_for(src, self.rank, tag);
+            if drops > 0 {
+                stall = plan.retry_stall(drops);
+                self.stats.retries += drops as u64;
+                self.stats.fault_stall_time += stall;
+                if drops >= plan.max_retries {
+                    // Gave up before any attempt landed: charge the full
+                    // backoff wait, then surface the failure.
+                    self.stats.timeouts += 1;
+                    self.stats.comm_time += stall;
+                    self.stats.exposed_comm_time += stall;
+                    self.clock += stall;
+                    return Err(CommError::Timeout {
+                        rank: self.rank,
+                        src,
+                        tag,
+                        attempts: drops,
+                        pending: self.pending_tags(),
+                    });
+                }
+            }
+        }
         let msg = loop {
             if let Some(q) = self.stash.get_mut(&(src, tag)) {
                 if let Some(m) = q.pop_front() {
@@ -454,24 +595,120 @@ impl Endpoint {
                     break m;
                 }
             }
-            let m = self
-                .rx
-                .recv()
-                .expect("transport closed while waiting for message");
-            if m.src == src && m.tag == tag {
-                break m;
+            // The mpsc channel is FIFO per sender, so anything `src` sent
+            // before dying has already been drained into the stash (or
+            // matched) by the time its obituary is seen — pre-death data
+            // is never lost to this check.
+            if self.dead_peers.contains(&src) {
+                return Err(CommError::PeerDead { rank: self.rank, peer: src, tag });
             }
-            self.stash.entry((m.src, m.tag)).or_default().push_back(m);
+            match self.rx.recv_timeout(self.hang_timeout) {
+                Ok(m) if m.tag == OBITUARY_TAG => {
+                    self.dead_peers.insert(m.src);
+                }
+                Ok(m) if m.src == src && m.tag == tag => break m,
+                Ok(m) => {
+                    self.stash.entry((m.src, m.tag)).or_default().push_back(m);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    // The silent-hang diagnostic: name what we were
+                    // waiting for and everything parked in the stash, so a
+                    // mismatched-tag deadlock reads off the error.
+                    self.stats.timeouts += 1;
+                    return Err(CommError::Timeout {
+                        rank: self.rank,
+                        src,
+                        tag,
+                        attempts: 0,
+                        pending: self.pending_tags(),
+                    });
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    if self.faults.is_some() {
+                        return Err(CommError::PeerDead { rank: self.rank, peer: src, tag });
+                    }
+                    panic!("transport closed while waiting for message");
+                }
+            }
         };
         let bytes = msg.payload.nominal_bytes();
-        let hop = self.net.hop_cost(src, self.rank, bytes);
-        let arrive = msg.clock + hop;
+        let mut hop = self.net.hop_cost(src, self.rank, bytes);
+        if let Some(plan) = &self.faults {
+            hop += plan.link_delay(src, self.rank);
+        }
+        let arrive = msg.clock + hop + stall;
         if arrive > self.clock {
             self.stats.comm_time += arrive - self.clock;
             self.stats.exposed_comm_time += arrive - self.clock;
             self.clock = arrive;
         }
-        msg.payload
+        Ok(msg.payload)
+    }
+
+    /// `(src, tag)` keys currently parked in the stash, sorted (timeout
+    /// diagnostics).
+    fn pending_tags(&self) -> Vec<(usize, u64)> {
+        let mut v: Vec<(usize, u64)> = self.stash.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Broadcast this rank's obituary, then unwind out of the current
+    /// collective with a [`CommAbort`] payload. The obituary-first order
+    /// is what makes failure *cascade* instead of deadlock: every peer
+    /// blocked on this rank (directly or transitively) sees the death and
+    /// aborts in turn, so all survivors reach the step boundary.
+    pub fn abort(&mut self, err: CommError) -> ! {
+        self.announce_death();
+        std::panic::panic_any(CommAbort(err))
+    }
+
+    /// Send the reserved obituary tag to every peer, bypassing stats and
+    /// fault injection. Idempotent; delivery failures (peer already gone)
+    /// are ignored.
+    pub fn announce_death(&mut self) {
+        if self.obituary_sent {
+            return;
+        }
+        self.obituary_sent = true;
+        for dst in 0..self.tx.len() {
+            if dst == self.rank {
+                continue;
+            }
+            let _ = self.tx[dst].send(Message {
+                src: self.rank,
+                tag: OBITUARY_TAG,
+                clock: self.clock,
+                payload: Tensor::phantom(&[0]),
+            });
+        }
+    }
+
+    /// Abort this rank if the installed fault plan schedules a crash at
+    /// `step`. Call at the top of each training step, *inside* the
+    /// step-boundary `catch_comm`/`catch_unwind`.
+    pub fn maybe_crash(&mut self, step: usize) {
+        if let Some(plan) = self.faults.clone() {
+            if plan.crashes_at(self.rank, step) {
+                self.abort(CommError::Crashed { rank: self.rank, step });
+            }
+        }
+    }
+
+    /// Has `peer`'s obituary been seen by this endpoint?
+    pub fn peer_is_dead(&self, peer: usize) -> bool {
+        self.dead_peers.contains(&peer)
+    }
+
+    /// The installed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.faults.as_deref()
+    }
+
+    /// Override the wall-clock hang watchdog (tests use a short timeout
+    /// instead of racing on the `CUBIC_HANG_TIMEOUT` env var).
+    pub fn set_hang_timeout(&mut self, d: Duration) {
+        self.hang_timeout = d;
     }
 
     /// Worst (slowest) link cost of one ring step over `group` for a
@@ -898,5 +1135,139 @@ mod tests {
         e1.join_all();
         assert!((e1.clock - 12e-6).abs() < 1e-14);
         h.join().unwrap();
+    }
+
+    // --- fault injection ----------------------------------------------
+
+    #[test]
+    fn dead_peer_drains_predeath_data_then_errors() {
+        let mut world = World::new(2, NetModel::zero());
+        world.install_faults(FaultPlan::default());
+        let mut e0 = world.endpoint(0);
+        let mut e1 = world.endpoint(1);
+        let h = thread::spawn(move || {
+            e0.send(1, 1, &Tensor::from_vec(&[1], vec![42.0]));
+            e0.announce_death();
+        });
+        h.join().unwrap();
+        // FIFO per sender: the pre-death payload arrives before the
+        // obituary and must still be delivered.
+        assert_eq!(e1.recv(0, 1).data(), &[42.0]);
+        let err = e1.try_recv(0, 2).unwrap_err();
+        assert_eq!(err, CommError::PeerDead { rank: 1, peer: 0, tag: 2 });
+        assert!(e1.peer_is_dead(0));
+        // recv() on the same condition aborts with a catchable payload.
+        let caught = fault::catch_comm(|| e1.recv(0, 3)).unwrap_err();
+        assert!(matches!(caught, CommError::PeerDead { peer: 0, .. }));
+    }
+
+    #[test]
+    fn exhausted_retries_surface_exact_counters() {
+        let mut world = World::new(2, NetModel::zero());
+        world.install_faults(FaultPlan {
+            drop_p: 1.0,
+            max_retries: 3,
+            retry_timeout: 1e-3,
+            ..Default::default()
+        });
+        let mut e0 = world.endpoint(0);
+        let mut e1 = world.endpoint(1);
+        e0.send(1, 5, &Tensor::from_vec(&[1], vec![1.0]));
+        let err = e1.try_recv(0, 5).unwrap_err();
+        match err {
+            CommError::Timeout { rank, src, tag, attempts, .. } => {
+                assert_eq!((rank, src, tag, attempts), (1, 0, 5, 3));
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        assert_eq!(e1.stats.retries, 3);
+        assert_eq!(e1.stats.timeouts, 1);
+        // Backoff: 1 + 2 + 4 intervals of 1 ms.
+        assert!((e1.stats.fault_stall_time - 7e-3).abs() < 1e-12);
+        assert!((e1.clock - 7e-3).abs() < 1e-12);
+        assert!((e1.stats.exposed_comm_time - 7e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_drops_stall_then_deliver() {
+        let plan = FaultPlan { seed: 11, drop_p: 0.6, max_retries: 8, ..Default::default() };
+        // Find a tag that drops at least once but still delivers.
+        let tag = (0..1000u64)
+            .find(|&t| {
+                let d = plan.drops_for(0, 1, t);
+                d > 0 && d < plan.max_retries
+            })
+            .expect("some tag must partially drop at p=0.6");
+        let drops = plan.drops_for(0, 1, tag);
+        let stall = plan.retry_stall(drops);
+        let mut world = World::new(2, NetModel::zero());
+        world.install_faults(plan);
+        let mut e0 = world.endpoint(0);
+        let mut e1 = world.endpoint(1);
+        e0.send(1, tag, &Tensor::from_vec(&[1], vec![3.0]));
+        assert_eq!(e1.recv(0, tag).data(), &[3.0]);
+        assert_eq!(e1.stats.retries, drops as u64);
+        assert_eq!(e1.stats.timeouts, 0);
+        assert!((e1.clock - stall).abs() < 1e-12, "retry stall must reach the clock");
+        assert!((e1.stats.fault_stall_time - stall).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hang_watchdog_names_expected_and_pending_tags() {
+        let mut world = World::new(2, NetModel::zero());
+        let mut e0 = world.endpoint(0);
+        let mut e1 = world.endpoint(1);
+        e1.set_hang_timeout(Duration::from_millis(50));
+        e0.send(1, 9, &Tensor::from_vec(&[1], vec![1.0]));
+        // Waiting on the wrong tag: the watchdog fires and the error
+        // carries both the expectation and the stash contents.
+        let err = e1.try_recv(0, 7).unwrap_err();
+        match err {
+            CommError::Timeout { rank, src, tag, attempts, pending } => {
+                assert_eq!((rank, src, tag, attempts), (1, 0, 7, 0));
+                assert_eq!(pending, vec![(0, 9)]);
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        assert_eq!(e1.stats.timeouts, 1);
+        // The stashed message is still deliverable afterwards.
+        assert_eq!(e1.recv(0, 9).data(), &[1.0]);
+    }
+
+    #[test]
+    fn straggler_delay_rides_the_virtual_clock() {
+        let mut world = World::new(2, NetModel::zero());
+        world.install_faults(FaultPlan {
+            delays: vec![fault::LinkDelay { src: Some(0), dst: Some(1), extra: 2e-3 }],
+            ..Default::default()
+        });
+        let mut e0 = world.endpoint(0);
+        let mut e1 = world.endpoint(1);
+        e0.send(1, 1, &Tensor::from_vec(&[1], vec![1.0]));
+        let _ = e1.recv(0, 1);
+        assert!((e1.clock - 2e-3).abs() < 1e-12);
+        // Reverse direction is unaffected: e0's clock only piggybacks off
+        // the sender's clock (2 ms), with no extra link delay added.
+        e1.send(0, 2, &Tensor::from_vec(&[1], vec![1.0]));
+        let _ = e0.recv(1, 2);
+        assert!((e0.clock - 2e-3).abs() < 1e-12);
+        assert_eq!(e0.stats.retries, 0);
+    }
+
+    #[test]
+    fn maybe_crash_fires_only_at_the_scheduled_step() {
+        let mut world = World::new(2, NetModel::zero());
+        world.install_faults(FaultPlan { crashes: vec![(0, 2)], ..Default::default() });
+        let mut e0 = world.endpoint(0);
+        let mut e1 = world.endpoint(1);
+        e0.maybe_crash(0);
+        e0.maybe_crash(1); // no-ops
+        let err = fault::catch_comm(|| e0.maybe_crash(2)).unwrap_err();
+        assert_eq!(err, CommError::Crashed { rank: 0, step: 2 });
+        // The obituary went out before the unwind.
+        assert!(e1.try_recv(0, 1).is_err());
+        assert!(e1.peer_is_dead(0));
+        // The unaffected rank never crashes.
+        e1.maybe_crash(2);
     }
 }

@@ -208,6 +208,10 @@ pub struct TrainConfig {
     pub weight_decay: f32,
     pub grad_clip: f32,
     pub log_every: usize,
+    /// Write a full checkpoint (shards + optimizer state) every this many
+    /// completed steps when training under supervision with a save dir.
+    /// 0 disables periodic checkpoints (final-state save only).
+    pub ckpt_every: usize,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -229,6 +233,130 @@ impl Default for TrainConfig {
             weight_decay: 0.0,
             grad_clip: 1.0,
             log_every: 10,
+            ckpt_every: 0,
+        }
+    }
+}
+
+/// Fault-injection configuration (see `comm::fault`). Inactive by default;
+/// activated by the `[faults]` TOML section, the `--fault-seed`/`--crash-at`
+/// CLI flags, or the `CUBIC_FAULTS=` env spec — the env override wins over
+/// both, mirroring `CUBIC_THREADS`/`CUBIC_OVERLAP` (the CLI applies it last
+/// via [`FaultConfig::apply_env`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Seed for the deterministic drop/straggler coins.
+    pub seed: u64,
+    /// Per-delivery-attempt message drop probability.
+    pub drop_p: f64,
+    /// Consecutive dropped attempts tolerated before a receive times out.
+    pub max_retries: u32,
+    /// Base virtual-seconds retry backoff (doubles per attempt).
+    pub timeout: f64,
+    /// Kill `(rank, step)`: the rank crashes entering that step (first
+    /// generation only — restarts don't re-crash).
+    pub crash: Option<(usize, usize)>,
+    /// Straggler link `(src, dst, extra_seconds)`; `None` endpoints are
+    /// wildcards (`*` in the env spec, `-1` in TOML).
+    pub delay: Option<(Option<usize>, Option<usize>, f64)>,
+    /// Restart generations the supervision loop may spend before giving up.
+    pub max_recoveries: usize,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            seed: 0,
+            drop_p: 0.0,
+            max_retries: 4,
+            timeout: 1e-3,
+            crash: None,
+            delay: None,
+            max_recoveries: 3,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Whether any fault is actually injected (the engine only installs a
+    /// plan — and pays the supervision machinery — when this is true).
+    pub fn is_active(&self) -> bool {
+        self.drop_p > 0.0 || self.crash.is_some() || self.delay.is_some()
+    }
+
+    /// Lower to the comm layer's [`crate::comm::fault::FaultPlan`].
+    pub fn to_plan(&self) -> crate::comm::fault::FaultPlan {
+        use crate::comm::fault::{FaultPlan, LinkDelay};
+        FaultPlan {
+            seed: self.seed,
+            drop_p: self.drop_p,
+            max_retries: self.max_retries,
+            retry_timeout: self.timeout,
+            crashes: self.crash.into_iter().collect(),
+            delays: self
+                .delay
+                .into_iter()
+                .map(|(src, dst, extra)| LinkDelay { src, dst, extra })
+                .collect(),
+            max_recoveries: self.max_recoveries,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Parse a `CUBIC_FAULTS` spec like
+    /// `seed=7,drop_p=0.01,crash=1@3,delay=0->1:0.002,timeout=0.001,max_retries=4,max_recoveries=2`
+    /// into this config (entries override fields in place).
+    pub fn parse_spec(&mut self, spec: &str) -> Result<(), String> {
+        let side = |t: &str| -> Result<Option<usize>, String> {
+            if t == "*" {
+                Ok(None)
+            } else {
+                t.parse().map(Some).map_err(|_| format!("bad rank {t:?} in CUBIC_FAULTS"))
+            }
+        };
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad CUBIC_FAULTS entry {part:?} (want key=value)"))?;
+            let bad = |what: &str| format!("bad CUBIC_FAULTS {what} {val:?}");
+            match key.trim() {
+                "seed" => self.seed = val.parse().map_err(|_| bad("seed"))?,
+                "drop_p" => self.drop_p = val.parse().map_err(|_| bad("drop_p"))?,
+                "max_retries" => self.max_retries = val.parse().map_err(|_| bad("max_retries"))?,
+                "timeout" => self.timeout = val.parse().map_err(|_| bad("timeout"))?,
+                "max_recoveries" => {
+                    self.max_recoveries = val.parse().map_err(|_| bad("max_recoveries"))?
+                }
+                "crash" => {
+                    let (r, s) = val.split_once('@').ok_or_else(|| bad("crash (want R@S)"))?;
+                    self.crash = Some((
+                        r.parse().map_err(|_| bad("crash rank"))?,
+                        s.parse().map_err(|_| bad("crash step"))?,
+                    ));
+                }
+                "delay" => {
+                    let (link, secs) =
+                        val.rsplit_once(':').ok_or_else(|| bad("delay (want SRC->DST:SECS)"))?;
+                    let (src, dst) =
+                        link.split_once("->").ok_or_else(|| bad("delay (want SRC->DST:SECS)"))?;
+                    self.delay = Some((
+                        side(src)?,
+                        side(dst)?,
+                        secs.parse().map_err(|_| bad("delay seconds"))?,
+                    ));
+                }
+                other => return Err(format!("unknown CUBIC_FAULTS key {other:?}")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply the `CUBIC_FAULTS=` env override, if set (env wins; called by
+    /// the CLI after flags and TOML are folded in).
+    pub fn apply_env(&mut self) -> Result<(), String> {
+        match std::env::var("CUBIC_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => self.parse_spec(&spec),
+            _ => Ok(()),
         }
     }
 }
@@ -252,6 +380,8 @@ pub struct CubicConfig {
     /// this, mirroring `CUBIC_THREADS`. Numerics are bit-identical either
     /// way — the knob only changes the timing model.
     pub overlap: bool,
+    /// Deterministic fault injection + recovery budget (inactive default).
+    pub faults: FaultConfig,
 }
 
 impl Default for CubicConfig {
@@ -264,6 +394,7 @@ impl Default for CubicConfig {
             artifacts_dir: String::new(),
             threads: 0,
             overlap: true,
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -334,6 +465,7 @@ impl CubicConfig {
         set_usize!("train", "steps", cfg.train.steps);
         set_usize!("train", "warmup", cfg.train.warmup);
         set_usize!("train", "log_every", cfg.train.log_every);
+        set_usize!("train", "ckpt_every", cfg.train.ckpt_every);
         if let Some(v) = doc.get_float("train", "lr") {
             cfg.train.lr = v as f32;
         }
@@ -359,6 +491,48 @@ impl CubicConfig {
         set_usize!("runtime", "threads", cfg.threads);
         if let Some(v) = doc.get_bool("runtime", "overlap") {
             cfg.overlap = v;
+        }
+
+        if let Some(v) = doc.get_int("faults", "seed") {
+            cfg.faults.seed = v as u64;
+        }
+        if let Some(v) = doc.get_float("faults", "drop_p") {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(ConfigError(format!("drop_p {v} not in [0, 1]")));
+            }
+            cfg.faults.drop_p = v;
+        }
+        if let Some(v) = doc.get_int("faults", "max_retries") {
+            cfg.faults.max_retries = u32::try_from(v)
+                .map_err(|_| ConfigError(format!("max_retries {v} < 0")))?;
+        }
+        if let Some(v) = doc.get_float("faults", "timeout") {
+            cfg.faults.timeout = v;
+        }
+        set_usize!("faults", "max_recoveries", cfg.faults.max_recoveries);
+        match (doc.get_int("faults", "crash_rank"), doc.get_int("faults", "crash_step")) {
+            (Some(r), Some(s)) => {
+                let r = usize::try_from(r)
+                    .map_err(|_| ConfigError(format!("crash_rank {r} < 0")))?;
+                let s = usize::try_from(s)
+                    .map_err(|_| ConfigError(format!("crash_step {s} < 0")))?;
+                cfg.faults.crash = Some((r, s));
+            }
+            (None, None) => {}
+            _ => {
+                return Err(ConfigError(
+                    "crash_rank and crash_step must be given together".into(),
+                ));
+            }
+        }
+        if let Some(extra) = doc.get_float("faults", "delay_s") {
+            // -1 (or absent) endpoint = wildcard, matching any rank.
+            let side = |v: Option<i64>| v.and_then(|v| usize::try_from(v).ok());
+            cfg.faults.delay = Some((
+                side(doc.get_int("faults", "delay_src")),
+                side(doc.get_int("faults", "delay_dst")),
+                extra,
+            ));
         }
         cfg.model
             .validate(cfg.parallelism, cfg.edge)
@@ -495,6 +669,75 @@ overlap = false
         assert!((cfg.train.lr - 0.001).abs() < 1e-9);
         assert_eq!(cfg.train.seed, 7);
         assert_eq!(cfg.artifacts_dir, "artifacts");
+        assert_eq!(cfg.faults, FaultConfig::default(), "no [faults] section → inactive");
+        assert!(!cfg.faults.is_active());
+    }
+
+    #[test]
+    fn faults_toml_round_trip() {
+        let text = r#"
+[train]
+ckpt_every = 2
+
+[faults]
+seed = 7
+drop_p = 0.01
+max_retries = 5
+timeout = 0.002
+crash_rank = 1
+crash_step = 3
+delay_src = 0
+delay_dst = -1
+delay_s = 0.004
+max_recoveries = 2
+"#;
+        let cfg = CubicConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.train.ckpt_every, 2);
+        let f = &cfg.faults;
+        assert!(f.is_active());
+        assert_eq!(f.seed, 7);
+        assert!((f.drop_p - 0.01).abs() < 1e-12);
+        assert_eq!(f.max_retries, 5);
+        assert!((f.timeout - 0.002).abs() < 1e-12);
+        assert_eq!(f.crash, Some((1, 3)));
+        assert_eq!(f.delay, Some((Some(0), None, 0.004)));
+        assert_eq!(f.max_recoveries, 2);
+        // Lowered plan carries everything through.
+        let plan = f.to_plan();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.generation, 0);
+        assert_eq!(plan.crashes, vec![(1, 3)]);
+        assert_eq!(plan.delays.len(), 1);
+        assert_eq!(plan.delays[0].src, Some(0));
+        assert_eq!(plan.delays[0].dst, None);
+        assert_eq!(plan.max_recoveries, 2);
+        // Half-specified crash coordinates are a config error.
+        let bad = "[faults]\ncrash_rank = 1";
+        assert!(CubicConfig::from_toml(bad).is_err());
+        assert!(CubicConfig::from_toml("[faults]\ndrop_p = 1.5").is_err());
+    }
+
+    #[test]
+    fn cubic_faults_spec_parses_and_overrides() {
+        let mut f = FaultConfig::default();
+        f.parse_spec("seed=7,drop_p=0.01,crash=1@3,delay=0->1:0.002,max_recoveries=2")
+            .unwrap();
+        assert_eq!(f.seed, 7);
+        assert!((f.drop_p - 0.01).abs() < 1e-12);
+        assert_eq!(f.crash, Some((1, 3)));
+        assert_eq!(f.delay, Some((Some(0), Some(1), 0.002)));
+        assert_eq!(f.max_recoveries, 2);
+        // Wildcards and in-place overrides.
+        f.parse_spec("delay=*->2:0.5,timeout=0.01,max_retries=9").unwrap();
+        assert_eq!(f.delay, Some((None, Some(2), 0.5)));
+        assert!((f.timeout - 0.01).abs() < 1e-12);
+        assert_eq!(f.max_retries, 9);
+        assert_eq!(f.crash, Some((1, 3)), "untouched keys survive");
+        // Malformed entries are loud errors, not silent defaults.
+        assert!(f.parse_spec("crash=5").is_err());
+        assert!(f.parse_spec("delay=0:0.1").is_err());
+        assert!(f.parse_spec("nope=1").is_err());
+        assert!(f.parse_spec("drop_p").is_err());
     }
 
     #[test]

@@ -12,15 +12,17 @@
 //!   compute charges, real collective schedules) on the virtual-clock
 //!   cluster. Benches regenerating Tables 1 & 2 call this per row.
 
-use crate::comm::NetModel;
+use crate::comm::fault::CommError;
+use crate::comm::{CommStats, NetModel};
 use crate::config::CubicConfig;
 use crate::metrics::{RunMetrics, Stopwatch};
 use crate::model::{core_bwd, core_fwd, BlockTensors, ParEnv};
-use crate::spmd::run_spmd_with_stats;
+use crate::spmd::{run_spmd_owned, run_spmd_with_stats};
 use crate::tensor::Tensor;
 use crate::topology::Parallelism;
-use crate::train::TrainerRank;
+use crate::train::{RankOutcome, TrainerRank};
 use anyhow::{bail, Result};
+use std::collections::HashMap;
 
 /// Aggregated result of a training run.
 #[derive(Clone, Debug)]
@@ -29,6 +31,8 @@ pub struct TrainReport {
     /// Virtual seconds per step (max over ranks, averaged over steps).
     pub avg_step_virtual: f64,
     pub metrics: RunMetrics,
+    /// Restart generations the supervision loop needed (0 = clean run).
+    pub recoveries: usize,
 }
 
 /// Train the configured model on a simulated cluster with real numerics.
@@ -60,54 +64,249 @@ pub fn run_training(cfg: &CubicConfig, net: NetModel) -> Result<TrainReport> {
         losses: report0.losses.clone(),
         avg_step_virtual: metrics.virtual_time / steps,
         metrics,
+        recoveries: 0,
     })
 }
 
-/// Like [`run_training`] but each rank writes a rank-sharded checkpoint of
-/// its final model shards (plus the replicated boundary layers on rank 0)
-/// to `dir` — the Megatron-style persistence layout.
-pub fn run_training_with_checkpoint(
+/// Per-rank seed for one supervision generation: how this rank obtains the
+/// trainer state it resumes from.
+enum RankSeed {
+    /// Fresh trainer at step 0 (first generation, or no checkpoint survived).
+    Fresh,
+    /// Continue with the in-memory state a surviving rank carried over.
+    Keep(Box<TrainerRank>, Vec<f32>),
+    /// Reload blocks + optimizer state from the checkpoint directory.
+    Restore,
+    /// Fresh trainer that adopts the full state a healthy replica donates
+    /// over comm before training resumes (Hybrid recovery, no disk).
+    Adopt { from: usize },
+    /// Survivor that first streams its state to each restarted rank in
+    /// `to`, then continues with it.
+    Donate(Box<TrainerRank>, Vec<f32>, Vec<usize>),
+}
+
+/// Train under fault supervision: run generations of [`TrainerRank::run_supervised`]
+/// until every rank completes, recovering from typed comm failures between
+/// generations. Recovery prefers, in order:
+///
+/// 1. **Keep** — no rank crashed (drops/timeouts only): every rank still
+///    holds valid state at the common failed step; resume in place.
+/// 2. **Replica donation** — `Hybrid` meshes with a healthy counterpart
+///    (same inner rank, another replica): the crashed rank restarts fresh
+///    and receives weights + optimizer state over comm.
+/// 3. **Checkpoint restore** — rewind *all* ranks to the last completed
+///    checkpoint boundary in `dir`.
+/// 4. **Fresh** — no checkpoint yet: restart from step 0.
+///
+/// Replay is deterministic, so a recovered run is bit-identical in its loss
+/// curve to the fault-free run (crashes only fire in generation 0; the
+/// generation salt reshuffles drop coins so a restart cannot re-fail
+/// identically). Virtual time accumulates across generations via
+/// [`RunMetrics::chain`] — the recovery overhead is visible, not hidden.
+pub fn run_training_supervised(
     cfg: &CubicConfig,
     net: NetModel,
-    dir: &std::path::Path,
+    dir: Option<&std::path::Path>,
 ) -> Result<TrainReport> {
     cfg.model
         .validate(cfg.parallelism, cfg.edge)
         .map_err(|e| anyhow::anyhow!("invalid config: {e}"))?;
     let world = cfg.parallelism.world_size(cfg.edge);
-    let cfg2 = cfg.clone();
-    let dir2 = dir.to_path_buf();
+    let steps = cfg.train.steps;
+    let ckpt_every = cfg.train.ckpt_every;
+    let base_plan = cfg.faults.is_active().then(|| cfg.faults.to_plan());
+    let max_recoveries = base_plan.as_ref().map_or(0, |p| p.max_recoveries);
+    let dir_buf = dir.map(std::path::Path::to_path_buf);
     let sw = Stopwatch::start();
-    let results = run_spmd_with_stats(world, net, move |rank, ep| {
-        let mut trainer = TrainerRank::new(&cfg2, rank);
-        let report = trainer.run(ep);
-        let extra: Vec<(String, &crate::tensor::Tensor)> = if rank == 0 {
-            vec![
-                ("emb.table".into(), &trainer.emb.table),
-                ("emb.pos".into(), &trainer.emb.pos),
-                ("head.ln_g".into(), &trainer.head.ln_g),
-                ("head.ln_b".into(), &trainer.head.ln_b),
-                ("head.w".into(), &trainer.head.w),
-                ("head.b".into(), &trainer.head.b),
-            ]
+
+    let mut seeds: Vec<RankSeed> = (0..world).map(|_| RankSeed::Fresh).collect();
+    let mut start = 0usize;
+    let mut generation = 0u64;
+    let mut recoveries = 0usize;
+    let mut acc: Option<RunMetrics> = None;
+    loop {
+        let cfg2 = cfg.clone();
+        let dir2 = dir_buf.clone();
+        let gen_start = start;
+        let plan = base_plan.clone().map(|p| p.with_generation(generation));
+        let results = run_spmd_owned(
+            world,
+            net.clone(),
+            plan,
+            std::mem::take(&mut seeds),
+            move |rank, seed, ep: &mut crate::comm::Endpoint| {
+                let (trainer, losses) = match seed {
+                    RankSeed::Fresh => (Box::new(TrainerRank::new(&cfg2, rank)), Vec::new()),
+                    RankSeed::Keep(t, l) => (t, l),
+                    RankSeed::Restore => {
+                        let d = dir2.as_ref().expect("restore planned without a checkpoint dir");
+                        let (t, done, l) = TrainerRank::load_checkpoint(&cfg2, rank, d)
+                            .expect("checkpoint restore failed");
+                        assert_eq!(done, gen_start, "checkpoint not at the planned restart step");
+                        (t, l)
+                    }
+                    RankSeed::Adopt { from } => {
+                        let mut t = Box::new(TrainerRank::new(&cfg2, rank));
+                        let l = t.receive_donation(ep, from, gen_start);
+                        (t, l)
+                    }
+                    RankSeed::Donate(t, l, targets) => {
+                        for to in targets {
+                            t.send_donation(ep, to, &l);
+                        }
+                        (t, l)
+                    }
+                };
+                let out = trainer.run_supervised(
+                    ep,
+                    gen_start,
+                    steps,
+                    ckpt_every,
+                    dir2.as_deref(),
+                    losses,
+                    Vec::new(),
+                );
+                (out, ep.clock, ep.stats.clone())
+            },
+        );
+        let per_rank: Vec<(f64, CommStats)> =
+            results.iter().map(|(_, c, s)| (*c, s.clone())).collect();
+        let gen_metrics = RunMetrics::from_ranks(&per_rank, 0.0);
+        match &mut acc {
+            None => acc = Some(gen_metrics),
+            Some(m) => m.chain(&gen_metrics),
+        }
+        let outcomes: Vec<RankOutcome> = results.into_iter().map(|(o, _, _)| o).collect();
+
+        if outcomes.iter().all(|o| o.completed) {
+            let losses0 = outcomes[0].losses.clone();
+            for (r, o) in outcomes.iter().enumerate() {
+                if o.losses != losses0 {
+                    bail!("rank {r} diverged from rank 0 loss curve");
+                }
+            }
+            let mut metrics = acc.expect("at least one generation ran");
+            metrics.host_seconds = sw.seconds();
+            let n = losses0.len().max(1) as f64;
+            return Ok(TrainReport {
+                losses: losses0,
+                avg_step_virtual: metrics.virtual_time / n,
+                metrics,
+                recoveries,
+            });
+        }
+
+        // A generation failed: decide how the next one resumes.
+        if recoveries >= max_recoveries {
+            let errs: Vec<String> = outcomes
+                .iter()
+                .enumerate()
+                .filter_map(|(r, o)| o.error.as_ref().map(|e| format!("rank {r}: {e}")))
+                .collect();
+            bail!(
+                "training failed after {recoveries} recoveries (budget {max_recoveries}): {}",
+                errs.join("; ")
+            );
+        }
+        recoveries += 1;
+        generation += 1;
+        let failed_step = outcomes.iter().map(|o| o.losses.len()).min().unwrap_or(0);
+        let aligned = outcomes.iter().all(|o| o.losses.len() == failed_step);
+        let crashed: Vec<usize> = outcomes
+            .iter()
+            .enumerate()
+            .filter(|(_, o)| matches!(o.error, Some(CommError::Crashed { .. })))
+            .map(|(r, _)| r)
+            .collect();
+        let survivors_hold_state = aligned
+            && outcomes
+                .iter()
+                .enumerate()
+                .all(|(r, o)| crashed.contains(&r) || o.trainer.is_some());
+
+        if survivors_hold_state && crashed.is_empty() {
+            // Drops/timeouts only: every rank resumes in place.
+            seeds = outcomes
+                .into_iter()
+                .map(|o| RankSeed::Keep(o.trainer.expect("survivor holds state"), o.losses))
+                .collect();
+            start = failed_step;
+            continue;
+        }
+
+        if survivors_hold_state {
+            // Crashes with survivors: try replica donation on Hybrid meshes.
+            if let Parallelism::Hybrid { replicas, .. } = cfg.parallelism {
+                let iw = world / replicas;
+                let mut donors: HashMap<usize, usize> = HashMap::new(); // crashed -> donor
+                let all_covered = crashed.iter().all(|&cr| {
+                    let j = cr % iw;
+                    match (0..replicas).map(|c| c * iw + j).find(|d| !crashed.contains(d)) {
+                        Some(d) => {
+                            donors.insert(cr, d);
+                            true
+                        }
+                        None => false,
+                    }
+                });
+                if all_covered {
+                    let mut targets: HashMap<usize, Vec<usize>> = HashMap::new();
+                    for (&cr, &d) in &donors {
+                        targets.entry(d).or_default().push(cr);
+                    }
+                    // Deterministic donation order regardless of map iteration.
+                    for ts in targets.values_mut() {
+                        ts.sort_unstable();
+                    }
+                    seeds = outcomes
+                        .into_iter()
+                        .enumerate()
+                        .map(|(r, o)| {
+                            if let Some(&from) = donors.get(&r) {
+                                RankSeed::Adopt { from }
+                            } else {
+                                let t = o.trainer.expect("survivor holds state");
+                                match targets.remove(&r) {
+                                    Some(ts) => RankSeed::Donate(t, o.losses, ts),
+                                    None => RankSeed::Keep(t, o.losses),
+                                }
+                            }
+                        })
+                        .collect();
+                    start = failed_step;
+                    continue;
+                }
+            }
+        }
+
+        // Disk recovery: rewind everyone to the last checkpoint boundary.
+        let ckpt_step = if dir_buf.is_some() && ckpt_every > 0 {
+            (failed_step / ckpt_every) * ckpt_every
         } else {
-            Vec::new()
+            0
         };
-        crate::train::checkpoint::save_rank(&dir2, rank, &trainer.blocks, &extra)
-            .expect("checkpoint save failed");
-        report
-    });
-    let host = sw.seconds();
-    let per_rank: Vec<(f64, crate::comm::CommStats)> =
-        results.iter().map(|(_, c, s)| (*c, s.clone())).collect();
-    let metrics = RunMetrics::from_ranks(&per_rank, host);
-    let report0 = results[0].0.clone();
-    let steps = report0.losses.len().max(1) as f64;
-    Ok(TrainReport {
-        losses: report0.losses,
-        avg_step_virtual: metrics.virtual_time / steps,
-        metrics,
-    })
+        if ckpt_step > 0 {
+            seeds = (0..world).map(|_| RankSeed::Restore).collect();
+            start = ckpt_step;
+        } else {
+            seeds = (0..world).map(|_| RankSeed::Fresh).collect();
+            start = 0;
+        }
+    }
+}
+
+/// Like [`run_training`] but under the supervision loop with `dir` as the
+/// checkpoint directory: every rank writes a rank-sharded checkpoint of its
+/// model shards + optimizer state (plus the replicated boundary layers on
+/// rank 0) — the Megatron-style persistence layout — at every
+/// `train.ckpt_every` boundary and at the end, and recovers from injected
+/// faults when a [`crate::comm::fault::FaultPlan`] is configured.
+pub fn run_training_with_checkpoint(
+    cfg: &CubicConfig,
+    net: NetModel,
+    dir: &std::path::Path,
+) -> Result<TrainReport> {
+    run_training_supervised(cfg, net, Some(dir))
 }
 
 /// Result of a phantom-mode timing run of the core (the paper's measured

@@ -33,6 +33,12 @@ COMMANDS
                     --replicas <n>           hybrid data-parallel replicas (default 2)
                     --model tiny|charlm|large100m (default tiny)
                     --steps <n> --lr <f> --seed <n>
+                    --ckpt-every <n>         checkpoint every n steps (0 = final only)
+                    --fault-seed <n>         seed the deterministic fault injector
+                    --drop-p <f>             per-attempt message drop probability
+                    --crash-at R@S           crash rank R entering step S (recovers
+                                             from checkpoint or a hybrid replica)
+                                             (CUBIC_FAULTS env spec overrides all)
   bench-table1    regenerate paper Table 1 (weak scaling)
   bench-table2    regenerate paper Table 2 (strong scaling + speedups)
   plan            print the per-rank shard plan for a config, or — with
@@ -86,6 +92,23 @@ fn build_config(args: &Args) -> Result<CubicConfig, String> {
         cubic::tensor::kernel::threads::request_threads(cfg.threads);
     }
     cfg.overlap = args.get_usize("overlap", cfg.overlap as usize)? != 0;
+    cfg.train.ckpt_every = args.get_usize("ckpt-every", cfg.train.ckpt_every)?;
+    cfg.faults.seed = args.get_usize("fault-seed", cfg.faults.seed as usize)? as u64;
+    cfg.faults.drop_p = args.get_f64("drop-p", cfg.faults.drop_p)?;
+    if !(0.0..=1.0).contains(&cfg.faults.drop_p) {
+        return Err(format!("--drop-p {} not in [0, 1]", cfg.faults.drop_p));
+    }
+    if let Some(spec) = args.get("crash-at") {
+        let (r, s) = spec
+            .split_once('@')
+            .ok_or_else(|| format!("--crash-at {spec:?}: want R@S"))?;
+        cfg.faults.crash = Some((
+            r.parse().map_err(|e| format!("--crash-at rank {r:?}: {e}"))?,
+            s.parse().map_err(|e| format!("--crash-at step {s:?}: {e}"))?,
+        ));
+    }
+    // Env spec wins over flags and file, mirroring CUBIC_THREADS/OVERLAP.
+    cfg.faults.apply_env()?;
     cfg.model
         .validate(cfg.parallelism, cfg.edge)
         .map_err(|e| format!("invalid config: {e}"))?;
@@ -101,9 +124,20 @@ fn cmd_train(args: &Args) -> Result<(), String> {
     let report = if let Some(dir) = save_dir {
         cubic::engine::run_training_with_checkpoint(&cfg, net, std::path::Path::new(&dir))
             .map_err(|e| e.to_string())?
+    } else if cfg.faults.is_active() {
+        cubic::engine::run_training_supervised(&cfg, net, None).map_err(|e| e.to_string())?
     } else {
         run_training(&cfg, net).map_err(|e| e.to_string())?
     };
+    if report.recoveries > 0 {
+        println!(
+            "recovered from {} failure{} ({} retried sends, {} timeouts)",
+            report.recoveries,
+            if report.recoveries == 1 { "" } else { "s" },
+            report.metrics.retries,
+            report.metrics.timeouts,
+        );
+    }
     for (s, loss) in report.losses.iter().enumerate() {
         if s % cfg.train.log_every == 0 || s + 1 == report.losses.len() {
             println!("step {s:4}  loss {loss:.4}");

@@ -108,6 +108,11 @@ pub struct RunMetrics {
     pub inter_node_bytes: u64,
     /// Total messages.
     pub messages: u64,
+    /// Dropped delivery attempts retried through (fault injection),
+    /// summed across ranks.
+    pub retries: u64,
+    /// Receives that timed out (retry budget or hang watchdog), summed.
+    pub timeouts: u64,
     /// Wall-clock seconds of the host simulation (not the model!).
     pub host_seconds: f64,
 }
@@ -125,8 +130,26 @@ impl RunMetrics {
             m.total_bytes += s.bytes_sent;
             m.inter_node_bytes += s.inter_node_bytes;
             m.messages += s.messages_sent;
+            m.retries += s.retries;
+            m.timeouts += s.timeouts;
         }
         m
+    }
+
+    /// Append a later run segment that executed *after* this one (the
+    /// supervision loop's restart generations): times add sequentially,
+    /// traffic and fault counters accumulate.
+    pub fn chain(&mut self, next: &RunMetrics) {
+        self.virtual_time += next.virtual_time;
+        self.compute_time += next.compute_time;
+        self.comm_time += next.comm_time;
+        self.exposed_comm_time += next.exposed_comm_time;
+        self.overlapped_comm_time += next.overlapped_comm_time;
+        self.total_bytes += next.total_bytes;
+        self.inter_node_bytes += next.inter_node_bytes;
+        self.messages += next.messages;
+        self.retries += next.retries;
+        self.timeouts += next.timeouts;
     }
 }
 

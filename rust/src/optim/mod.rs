@@ -142,6 +142,39 @@ impl Optimizer {
             }
         }
     }
+
+    /// The optimizer's state tensors in a stable order (Sgd: velocities;
+    /// Adam: all first moments, then all second moments). Checkpointing
+    /// and replica donation serialize exactly this sequence.
+    pub fn state_tensors(&self) -> Vec<&Tensor> {
+        match self {
+            Optimizer::Sgd { velocity, .. } => velocity.iter().collect(),
+            Optimizer::Adam { m, v, .. } => m.iter().chain(v.iter()).collect(),
+        }
+    }
+
+    /// Mutable view of [`Optimizer::state_tensors`], same order.
+    pub fn state_tensors_mut(&mut self) -> Vec<&mut Tensor> {
+        match self {
+            Optimizer::Sgd { velocity, .. } => velocity.iter_mut().collect(),
+            Optimizer::Adam { m, v, .. } => m.iter_mut().chain(v.iter_mut()).collect(),
+        }
+    }
+
+    /// Adam's bias-correction timestep (0 for Sgd, which has none).
+    pub fn timestep(&self) -> u64 {
+        match self {
+            Optimizer::Sgd { .. } => 0,
+            Optimizer::Adam { t, .. } => *t,
+        }
+    }
+
+    /// Restore the bias-correction timestep (no-op for Sgd).
+    pub fn set_timestep(&mut self, new_t: u64) {
+        if let Optimizer::Adam { t, .. } = self {
+            *t = new_t;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -198,6 +231,33 @@ mod tests {
             o2.step(&mut [(&mut p2, &g)], 1e-3);
         }
         assert_eq!(p1, p2);
+    }
+
+    #[test]
+    fn state_round_trip_resumes_bitwise() {
+        // Copying state tensors + timestep into a fresh optimizer must make
+        // it bit-identical to one that never stopped — the checkpoint /
+        // replica-donation contract.
+        let cfg = TrainConfig::default();
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let g = Tensor::randn(&[8], 1.0, &mut rng);
+        let mut p_ref = Tensor::ones(&[8]);
+        let mut opt_ref = Optimizer::new(&cfg, &[vec![8]]);
+        for _ in 0..5 {
+            opt_ref.step(&mut [(&mut p_ref, &g)], 1e-3);
+        }
+        let mut p_res = p_ref.clone();
+        let mut opt_res = Optimizer::new(&cfg, &[vec![8]]);
+        for (dst, src) in opt_res.state_tensors_mut().into_iter().zip(opt_ref.state_tensors()) {
+            *dst = src.clone();
+        }
+        opt_res.set_timestep(opt_ref.timestep());
+        assert_eq!(opt_res.timestep(), 5);
+        for _ in 0..5 {
+            opt_ref.step(&mut [(&mut p_ref, &g)], 1e-3);
+            opt_res.step(&mut [(&mut p_res, &g)], 1e-3);
+        }
+        assert_eq!(p_ref, p_res);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! connected [`Endpoint`]. This is the primitive beneath [`crate::engine`]
 //! and the scaffolding used by every distributed test in the repo.
 
+use crate::comm::fault::{CommAbort, FaultPlan};
 use crate::comm::{Endpoint, NetModel, World};
 use std::sync::Arc;
 use std::thread;
@@ -15,10 +16,28 @@ pub fn run_spmd<T: Send + 'static>(
     net: NetModel,
     f: impl Fn(usize, &mut Endpoint) -> T + Send + Sync + 'static,
 ) -> Vec<T> {
-    let world = World::new(n, net);
+    run_spmd_owned(n, net, None, vec![(); n], move |rank, (), ep| f(rank, ep))
+}
+
+/// The general launcher beneath [`run_spmd`]: each rank receives an owned
+/// per-rank seed value (how the supervision loop threads trainer state
+/// across restart generations without `Clone`), and an optional
+/// [`FaultPlan`] is installed on the world before any endpoint is taken.
+pub fn run_spmd_owned<S: Send + 'static, T: Send + 'static>(
+    n: usize,
+    net: NetModel,
+    faults: Option<FaultPlan>,
+    states: Vec<S>,
+    f: impl Fn(usize, S, &mut Endpoint) -> T + Send + Sync + 'static,
+) -> Vec<T> {
+    assert_eq!(states.len(), n, "need exactly one seed state per rank");
+    let mut world = World::new(n, net);
+    if let Some(plan) = faults {
+        world.install_faults(plan);
+    }
     let f = Arc::new(f);
     let mut handles = Vec::with_capacity(n);
-    for (rank, mut ep) in world.endpoints().into_iter().enumerate() {
+    for ((rank, mut ep), state) in world.endpoints().into_iter().enumerate().zip(states) {
         let f = f.clone();
         let builder = thread::Builder::new()
             .name(format!("cubic-rank-{rank}"))
@@ -27,7 +46,7 @@ pub fn run_spmd<T: Send + 'static>(
             .stack_size(16 << 20);
         handles.push(
             builder
-                .spawn(move || f(rank, &mut ep))
+                .spawn(move || f(rank, state, &mut ep))
                 .expect("failed to spawn worker thread"),
         );
     }
@@ -42,7 +61,9 @@ pub fn run_spmd<T: Send + 'static>(
                     .downcast_ref::<String>()
                     .map(|s| s.as_str())
                     .or_else(|| e.downcast_ref::<&str>().copied())
-                    .unwrap_or("<non-string panic>");
+                    .map(str::to_owned)
+                    .or_else(|| e.downcast_ref::<CommAbort>().map(|a| a.0.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_owned());
                 panic!("rank {rank} panicked: {msg}");
             }
         })
@@ -80,6 +101,36 @@ mod tests {
                 panic!("boom");
             }
         });
+    }
+
+    #[test]
+    fn owned_states_are_threaded_per_rank() {
+        let states: Vec<Vec<usize>> = (0..3).map(|r| vec![r * 10]).collect();
+        let out = run_spmd_owned(3, NetModel::zero(), None, states, |rank, mut s, _| {
+            s.push(rank);
+            s
+        });
+        assert_eq!(out, vec![vec![0, 0], vec![10, 1], vec![20, 2]]);
+    }
+
+    #[test]
+    fn comm_abort_panics_carry_the_typed_error() {
+        use crate::comm::fault::{CommError, FaultPlan};
+        let caught = std::panic::catch_unwind(|| {
+            run_spmd_owned(
+                2,
+                NetModel::zero(),
+                Some(FaultPlan { crashes: vec![(1, 0)], ..Default::default() }),
+                vec![(), ()],
+                |_, (), ep| {
+                    ep.maybe_crash(0);
+                },
+            )
+        })
+        .unwrap_err();
+        let msg = caught.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("rank 1 panicked"), "got: {msg}");
+        assert!(msg.contains(&CommError::Crashed { rank: 1, step: 0 }.to_string()), "got: {msg}");
     }
 
     #[test]

@@ -1,11 +1,19 @@
 //! Rank-sharded checkpoints (the Megatron-style layout: each rank persists
 //! its own shards; restore requires the same topology).
 //!
-//! Own binary format (no serde offline):
-//! `magic "CUBIC1\n" · u32 tensor count · per tensor { u32 name_len ·
-//! name utf8 · u32 ndims · u64 dims… · f32 data… }`, all little-endian.
-//! Absent optional tensors (non-owner vector shards) are simply not
-//! written; load distinguishes presence by name.
+//! Own binary format (no serde offline), version 2:
+//! `magic "CUBIC1\n" · u32 version · u32 tensor count · per tensor
+//! { u32 name_len · name utf8 · u32 ndims · u64 dims… · f32 data… ·
+//! u64 fnv1a checksum }`, all little-endian. The checksum covers the
+//! tensor's name, dims and data bytes, so a single flipped bit anywhere in
+//! a record is detected. Absent optional tensors (non-owner vector
+//! shards) are simply not written; load distinguishes presence by name.
+//!
+//! Writes are **crash-consistent**: the file is assembled under a sibling
+//! `.tmp` name and published with an atomic `rename`, so a crash mid-save
+//! leaves the previous checkpoint intact and a reader can never observe a
+//! torn file. Truncation and corruption surface as typed `Err`s from
+//! [`read_tensors`]/[`load_rank`], never as garbage tensors.
 
 use crate::model::BlockTensors;
 use crate::tensor::Tensor;
@@ -15,79 +23,131 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 7] = b"CUBIC1\n";
+/// v2 added the version field itself, per-tensor checksums, and the
+/// temp-file-then-rename write protocol.
+const VERSION: u32 = 2;
 
-/// Serialize a named tensor set.
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// FNV-1a folded over `bytes`, continuing from `h`.
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Serialize a named tensor set (temp file + atomic rename).
 pub fn write_tensors(path: &Path, tensors: &[(String, &Tensor)]) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
-    f.write_all(MAGIC)?;
-    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
-    for (name, t) in tensors {
-        if t.is_phantom() {
-            bail!("cannot checkpoint phantom tensor {name:?}");
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in tensors {
+            if t.is_phantom() {
+                bail!("cannot checkpoint phantom tensor {name:?}");
+            }
+            let nb = name.as_bytes();
+            let mut sum = fnv1a(FNV_OFFSET, nb);
+            f.write_all(&(nb.len() as u32).to_le_bytes())?;
+            f.write_all(nb)?;
+            f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                let db = (d as u64).to_le_bytes();
+                sum = fnv1a(sum, &db);
+                f.write_all(&db)?;
+            }
+            for &v in t.data() {
+                let vb = v.to_le_bytes();
+                sum = fnv1a(sum, &vb);
+                f.write_all(&vb)?;
+            }
+            f.write_all(&sum.to_le_bytes())?;
         }
-        let nb = name.as_bytes();
-        f.write_all(&(nb.len() as u32).to_le_bytes())?;
-        f.write_all(nb)?;
-        f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
-        for &d in t.shape() {
-            f.write_all(&(d as u64).to_le_bytes())?;
-        }
-        for &v in t.data() {
-            f.write_all(&v.to_le_bytes())?;
-        }
+        f.flush()?;
     }
-    f.flush()?;
-    Ok(())
+    // Same-directory rename: atomic publish. A crash before this line
+    // leaves at most a stale .tmp; the previous checkpoint survives.
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing checkpoint {}", path.display()))
 }
 
-/// Deserialize a named tensor set.
+/// Deserialize a named tensor set, verifying version and per-tensor
+/// checksums. Truncated or bit-flipped files are rejected with a typed
+/// error naming the offending tensor.
 pub fn read_tensors(path: &Path) -> Result<HashMap<String, Tensor>> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
     );
     let mut magic = [0u8; 7];
-    f.read_exact(&mut magic)?;
+    f.read_exact(&mut magic)
+        .with_context(|| format!("{}: truncated checkpoint (no magic)", path.display()))?;
     if &magic != MAGIC {
         bail!("{}: not a cubic checkpoint", path.display());
     }
     let mut u32b = [0u8; 4];
     let mut u64b = [0u8; 8];
-    f.read_exact(&mut u32b)?;
+    f.read_exact(&mut u32b)
+        .with_context(|| format!("{}: truncated checkpoint (no version)", path.display()))?;
+    let version = u32::from_le_bytes(u32b);
+    if version != VERSION {
+        bail!("{}: unsupported checkpoint version {version} (want {VERSION})", path.display());
+    }
+    f.read_exact(&mut u32b)
+        .with_context(|| format!("{}: truncated checkpoint (no tensor count)", path.display()))?;
     let count = u32::from_le_bytes(u32b) as usize;
     if count > 1_000_000 {
         bail!("corrupt checkpoint: implausible tensor count {count}");
     }
     let mut out = HashMap::with_capacity(count);
-    for _ in 0..count {
-        f.read_exact(&mut u32b)?;
+    for i in 0..count {
+        let trunc = |what: &str| format!("{}: truncated in tensor {i} ({what})", path.display());
+        f.read_exact(&mut u32b).with_context(|| trunc("name length"))?;
         let name_len = u32::from_le_bytes(u32b) as usize;
         if name_len > 4096 {
             bail!("corrupt checkpoint: name length {name_len}");
         }
         let mut nb = vec![0u8; name_len];
-        f.read_exact(&mut nb)?;
+        f.read_exact(&mut nb).with_context(|| trunc("name"))?;
+        let mut sum = fnv1a(FNV_OFFSET, &nb);
         let name = String::from_utf8(nb).map_err(|_| anyhow!("non-utf8 tensor name"))?;
-        f.read_exact(&mut u32b)?;
+        f.read_exact(&mut u32b).with_context(|| trunc("ndims"))?;
         let ndims = u32::from_le_bytes(u32b) as usize;
         if ndims > 8 {
             bail!("corrupt checkpoint: ndims {ndims}");
         }
         let mut shape = Vec::with_capacity(ndims);
         for _ in 0..ndims {
-            f.read_exact(&mut u64b)?;
+            f.read_exact(&mut u64b).with_context(|| trunc("dims"))?;
+            sum = fnv1a(sum, &u64b);
             shape.push(u64::from_le_bytes(u64b) as usize);
         }
         let numel: usize = shape.iter().product();
         let mut data = vec![0f32; numel];
         let mut buf = [0u8; 4];
         for v in data.iter_mut() {
-            f.read_exact(&mut buf)?;
+            f.read_exact(&mut buf)
+                .with_context(|| format!("{}: truncated in tensor {name:?} (data)", path.display()))?;
+            sum = fnv1a(sum, &buf);
             *v = f32::from_le_bytes(buf);
+        }
+        f.read_exact(&mut u64b)
+            .with_context(|| format!("{}: truncated in tensor {name:?} (checksum)", path.display()))?;
+        let stored = u64::from_le_bytes(u64b);
+        if stored != sum {
+            bail!(
+                "{}: checksum mismatch in tensor {name:?} (stored {stored:#018x}, computed \
+                 {sum:#018x}) — corrupt checkpoint",
+                path.display()
+            );
         }
         if out.insert(name.clone(), Tensor::from_vec(&shape, data)).is_some() {
             bail!("duplicate tensor {name:?} in checkpoint");
@@ -222,8 +282,55 @@ mod tests {
         let path = dir.join("bad.bin");
         std::fs::write(&path, b"NOTACKPT").unwrap();
         assert!(read_tensors(&path).is_err());
+        // Valid magic, implausible version word: rejected as unsupported.
         std::fs::write(&path, b"CUBIC1\n\xff\xff\xff\xff").unwrap();
         assert!(read_tensors(&path).is_err());
+    }
+
+    #[test]
+    fn truncated_files_are_rejected_with_context() {
+        let dir = tmpdir("trunc");
+        let path = dir.join("t.bin");
+        let a = Tensor::full(&[4, 4], 1.5);
+        write_tensors(&path, &[("a".into(), &a)]).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Cut mid-data and mid-header: every prefix must fail loudly, not
+        // yield a silently short tensor.
+        for cut in [full.len() - 9, full.len() / 2, 9] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let err = format!("{:#}", read_tensors(&path).unwrap_err());
+            assert!(err.contains("truncated"), "cut at {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn bit_flips_fail_the_checksum() {
+        let dir = tmpdir("flip");
+        let path = dir.join("f.bin");
+        let a = Tensor::full(&[8], 2.0);
+        write_tensors(&path, &[("a".into(), &a)]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one bit in the middle of the f32 payload region.
+        let mid = bytes.len() - 8 - 16; // inside data, before the checksum
+        bytes[mid] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", read_tensors(&path).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn writes_publish_atomically_without_leftover_tmp() {
+        let dir = tmpdir("atomic");
+        let path = dir.join("x.bin");
+        let a = Tensor::full(&[2], 1.0);
+        write_tensors(&path, &[("a".into(), &a)]).unwrap();
+        assert!(path.exists());
+        assert!(!path.with_extension("tmp").exists(), "temp file must be renamed away");
+        // Overwrite in place: the old file stays readable throughout and
+        // the new content wins.
+        let b = Tensor::full(&[2], 9.0);
+        write_tensors(&path, &[("a".into(), &b)]).unwrap();
+        assert_eq!(read_tensors(&path).unwrap()["a"], b);
     }
 
     #[test]

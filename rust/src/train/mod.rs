@@ -10,6 +10,7 @@
 
 pub mod checkpoint;
 
+use crate::comm::fault::{catch_comm, CommError};
 use crate::comm::Endpoint;
 use crate::config::{CubicConfig, ModelConfig};
 use crate::model::{core_bwd, core_fwd, BlockTensors, ParEnv};
@@ -17,6 +18,8 @@ use crate::ops;
 use crate::optim::{lr_at, Optimizer};
 use crate::rng::{Xoshiro256, Zipf};
 use crate::tensor::Tensor;
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
 
 /// Synthetic char-level corpus with learnable structure: a fixed random
 /// first-order Markov chain over the vocabulary (Zipfian stationary flavor).
@@ -201,6 +204,28 @@ pub struct RankReport {
     pub step_virtual_times: Vec<f64>,
 }
 
+/// One rank's result from a supervised generation (see
+/// [`TrainerRank::run_supervised`]). `losses`/`step_virtual_times` are
+/// *absolute* — the prefix carried into the generation plus everything
+/// completed in it — so the supervisor never has to stitch segments.
+pub struct RankOutcome {
+    /// The trainer state, valid at the end of the last fully completed
+    /// step. `None` when this rank crashed (a dead process loses its
+    /// memory — recovery must come from a checkpoint or a donor replica).
+    pub trainer: Option<Box<TrainerRank>>,
+    /// Reached the final step without a comm failure.
+    pub completed: bool,
+    pub losses: Vec<f32>,
+    pub step_virtual_times: Vec<f64>,
+    /// The typed failure, when `completed` is false.
+    pub error: Option<CommError>,
+}
+
+/// Base tag for the replica-donation tensor stream. Bit 63 keeps it
+/// outside the collective tag space; donation runs at a quiescent point
+/// (no collectives in flight), so sequential tags from here are unique.
+const DONATE_TAG: u64 = 0xD0A7_0000_0000_0000;
+
 impl TrainerRank {
     pub fn new(cfg: &CubicConfig, rank: usize) -> TrainerRank {
         let env = ParEnv::new(cfg.parallelism, cfg.edge, rank);
@@ -309,6 +334,293 @@ impl TrainerRank {
             vts.push(ep.clock - t0);
         }
         RankReport { losses, step_virtual_times: vts }
+    }
+
+    /// Run steps `[start, end)` under fault supervision: every step is a
+    /// `catch_comm` boundary, so an injected crash, a dead peer, or an
+    /// exhausted retry surfaces as a clean [`RankOutcome`] instead of a
+    /// hang or a dead thread. Checkpoints are written every `ckpt_every`
+    /// completed steps (and at the end) when `dir` is given.
+    ///
+    /// Why the trainer stays valid on failure: every step's communication
+    /// — the world-connected activation gathers and grad syncs — precedes
+    /// the optimizer update (`step` joins all tickets first), so an abort
+    /// anywhere in step `S` leaves the weights and optimizer exactly at
+    /// the state after step `S − 1`, on every surviving rank.
+    pub fn run_supervised(
+        mut self: Box<Self>,
+        ep: &mut Endpoint,
+        start: usize,
+        end: usize,
+        ckpt_every: usize,
+        dir: Option<&Path>,
+        mut losses: Vec<f32>,
+        mut step_virtual_times: Vec<f64>,
+    ) -> RankOutcome {
+        assert_eq!(losses.len(), start, "carried losses must cover exactly [0, start)");
+        for s in start..end {
+            let t0 = ep.clock;
+            let res = catch_comm(|| {
+                ep.maybe_crash(s);
+                self.step(ep, s)
+            });
+            match res {
+                Ok(loss) => {
+                    losses.push(loss);
+                    step_virtual_times.push(ep.clock - t0);
+                }
+                Err(e) => {
+                    // A crashed rank simulates a dead process: its memory
+                    // is gone. Survivors keep their (still valid) state.
+                    let trainer = match e {
+                        CommError::Crashed { .. } => None,
+                        _ => Some(self),
+                    };
+                    return RankOutcome {
+                        trainer,
+                        completed: false,
+                        losses,
+                        step_virtual_times,
+                        error: Some(e),
+                    };
+                }
+            }
+            if let Some(dir) = dir {
+                if ckpt_every > 0 && (s + 1) % ckpt_every == 0 && s + 1 < end {
+                    self.save_checkpoint(dir, s + 1, &losses)
+                        .expect("periodic checkpoint save failed");
+                }
+            }
+        }
+        if let Some(dir) = dir {
+            self.save_checkpoint(dir, end, &losses).expect("final checkpoint save failed");
+        }
+        RankOutcome {
+            trainer: Some(self),
+            completed: true,
+            losses,
+            step_virtual_times,
+            error: None,
+        }
+    }
+
+    /// Persist this rank's full training state (model shards, optimizer
+    /// state, progress) as one crash-consistent file. Replicated state
+    /// (embedding, head, their optimizer, the loss history) is stored only
+    /// in rank 0's file; every rank reads it back from there.
+    pub fn save_checkpoint(&self, dir: &Path, steps_done: usize, losses: &[f32]) -> Result<()> {
+        let core_state = self.opt_core.state_tensors();
+        let core_t = Tensor::from_vec(&[1], vec![self.opt_core.timestep() as f32]);
+        let emb_t = Tensor::from_vec(&[1], vec![self.opt_emb.timestep() as f32]);
+        let steps_t = Tensor::from_vec(&[1], vec![steps_done as f32]);
+        let losses_t = Tensor::from_vec(&[losses.len().max(1)], {
+            let mut v = losses.to_vec();
+            if v.is_empty() {
+                v.push(0.0);
+            }
+            v
+        });
+        let mut extra: Vec<(String, &Tensor)> = Vec::new();
+        for (i, t) in core_state.iter().enumerate() {
+            extra.push((format!("opt.core.{i}"), t));
+        }
+        extra.push(("opt.core.t".into(), &core_t));
+        extra.push(("meta.steps_done".into(), &steps_t));
+        let emb_state = self.opt_emb.state_tensors();
+        if self.rank == 0 {
+            extra.push(("emb.table".into(), &self.emb.table));
+            extra.push(("emb.pos".into(), &self.emb.pos));
+            extra.push(("head.ln_g".into(), &self.head.ln_g));
+            extra.push(("head.ln_b".into(), &self.head.ln_b));
+            extra.push(("head.w".into(), &self.head.w));
+            extra.push(("head.b".into(), &self.head.b));
+            for (i, t) in emb_state.iter().enumerate() {
+                extra.push((format!("opt.emb.{i}"), t));
+            }
+            extra.push(("opt.emb.t".into(), &emb_t));
+            if !losses.is_empty() {
+                extra.push(("meta.losses".into(), &losses_t));
+            }
+        }
+        checkpoint::save_rank(dir, self.rank, &self.blocks, &extra)
+    }
+
+    /// Rebuild a rank's trainer from the last checkpoint. Returns the
+    /// trainer plus `(steps_done, losses)` so the supervisor knows where
+    /// to resume. Fails (typed) on missing files, truncation, corruption,
+    /// or shards disagreeing about the step.
+    pub fn load_checkpoint(
+        cfg: &CubicConfig,
+        rank: usize,
+        dir: &Path,
+    ) -> Result<(Box<TrainerRank>, usize, Vec<f32>)> {
+        let scalar = |map: &std::collections::HashMap<String, Tensor>, key: &str| -> Result<f32> {
+            map.get(key)
+                .ok_or_else(|| anyhow!("checkpoint missing {key}"))
+                .map(|t| t.data()[0])
+        };
+        let assign = |map: &std::collections::HashMap<String, Tensor>,
+                      key: &str,
+                      slot: &mut Tensor|
+         -> Result<()> {
+            let t = map.get(key).ok_or_else(|| anyhow!("checkpoint missing {key}"))?;
+            if t.shape() != slot.shape() {
+                bail!("{key}: shape {:?} != expected {:?}", t.shape(), slot.shape());
+            }
+            *slot = t.clone();
+            Ok(())
+        };
+        let mut tr = Box::new(TrainerRank::new(cfg, rank));
+        checkpoint::load_rank(dir, rank, &mut tr.blocks)?;
+        let own = checkpoint::read_tensors(&dir.join(format!("rank-{rank}.bin")))?;
+        for (i, slot) in tr.opt_core.state_tensors_mut().into_iter().enumerate() {
+            assign(&own, &format!("opt.core.{i}"), slot)?;
+        }
+        tr.opt_core.set_timestep(scalar(&own, "opt.core.t")? as u64);
+        let steps_done = scalar(&own, "meta.steps_done")? as usize;
+        let zero = checkpoint::read_tensors(&dir.join("rank-0.bin"))?;
+        let steps0 = scalar(&zero, "meta.steps_done")? as usize;
+        if steps0 != steps_done {
+            bail!("checkpoint shards disagree on progress: rank {rank} at {steps_done}, rank 0 at {steps0}");
+        }
+        assign(&zero, "emb.table", &mut tr.emb.table)?;
+        assign(&zero, "emb.pos", &mut tr.emb.pos)?;
+        assign(&zero, "head.ln_g", &mut tr.head.ln_g)?;
+        assign(&zero, "head.ln_b", &mut tr.head.ln_b)?;
+        assign(&zero, "head.w", &mut tr.head.w)?;
+        assign(&zero, "head.b", &mut tr.head.b)?;
+        for (i, slot) in tr.opt_emb.state_tensors_mut().into_iter().enumerate() {
+            assign(&zero, &format!("opt.emb.{i}"), slot)?;
+        }
+        tr.opt_emb.set_timestep(scalar(&zero, "opt.emb.t")? as u64);
+        let losses: Vec<f32> = zero
+            .get("meta.losses")
+            .map(|t| t.data().to_vec())
+            .unwrap_or_default();
+        if steps_done > 0 && losses.len() != steps_done {
+            bail!(
+                "checkpoint loss history has {} entries for {steps_done} steps",
+                losses.len()
+            );
+        }
+        Ok((tr, steps_done, losses))
+    }
+
+    // --- replica donation (Hybrid recovery without disk) ---------------
+
+    /// The donation stream, in a fixed order both sides enumerate
+    /// identically: block shards (present fields only), core optimizer
+    /// state, boundary layers, boundary optimizer state. Donor and
+    /// adoptee occupy the same inner rank of their replicas, so their
+    /// shard topology — including which optional fields are present — is
+    /// identical by construction.
+    fn donation_refs(&self) -> Vec<&Tensor> {
+        let mut out: Vec<&Tensor> = Vec::new();
+        for b in &self.blocks {
+            for t in [&b.ln1_g, &b.ln1_b].into_iter().flatten() {
+                out.push(t);
+            }
+            out.push(&b.w_qkv);
+            out.extend(&b.b_qkv);
+            out.push(&b.w_proj);
+            out.extend(&b.b_proj);
+            for t in [&b.ln2_g, &b.ln2_b].into_iter().flatten() {
+                out.push(t);
+            }
+            out.push(&b.w_fc1);
+            out.extend(&b.b_fc1);
+            out.push(&b.w_fc2);
+            out.extend(&b.b_fc2);
+        }
+        out.extend(self.opt_core.state_tensors());
+        out.push(&self.emb.table);
+        out.push(&self.emb.pos);
+        out.push(&self.head.ln_g);
+        out.push(&self.head.ln_b);
+        out.push(&self.head.w);
+        out.push(&self.head.b);
+        out.extend(self.opt_emb.state_tensors());
+        out
+    }
+
+    /// Mutable mirror of [`TrainerRank::donation_refs`], same order.
+    fn donation_slots(&mut self) -> Vec<&mut Tensor> {
+        let mut out: Vec<&mut Tensor> = Vec::new();
+        for b in &mut self.blocks {
+            for t in [&mut b.ln1_g, &mut b.ln1_b].into_iter().flatten() {
+                out.push(t);
+            }
+            out.push(&mut b.w_qkv);
+            out.extend(&mut b.b_qkv);
+            out.push(&mut b.w_proj);
+            out.extend(&mut b.b_proj);
+            for t in [&mut b.ln2_g, &mut b.ln2_b].into_iter().flatten() {
+                out.push(t);
+            }
+            out.push(&mut b.w_fc1);
+            out.extend(&mut b.b_fc1);
+            out.push(&mut b.w_fc2);
+            out.extend(&mut b.b_fc2);
+        }
+        out.extend(self.opt_core.state_tensors_mut());
+        out.push(&mut self.emb.table);
+        out.push(&mut self.emb.pos);
+        out.push(&mut self.head.ln_g);
+        out.push(&mut self.head.ln_b);
+        out.push(&mut self.head.w);
+        out.push(&mut self.head.b);
+        out.extend(self.opt_emb.state_tensors_mut());
+        out
+    }
+
+    /// Donate this rank's full state to `to` over the comm layer (the
+    /// Hybrid replica-redundancy path: a surviving replica re-seeds a
+    /// restarted rank without touching disk). Clock cost rides the normal
+    /// send/recv ledger, so recovery shows up in virtual time.
+    pub fn send_donation(&self, ep: &mut Endpoint, to: usize, losses: &[f32]) {
+        let mut tag = DONATE_TAG;
+        for t in self.donation_refs() {
+            ep.send(to, tag, t);
+            tag += 1;
+        }
+        let meta = Tensor::from_vec(
+            &[2],
+            vec![self.opt_core.timestep() as f32, self.opt_emb.timestep() as f32],
+        );
+        ep.send(to, tag, &meta);
+        tag += 1;
+        let lt = Tensor::from_vec(&[losses.len().max(1)], {
+            let mut v = losses.to_vec();
+            if v.is_empty() {
+                v.push(f32::NAN);
+            }
+            v
+        });
+        ep.send(to, tag, &lt);
+    }
+
+    /// Adopt a donated state from `from` (see
+    /// [`TrainerRank::send_donation`]); returns the donor's loss history.
+    pub fn receive_donation(&mut self, ep: &mut Endpoint, from: usize, steps_done: usize) -> Vec<f32> {
+        let mut tag = DONATE_TAG;
+        for slot in self.donation_slots() {
+            let t = ep.recv(from, tag);
+            assert_eq!(t.shape(), slot.shape(), "donated tensor shape mismatch at tag {tag:#x}");
+            *slot = t;
+            tag += 1;
+        }
+        let meta = ep.recv(from, tag);
+        self.opt_core.set_timestep(meta.data()[0] as u64);
+        self.opt_emb.set_timestep(meta.data()[1] as u64);
+        tag += 1;
+        let lt = ep.recv(from, tag);
+        let losses: Vec<f32> = if steps_done == 0 {
+            Vec::new()
+        } else {
+            lt.data().to_vec()
+        };
+        assert_eq!(losses.len(), steps_done, "donated loss history length mismatch");
+        losses
     }
 }
 

@@ -1,0 +1,179 @@
+//! Fault-injection + recovery matrix: seeded drops, straggler links and
+//! rank crashes across every mesh kind, under both overlap settings.
+//!
+//! The headline guarantee pinned here: a run that crashes at step S and
+//! recovers — from a checkpoint, a hybrid replica donation, or a fresh
+//! restart — produces a loss curve **bit-identical** to the fault-free
+//! run, and with faults disabled the supervised engine is bit-identical
+//! (virtual clock included) to the plain engine.
+
+use cubic::comm::NetModel;
+use cubic::config::{CubicConfig, ModelConfig, TrainConfig};
+use cubic::engine::{run_training, run_training_supervised, run_training_with_checkpoint};
+use cubic::topology::{HybridInner, Parallelism};
+use std::path::{Path, PathBuf};
+
+/// Every mesh kind at its smallest non-trivial extent (tiny model fits all).
+fn all_kinds() -> Vec<(Parallelism, usize)> {
+    vec![
+        (Parallelism::Seq, 1),
+        (Parallelism::OneD, 4),
+        (Parallelism::TwoD, 2),
+        (Parallelism::ThreeD, 2),
+        (Parallelism::TwoFiveD { depth: 2 }, 2),
+        (Parallelism::Hybrid { replicas: 2, inner: HybridInner::TwoD }, 2),
+    ]
+}
+
+fn base_cfg(par: Parallelism, edge: usize) -> CubicConfig {
+    CubicConfig {
+        model: ModelConfig { layers: 1, ..ModelConfig::tiny() },
+        train: TrainConfig { steps: 6, lr: 3e-3, warmup: 2, ckpt_every: 2, ..Default::default() },
+        parallelism: par,
+        edge,
+        ..CubicConfig::default()
+    }
+}
+
+fn net(overlap: bool) -> NetModel {
+    let mut n = NetModel::longhorn_v100();
+    n.set_overlap(overlap);
+    n
+}
+
+fn tmp_dir(label: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cubic-faultrec-{}-{label}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn read_rank_files(dir: &Path, world: usize) -> Vec<Vec<u8>> {
+    (0..world)
+        .map(|r| {
+            let p = dir.join(format!("rank-{r}.bin"));
+            std::fs::read(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+        })
+        .collect()
+}
+
+/// The matrix: every kind × both overlap settings. Three runs each —
+/// plain engine (reference), supervised fault-free (must be bit-identical,
+/// clock included), supervised with a rank crashed at step 3 (must recover
+/// and land on the same losses and the same final checkpoint bytes).
+#[test]
+fn crash_recovery_is_bit_identical_across_all_kinds() {
+    for (par, edge) in all_kinds() {
+        let world = par.world_size(edge);
+        for overlap in [false, true] {
+            let label = format!("{}-ov{}", par.name(), overlap as u8);
+            let cfg = base_cfg(par, edge);
+            let clean = run_training(&cfg, net(overlap)).unwrap();
+            assert_eq!(clean.losses.len(), 6);
+
+            // Fault-free supervised path: same numerics, same clock.
+            let dir_clean = tmp_dir(&format!("clean-{label}"));
+            let sup = run_training_with_checkpoint(&cfg, net(overlap), &dir_clean).unwrap();
+            assert_eq!(sup.losses, clean.losses, "{label}: supervised fault-free diverged");
+            assert_eq!(
+                sup.metrics.virtual_time, clean.metrics.virtual_time,
+                "{label}: supervision must not perturb the virtual clock"
+            );
+            assert_eq!(sup.recoveries, 0, "{label}");
+
+            // Crash a rank entering step 3 (checkpoint boundary is step 2).
+            let mut faulty_cfg = cfg.clone();
+            faulty_cfg.faults.seed = 9;
+            faulty_cfg.faults.crash = Some((world - 1, 3));
+            assert!(faulty_cfg.faults.is_active());
+            let dir_faulty = tmp_dir(&format!("crash-{label}"));
+            let rec = run_training_with_checkpoint(&faulty_cfg, net(overlap), &dir_faulty)
+                .unwrap_or_else(|e| panic!("{label}: recovery failed: {e}"));
+            assert_eq!(rec.losses, clean.losses, "{label}: recovered run diverged");
+            assert_eq!(rec.recoveries, 1, "{label}");
+            assert!(
+                rec.metrics.virtual_time > clean.metrics.virtual_time,
+                "{label}: recovery replay must cost virtual time"
+            );
+
+            // Crash-consistent persistence: the final checkpoints of the
+            // recovered and the fault-free runs are byte-identical.
+            assert_eq!(
+                read_rank_files(&dir_faulty, world),
+                read_rank_files(&dir_clean, world),
+                "{label}: final checkpoint bytes differ after recovery"
+            );
+            let _ = std::fs::remove_dir_all(&dir_clean);
+            let _ = std::fs::remove_dir_all(&dir_faulty);
+        }
+    }
+}
+
+/// Hybrid meshes recover a crashed rank from the surviving replica over
+/// comm — no checkpoint directory involved at all.
+#[test]
+fn hybrid_replica_donation_recovers_without_checkpoints() {
+    let par = Parallelism::Hybrid { replicas: 2, inner: HybridInner::TwoD };
+    let cfg = base_cfg(par, 2);
+    let clean = run_training(&cfg, net(true)).unwrap();
+    let mut faulty = cfg.clone();
+    faulty.faults.seed = 5;
+    // Rank 1 (replica 0, inner rank 1) dies; rank 5 is its counterpart.
+    faulty.faults.crash = Some((1, 3));
+    let rec = run_training_supervised(&faulty, net(true), None).unwrap();
+    assert_eq!(rec.losses, clean.losses, "donated state must replay bit-identically");
+    assert_eq!(rec.recoveries, 1);
+}
+
+/// Without a checkpoint dir or a replica, a crash falls back to a fresh
+/// restart from step 0 — and still converges to the identical curve.
+#[test]
+fn crash_without_checkpoint_restarts_fresh() {
+    let cfg = base_cfg(Parallelism::TwoD, 2);
+    let clean = run_training(&cfg, net(true)).unwrap();
+    let mut faulty = cfg.clone();
+    faulty.faults.crash = Some((1, 1));
+    let rec = run_training_supervised(&faulty, net(true), None).unwrap();
+    assert_eq!(rec.losses, clean.losses);
+    assert_eq!(rec.recoveries, 1);
+    // Replayed from scratch: about double the clean virtual time.
+    assert!(rec.metrics.virtual_time > 1.5 * clean.metrics.virtual_time);
+}
+
+/// Message drops and straggler links perturb only the virtual clock —
+/// numerics stay bit-identical, and the injected retries are visible in
+/// the run metrics deterministically.
+#[test]
+fn drops_and_delays_leave_numerics_bit_identical() {
+    let cfg = base_cfg(Parallelism::ThreeD, 2);
+    let clean = run_training(&cfg, net(true)).unwrap();
+    let mut faulty = cfg.clone();
+    faulty.faults.seed = 7;
+    faulty.faults.drop_p = 0.05;
+    faulty.faults.delay = Some((Some(0), None, 2e-3)); // rank 0 straggles
+    let a = run_training_supervised(&faulty, net(true), None).unwrap();
+    assert_eq!(a.losses, clean.losses, "drops/delays must never change numerics");
+    assert!(a.metrics.retries > 0, "drop_p 0.05 over a full run must drop something");
+    assert!(
+        a.metrics.virtual_time > clean.metrics.virtual_time,
+        "retry stalls and the straggler link must show up on the clock"
+    );
+    // Seeded injection is fully deterministic: same plan, same counters.
+    let b = run_training_supervised(&faulty, net(true), None).unwrap();
+    assert_eq!(a.metrics.retries, b.metrics.retries);
+    assert_eq!(a.metrics.timeouts, b.metrics.timeouts);
+    assert_eq!(a.metrics.virtual_time, b.metrics.virtual_time);
+    assert_eq!(a.recoveries, b.recoveries);
+}
+
+/// The recovery budget is a clean typed error, not a hang: a crash with
+/// `max_recoveries = 0` surfaces the per-rank failure in the message.
+#[test]
+fn recovery_budget_exhaustion_is_a_clean_error() {
+    let mut cfg = base_cfg(Parallelism::TwoD, 2);
+    cfg.faults.crash = Some((0, 1));
+    cfg.faults.max_recoveries = 0;
+    let err = run_training_supervised(&cfg, net(true), None).unwrap_err().to_string();
+    assert!(err.contains("training failed after 0 recoveries"), "{err}");
+    assert!(err.contains("rank 0"), "{err}");
+    assert!(err.contains("crash"), "{err}");
+}
