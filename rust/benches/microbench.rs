@@ -402,6 +402,71 @@ fn main() {
         write_json5();
         write_json6();
         write_json7();
+        write_json8();
+    }
+}
+
+/// PR-8 headline numbers: pipeline parallelism across the 5-D product
+/// space. Every pipeline point at 64 ranks (paper-shape model, one layer
+/// per stage) is timed in phantom mode against the same inner mesh running
+/// the whole stack unpipelined, alongside the costmodel's closed-form
+/// bubble fraction `(s-1)/(m+s-1)` — the engine-vs-recurrence bitwise pin
+/// lives in the costmodel tests; this persists the ranking the scheduled
+/// bench job uploads.
+fn write_json8() {
+    use cubic::config::ModelConfig;
+    use cubic::costmodel::pipeline_bubble_fraction;
+    use cubic::engine::time_core_step;
+    use cubic::topology::{HybridInner, Parallelism, PipelineInner};
+    let net = cubic::comm::NetModel::longhorn_v100();
+    let cases: [(&str, usize, usize, PipelineInner, usize); 5] = [
+        ("pp2x1d", 2, 8, PipelineInner::OneD, 32),
+        ("pp4x2d", 4, 8, PipelineInner::TwoD, 4),
+        ("pp8x3d", 8, 8, PipelineInner::ThreeD, 2),
+        ("pp2x2.5d", 2, 8, PipelineInner::TwoFiveD { depth: 2 }, 4),
+        ("pp2xdpx2d", 2, 8, PipelineInner::Hybrid { replicas: 2, inner: HybridInner::TwoD }, 4),
+    ];
+    let mut entries = Vec::new();
+    for (name, stages, m, inner, edge) in cases {
+        let par = Parallelism::Pipeline { stages, micro_batches: m, inner };
+        let world = par.world_size(edge);
+        // One layer per stage; the unpipelined baseline is the same inner
+        // mesh holding the whole stack (world/s ranks, s× the weights).
+        let cfg = ModelConfig { layers: stages, ..ModelConfig::paper(4096, 64) };
+        let t = time_core_step(&cfg, par, edge, net.clone())
+            .unwrap_or_else(|e| panic!("BENCH_PR8: {name} pipelined timing failed: {e}"));
+        let flat = time_core_step(&cfg, inner.as_parallelism(), edge, net.clone())
+            .unwrap_or_else(|e| panic!("BENCH_PR8: {name} unpipelined timing failed: {e}"));
+        let step = t.forward_s + t.backward_s;
+        let flat_step = flat.forward_s + flat.backward_s;
+        entries.push(format!(
+            "    \"{name}\": {{ \"mesh\": \"{}\", \"world\": {world}, \
+             \"stages\": {stages}, \"micro_batches\": {m}, \
+             \"bubble_fraction\": {:.4}, \"step_virtual_s\": {step:.6}, \
+             \"inner_unpipelined_step_s\": {flat_step:.6}, \
+             \"comm_bytes_per_rank\": {} }}",
+            par.mesh_desc(edge),
+            pipeline_bubble_fraction(stages as u64, m as u64),
+            t.metrics.total_bytes / world.max(1) as u64,
+        ));
+    }
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR8.json");
+    let json = format!(
+        "{{\n  \"pr\": 8,\n  \"generated_by\": \"cargo bench --bench microbench\",\n  \
+         \"host\": \"virtual-clock phantom mode; deterministic for a given NetModel\",\n  \
+         \"model\": \"hidden 4096, batch 64, seq 512, 1 layer per stage (ModelConfig::paper)\",\n  \
+         \"pipeline_phantom_step\": {{\n{}\n  }},\n  \
+         \"note\": \"pipeline points at 64 ranks, 8 micro-batches, GPipe flush schedule. \
+         bubble_fraction is the closed form (s-1)/(m+s-1); the costmodel tests pin the full \
+         schedule recurrence bitwise against this engine clock under a dyadic network. \
+         inner_unpipelined_step_s is the same inner mesh running all layers on world/s ranks \
+         (s x the per-rank weight memory) — the memory-vs-bubble tradeoff the plan table \
+         ranks. Numerics are bit-identical pipelined or not (tests/model_parity.rs).\"\n}}\n",
+        entries.join(",\n"),
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }
 

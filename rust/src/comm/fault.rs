@@ -56,6 +56,10 @@ pub enum CommError {
     },
     /// This rank was scheduled to crash at `step` by the fault plan.
     Crashed { rank: usize, step: usize },
+    /// A checkpoint save failed with an IO error. The trainer state is
+    /// still valid (the temp-file-then-rename protocol published nothing),
+    /// so the supervisor can retry or re-point the directory.
+    Checkpoint { rank: usize, msg: String },
 }
 
 impl fmt::Display for CommError {
@@ -73,6 +77,9 @@ impl fmt::Display for CommError {
             }
             CommError::Crashed { rank, step } => {
                 write!(f, "rank {rank}: injected crash at step {step}")
+            }
+            CommError::Checkpoint { rank, msg } => {
+                write!(f, "rank {rank}: checkpoint save failed: {msg}")
             }
         }
     }

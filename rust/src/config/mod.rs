@@ -129,6 +129,30 @@ impl ModelConfig {
             } if depth == 0 => {
                 return Err("2.5-D depth must be >= 1".into());
             }
+            Parallelism::Pipeline { stages, micro_batches, inner } => {
+                if stages == 0 {
+                    return Err("pipeline stages must be >= 1".into());
+                }
+                if micro_batches == 0 {
+                    return Err("pipeline micro_batches must be >= 1".into());
+                }
+                match inner {
+                    crate::topology::PipelineInner::TwoFiveD { depth } if depth == 0 => {
+                        return Err("2.5-D depth must be >= 1".into());
+                    }
+                    crate::topology::PipelineInner::Hybrid { replicas, inner: hi } => {
+                        if replicas == 0 {
+                            return Err("hybrid replicas must be >= 1".into());
+                        }
+                        if let crate::topology::HybridInner::TwoFiveD { depth } = hi {
+                            if depth == 0 {
+                                return Err("2.5-D depth must be >= 1".into());
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
             _ => {}
         }
         let div = crate::dist::ShardSpec::for_parallelism(par, edge, 0).head_divisor();
@@ -187,6 +211,28 @@ impl ModelConfig {
                 // Each replica runs the inner mesh on batch/replicas.
                 let per_replica = ModelConfig { batch: self.batch / replicas, ..self.clone() };
                 per_replica
+                    .validate(inner.as_parallelism(), edge)
+                    .map_err(|e| format!("inner {}: {e}", inner.as_parallelism().name()))
+            }
+            Parallelism::Pipeline { stages, micro_batches, inner } => {
+                if self.layers % stages != 0 {
+                    return Err(format!(
+                        "layers {} % stages {} != 0 (stages own contiguous layer slices)",
+                        self.layers, stages
+                    ));
+                }
+                if self.batch % micro_batches != 0 {
+                    return Err(format!(
+                        "batch {} % micro_batches {} != 0 (micro-batches must hold whole \
+                         sequences for bitwise parity)",
+                        self.batch, micro_batches
+                    ));
+                }
+                // Every stage group runs the inner mesh on one micro-batch
+                // at a time.
+                let per_mb =
+                    ModelConfig { batch: self.batch / micro_batches, ..self.clone() };
+                per_mb
                     .validate(inner.as_parallelism(), edge)
                     .map_err(|e| format!("inner {}: {e}", inner.as_parallelism().name()))
             }
@@ -460,6 +506,15 @@ impl CubicConfig {
             let r =
                 usize::try_from(r).map_err(|_| ConfigError(format!("replicas {r} < 1")))?;
             cfg.parallelism.set_replicas(r).map_err(ConfigError)?;
+        }
+        if let Some(s) = doc.get_int("parallel", "stages") {
+            let s = usize::try_from(s).map_err(|_| ConfigError(format!("stages {s} < 1")))?;
+            cfg.parallelism.set_stages(s).map_err(ConfigError)?;
+        }
+        if let Some(m) = doc.get_int("parallel", "micro_batches") {
+            let m = usize::try_from(m)
+                .map_err(|_| ConfigError(format!("micro_batches {m} < 1")))?;
+            cfg.parallelism.set_micro_batches(m).map_err(ConfigError)?;
         }
 
         set_usize!("train", "steps", cfg.train.steps);
@@ -786,5 +841,70 @@ max_recoveries = 2
         assert_eq!(cfg.parallelism.world_size(cfg.edge), 16);
         // Degenerate parameters are config errors, not panics.
         assert!(ModelConfig::tiny().validate(Parallelism::TwoFiveD { depth: 0 }, 2).is_err());
+    }
+
+    #[test]
+    fn pipeline_toml_round_trip() {
+        let cfg = CubicConfig::from_toml(
+            "[parallel]\nkind = \"pipeline\"\nedge = 2\nstages = 2\nmicro_batches = 4",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.parallelism,
+            Parallelism::Pipeline {
+                stages: 2,
+                micro_batches: 4,
+                inner: crate::topology::PipelineInner::OneD,
+            }
+        );
+        assert_eq!(cfg.parallelism.world_size(cfg.edge), 4);
+        // stages/micro_batches only apply to pipeline kinds.
+        assert!(CubicConfig::from_toml("[parallel]\nkind = \"3d\"\nstages = 2").is_err());
+        assert!(CubicConfig::from_toml("[parallel]\nkind = \"1d\"\nmicro_batches = 2").is_err());
+        // depth reaches a pipelined 2.5-D inner (charlm divisibility).
+        let cfg = CubicConfig::from_toml(
+            "[parallel]\nkind = \"pipeline2.5d\"\nedge = 2\ndepth = 2\nstages = 2\n\
+             micro_batches = 2\n[model]\npreset = \"charlm\"",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.parallelism,
+            Parallelism::Pipeline {
+                stages: 2,
+                micro_batches: 2,
+                inner: crate::topology::PipelineInner::TwoFiveD { depth: 2 },
+            }
+        );
+        assert_eq!(cfg.parallelism.world_size(cfg.edge), 16);
+    }
+
+    #[test]
+    fn pipeline_divisibility_is_validated() {
+        let pp = |stages, micro_batches| Parallelism::Pipeline {
+            stages,
+            micro_batches,
+            inner: crate::topology::PipelineInner::OneD,
+        };
+        // tiny: layers=2, batch=4.
+        assert!(ModelConfig::tiny().validate(pp(2, 4), 2).is_ok());
+        assert!(ModelConfig::tiny().validate(pp(2, 1), 2).is_ok());
+        // layers % stages != 0: stages own contiguous slices.
+        let err = ModelConfig::tiny().validate(pp(3, 1), 2).unwrap_err();
+        assert!(err.contains("stages"), "{err}");
+        // batch % micro_batches != 0: micro-batches hold whole sequences.
+        let err = ModelConfig::tiny().validate(pp(2, 3), 2).unwrap_err();
+        assert!(err.contains("micro_batches"), "{err}");
+        // Inner-mesh constraints still apply at the per-micro-batch batch:
+        // 2-D inner at q=2 needs (batch / m) % q == 0 — m=4 leaves 1 row.
+        let pp2d = Parallelism::Pipeline {
+            stages: 2,
+            micro_batches: 4,
+            inner: crate::topology::PipelineInner::TwoD,
+        };
+        let err = ModelConfig::tiny().validate(pp2d, 2).unwrap_err();
+        assert!(err.contains("inner"), "{err}");
+        // Degenerate parameters are config errors, not panics.
+        assert!(ModelConfig::tiny().validate(pp(0, 1), 2).is_err());
+        assert!(ModelConfig::tiny().validate(pp(1, 0), 2).is_err());
     }
 }

@@ -226,6 +226,83 @@ pub fn hybrid_activation_bytes_per_rank(r: u64, inner_act_div: u64, m: u64, n: u
     m * n * W / (r * inner_act_div)
 }
 
+/// **Pipeline bubble fraction** of the GPipe flush schedule: with `s`
+/// stages and `m` micro-batches, `(m + s − 1)` micro-batch slots pass a
+/// stage per sweep but only `m` carry work, so the idle share is
+/// `(s − 1)/(m + s − 1)` — the classic GPipe/1F1B bubble (both schedules
+/// share it; 1F1B only changes the stash high-water mark).
+pub fn pipeline_bubble_fraction(s: u64, m: u64) -> f64 {
+    if s <= 1 {
+        0.0
+    } else {
+        (s - 1) as f64 / (m + s - 1) as f64
+    }
+}
+
+/// Completion time of the pipelined core step — the exact dependency
+/// recurrence of [`crate::parallel::pipeline::pipeline_core_step`]'s
+/// schedule: `s` stages, `m` micro-batches, per-micro-batch forward `f`
+/// and backward `b` per stage, boundary transfer `c` per hop, and a
+/// per-stage weight-gradient flush `w`.
+///
+/// Forward: `F[k][u] = max(F[k][u−1], F[k−1][u] + c) + f` (stages compute
+/// their micro-batches in order, each needing the boundary activation from
+/// the stage below). The last stage finishes at `t_f = F[s−1][m−1]`; the
+/// output relay and replicated head ride on top of it. Backward runs in
+/// reverse micro-batch order, `B[k][u] = max(B[k][u+1], B[k+1][u] + c) + b`,
+/// and every stage closes with its flush (stage 0 relays the embedding
+/// gradient first; the others receive it after flushing). With `c = w = 0`
+/// this telescopes to `(m + s − 1)(f + b)`, whose idle share is
+/// [`pipeline_bubble_fraction`] — and the unit tests pin the recurrence
+/// *bitwise* against the engine clock on a dyadic network.
+pub fn pipeline_step_time(s: usize, m: usize, f: f64, b: f64, c: f64, w: f64) -> f64 {
+    assert!(s >= 1 && m >= 1);
+    let mut fw = vec![vec![0.0f64; m]; s];
+    for k in 0..s {
+        let mut t = 0.0f64;
+        for u in 0..m {
+            let ready = if k == 0 { t } else { fw[k - 1][u] + c };
+            t = t.max(ready) + f;
+            fw[k][u] = t;
+        }
+    }
+    let t_f = fw[s - 1][m - 1];
+    let mut bw = vec![vec![0.0f64; m]; s];
+    for k in (0..s).rev() {
+        let mut t = if k == s - 1 { t_f } else { fw[k][m - 1].max(t_f + c) };
+        for u in (0..m).rev() {
+            let ready = if k == s - 1 { t } else { bw[k + 1][u] + c };
+            t = t.max(ready) + b;
+            bw[k][u] = t;
+        }
+    }
+    let mut end = 0.0f64;
+    for k in 0..s {
+        let e = if k == 0 {
+            bw[0][0] + w
+        } else {
+            (bw[k][0] + w).max(bw[0][0] + c)
+        };
+        end = end.max(e);
+    }
+    end
+}
+
+/// Pipeline per-rank weight memory: a stage holds `1/s` of the layer
+/// stack, sharded by the inner mesh as usual.
+pub fn pipeline_weight_bytes_per_rank(s: u64, inner_world: u64, n: u64, k: u64) -> u64 {
+    n * k * W / (s * inner_world)
+}
+
+/// Pipeline per-rank activation memory at the stash high-water mark: all
+/// `m` micro-batch caches stay alive until the weight-gradient flush, so
+/// the stash equals the *full-batch* activation under the inner mesh's
+/// row/column division — micro-batching pipelines time, not activation
+/// memory (GPipe without recomputation).
+pub fn pipeline_activation_bytes_per_rank(inner_act_div: u64, rows: u64, n: u64) -> u64 {
+    rows * n * W / inner_act_div
+}
+
 /// Predicted virtual time of the 3-D forward matmul under `net` — the
 /// closed form the engine's emergent ring timing should approach on a flat
 /// network (unit-tested to a few percent).
@@ -539,6 +616,80 @@ mod tests {
                 "rank {rank}"
             );
         }
+    }
+
+    #[test]
+    fn pipeline_schedule_closed_forms() {
+        // c = w = 0: the flush schedule telescopes to (m+s−1)(f+b), and the
+        // idle share is exactly the closed-form bubble fraction.
+        for (s, m) in [(1usize, 1usize), (2, 4), (4, 4), (3, 8)] {
+            let t = pipeline_step_time(s, m, 1.0, 0.5, 0.0, 0.0);
+            assert_eq!(t, (m + s - 1) as f64 * 1.5, "s={s} m={m}");
+            assert_eq!(
+                (t - m as f64 * 1.5) / t,
+                pipeline_bubble_fraction(s as u64, m as u64),
+                "s={s} m={m}"
+            );
+        }
+        assert_eq!(pipeline_bubble_fraction(1, 8), 0.0);
+        // More micro-batches shrink the bubble; more stages grow it.
+        assert!(pipeline_bubble_fraction(4, 16) < pipeline_bubble_fraction(4, 4));
+        assert!(pipeline_bubble_fraction(8, 8) > pipeline_bubble_fraction(2, 8));
+        // A boundary transfer cost delays every stage handoff.
+        assert!(
+            pipeline_step_time(2, 4, 1.0, 1.0, 0.25, 0.0)
+                > pipeline_step_time(2, 4, 1.0, 1.0, 0.0, 0.0)
+        );
+    }
+
+    #[test]
+    fn pipeline_recurrence_matches_engine_clock_bitwise() {
+        use crate::config::ModelConfig;
+        use crate::engine::time_core_step;
+        use crate::topology::{Parallelism, PipelineInner};
+        // Dyadic pin: communication exactly free (alpha 0, beta ∞, zero
+        // launch overhead), flop rate a power of two — every clock charge
+        // is an exact dyadic rational, f64 arithmetic on them is exact,
+        // and the schedule recurrence must equal the engine clock bitwise.
+        let mut net = NetModel::flat(0.0, f64::INFINITY, (1u64 << 33) as f64);
+        net.overlap = false; // pin regardless of CUBIC_OVERLAP
+        let cfg = ModelConfig::tiny(); // layers 2, batch 4: s=2, m ≤ 4
+        let t = |m: usize| {
+            let par = Parallelism::Pipeline {
+                stages: 2,
+                micro_batches: m,
+                inner: PipelineInner::OneD,
+            };
+            let r = time_core_step(&cfg, par, 2, net.clone()).unwrap();
+            r.forward_s + r.backward_s
+        };
+        let (t1, t2, t4) = (t(1), t(2), t(4));
+        // With c = 0 the makespan is T(m) = (m+s−1)·(f+b) + w, where
+        // f + b = P/m for stage compute P. Solve for P and w from two
+        // measurements; the recurrence must then reproduce all of them.
+        let p = 2.0 * (t1 - t2);
+        let w = t1 - 2.0 * p;
+        assert!(p > 0.0 && w > 0.0, "P {p}, w {w}");
+        assert_eq!(t1, pipeline_step_time(2, 1, p / 2.0, p / 2.0, 0.0, w));
+        assert_eq!(t2, pipeline_step_time(2, 2, p / 4.0, p / 4.0, 0.0, w));
+        assert_eq!(t4, pipeline_step_time(2, 4, p / 8.0, p / 8.0, 0.0, w));
+        // The measured idle share of the schedule portion (flush excluded)
+        // is exactly the closed-form bubble fraction.
+        assert_eq!((t2 - w - p) / (t2 - w), pipeline_bubble_fraction(2, 2));
+        assert_eq!((t4 - w - p) / (t4 - w), pipeline_bubble_fraction(2, 4));
+    }
+
+    #[test]
+    fn pipeline_memory_formulas() {
+        // A stage holds 1/s of the layers (inner-sharded); the stash keeps
+        // every micro-batch cache alive until the flush, so activations
+        // match the full batch regardless of m.
+        assert_eq!(pipeline_weight_bytes_per_rank(4, 2, 64, 256), 64 * 256 * 4 / 8);
+        assert_eq!(
+            pipeline_activation_bytes_per_rank(1, 128, 64),
+            activation_bytes_per_rank(1, 128, 64, Approach::Seq)
+        );
+        assert_eq!(pipeline_activation_bytes_per_rank(4, 128, 64), 128 * 64 * 4 / 4);
     }
 
     #[test]

@@ -76,7 +76,7 @@
 //! `ParallelOps` impl, never a new copy of the model.
 
 use crate::tensor::Tensor;
-use crate::topology::{Axis, Coord, Cube, HybridInner, Mesh, Parallelism};
+use crate::topology::{Axis, Coord, Cube, HybridInner, Mesh, Parallelism, PipelineInner};
 
 // ---------------------------------------------------------------------
 // Direction triples
@@ -539,6 +539,17 @@ pub enum MeshSpec {
     /// `rank = replica·inner_world + inner_rank`. The inner mesh must be a
     /// tensor mesh (`Line`/`Grid`/`Cube`/`Tess`) — no nesting, no `Point`.
     Hybrid(usize, Box<MeshSpec>),
+    /// `stages` pipeline stage groups around an inner mesh, streaming
+    /// `micro_batches` micro-batches: `Pipeline(stages, micro_batches,
+    /// inner)`. Rank layout: `rank = stage·inner_world + inner_rank`. The
+    /// layer partition lives *above* the spec (each stage group runs its
+    /// contiguous layer slice on an identical inner layout), so every
+    /// placement question delegates to the inner mesh at `rank %
+    /// inner_world` — activations replicate across stage groups exactly as
+    /// weights replicate across hybrid replicas. The inner mesh may be any
+    /// tensor mesh or a `Hybrid` (PP × DP × TP), but not `Point` and not
+    /// another pipeline.
+    Pipeline(usize, usize, Box<MeshSpec>),
 }
 
 impl MeshSpec {
@@ -551,6 +562,7 @@ impl MeshSpec {
             MeshSpec::Cube(cube, _) => cube.size(),
             MeshSpec::Tess(mesh, d) => mesh.size() * d,
             MeshSpec::Hybrid(r, inner) => r * inner.world(),
+            MeshSpec::Pipeline(s, _, inner) => s * inner.world(),
         }
     }
 }
@@ -563,6 +575,20 @@ pub fn mesh_for_inner(inner: HybridInner, edge: usize) -> MeshSpec {
         HybridInner::TwoD => MeshSpec::Grid(Mesh::new(edge)),
         HybridInner::ThreeD => MeshSpec::Cube(Cube::new(edge), Dirs::canonical()),
         HybridInner::TwoFiveD { depth } => MeshSpec::Tess(Mesh::new(edge), depth),
+    }
+}
+
+/// The per-stage inner mesh of a pipeline decomposition for a given edge
+/// parameter (shared with [`ShardSpec::for_parallelism`]).
+pub fn mesh_for_pipeline_inner(inner: PipelineInner, edge: usize) -> MeshSpec {
+    match inner {
+        PipelineInner::OneD => MeshSpec::Line(edge),
+        PipelineInner::TwoD => MeshSpec::Grid(Mesh::new(edge)),
+        PipelineInner::ThreeD => MeshSpec::Cube(Cube::new(edge), Dirs::canonical()),
+        PipelineInner::TwoFiveD { depth } => MeshSpec::Tess(Mesh::new(edge), depth),
+        PipelineInner::Hybrid { replicas, inner } => {
+            MeshSpec::Hybrid(replicas, Box::new(mesh_for_inner(inner, edge)))
+        }
     }
 }
 
@@ -625,6 +651,25 @@ impl ShardSpec {
         ShardSpec { mesh: MeshSpec::Hybrid(replicas, Box::new(inner)), rank }
     }
 
+    /// Pipeline spec: `stages` stage groups around `inner` (any tensor
+    /// mesh or a `Hybrid` — no `Point`, no nested pipeline), streaming
+    /// `micro_batches` micro-batches per step.
+    pub fn pipeline(
+        stages: usize,
+        micro_batches: usize,
+        inner: MeshSpec,
+        rank: usize,
+    ) -> ShardSpec {
+        assert!(stages >= 1, "pipeline needs at least one stage");
+        assert!(micro_batches >= 1, "pipeline needs at least one micro-batch");
+        assert!(
+            !matches!(inner, MeshSpec::Point | MeshSpec::Pipeline(..)),
+            "pipeline inner must be a tensor mesh or Hybrid (no Point, no nesting)"
+        );
+        assert!(rank < stages * inner.world());
+        ShardSpec { mesh: MeshSpec::Pipeline(stages, micro_batches, Box::new(inner)), rank }
+    }
+
     /// Spec for `rank` of the given parallelism/edge (the constructor the
     /// dispatcher uses).
     pub fn for_parallelism(par: Parallelism, edge: usize, rank: usize) -> ShardSpec {
@@ -636,6 +681,9 @@ impl ShardSpec {
             Parallelism::TwoFiveD { depth } => Self::twofived(edge, depth, rank),
             Parallelism::Hybrid { replicas, inner } => {
                 Self::hybrid(replicas, mesh_for_inner(inner, edge), rank)
+            }
+            Parallelism::Pipeline { stages, micro_batches, inner } => {
+                Self::pipeline(stages, micro_batches, mesh_for_pipeline_inner(inner, edge), rank)
             }
         }
     }
@@ -653,11 +701,35 @@ impl ShardSpec {
                     MeshSpec::Grid(_) => HybridInner::TwoD,
                     MeshSpec::Cube(..) => HybridInner::ThreeD,
                     MeshSpec::Tess(_, d) => HybridInner::TwoFiveD { depth: *d },
-                    MeshSpec::Point | MeshSpec::Hybrid(..) => {
-                        unreachable!("constructor rejects Point/Hybrid inners")
+                    MeshSpec::Point | MeshSpec::Hybrid(..) | MeshSpec::Pipeline(..) => {
+                        unreachable!("constructor rejects Point/Hybrid/Pipeline inners")
                     }
                 };
                 Parallelism::Hybrid { replicas: *r, inner }
+            }
+            MeshSpec::Pipeline(s, m, inner) => {
+                let inner = match inner.as_ref() {
+                    MeshSpec::Line(_) => PipelineInner::OneD,
+                    MeshSpec::Grid(_) => PipelineInner::TwoD,
+                    MeshSpec::Cube(..) => PipelineInner::ThreeD,
+                    MeshSpec::Tess(_, d) => PipelineInner::TwoFiveD { depth: *d },
+                    MeshSpec::Hybrid(r, hinner) => PipelineInner::Hybrid {
+                        replicas: *r,
+                        inner: match hinner.as_ref() {
+                            MeshSpec::Line(_) => HybridInner::OneD,
+                            MeshSpec::Grid(_) => HybridInner::TwoD,
+                            MeshSpec::Cube(..) => HybridInner::ThreeD,
+                            MeshSpec::Tess(_, d) => HybridInner::TwoFiveD { depth: *d },
+                            MeshSpec::Point | MeshSpec::Hybrid(..) | MeshSpec::Pipeline(..) => {
+                                unreachable!("constructor rejects Point/Hybrid/Pipeline inners")
+                            }
+                        },
+                    },
+                    MeshSpec::Point | MeshSpec::Pipeline(..) => {
+                        unreachable!("constructor rejects Point/Pipeline inners")
+                    }
+                };
+                Parallelism::Pipeline { stages: *s, micro_batches: *m, inner }
             }
         }
     }
@@ -684,6 +756,17 @@ impl ShardSpec {
         (self.rank / iw, ShardSpec { mesh: inner.as_ref().clone(), rank: self.rank % iw })
     }
 
+    /// `(stage, inner spec)` of this rank on a pipeline mesh. The layer
+    /// partition lives above the spec, so every placement question
+    /// delegates to the inner spec — stage groups are layout-identical.
+    fn pipeline_parts(&self) -> (usize, ShardSpec) {
+        let MeshSpec::Pipeline(_, _, inner) = &self.mesh else {
+            panic!("pipeline_parts on a non-pipeline mesh");
+        };
+        let iw = inner.world();
+        (self.rank / iw, ShardSpec { mesh: inner.as_ref().clone(), rank: self.rank % iw })
+    }
+
     /// How the mesh divides attention heads: the column-split factor of an
     /// `Expand` weight (1-D: `P`; 2-D/3-D: the edge; 2.5-D: `depth·p` —
     /// depth slabs of grid-blocked columns; hybrid: the inner divisor).
@@ -695,6 +778,8 @@ impl ShardSpec {
             MeshSpec::Cube(cube, _) => cube.edge(),
             MeshSpec::Tess(mesh, d) => mesh.edge() * d,
             MeshSpec::Hybrid(_, _) => self.hybrid_parts().1.head_divisor(),
+            // Stages split layers, never heads.
+            MeshSpec::Pipeline(..) => self.pipeline_parts().1.head_divisor(),
         }
     }
 
@@ -720,6 +805,12 @@ impl ShardSpec {
     pub fn weight_replicas(&self) -> usize {
         match &self.mesh {
             MeshSpec::Hybrid(r, _) => r * self.hybrid_parts().1.weight_replicas(),
+            // Dist-level view: the layer partition lives above the spec, so
+            // sharding one tensor across the whole pipeline mesh lands one
+            // inner-sharded copy per stage group. (Per-layer, the engine
+            // materializes it only on the owning stage — the parity tests
+            // restrict to that stage group's ranks.)
+            MeshSpec::Pipeline(s, _, _) => s * self.pipeline_parts().1.weight_replicas(),
             _ => 1,
         }
     }
@@ -727,10 +818,15 @@ impl ShardSpec {
     /// Does this mesh shard activations? (`false` = replicated: Seq, 1-D.
     /// Tess shards over its grids; hybrid always shards batch rows.)
     pub fn shards_activation(&self) -> bool {
-        matches!(
-            &self.mesh,
-            MeshSpec::Grid(_) | MeshSpec::Cube(..) | MeshSpec::Tess(..) | MeshSpec::Hybrid(..)
-        )
+        match &self.mesh {
+            MeshSpec::Grid(_) | MeshSpec::Cube(..) | MeshSpec::Tess(..) | MeshSpec::Hybrid(..) => {
+                true
+            }
+            // Stage groups replicate the activation layout; whether it is
+            // sharded within a group is the inner mesh's call.
+            MeshSpec::Pipeline(..) => self.pipeline_parts().1.shards_activation(),
+            MeshSpec::Point | MeshSpec::Line(_) => false,
+        }
     }
 
     /// Shape of this rank's shard of a global `(rows, cols)` activation.
@@ -755,6 +851,9 @@ impl ShardSpec {
                 let (_, inner) = self.hybrid_parts();
                 inner.activation_shape(rows / r, cols)
             }
+            // Every stage group sees the full (micro-)batch under the
+            // inner layout.
+            MeshSpec::Pipeline(..) => self.pipeline_parts().1.activation_shape(rows, cols),
         }
     }
 
@@ -799,6 +898,7 @@ impl ShardSpec {
                 };
                 (replica * slab + r0, c0, sr, sc)
             }
+            MeshSpec::Pipeline(..) => self.pipeline_parts().1.activation_bounds(rows, cols),
         }
     }
 
@@ -840,6 +940,14 @@ impl ShardSpec {
                     })
                     .collect();
                 Tensor::concat_rows(&slabs)
+            }
+            // Stage groups are activation-layout replicas: stage 0's group
+            // carries a full copy.
+            MeshSpec::Pipeline(s, _, inner) => {
+                let iw = inner.world();
+                assert_eq!(parts.len(), s * iw, "need one shard per rank");
+                let inner0 = ShardSpec { mesh: inner.as_ref().clone(), rank: 0 };
+                inner0.assemble_activation(&parts[..iw], rows, cols)
             }
         }
     }
@@ -893,6 +1001,12 @@ impl ShardSpec {
                     assert_eq!(part.shape(), &[sr, sc], "rank {rank} shard shape mismatch");
                     out.set_block(replica * slab + r0, c0, part);
                 }
+            }
+            MeshSpec::Pipeline(s, _, inner) => {
+                let iw = inner.world();
+                assert_eq!(parts.len(), s * iw, "need one shard per rank");
+                let inner0 = ShardSpec { mesh: inner.as_ref().clone(), rank: 0 };
+                inner0.assemble_activation_into(&parts[..iw], rows, cols, out);
             }
         }
     }
@@ -962,6 +1076,9 @@ impl ShardSpec {
             }
             // Every replica holds a full inner-sharded copy.
             MeshSpec::Hybrid(..) => self.hybrid_parts().1.shard_weight(stage, w),
+            // Per stage-local layer, the stage group shards exactly like
+            // its inner mesh (which layers exist here is decided above).
+            MeshSpec::Pipeline(..) => self.pipeline_parts().1.shard_weight(stage, w),
         }
     }
 
@@ -1007,6 +1124,14 @@ impl ShardSpec {
                 let inner0 = ShardSpec { mesh: inner.as_ref().clone(), rank: 0 };
                 inner0.assemble_weight(stage, &parts[..iw], rows, cols)
             }
+            // One stage group's shards reassemble the weight; callers pass
+            // the owning stage's group (or any group, at the dist level).
+            MeshSpec::Pipeline(s, _, inner) => {
+                let iw = inner.world();
+                assert_eq!(parts.len(), s * iw, "need one shard per rank");
+                let inner0 = ShardSpec { mesh: inner.as_ref().clone(), rank: 0 };
+                inner0.assemble_weight(stage, &parts[..iw], rows, cols)
+            }
         }
     }
 
@@ -1025,6 +1150,7 @@ impl ShardSpec {
             // owns its own slab; Reduce/Norm vectors: replicated copies).
             MeshSpec::Tess(..) => self.tess_coords().1 == 0,
             MeshSpec::Hybrid(..) => self.hybrid_parts().1.owns_vector(role),
+            MeshSpec::Pipeline(..) => self.pipeline_parts().1.owns_vector(role),
         }
     }
 
@@ -1083,6 +1209,7 @@ impl ShardSpec {
                 })
             }
             MeshSpec::Hybrid(..) => self.hybrid_parts().1.shard_vector(role, v),
+            MeshSpec::Pipeline(..) => self.pipeline_parts().1.shard_vector(role, v),
         }
     }
 
@@ -1157,6 +1284,12 @@ impl ShardSpec {
             MeshSpec::Hybrid(r, inner) => {
                 let iw = inner.world();
                 assert_eq!(parts.len(), r * iw, "need one entry per rank");
+                let inner0 = ShardSpec { mesh: inner.as_ref().clone(), rank: 0 };
+                inner0.assemble_vector(role, &parts[..iw], n)
+            }
+            MeshSpec::Pipeline(s, _, inner) => {
+                let iw = inner.world();
+                assert_eq!(parts.len(), s * iw, "need one entry per rank");
                 let inner0 = ShardSpec { mesh: inner.as_ref().clone(), rank: 0 };
                 inner0.assemble_vector(role, &parts[..iw], n)
             }
@@ -1319,6 +1452,8 @@ mod tests {
             (0..8).map(|r| ShardSpec::threed(2, r)).collect(),
             (0..8).map(|r| ShardSpec::twofived(2, 2, r)).collect(),
             (0..4).map(|r| ShardSpec::hybrid(2, MeshSpec::Line(2), r)).collect(),
+            (0..4).map(|r| ShardSpec::pipeline(2, 4, MeshSpec::Line(2), r)).collect(),
+            (0..8).map(|r| ShardSpec::pipeline(2, 4, MeshSpec::Grid(Mesh::new(2)), r)).collect(),
         ]
     }
 
@@ -1458,6 +1593,49 @@ mod tests {
         assert_eq!(spec_b.activation_bounds(8, 16), (4, 0, 4, 16));
         assert_eq!(spec_a.shard_activation(&x), x.block(0, 0, 4, 16).compact());
         assert_eq!(spec_b.shard_activation(&x), x.block(4, 0, 4, 16).compact());
+    }
+
+    #[test]
+    fn pipeline_stage_groups_are_layout_identical() {
+        // rank and rank + inner_world sit at the same inner position of
+        // adjacent stage groups: identical activation windows, identical
+        // weight shards (of whatever layer each stage happens to own).
+        let x = randt(&[8, 16], 30);
+        let w = randt(&[8, 16], 31);
+        for r in 0..4 {
+            let s0 = ShardSpec::pipeline(2, 4, MeshSpec::Grid(Mesh::new(2)), r);
+            let s1 = ShardSpec::pipeline(2, 4, MeshSpec::Grid(Mesh::new(2)), r + 4);
+            assert_eq!(s0.shard_activation(&x), s1.shard_activation(&x), "rank {r}");
+            assert_eq!(
+                s0.shard_weight(Stage::Expand, &w),
+                s1.shard_weight(Stage::Expand, &w),
+                "rank {r}"
+            );
+            assert_eq!(s0.activation_bounds(8, 16), s1.activation_bounds(8, 16));
+        }
+        // Stages never split attention heads.
+        assert_eq!(ShardSpec::pipeline(4, 8, MeshSpec::Line(2), 0).head_divisor(), 2);
+    }
+
+    #[test]
+    fn pipeline_kind_round_trips_including_hybrid_inner() {
+        let par = Parallelism::Pipeline {
+            stages: 2,
+            micro_batches: 4,
+            inner: PipelineInner::OneD,
+        };
+        assert_eq!(ShardSpec::for_parallelism(par, 2, 3).kind(), par);
+        // The 5-D production shape: PP × DP × TP.
+        let par5d = Parallelism::Pipeline {
+            stages: 2,
+            micro_batches: 4,
+            inner: PipelineInner::Hybrid { replicas: 2, inner: HybridInner::TwoD },
+        };
+        let spec = ShardSpec::for_parallelism(par5d, 2, 9);
+        assert_eq!(spec.world(), 16);
+        assert_eq!(spec.kind(), par5d);
+        // Dist-level replication: stages × hybrid replicas full copies.
+        assert_eq!(spec.weight_replicas(), 4);
     }
 
     #[test]

@@ -27,10 +27,13 @@ COMMANDS
   train           train on the simulated cluster with real numerics
                     --config <file.toml>     load a config file
                     --save-dir <dir>         write rank-sharded checkpoints
-                    --parallelism seq|1d|2d|3d|2.5d|hybrid[1d|2d|3d] (default 3d)
+                    --parallelism seq|1d|2d|3d|2.5d|hybrid[1d|2d|3d]|
+                                  pipeline[1d|2d|3d|2.5d|hybrid] (default 3d)
                     --edge <n>               topology edge (default 2)
                     --depth <n>              2.5-D depth layers (default 2)
                     --replicas <n>           hybrid data-parallel replicas (default 2)
+                    --stages <n>             pipeline stages (default 2)
+                    --micro-batches <n>      pipeline micro-batches (default 4)
                     --model tiny|charlm|large100m (default tiny)
                     --steps <n> --lr <f> --seed <n>
                     --ckpt-every <n>         checkpoint every n steps (0 = final only)
@@ -82,6 +85,14 @@ fn build_config(args: &Args) -> Result<CubicConfig, String> {
     if let Some(r) = args.get("replicas") {
         let r: usize = r.parse().map_err(|e| format!("--replicas {r:?}: {e}"))?;
         cfg.parallelism.set_replicas(r).map_err(|e| format!("--replicas: {e}"))?;
+    }
+    if let Some(s) = args.get("stages") {
+        let s: usize = s.parse().map_err(|e| format!("--stages {s:?}: {e}"))?;
+        cfg.parallelism.set_stages(s).map_err(|e| format!("--stages: {e}"))?;
+    }
+    if let Some(m) = args.get("micro-batches") {
+        let m: usize = m.parse().map_err(|e| format!("--micro-batches {m:?}: {e}"))?;
+        cfg.parallelism.set_micro_batches(m).map_err(|e| format!("--micro-batches: {e}"))?;
     }
     cfg.edge = args.get_usize("edge", cfg.edge)?;
     cfg.train.steps = args.get_usize("steps", cfg.train.steps)?;
@@ -190,7 +201,7 @@ fn cmd_plan_world(world: usize, overlap: bool) -> Result<(), String> {
     let mut net = NetModel::longhorn_v100();
     net.set_overlap(overlap);
     println!(
-        "plan comparison at world size {world} (hidden {}, batch {}, seq {}, 1 layer)\n\
+        "plan comparison at world size {world} (hidden {}, batch {}, seq {}, 1 layer; pipeline rows use 1 layer/stage)\n\
          ranked by {} step time{}\n",
         cfg.hidden,
         cfg.batch,
@@ -200,12 +211,19 @@ fn cmd_plan_world(world: usize, overlap: bool) -> Result<(), String> {
     );
     let mut t = Table::new(&[
         "Kind", "Mesh", "Ranks", "weights/rank", "acts/rank", "comm bytes/rank",
-        "exposed comm", "virtual step",
+        "exposed comm", "bubble", "virtual step",
     ]);
-    let mut rows_out: Vec<(f64, [String; 8])> = Vec::new();
+    let mut rows_out: Vec<(f64, [String; 9])> = Vec::new();
     for cand in cubic::topology::plan_candidates(world) {
         let (par, edge) = (cand.par, cand.edge);
-        if let Err(e) = cfg.validate(par, edge) {
+        // Pipeline rows need one layer per stage (the single-layer paper
+        // shape cannot split); everything else keeps the 1-layer probe.
+        let cfg_c = if let Parallelism::Pipeline { stages, .. } = par {
+            cubic::config::ModelConfig { layers: stages, ..cfg.clone() }
+        } else {
+            cfg.clone()
+        };
+        if let Err(e) = cfg_c.validate(par, edge) {
             println!("  (skipping {} {}: {e})", par.name(), par.mesh_desc(edge));
             continue;
         }
@@ -214,13 +232,21 @@ fn cmd_plan_world(world: usize, overlap: bool) -> Result<(), String> {
         let mut a_max = 0usize;
         for rank in 0..w {
             let env = ParEnv::new(par, edge, rank);
-            w_max = w_max.max(env.phantom_block(&cfg).numel() * 4);
-            let (ar, ac) = env.activation_shape(rows, cfg.hidden);
+            w_max = w_max.max(env.phantom_block(&cfg_c).numel() * 4);
+            let (ar, ac) = env.activation_shape(rows, cfg_c.hidden);
             a_max = a_max.max(ar * ac * 4);
         }
-        let timing = cubic::engine::time_core_step(&cfg, par, edge, net.clone())
+        let timing = cubic::engine::time_core_step(&cfg_c, par, edge, net.clone())
             .map_err(|e| e.to_string())?;
         let step = timing.forward_s + timing.backward_s;
+        let bubble = if let Parallelism::Pipeline { stages, micro_batches, .. } = par {
+            format!(
+                "{:.2}",
+                cubic::costmodel::pipeline_bubble_fraction(stages as u64, micro_batches as u64)
+            )
+        } else {
+            "-".to_string()
+        };
         rows_out.push((
             step,
             [
@@ -231,6 +257,7 @@ fn cmd_plan_world(world: usize, overlap: bool) -> Result<(), String> {
                 fmt_bytes(a_max as u64),
                 fmt_bytes(timing.metrics.total_bytes / w.max(1) as u64),
                 format!("{:.4}s", timing.metrics.exposed_comm_time),
+                bubble,
                 format!("{step:.4}s"),
             ],
         ));

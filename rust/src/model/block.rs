@@ -129,6 +129,172 @@ pub fn block_bwd(
     )
 }
 
+/// Per-layer gradients stashed by [`block_bwd_dx`] for a later
+/// [`block_wgrad`] — every upstream gradient that feeds a weight, bias, or
+/// layernorm-parameter gradient. In the 1F1B schedule one of these is kept
+/// per (layer, micro-batch); the weight-grad flush concatenates them over
+/// micro-batches so the GEMMs see full-batch rows.
+pub struct BlockBwdStash {
+    /// Block output gradient (`dy` of fc2's `Reduce` linear).
+    pub dy: Tensor,
+    /// Gelu-adjusted gradient (`dy` of fc1's `Expand` linear).
+    pub d_fc1pre: Tensor,
+    /// Gradient into ln2's output (feeds `dγ₂`/`dβ₂`).
+    pub d_ln2: Tensor,
+    /// Residual-joined gradient at `xa` (`dy` of proj's `Reduce` linear).
+    pub dxa: Tensor,
+    /// Gradient into the QKV projection (`dy` of qkv's `Expand` linear).
+    pub d_qkv: Tensor,
+    /// Gradient into ln1's output (feeds `dγ₁`/`dβ₁`).
+    pub d_ln1: Tensor,
+}
+
+/// The forward activations [`block_wgrad`] multiplies against — the same
+/// fields a [`BlockCache`] holds, minus everything only the `dx` pass
+/// needs. Built by the caller from (possibly concatenated) caches.
+pub struct WgradActs {
+    pub ln1: Tensor,
+    pub xhat1: Tensor,
+    pub attn_out: Tensor,
+    pub ln2: Tensor,
+    pub xhat2: Tensor,
+    pub fc1_act: Tensor,
+}
+
+impl WgradActs {
+    /// The wgrad view of a single forward cache.
+    pub fn from_cache(c: &BlockCache) -> WgradActs {
+        WgradActs {
+            ln1: c.ln1.clone(),
+            xhat1: c.xhat1.clone(),
+            attn_out: c.attn_out.clone(),
+            ln2: c.ln2.clone(),
+            xhat2: c.xhat2.clone(),
+            fc1_act: c.fc1_act.clone(),
+        }
+    }
+
+    /// Row-concatenate the wgrad views of several caches (micro-batch
+    /// order). Feeding the concatenation to [`block_wgrad`] makes the
+    /// weight-grad GEMMs bit-identical to an unpipelined full-batch
+    /// backward, because GEMM rows accumulate independently.
+    pub fn concat(caches: &[&BlockCache]) -> WgradActs {
+        fn cat(parts: Vec<Tensor>) -> Tensor {
+            Tensor::concat_rows(&parts)
+        }
+        WgradActs {
+            ln1: cat(caches.iter().map(|c| c.ln1.clone()).collect()),
+            xhat1: cat(caches.iter().map(|c| c.xhat1.clone()).collect()),
+            attn_out: cat(caches.iter().map(|c| c.attn_out.clone()).collect()),
+            ln2: cat(caches.iter().map(|c| c.ln2.clone()).collect()),
+            xhat2: cat(caches.iter().map(|c| c.xhat2.clone()).collect()),
+            fc1_act: cat(caches.iter().map(|c| c.fc1_act.clone()).collect()),
+        }
+    }
+}
+
+impl BlockBwdStash {
+    /// Row-concatenate several stashes (micro-batch order) — the gradient
+    /// side of [`WgradActs::concat`].
+    pub fn concat(stashes: &[BlockBwdStash]) -> BlockBwdStash {
+        fn cat(parts: Vec<Tensor>) -> Tensor {
+            Tensor::concat_rows(&parts)
+        }
+        BlockBwdStash {
+            dy: cat(stashes.iter().map(|s| s.dy.clone()).collect()),
+            d_fc1pre: cat(stashes.iter().map(|s| s.d_fc1pre.clone()).collect()),
+            d_ln2: cat(stashes.iter().map(|s| s.d_ln2.clone()).collect()),
+            dxa: cat(stashes.iter().map(|s| s.dxa.clone()).collect()),
+            d_qkv: cat(stashes.iter().map(|s| s.d_qkv.clone()).collect()),
+            d_ln1: cat(stashes.iter().map(|s| s.d_ln1.clone()).collect()),
+        }
+    }
+}
+
+/// The input-gradient half of [`block_bwd`]: the same `dx` cascade with the
+/// same float operations and memory charges, but no weight-gradient GEMMs —
+/// those run later from the returned stash via [`block_wgrad`]. This is the
+/// per-micro-batch backward of the pipeline schedule: `dx` must flow to the
+/// previous stage immediately, weight grads can wait for the flush.
+pub fn block_bwd_dx(
+    ep: &mut Endpoint,
+    ops: &dyn ParallelOps,
+    p: &BlockTensors,
+    cache: &BlockCache,
+    dy: &Tensor,
+    cfg: &ModelConfig,
+) -> (Tensor, BlockBwdStash) {
+    // y = xa + fc2(gelu(fc1(ln2(xa)))): both residual branches get dy.
+    let d_fc1act = ops.linear_bwd_dx(ep, dy, &p.w_fc2, Stage::Reduce);
+    let d_fc1pre = gelu_backward(&d_fc1act, &cache.fc1_pre);
+    ep.charge_memop(3.0 * d_fc1act.nominal_bytes() as f64);
+    let d_ln2 = ops.linear_bwd_dx(ep, &d_fc1pre, &p.w_fc1, Stage::Expand);
+
+    let d_xa_ln = ops.layernorm_backward_dx(
+        ep, &d_ln2, &cache.xhat2, &cache.istd2, p.ln2_g.as_ref(), cfg.hidden,
+    );
+    let dxa = dy.add(&d_xa_ln);
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+
+    // xa = x + proj(attn): both branches get dxa.
+    let d_attn = ops.linear_bwd_dx(ep, &dxa, &p.w_proj, Stage::Reduce);
+    let d_qkv = attention::bwd(ep, &d_attn, &cache.attn);
+    let d_ln1 = ops.linear_bwd_dx(ep, &d_qkv, &p.w_qkv, Stage::Expand);
+
+    let dx_ln = ops.layernorm_backward_dx(
+        ep, &d_ln1, &cache.xhat1, &cache.istd1, p.ln1_g.as_ref(), cfg.hidden,
+    );
+    let dx = dxa.add(&dx_ln);
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+
+    (
+        dx,
+        BlockBwdStash {
+            dy: dy.clone(),
+            d_fc1pre,
+            d_ln2,
+            dxa,
+            d_qkv,
+            d_ln1,
+        },
+    )
+}
+
+/// The weight-gradient half of [`block_bwd`], run from a stash (possibly
+/// micro-batch-concatenated) and the matching forward activations. The
+/// pairings and their order mirror `block_bwd` exactly: fc2, fc1, ln2,
+/// proj, qkv, ln1. Because every gradient here is a row-wise GEMM, a
+/// column sum, or an `xhat`-weighted column sum, running it once on
+/// concatenated micro-batch rows is bit-identical to the unpipelined
+/// full-batch backward.
+pub fn block_wgrad(
+    ep: &mut Endpoint,
+    ops: &dyn ParallelOps,
+    stash: &BlockBwdStash,
+    acts: &WgradActs,
+) -> BlockTensors {
+    let (dw_fc2, db_fc2) = ops.linear_bwd_dw(ep, &stash.dy, &acts.fc1_act, Stage::Reduce);
+    let (dw_fc1, db_fc1) = ops.linear_bwd_dw(ep, &stash.d_fc1pre, &acts.ln2, Stage::Expand);
+    let (dg2, db2) = ops.layernorm_param_grads(ep, &stash.d_ln2, &acts.xhat2);
+    let (dw_proj, db_proj) = ops.linear_bwd_dw(ep, &stash.dxa, &acts.attn_out, Stage::Reduce);
+    let (dw_qkv, db_qkv) = ops.linear_bwd_dw(ep, &stash.d_qkv, &acts.ln1, Stage::Expand);
+    let (dg1, db1) = ops.layernorm_param_grads(ep, &stash.d_ln1, &acts.xhat1);
+    BlockTensors {
+        ln1_g: dg1,
+        ln1_b: db1,
+        w_qkv: dw_qkv,
+        b_qkv: db_qkv,
+        w_proj: dw_proj,
+        b_proj: db_proj,
+        ln2_g: dg2,
+        ln2_b: db2,
+        w_fc1: dw_fc1,
+        b_fc1: db_fc1,
+        w_fc2: dw_fc2,
+        b_fc2: db_fc2,
+    }
+}
+
 /// Full core forward: all blocks in sequence.
 pub fn core_fwd(
     ep: &mut Endpoint,
@@ -265,6 +431,98 @@ mod tests {
                 "idx {idx}: numeric {num} vs analytic {ana}"
             );
         }
+    }
+
+    fn assert_grads_eq(a: &BlockTensors, b: &BlockTensors) {
+        assert_eq!(a.w_qkv, b.w_qkv, "w_qkv");
+        assert_eq!(a.b_qkv, b.b_qkv, "b_qkv");
+        assert_eq!(a.w_proj, b.w_proj, "w_proj");
+        assert_eq!(a.b_proj, b.b_proj, "b_proj");
+        assert_eq!(a.w_fc1, b.w_fc1, "w_fc1");
+        assert_eq!(a.b_fc1, b.b_fc1, "b_fc1");
+        assert_eq!(a.w_fc2, b.w_fc2, "w_fc2");
+        assert_eq!(a.b_fc2, b.b_fc2, "b_fc2");
+        assert_eq!(a.ln1_g, b.ln1_g, "ln1_g");
+        assert_eq!(a.ln1_b, b.ln1_b, "ln1_b");
+        assert_eq!(a.ln2_g, b.ln2_g, "ln2_g");
+        assert_eq!(a.ln2_b, b.ln2_b, "ln2_b");
+    }
+
+    #[test]
+    fn split_backward_matches_joint_bitwise() {
+        // block_bwd_dx + block_wgrad on the same cache must reproduce
+        // block_bwd bit-for-bit — the split is a reordering, not a
+        // reformulation.
+        let cfg = tiny();
+        let dense = init_dense_blocks(&cfg, 9);
+        let x = randt(&[cfg.batch * cfg.seq, cfg.hidden], 10);
+        let dy = randt(&[cfg.batch * cfg.seq, cfg.hidden], 11);
+        let p = dense[0].shard(&ShardSpec::seq());
+        let (p2, x2, dy2, cfg2) = (p.clone(), x.clone(), dy.clone(), cfg.clone());
+        let (dx_joint, g_joint) = run_spmd(1, NetModel::zero(), move |_, ep| {
+            let ops = Seq::new();
+            let (_, cache) = block_fwd(ep, &ops, &p2, &x2, &cfg2);
+            block_bwd(ep, &ops, &p2, &cache, &dy2, &cfg2)
+        })
+        .pop()
+        .unwrap();
+        let cfg2 = cfg.clone();
+        let (dx_split, g_split) = run_spmd(1, NetModel::zero(), move |_, ep| {
+            let ops = Seq::new();
+            let (_, cache) = block_fwd(ep, &ops, &p, &x, &cfg2);
+            let (dx, stash) = block_bwd_dx(ep, &ops, &p, &cache, &dy, &cfg2);
+            let g = block_wgrad(ep, &ops, &stash, &WgradActs::from_cache(&cache));
+            (dx, g)
+        })
+        .pop()
+        .unwrap();
+        assert_eq!(dx_joint, dx_split, "dx");
+        assert_grads_eq(&g_joint, &g_split);
+    }
+
+    #[test]
+    fn microbatched_wgrad_matches_full_batch_bitwise() {
+        // Forward/backward-dx each micro-batch separately, then one wgrad
+        // on the concatenated stashes/activations: weight grads must equal
+        // the unpipelined full-batch backward bit-for-bit (rows of a GEMM
+        // accumulate independently; column sums are per-column).
+        let mut cfg = tiny();
+        cfg.batch = 2; // two micro-batches of one sequence each
+        let dense = init_dense_blocks(&cfg, 12);
+        let rows = cfg.batch * cfg.seq;
+        let x = randt(&[rows, cfg.hidden], 13);
+        let dy = randt(&[rows, cfg.hidden], 14);
+        let p = dense[0].shard(&ShardSpec::seq());
+        let (p2, x2, dy2, cfg2) = (p.clone(), x.clone(), dy.clone(), cfg.clone());
+        let g_full = run_spmd(1, NetModel::zero(), move |_, ep| {
+            let ops = Seq::new();
+            let (_, cache) = block_fwd(ep, &ops, &p2, &x2, &cfg2);
+            block_bwd(ep, &ops, &p2, &cache, &dy2, &cfg2).1
+        })
+        .pop()
+        .unwrap();
+        let g_mb = run_spmd(1, NetModel::zero(), move |_, ep| {
+            let ops = Seq::new();
+            let half = rows / 2;
+            let mut caches = Vec::new();
+            let mut stashes = Vec::new();
+            let mut mb_cfg = cfg.clone();
+            mb_cfg.batch = 1;
+            for u in 0..2 {
+                let xu = x.block(u * half, 0, half, cfg.hidden).compact();
+                let dyu = dy.block(u * half, 0, half, cfg.hidden).compact();
+                let (_, cache) = block_fwd(ep, &ops, &p, &xu, &mb_cfg);
+                let (_, stash) = block_bwd_dx(ep, &ops, &p, &cache, &dyu, &mb_cfg);
+                caches.push(cache);
+                stashes.push(stash);
+            }
+            let acts = WgradActs::concat(&caches.iter().collect::<Vec<_>>());
+            let stash = BlockBwdStash::concat(&stashes);
+            block_wgrad(ep, &ops, &stash, &acts)
+        })
+        .pop()
+        .unwrap();
+        assert_grads_eq(&g_full, &g_mb);
     }
 
     #[test]

@@ -41,7 +41,9 @@
 pub mod attention;
 pub mod block;
 
-pub use block::{block_bwd, block_fwd, core_bwd, core_fwd};
+pub use block::{
+    block_bwd, block_bwd_dx, block_fwd, block_wgrad, core_bwd, core_fwd, BlockBwdStash, WgradActs,
+};
 
 use crate::comm::Endpoint;
 use crate::config::ModelConfig;
@@ -345,6 +347,46 @@ pub fn local_layernorm(
     }
     let y = xh.mul_row_vector(gamma).add_row_vector(beta);
     (y, xh, Tensor::from_vec(&[rows], istd))
+}
+
+/// The `dx` half of [`local_layernorm_backward`] on its own — the
+/// micro-batch pipelining path computes input gradients per micro-batch
+/// but parameter gradients once on the concatenated rows, so the two
+/// halves must be callable separately. The float operations here are a
+/// verbatim copy of the `dx` part of the joint routine (per-row
+/// accumulation order included), which is what keeps a pipelined backward
+/// bit-identical to the unpipelined one on replicated meshes.
+pub fn local_layernorm_backward_dx(
+    dy: &Tensor,
+    xhat: &Tensor,
+    inv_std: &Tensor,
+    gamma: &Tensor,
+) -> Tensor {
+    let (rows, cols) = dy.dims2();
+    if dy.is_phantom() || xhat.is_phantom() {
+        return Tensor::phantom(dy.shape());
+    }
+    let g = dy.mul_row_vector(gamma);
+    let gd = g.data();
+    let xd = xhat.data();
+    let istd = inv_std.data();
+    let n = cols as f32;
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let mut sum_g = 0.0f32;
+        let mut sum_gx = 0.0f32;
+        for c in 0..cols {
+            let idx = r * cols + c;
+            sum_g += gd[idx];
+            sum_gx += gd[idx] * xd[idx];
+        }
+        let c0 = istd[r] / n;
+        for c in 0..cols {
+            let idx = r * cols + c;
+            out[idx] = c0 * (n * gd[idx] - sum_g - xd[idx] * sum_gx);
+        }
+    }
+    Tensor::from_vec(dy.shape(), out)
 }
 
 /// Local layernorm backward: `(dx, dγ, dβ)`.

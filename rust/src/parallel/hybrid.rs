@@ -50,26 +50,43 @@ pub struct Hybrid {
 impl Hybrid {
     /// Build the leaf for `rank` of an `replicas × inner(edge)` mesh.
     pub fn for_kind(replicas: usize, inner: HybridInner, edge: usize, rank: usize) -> Hybrid {
+        Self::with_base(replicas, inner, edge, rank, 0)
+    }
+
+    /// Like [`Hybrid::for_kind`] but the whole hybrid mesh occupies global
+    /// ranks `base..base + replicas·iw` — the hook that lets a pipeline
+    /// stage embed a replica group anywhere in the rank space (the same
+    /// contract as the inner leaves' `with_base` constructors). `rank` is
+    /// hybrid-local; the endpoint's global rank must be `base + rank`.
+    pub fn with_base(
+        replicas: usize,
+        inner: HybridInner,
+        edge: usize,
+        rank: usize,
+        base: usize,
+    ) -> Hybrid {
         assert!(replicas >= 1, "hybrid needs at least one replica");
         let iw = inner.as_parallelism().world_size(edge);
         assert!(rank < replicas * iw);
         let replica = rank / iw;
         let inner_rank = rank % iw;
-        let base = replica * iw;
+        let inner_base = base + replica * iw;
         let inner_ops: Box<dyn ParallelOps> = match inner {
-            HybridInner::OneD => Box::new(Ctx1D::with_base(edge, inner_rank, base)),
-            HybridInner::TwoD => Box::new(Ctx2D::with_base(Mesh::new(edge), inner_rank, base)),
+            HybridInner::OneD => Box::new(Ctx1D::with_base(edge, inner_rank, inner_base)),
+            HybridInner::TwoD => {
+                Box::new(Ctx2D::with_base(Mesh::new(edge), inner_rank, inner_base))
+            }
             HybridInner::ThreeD => Box::new(Ctx3D::with_dirs_base(
                 Cube::new(edge),
                 inner_rank,
                 crate::dist::Dirs::canonical(),
-                base,
+                inner_base,
             )),
             HybridInner::TwoFiveD { depth } => {
-                Box::new(Ctx25D::with_base(edge, depth, inner_rank, base))
+                Box::new(Ctx25D::with_base(edge, depth, inner_rank, inner_base))
             }
         };
-        let replica_group = (0..replicas).map(|k| k * iw + inner_rank).collect();
+        let replica_group = (0..replicas).map(|k| base + k * iw + inner_rank).collect();
         let spec = ShardSpec::hybrid(replicas, mesh_for_inner(inner, edge), rank);
         Hybrid { inner: inner_ops, replica_group, spec }
     }
@@ -180,6 +197,52 @@ impl ParallelOps for Hybrid {
         let dg = dg.map(|g| self.grad_sync(ep, &g));
         let db = db.map(|b| self.grad_sync(ep, &b));
         (dx, dg, db)
+    }
+
+    // Split backward halves (micro-batch pipelining): input-grad halves
+    // delegate untouched — replicas never communicate on the activation
+    // path — and every weight/vector gradient gets the same replica
+    // `grad_sync` the joint methods apply.
+
+    fn linear_bwd_dx(&self, ep: &mut Endpoint, dy: &Tensor, w: &Tensor, stage: Stage) -> Tensor {
+        self.inner.linear_bwd_dx(ep, dy, w, stage)
+    }
+
+    fn linear_bwd_dw(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Option<Tensor>) {
+        let (dw, db) = self.inner.linear_bwd_dw(ep, dy, x, stage);
+        let dw = self.grad_sync(ep, &dw);
+        let db = db.map(|b| self.grad_sync(ep, &b));
+        (dw, db)
+    }
+
+    fn layernorm_backward_dx(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        hidden: usize,
+    ) -> Tensor {
+        self.inner.layernorm_backward_dx(ep, dy, xhat, inv_std, gamma, hidden)
+    }
+
+    fn layernorm_param_grads(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+    ) -> (Option<Tensor>, Option<Tensor>) {
+        let (dg, db) = self.inner.layernorm_param_grads(ep, dy, xhat);
+        let dg = dg.map(|g| self.grad_sync(ep, &g));
+        let db = db.map(|b| self.grad_sync(ep, &b));
+        (dg, db)
     }
 }
 

@@ -17,7 +17,10 @@
 //!   grids, weights depth-slabbed, one depth all-reduce per residual
 //!   branch;
 //! * [`hybrid::Hybrid`] — `r` data-parallel replicas wrapping any boxed
-//!   inner leaf, adding replica-group gradient all-reduces.
+//!   inner leaf, adding replica-group gradient all-reduces;
+//! * [`pipeline::Pipeline`] — `s` pipeline stages wrapping any boxed
+//!   inner leaf, splitting the layer stack and streaming `m`
+//!   micro-batches through stage-boundary point-to-point sends.
 //!
 //! The generic transformer block in [`crate::model::block`] is written
 //! against `&dyn ParallelOps` only; `crate::model::ParEnv` is the thin
@@ -27,9 +30,11 @@
 //!
 //! ## Adding a new parallelism
 //!
-//! A new decomposition is a *leaf*, not a fork. The two newest leaves are
-//! worked examples of the two shapes a leaf can take — a genuinely new
-//! mesh (2.5-D) and a wrapper around existing leaves (hybrid):
+//! A new decomposition is a *leaf*, not a fork. The three newest leaves
+//! are worked examples of the shapes a leaf can take — a genuinely new
+//! mesh (2.5-D), a wrapper around existing leaves (hybrid), and a
+//! wrapper that changes the *schedule* rather than the layout
+//! (pipeline):
 //!
 //! 1. **Layout** — add a [`crate::dist::MeshSpec`] arm and teach
 //!    [`crate::dist::ShardSpec`]'s `shard_*`/`assemble_*` methods where
@@ -70,6 +75,39 @@
 //!    pin the formula against the phantom-mode ledger like
 //!    `mm25d_fwd_bytes_match_engine_ledger_exactly` does.
 //!
+//! *Pipeline example* (the third worked example — a **schedule**
+//! wrapper): [`pipeline::Pipeline`] boxes an inner leaf built at rank
+//! base `stage·inner_world` — the same `with_base` hook the hybrid
+//! wrapper uses — and overrides nothing about the math. What it changes
+//! is the *step*: [`pipeline::pipeline_core_step`] slices the batch into
+//! `m` micro-batches, runs this stage's contiguous slice of the layer
+//! stack per micro-batch, and moves only the stage-boundary activation
+//! (forward) and its gradient (backward) point-to-point between stage
+//! groups. Two things made this possible without forking the block:
+//! the split-backward trait halves (`linear_bwd_dx`/`linear_bwd_dw`,
+//! `layernorm_backward_dx`/`layernorm_param_grads`) so weight gradients
+//! are computed once on the micro-batches' concatenated rows (bitwise
+//! equal to the unpipelined full-batch gradients — per-micro-batch dW
+//! sums would reorder float additions), and a `gather_activation`
+//! override that gathers over the *stage group* instead of the world
+//! (the default would deadlock across stages). The schedule cost is the
+//! GPipe flush bubble, mirrored in closed form by
+//! `crate::costmodel::pipeline_bubble_fraction`:
+//!
+//! | stages s | micro-batches m | bubble (s−1)/(m+s−1) |
+//! |----------|-----------------|----------------------|
+//! | 2        | 4               | 0.20                 |
+//! | 2        | 8               | 0.11                 |
+//! | 4        | 4               | 0.43                 |
+//! | 4        | 16              | 0.16                 |
+//! | 8        | 32              | 0.18                 |
+//!
+//! More micro-batches shrink the bubble but also shrink each
+//! micro-batch's GEMMs (and grow the activation stash: `m` caches live
+//! simultaneously); more stages cut per-rank weight memory `1/s` but
+//! deepen the bubble. `cubic plan` ranks these trade-offs against the
+//! pure tensor meshes honestly (the `bubble` column at `--world N`).
+//!
 //! ## Conventions shared by all implementations
 //!
 //! * Activations enter every block in the mesh's *entry layout*
@@ -85,6 +123,7 @@
 
 pub mod hybrid;
 pub mod oned;
+pub mod pipeline;
 pub mod seq;
 pub mod threed;
 pub mod twod;
@@ -194,6 +233,64 @@ pub trait ParallelOps: Send + Sync {
         hidden: usize,
     ) -> (Tensor, Option<Tensor>, Option<Tensor>);
 
+    // --- split backward halves (micro-batch pipelining) --------------
+    //
+    // A pipelined backward runs the *input*-gradient chain once per
+    // micro-batch but computes *parameter* gradients once, on the rows of
+    // all micro-batches concatenated in order — that is what keeps the
+    // accumulated gradients bit-identical to the unpipelined full-batch
+    // run (per-micro-batch dW sums would reorder float additions).
+    // These four methods split `linear_bwd` / `layernorm_backward` into
+    // exactly those halves. Defaults cover the meshes whose parameter
+    // gradients need no extra communication (Seq, 1-D); meshes that
+    // reduce vector grads to owner subsets (2-D, 2.5-D, 3-D) and the
+    // hybrid wrapper (replica grad sync) override the parameter halves.
+
+    /// `dX = dY·Wᵀ` of a stage linear — [`ParallelOps::linear_bwd`]
+    /// without the weight/bias gradients.
+    fn linear_bwd_dx(&self, ep: &mut Endpoint, dy: &Tensor, w: &Tensor, stage: Stage) -> Tensor {
+        self.matmul_nt(ep, dy, w, stage)
+    }
+
+    /// `(dW, db)` of a stage linear — [`ParallelOps::linear_bwd`] without
+    /// the input gradient. `db` is `Some` exactly on bias-owning ranks.
+    fn linear_bwd_dw(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Option<Tensor>) {
+        let dw = self.matmul_tn(ep, x, dy, stage);
+        ep.charge_memop(dy.nominal_bytes() as f64);
+        (dw, Some(dy.sum_rows()))
+    }
+
+    /// The `dx` half of [`ParallelOps::layernorm_backward`].
+    #[allow(clippy::too_many_arguments)]
+    fn layernorm_backward_dx(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        _hidden: usize,
+    ) -> Tensor {
+        seq::replicated_layernorm_backward_dx(ep, dy, xhat, inv_std, gamma)
+    }
+
+    /// The `(dγ, dβ)` half of [`ParallelOps::layernorm_backward`], with
+    /// the vector grads `Some` exactly on γ/β-owning ranks.
+    fn layernorm_param_grads(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+    ) -> (Option<Tensor>, Option<Tensor>) {
+        seq::replicated_layernorm_param_grads(ep, dy, xhat)
+    }
+
     // --- provided: layout plumbing derived from the spec -------------
 
     fn kind(&self) -> Parallelism {
@@ -282,6 +379,9 @@ pub fn ops_for(par: Parallelism, edge: usize, rank: usize) -> Box<dyn ParallelOp
         Parallelism::TwoFiveD { depth } => Box::new(twofived::Ctx25D::new(edge, depth, rank)),
         Parallelism::Hybrid { replicas, inner } => {
             Box::new(hybrid::Hybrid::for_kind(replicas, inner, edge, rank))
+        }
+        Parallelism::Pipeline { stages, micro_batches, inner } => {
+            Box::new(pipeline::Pipeline::for_kind(stages, micro_batches, inner, edge, rank))
         }
     }
 }

@@ -1,0 +1,651 @@
+//! Pipeline parallelism: `s` stages wrapping any boxed inner tensor mesh.
+//!
+//! This is the second wrapper leaf (after [`crate::parallel::hybrid`]) and
+//! the first that changes the *schedule* rather than the layout: the layer
+//! stack splits into `s` contiguous stages, each stage group runs the
+//! unchanged inner mesh on its slice, and the batch streams through as `m`
+//! micro-batches. The only new communication is point-to-point: each
+//! micro-batch's stage-boundary activation moves forward one hop
+//! ([`PIPE_TAG`] kind 0), its gradient moves backward one hop (kind 2),
+//! and the full model output / embedding gradient are relayed once per
+//! step (kinds 1 and 3) so the replicated head/loss and embedding backward
+//! run bit-identically on every rank.
+//!
+//! ## Bit-exactness
+//!
+//! The pipelined step is **bitwise identical** to the unpipelined run of
+//! the same inner mesh on the same global batch (pinned by
+//! `rust/tests/model_parity.rs`):
+//!
+//! * forward/backward-`dx` per micro-batch touch disjoint row ranges, and
+//!   every row-wise op (GEMM rows, layernorm rows, per-sequence attention)
+//!   is independent across rows — `config::validate` requires
+//!   `batch % micro_batches == 0`, so micro-batches hold whole sequences;
+//! * weight gradients are computed **once** per layer on the
+//!   micro-batches' rows concatenated in order ([`crate::model::block_wgrad`]
+//!   at the flush), not accumulated per micro-batch — per-micro-batch `dW`
+//!   sums would reorder float additions.
+//!
+//! ## Schedule
+//!
+//! [`pipeline_core_step`] runs a GPipe-style flush schedule: all `m`
+//! forward micro-batches, then all `m` backwards in reverse order, then
+//! the weight-gradient flush. On the virtual clock this has the classic
+//! bubble fraction `(s−1)/(m+s−1)` (mirrored in closed form by
+//! `crate::costmodel::pipeline_bubble_fraction` and pinned bitwise against
+//! the engine clock). The steady-state portion is exactly 1F1B's: with the
+//! backward sweep in reverse micro-batch order, stage `k` starts its first
+//! backward as soon as stage `k+1` finishes it, so no extra memory or time
+//! is spent versus the 1F1B ordering at the same `m` — the stash high-water
+//! mark is `m` caches per stage either way (documented trade-off table in
+//! [`crate::parallel`]).
+
+use crate::collectives::all_gather;
+use crate::comm::Endpoint;
+use crate::config::ModelConfig;
+use crate::dist::{mesh_for_pipeline_inner, ShardSpec, Stage};
+use crate::model::{
+    block_bwd_dx, block_wgrad, core_fwd, BlockBwdStash, BlockCache, BlockTensors, WgradActs,
+};
+use crate::parallel::{
+    hybrid::Hybrid, oned::Ctx1D, threed::Ctx3D, twod::Ctx2D, twofived::Ctx25D, ParallelOps,
+};
+use crate::tensor::Tensor;
+use crate::topology::{Cube, Mesh, PipelineInner};
+
+/// Tag namespace for pipeline point-to-point traffic (disjoint from the
+/// collective sequence tags and the checkpoint-donation tag).
+pub const PIPE_TAG: u64 = 0xF1F0_0000_0000_0000;
+
+/// Message kinds within [`PIPE_TAG`]: `0` forward boundary activation,
+/// `1` model-output relay, `2` backward boundary gradient, `3` embedding
+/// gradient relay. `u` is the micro-batch (kinds 0/2) or the receiving
+/// stage (kinds 1/3).
+fn tag(kind: u64, u: usize) -> u64 {
+    PIPE_TAG | (kind << 32) | u as u64
+}
+
+/// `s` pipeline stages wrapping a boxed inner tensor-mesh leaf.
+///
+/// All math delegates to the inner leaf (built with a rank base of
+/// `stage·inner_world`, the same `with_base` hook the hybrid wrapper
+/// uses); the one override is [`ParallelOps::gather_activation`], which
+/// gathers over the *stage group* instead of the world — the default
+/// world-wide all-gather would deadlock across stages that are busy with
+/// different micro-batches.
+pub struct Pipeline {
+    inner: Box<dyn ParallelOps>,
+    stage: usize,
+    stages: usize,
+    micro_batches: usize,
+    inner_world: usize,
+    inner_rank: usize,
+    spec: ShardSpec,
+}
+
+impl Pipeline {
+    /// Build the leaf for `rank` of a `stages × inner(edge)` mesh.
+    pub fn for_kind(
+        stages: usize,
+        micro_batches: usize,
+        inner: PipelineInner,
+        edge: usize,
+        rank: usize,
+    ) -> Pipeline {
+        assert!(stages >= 1, "pipeline needs at least one stage");
+        assert!(micro_batches >= 1, "pipeline needs at least one micro-batch");
+        let iw = inner.as_parallelism().world_size(edge);
+        assert!(rank < stages * iw);
+        let stage = rank / iw;
+        let inner_rank = rank % iw;
+        let base = stage * iw;
+        let inner_ops: Box<dyn ParallelOps> = match inner {
+            PipelineInner::OneD => Box::new(Ctx1D::with_base(edge, inner_rank, base)),
+            PipelineInner::TwoD => {
+                Box::new(Ctx2D::with_base(Mesh::new(edge), inner_rank, base))
+            }
+            PipelineInner::ThreeD => Box::new(Ctx3D::with_dirs_base(
+                Cube::new(edge),
+                inner_rank,
+                crate::dist::Dirs::canonical(),
+                base,
+            )),
+            PipelineInner::TwoFiveD { depth } => {
+                Box::new(Ctx25D::with_base(edge, depth, inner_rank, base))
+            }
+            PipelineInner::Hybrid { replicas, inner } => {
+                Box::new(Hybrid::with_base(replicas, inner, edge, inner_rank, base))
+            }
+        };
+        let spec = ShardSpec::pipeline(
+            stages,
+            micro_batches,
+            mesh_for_pipeline_inner(inner, edge),
+            rank,
+        );
+        Pipeline {
+            inner: inner_ops,
+            stage,
+            stages,
+            micro_batches,
+            inner_world: iw,
+            inner_rank,
+            spec,
+        }
+    }
+
+    pub fn stage(&self) -> usize {
+        self.stage
+    }
+
+    pub fn stages(&self) -> usize {
+        self.stages
+    }
+
+    pub fn micro_batches(&self) -> usize {
+        self.micro_batches
+    }
+
+    pub fn inner_world(&self) -> usize {
+        self.inner_world
+    }
+
+    /// First global rank of this rank's stage group.
+    pub fn base(&self) -> usize {
+        self.stage * self.inner_world
+    }
+
+    /// Global layer indices this stage owns: the `stage`-th of `s`
+    /// contiguous slices (`config::validate` requires `layers % s == 0`).
+    pub fn layer_range(&self, layers: usize) -> std::ops::Range<usize> {
+        assert_eq!(
+            layers % self.stages,
+            0,
+            "layers {layers} must divide into {} pipeline stages",
+            self.stages
+        );
+        let per = layers / self.stages;
+        self.stage * per..(self.stage + 1) * per
+    }
+}
+
+impl ParallelOps for Pipeline {
+    fn spec(&self) -> &ShardSpec {
+        &self.spec
+    }
+
+    fn matmul_nn(&self, ep: &mut Endpoint, x: &Tensor, w: &Tensor, stage: Stage) -> Tensor {
+        self.inner.matmul_nn(ep, x, w, stage)
+    }
+
+    fn matmul_nt(&self, ep: &mut Endpoint, dy: &Tensor, w: &Tensor, stage: Stage) -> Tensor {
+        self.inner.matmul_nt(ep, dy, w, stage)
+    }
+
+    fn matmul_tn(&self, ep: &mut Endpoint, x: &Tensor, dy: &Tensor, stage: Stage) -> Tensor {
+        self.inner.matmul_tn(ep, x, dy, stage)
+    }
+
+    fn matmul_nn_backward(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        w: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Tensor) {
+        self.inner.matmul_nn_backward(ep, dy, x, w, stage)
+    }
+
+    fn linear_fwd(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        w: &Tensor,
+        b: Option<&Tensor>,
+        stage: Stage,
+    ) -> Tensor {
+        self.inner.linear_fwd(ep, x, w, b, stage)
+    }
+
+    fn linear_bwd(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        w: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Tensor, Option<Tensor>) {
+        self.inner.linear_bwd(ep, dy, x, w, stage)
+    }
+
+    fn vec_op(&self, ep: &mut Endpoint, a: &Tensor, v: Option<&Tensor>, mul: bool) -> Tensor {
+        self.inner.vec_op(ep, a, v, mul)
+    }
+
+    fn layernorm(
+        &self,
+        ep: &mut Endpoint,
+        x: &Tensor,
+        gamma: Option<&Tensor>,
+        beta: Option<&Tensor>,
+        eps: f32,
+        hidden: usize,
+    ) -> (Tensor, Tensor, Tensor) {
+        self.inner.layernorm(ep, x, gamma, beta, eps, hidden)
+    }
+
+    fn layernorm_backward(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        hidden: usize,
+    ) -> (Tensor, Option<Tensor>, Option<Tensor>) {
+        self.inner.layernorm_backward(ep, dy, xhat, inv_std, gamma, hidden)
+    }
+
+    fn linear_bwd_dx(&self, ep: &mut Endpoint, dy: &Tensor, w: &Tensor, stage: Stage) -> Tensor {
+        self.inner.linear_bwd_dx(ep, dy, w, stage)
+    }
+
+    fn linear_bwd_dw(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Option<Tensor>) {
+        self.inner.linear_bwd_dw(ep, dy, x, stage)
+    }
+
+    fn layernorm_backward_dx(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        hidden: usize,
+    ) -> Tensor {
+        self.inner.layernorm_backward_dx(ep, dy, xhat, inv_std, gamma, hidden)
+    }
+
+    fn layernorm_param_grads(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+    ) -> (Option<Tensor>, Option<Tensor>) {
+        self.inner.layernorm_param_grads(ep, dy, xhat)
+    }
+
+    /// Gather over the **stage group** (`base..base+iw`), not the world:
+    /// other stage groups are running different micro-batches, so the
+    /// default world-wide all-gather would deadlock. Assembly uses the
+    /// inner spec — stage groups are layout-identical activation replicas.
+    fn gather_activation(
+        &self,
+        ep: &mut Endpoint,
+        local: &Tensor,
+        rows: usize,
+        cols: usize,
+    ) -> Tensor {
+        let ispec = self.inner.spec();
+        if !ispec.shards_activation() {
+            return local.clone();
+        }
+        let group: Vec<usize> = (self.base()..self.base() + self.inner_world).collect();
+        let parts = all_gather(ep, &group, local);
+        if parts.iter().any(|p| p.is_phantom()) {
+            return Tensor::phantom(&[rows, cols]);
+        }
+        let mut out = ep.pooled_tensor(&[rows, cols]);
+        ispec.assemble_activation_into(&parts, rows, cols, &mut out);
+        out
+    }
+}
+
+/// Everything one pipelined core step produces on this rank.
+pub struct PipelineOutput {
+    /// Full model output `(batch·seq, hidden)` — identical on all ranks.
+    pub y_full: Tensor,
+    /// Full embedding gradient — identical on all ranks.
+    pub dx_full: Tensor,
+    /// Per-local-layer weight gradients (forward layer order, this
+    /// stage's slice only).
+    pub grads: Vec<BlockTensors>,
+    /// Virtual clock right after `y_full` is available on this rank —
+    /// the forward/backward split point for per-phase timing.
+    pub fwd_done_clock: f64,
+}
+
+/// Phantom-aware contiguous row slice `[r0, r0+rows)` of a 2-D tensor.
+fn row_slice(t: &Tensor, r0: usize, rows: usize) -> Tensor {
+    let cols = t.dims2().1;
+    if t.is_phantom() {
+        return Tensor::phantom(&[rows, cols]);
+    }
+    t.block(r0, 0, rows, cols).compact()
+}
+
+/// The weight-gradient flush: one [`block_wgrad`] per local layer (reverse
+/// layer order, mirroring the joint backward) over the micro-batches' rows
+/// concatenated in order. Consumes the stashes.
+fn wgrad_flush(
+    ep: &mut Endpoint,
+    ops: &Pipeline,
+    blocks: &[BlockTensors],
+    stashes: &mut [Vec<Option<BlockBwdStash>>],
+    caches: &[Vec<BlockCache>],
+) -> Vec<BlockTensors> {
+    let mut grads: Vec<Option<BlockTensors>> = (0..blocks.len()).map(|_| None).collect();
+    for l in (0..blocks.len()).rev() {
+        let layer: Vec<BlockBwdStash> = stashes[l]
+            .iter_mut()
+            .map(|s| s.take().expect("every micro-batch must have stashed layer grads"))
+            .collect();
+        let stash = BlockBwdStash::concat(&layer);
+        let cache_refs: Vec<&BlockCache> = caches.iter().map(|mb| &mb[l]).collect();
+        let acts = WgradActs::concat(&cache_refs);
+        grads[l] = Some(block_wgrad(ep, ops, &stash, &acts));
+        ep.drain_ready();
+    }
+    grads.into_iter().map(|g| g.expect("flushed every layer")).collect()
+}
+
+/// One pipelined forward + backward over this stage's `blocks` (the
+/// stage's contiguous slice of the layer stack, already sharded by the
+/// inner mesh).
+///
+/// `x_global` is the full embedding output `(batch·seq, hidden)` — every
+/// rank holds it (the embedding, like the head, is replicated and outside
+/// the parallelized region). `head` maps the full model output to the full
+/// loss gradient; it runs on **every** rank with the bit-identical
+/// `y_full`, so its outputs (and any losses it records) agree across
+/// ranks without further communication.
+///
+/// Returns the full output, full embedding gradient, and this stage's
+/// weight gradients. Deferred collectives issued by the inner mesh (hybrid
+/// replica syncs) may still be in flight — the caller joins at the
+/// optimizer boundary, same as the unpipelined path.
+pub fn pipeline_core_step(
+    ep: &mut Endpoint,
+    ops: &Pipeline,
+    blocks: &[BlockTensors],
+    x_global: &Tensor,
+    cfg: &ModelConfig,
+    head: &mut dyn FnMut(&mut Endpoint, &Tensor) -> Tensor,
+) -> PipelineOutput {
+    let s = ops.stages;
+    let m = ops.micro_batches;
+    let stage = ops.stage;
+    let iw = ops.inner_world;
+    let ir = ops.inner_rank;
+    let (rows, cols) = x_global.dims2();
+    assert_eq!(rows % m, 0, "activation rows must divide into micro-batches");
+    let mb_rows = rows / m;
+    let next_peer = (stage + 1) * iw + ir; // valid when stage + 1 < s
+    let prev_peer = if stage > 0 { (stage - 1) * iw + ir } else { usize::MAX };
+
+    // --- forward: stream micro-batches through the stage chain --------
+    let mut caches: Vec<Vec<BlockCache>> = Vec::with_capacity(m);
+    let mut y_parts: Vec<Tensor> = Vec::with_capacity(m);
+    for u in 0..m {
+        let x_loc = if stage == 0 {
+            let xu = row_slice(x_global, u * mb_rows, mb_rows);
+            ops.scatter_activation(ep, &xu)
+        } else {
+            ep.recv(prev_peer, tag(0, u))
+        };
+        let (y_loc, cache) = core_fwd(ep, ops, blocks, &x_loc, cfg);
+        caches.push(cache);
+        if stage + 1 < s {
+            ep.send_owned(next_peer, tag(0, u), y_loc);
+        } else {
+            y_parts.push(ops.gather_activation(ep, &y_loc, mb_rows, cols));
+        }
+    }
+
+    // --- output relay: the last stage owns the only full y ------------
+    let y_full = if stage + 1 == s {
+        let y = Tensor::concat_rows(&y_parts);
+        for k in 0..s - 1 {
+            ep.send(k * iw + ir, tag(1, k), &y);
+        }
+        y
+    } else {
+        ep.recv((s - 1) * iw + ir, tag(1, stage))
+    };
+    let fwd_done_clock = ep.clock;
+
+    // Head/loss on the full output — replicated, bit-identical per rank.
+    let dy_full = head(ep, &y_full);
+
+    // --- backward: reverse micro-batch order, dx chains backward ------
+    let mut dx_parts: Vec<Option<Tensor>> = (0..m).map(|_| None).collect();
+    let mut stashes: Vec<Vec<Option<BlockBwdStash>>> =
+        blocks.iter().map(|_| (0..m).map(|_| None).collect()).collect();
+    for u in (0..m).rev() {
+        let mut cur = if stage + 1 == s {
+            let dyu = row_slice(&dy_full, u * mb_rows, mb_rows);
+            ops.scatter_activation(ep, &dyu)
+        } else {
+            ep.recv(next_peer, tag(2, u))
+        };
+        for l in (0..blocks.len()).rev() {
+            let (dx, stash) = block_bwd_dx(ep, ops, &blocks[l], &caches[u][l], &cur, cfg);
+            stashes[l][u] = Some(stash);
+            cur = dx;
+            ep.drain_ready();
+        }
+        if stage > 0 {
+            ep.send_owned(prev_peer, tag(2, u), cur);
+        } else {
+            dx_parts[u] = Some(ops.gather_activation(ep, &cur, mb_rows, cols));
+        }
+    }
+
+    // --- embedding-gradient relay + weight-gradient flush -------------
+    // Stage 0 sends the relay first so later stages can overlap their
+    // flush with the transfer; sends never block, so ordering is free.
+    let (dx_full, grads) = if stage == 0 {
+        let parts: Vec<Tensor> = dx_parts
+            .into_iter()
+            .map(|p| p.expect("stage 0 gathered every micro-batch"))
+            .collect();
+        let dxf = Tensor::concat_rows(&parts);
+        for k in 1..s {
+            ep.send(k * iw + ir, tag(3, k), &dxf);
+        }
+        let grads = wgrad_flush(ep, ops, blocks, &mut stashes, &caches);
+        (dxf, grads)
+    } else {
+        let grads = wgrad_flush(ep, ops, blocks, &mut stashes, &caches);
+        let dxf = ep.recv(ir, tag(3, stage));
+        (dxf, grads)
+    };
+
+    PipelineOutput { y_full, dx_full, grads, fwd_done_clock }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::NetModel;
+    use crate::model::{block_bwd, core_bwd, init_dense_blocks, ParEnv};
+    use crate::rng::Xoshiro256;
+    use crate::spmd::run_spmd;
+    use crate::topology::Parallelism;
+
+    fn randt(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        Tensor::randn(shape, 1.0, &mut rng)
+    }
+
+    fn assert_grads_eq(a: &BlockTensors, b: &BlockTensors, what: &str) {
+        assert_eq!(a.w_qkv, b.w_qkv, "{what} w_qkv");
+        assert_eq!(a.b_qkv, b.b_qkv, "{what} b_qkv");
+        assert_eq!(a.w_proj, b.w_proj, "{what} w_proj");
+        assert_eq!(a.b_proj, b.b_proj, "{what} b_proj");
+        assert_eq!(a.w_fc1, b.w_fc1, "{what} w_fc1");
+        assert_eq!(a.b_fc1, b.b_fc1, "{what} b_fc1");
+        assert_eq!(a.w_fc2, b.w_fc2, "{what} w_fc2");
+        assert_eq!(a.b_fc2, b.b_fc2, "{what} b_fc2");
+        assert_eq!(a.ln1_g, b.ln1_g, "{what} ln1_g");
+        assert_eq!(a.ln1_b, b.ln1_b, "{what} ln1_b");
+        assert_eq!(a.ln2_g, b.ln2_g, "{what} ln2_g");
+        assert_eq!(a.ln2_b, b.ln2_b, "{what} ln2_b");
+    }
+
+    /// Reference run: the same inner mesh, unpipelined, full batch.
+    fn reference_oned(
+        edge: usize,
+        cfg: &ModelConfig,
+        x: &Tensor,
+    ) -> Vec<(Tensor, Tensor, Vec<BlockTensors>)> {
+        let dense = init_dense_blocks(cfg, 42);
+        let (cfg2, x2) = (cfg.clone(), x.clone());
+        run_spmd(edge, NetModel::zero(), move |rank, ep| {
+            let env = ParEnv::new(Parallelism::OneD, edge, rank);
+            let ops = env.ops();
+            let blocks: Vec<BlockTensors> = dense.iter().map(|d| ops.shard_block(d)).collect();
+            let (rows, cols) = x2.dims2();
+            let x_loc = ops.scatter_activation(ep, &x2);
+            let (y_loc, caches) = crate::model::core_fwd(ep, ops, &blocks, &x_loc, &cfg2);
+            let y_full = ops.gather_activation(ep, &y_loc, rows, cols);
+            let dy_full = y_full.scale(0.5);
+            let dy_loc = ops.scatter_activation(ep, &dy_full);
+            let (dx_loc, grads) = core_bwd(ep, ops, &blocks, &caches, &dy_loc, &cfg2);
+            let dx_full = ops.gather_activation(ep, &dx_loc, rows, cols);
+            ep.join_all();
+            (y_full, dx_full, grads)
+        })
+    }
+
+    /// Pipelined run over the same inner mesh and global batch.
+    fn pipelined_oned(
+        stages: usize,
+        micro_batches: usize,
+        edge: usize,
+        cfg: &ModelConfig,
+        x: &Tensor,
+    ) -> Vec<(usize, Tensor, Tensor, Vec<BlockTensors>)> {
+        let dense = init_dense_blocks(cfg, 42);
+        let world = stages * edge;
+        let (cfg2, x2) = (cfg.clone(), x.clone());
+        run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let ops = Pipeline::for_kind(stages, micro_batches, PipelineInner::OneD, edge, rank);
+            let range = ops.layer_range(cfg2.layers);
+            let blocks: Vec<BlockTensors> =
+                dense[range.clone()].iter().map(|d| ops.shard_block(d)).collect();
+            let out = pipeline_core_step(
+                ep,
+                &ops,
+                &blocks,
+                &x2,
+                &cfg2,
+                &mut |_ep, y| y.scale(0.5),
+            );
+            ep.join_all();
+            (range.start, out.y_full, out.dx_full, out.grads)
+        })
+    }
+
+    #[test]
+    fn pipeline_matches_unpipelined_inner_bitwise() {
+        // Pipeline(2 stages, 2 micro-batches, 1-D p=2) at world 4 must be
+        // bitwise identical — output, embedding gradient, and every weight
+        // gradient — to the unpipelined 1-D p=2 run on the same global
+        // batch. This is the leaf's headline invariant.
+        let cfg = ModelConfig::tiny(); // layers=2, batch=4
+        let x = randt(&[cfg.batch * cfg.seq, cfg.hidden], 7);
+        let reference = reference_oned(2, &cfg, &x);
+        let pipelined = pipelined_oned(2, 2, 2, &cfg, &x);
+        for (rank, (layer0, y, dx, grads)) in pipelined.iter().enumerate() {
+            let inner_rank = rank % 2;
+            let (ref_y, ref_dx, ref_grads) = &reference[inner_rank];
+            assert_eq!(y, ref_y, "rank {rank} y_full");
+            assert_eq!(dx, ref_dx, "rank {rank} dx_full");
+            for (l, g) in grads.iter().enumerate() {
+                assert_grads_eq(g, &ref_grads[layer0 + l], &format!("rank {rank} layer"));
+            }
+        }
+    }
+
+    #[test]
+    fn micro_batch_count_does_not_change_results() {
+        // m=1 (no micro-batching) and m=4 slice the same rows differently
+        // but must produce bitwise identical outputs and gradients.
+        let cfg = ModelConfig::tiny();
+        let x = randt(&[cfg.batch * cfg.seq, cfg.hidden], 8);
+        let m1 = pipelined_oned(2, 1, 2, &cfg, &x);
+        let m4 = pipelined_oned(2, 4, 2, &cfg, &x);
+        for (a, b) in m1.iter().zip(m4.iter()) {
+            assert_eq!(a.1, b.1, "y_full");
+            assert_eq!(a.2, b.2, "dx_full");
+            for (ga, gb) in a.3.iter().zip(b.3.iter()) {
+                assert_grads_eq(ga, gb, "m1 vs m4");
+            }
+        }
+    }
+
+    #[test]
+    fn single_stage_pipeline_matches_joint_backward() {
+        // s=1 degenerates to micro-batched execution without any p2p; it
+        // must still match the joint (block_bwd) full-batch run bitwise.
+        let cfg = ModelConfig::tiny();
+        let x = randt(&[cfg.batch * cfg.seq, cfg.hidden], 9);
+        let dense = init_dense_blocks(&cfg, 42);
+        let (cfg2, x2, dense2) = (cfg.clone(), x.clone(), dense.clone());
+        let joint = run_spmd(1, NetModel::zero(), move |_, ep| {
+            let env = ParEnv::seq();
+            let ops = env.ops();
+            let blocks: Vec<BlockTensors> =
+                dense2.iter().map(|d| ops.shard_block(d)).collect();
+            let (y, caches) = crate::model::core_fwd(ep, ops, &blocks, &x2, &cfg2);
+            let dy = y.scale(0.5);
+            let mut grads = Vec::new();
+            let mut cur = dy;
+            for (p, c) in blocks.iter().zip(caches.iter()).rev() {
+                let (dx, g) = block_bwd(ep, ops, p, c, &cur, &cfg2);
+                grads.push(g);
+                cur = dx;
+            }
+            grads.reverse();
+            (y, cur, grads)
+        })
+        .pop()
+        .unwrap();
+        let piped = pipelined_oned(1, 2, 1, &cfg, &x).pop().unwrap();
+        assert_eq!(piped.1, joint.0, "y_full");
+        assert_eq!(piped.2, joint.1, "dx_full");
+        for (g, gr) in piped.3.iter().zip(joint.2.iter()) {
+            assert_grads_eq(g, gr, "s=1");
+        }
+    }
+
+    #[test]
+    fn stage_geometry_and_layer_ranges() {
+        let p = Pipeline::for_kind(4, 8, PipelineInner::OneD, 2, 5);
+        assert_eq!(p.stage(), 2);
+        assert_eq!(p.base(), 4);
+        assert_eq!(p.inner_world(), 2);
+        assert_eq!(p.layer_range(8), 4..6);
+        assert_eq!(p.kind().world_size(2), 8);
+        let ph = Pipeline::for_kind(
+            2,
+            4,
+            PipelineInner::Hybrid {
+                replicas: 2,
+                inner: crate::topology::HybridInner::OneD,
+            },
+            2,
+            6,
+        );
+        assert_eq!(ph.stage(), 1);
+        assert_eq!(ph.inner_world(), 4);
+    }
+}

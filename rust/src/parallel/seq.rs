@@ -11,7 +11,7 @@
 
 use crate::comm::Endpoint;
 use crate::dist::{ShardSpec, Stage};
-use crate::model::{local_layernorm, local_layernorm_backward};
+use crate::model::{local_layernorm, local_layernorm_backward, local_layernorm_backward_dx};
 use crate::parallel::ParallelOps;
 use crate::tensor::Tensor;
 
@@ -81,6 +81,32 @@ pub(crate) fn replicated_layernorm_backward(
     ep.charge_memop(4.0 * dy.nominal_bytes() as f64);
     let (dx, dg, db) = local_layernorm_backward(dy, xhat, inv_std, req(gamma, "ln γ"));
     (dx, Some(dg), Some(db))
+}
+
+/// The `dx` half of [`replicated_layernorm_backward`] on its own — the
+/// default [`ParallelOps::layernorm_backward_dx`] for replicated meshes
+/// (Seq, 1-D). Bit-identical `dx` to the joint routine.
+pub(crate) fn replicated_layernorm_backward_dx(
+    ep: &mut Endpoint,
+    dy: &Tensor,
+    xhat: &Tensor,
+    inv_std: &Tensor,
+    gamma: Option<&Tensor>,
+) -> Tensor {
+    ep.charge_memop(4.0 * dy.nominal_bytes() as f64);
+    local_layernorm_backward_dx(dy, xhat, inv_std, req(gamma, "ln γ"))
+}
+
+/// The `(dγ, dβ)` half of [`replicated_layernorm_backward`] — the same
+/// `dy ⊙ xhat` / plain column sums the joint routine computes, so grads
+/// from concatenated micro-batch rows are bit-identical to full-batch.
+pub(crate) fn replicated_layernorm_param_grads(
+    ep: &mut Endpoint,
+    dy: &Tensor,
+    xhat: &Tensor,
+) -> (Option<Tensor>, Option<Tensor>) {
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+    (Some(dy.mul(xhat).sum_rows()), Some(dy.sum_rows()))
 }
 
 impl ParallelOps for Seq {

@@ -657,6 +657,60 @@ pub fn layernorm_backward(
     (dx, dgamma, dbeta)
 }
 
+/// The `dx` half of [`layernorm_backward`] on its own — the micro-batch
+/// pipelining path. The float operations duplicate the joint routine's
+/// `dx` part verbatim (γ materialization, stacked-stats all-reduce over
+/// the dC line, per-row VJP loop); the joint path is deliberately left
+/// untouched so its clock charges stay bit-stable for the costmodel pins.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_backward_dx(
+    ep: &mut Endpoint,
+    ctx: &Ctx3D,
+    dy: &Tensor,
+    xhat: &Tensor,
+    inv_std: &Tensor,
+    gamma_chunk: Option<&Tensor>,
+    dirs: Dirs,
+    n_global_cols: usize,
+) -> Tensor {
+    let (rows, cols) = dy.dims2();
+    let gamma_full = gather_vec(ep, ctx, gamma_chunk, dirs);
+    let g = dy.mul_row_vector(&gamma_full);
+    ep.charge_memop(3.0 * dy.nominal_bytes() as f64);
+    let line_c = ctx.line(dirs.c);
+    let stats = if g.is_phantom() || xhat.is_phantom() {
+        Tensor::phantom(&[2, rows])
+    } else {
+        let mut s = Tensor::zeros(&[2, rows]);
+        s.set_block(0, 0, &g.sum_cols().reshape(&[1, rows]));
+        s.set_block(1, 0, &g.mul(xhat).sum_cols().reshape(&[1, rows]));
+        s
+    };
+    let stats = crate::collectives::all_reduce(ep, &line_c, &stats);
+    let n = n_global_cols as f32;
+    let dx = if g.is_phantom() || stats.is_phantom() || inv_std.is_phantom() {
+        Tensor::phantom(dy.shape())
+    } else {
+        let sd = stats.data();
+        let istd = inv_std.data();
+        let gd = g.data();
+        let xd = xhat.data();
+        let mut out = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            let sum_g = sd[r];
+            let sum_gx = sd[rows + r];
+            let c0 = istd[r] / n;
+            for c in 0..cols {
+                let idx = r * cols + c;
+                out[idx] = c0 * (n * gd[idx] - sum_g - xd[idx] * sum_gx);
+            }
+        }
+        Tensor::from_vec(&[rows, cols], out)
+    };
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+    dx
+}
+
 /// The paper's semantics for the trait: a `stage` linear is Algorithm 1
 /// under [`Ctx3D::stage_dirs`] with its bias applied by Algorithm 7 under
 /// the *output* directions; backward is Algorithm 8 then Algorithm 2 (the
@@ -746,6 +800,52 @@ impl ParallelOps for Ctx3D {
         hidden: usize,
     ) -> (Tensor, Option<Tensor>, Option<Tensor>) {
         layernorm_backward(ep, self, dy, xhat, inv_std, gamma, self.d0, hidden)
+    }
+
+    // Split backward halves (micro-batch pipelining). `linear_bwd_dx`
+    // keeps its default (`matmul_nt` = Algorithm 2's Ȧ half); the
+    // parameter halves mirror `linear_bwd` / `layernorm_backward` exactly
+    // — same Algorithm 8 reductions, same order — minus the input-grad
+    // work.
+
+    fn linear_bwd_dw(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        stage: Stage,
+    ) -> (Tensor, Option<Tensor>) {
+        let dirs = self.stage_dirs(stage);
+        // Bias grad first (Algorithm 8's reduction under the output
+        // directions), mirroring `linear_bwd`'s order; then the Ḃ half of
+        // Algorithm 2 under the layer's own directions.
+        let db = vec_grad(ep, self, dy, dirs.swapped());
+        let dw = mm_nn_backward_db(ep, self, dy, x, dirs);
+        (dw, db)
+    }
+
+    fn layernorm_backward_dx(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        hidden: usize,
+    ) -> Tensor {
+        layernorm_backward_dx(ep, self, dy, xhat, inv_std, gamma, self.d0, hidden)
+    }
+
+    fn layernorm_param_grads(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+    ) -> (Option<Tensor>, Option<Tensor>) {
+        // Same order as `layernorm_backward`: dβ first, then dγ.
+        let dbeta = vec_grad(ep, self, dy, self.d0);
+        let dgamma = vec_grad(ep, self, &dy.mul(xhat), self.d0);
+        (dgamma, dbeta)
     }
 }
 

@@ -214,6 +214,85 @@ pub fn linear_bwd(
     (dx, dw, db)
 }
 
+/// The `(dW, db)` half of [`linear_bwd`] on its own — the micro-batch
+/// pipelining path ([`crate::parallel::ParallelOps::linear_bwd_dw`]),
+/// computing the same `summa_tn` and row-0 bias reduction as the joint
+/// routine but without the `dX` SUMMA.
+pub(crate) fn linear_bwd_dw(
+    ep: &mut Endpoint,
+    ctx: &Ctx2D,
+    dy: &Tensor,
+    x: &Tensor,
+) -> (Tensor, Option<Tensor>) {
+    let dw = summa_tn(ep, ctx, x, dy); // dW = Xᵀ·dY
+    ep.charge_memop(dy.nominal_bytes() as f64);
+    let db = reduce_bw(ep, &ctx.col_group(), 0, &dy.sum_rows());
+    (dw, db)
+}
+
+/// The `(dγ, dβ)` half of [`layernorm_backward`] on its own
+/// ([`crate::parallel::ParallelOps::layernorm_param_grads`]): the same
+/// column sums reduced along mesh columns to row 0.
+pub(crate) fn layernorm_param_grads(
+    ep: &mut Endpoint,
+    ctx: &Ctx2D,
+    dy: &Tensor,
+    xhat: &Tensor,
+) -> (Option<Tensor>, Option<Tensor>) {
+    ep.charge_memop(3.0 * dy.nominal_bytes() as f64);
+    let dbeta = reduce_bw(ep, &ctx.col_group(), 0, &dy.sum_rows());
+    let dgamma = reduce_bw(ep, &ctx.col_group(), 0, &dy.mul(xhat).sum_rows());
+    (dgamma, dbeta)
+}
+
+/// The `dx` half of [`layernorm_backward`] on its own
+/// ([`crate::parallel::ParallelOps::layernorm_backward_dx`]). The float
+/// operations duplicate the joint routine's `dx` part verbatim — the
+/// joint path is deliberately left untouched so its clock charges stay
+/// bit-stable for the costmodel pins.
+pub(crate) fn layernorm_backward_dx(
+    ep: &mut Endpoint,
+    ctx: &Ctx2D,
+    dy: &Tensor,
+    xhat: &Tensor,
+    inv_std: &Tensor,
+    gamma_chunk: Option<&Tensor>,
+    n_global_cols: usize,
+) -> Tensor {
+    let (rows, cols) = dy.dims2();
+    let gamma = bcast_bias(ep, ctx, gamma_chunk);
+    let g = dy.mul_row_vector(&gamma);
+    let stats = if g.is_phantom() || xhat.is_phantom() {
+        Tensor::phantom(&[2, rows])
+    } else {
+        let mut s = Tensor::zeros(&[2, rows]);
+        s.set_block(0, 0, &g.sum_cols().reshape(&[1, rows]));
+        s.set_block(1, 0, &g.mul(xhat).sum_cols().reshape(&[1, rows]));
+        s
+    };
+    let stats = all_reduce(ep, &ctx.row_group(), &stats);
+    let n = n_global_cols as f32;
+    let dx = if g.is_phantom() || stats.is_phantom() || inv_std.is_phantom() {
+        Tensor::phantom(dy.shape())
+    } else {
+        let sd = stats.data();
+        let istd = inv_std.data();
+        let gd = g.data();
+        let xd = xhat.data();
+        let mut out = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            let c0 = istd[r] / n;
+            for c in 0..cols {
+                let idx = r * cols + c;
+                out[idx] = c0 * (n * gd[idx] - sd[r] - xd[idx] * sd[rows + r]);
+            }
+        }
+        Tensor::from_vec(&[rows, cols], out)
+    };
+    ep.charge_memop(2.0 * dy.nominal_bytes() as f64);
+    dx
+}
+
 /// 2-D layernorm forward over the hidden (column) dimension. Row statistics
 /// are all-reduced along mesh rows; γ/β live on mesh row 0 (column-block
 /// split) and are broadcast down columns.
@@ -384,6 +463,37 @@ impl ParallelOps for Ctx2D {
         hidden: usize,
     ) -> (Tensor, Option<Tensor>, Option<Tensor>) {
         layernorm_backward(ep, self, dy, xhat, inv_std, gamma, hidden)
+    }
+
+    fn linear_bwd_dw(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        _stage: Stage,
+    ) -> (Tensor, Option<Tensor>) {
+        linear_bwd_dw(ep, self, dy, x)
+    }
+
+    fn layernorm_backward_dx(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        hidden: usize,
+    ) -> Tensor {
+        layernorm_backward_dx(ep, self, dy, xhat, inv_std, gamma, hidden)
+    }
+
+    fn layernorm_param_grads(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+    ) -> (Option<Tensor>, Option<Tensor>) {
+        layernorm_param_grads(ep, self, dy, xhat)
     }
 }
 

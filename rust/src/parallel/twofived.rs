@@ -200,6 +200,41 @@ impl ParallelOps for Ctx25D {
     ) -> (Tensor, Option<Tensor>, Option<Tensor>) {
         twod::layernorm_backward(ep, &self.grid, dy, xhat, inv_std, gamma, hidden)
     }
+
+    // Split backward halves (micro-batch pipelining): both weight-gradient
+    // forms are depth-local (see `matmul_tn`), so everything delegates to
+    // the layer's grid — the same 2-D code path as the stand-alone leaf.
+
+    fn linear_bwd_dw(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        x: &Tensor,
+        _stage: Stage,
+    ) -> (Tensor, Option<Tensor>) {
+        twod::linear_bwd_dw(ep, &self.grid, dy, x)
+    }
+
+    fn layernorm_backward_dx(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+        inv_std: &Tensor,
+        gamma: Option<&Tensor>,
+        hidden: usize,
+    ) -> Tensor {
+        twod::layernorm_backward_dx(ep, &self.grid, dy, xhat, inv_std, gamma, hidden)
+    }
+
+    fn layernorm_param_grads(
+        &self,
+        ep: &mut Endpoint,
+        dy: &Tensor,
+        xhat: &Tensor,
+    ) -> (Option<Tensor>, Option<Tensor>) {
+        twod::layernorm_param_grads(ep, &self.grid, dy, xhat)
+    }
 }
 
 #[cfg(test)]

@@ -213,6 +213,40 @@ impl HybridInner {
     }
 }
 
+/// The inner mesh of one pipeline stage group. Every leaf (and the hybrid
+/// wrapper) is allowed; `Seq` and nested pipelines are excluded so pipeline
+/// specs stay one level deep and `Copy`. With `Hybrid` as an inner this
+/// spans the full 5-D product space: `Pipeline(s, Hybrid(r, Tess(p, d)))`
+/// is PP × DP × 2.5-D — the Megatron-LM-v2 / DeepSeek-V3 production stack.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineInner {
+    /// 1-D Megatron line.
+    OneD,
+    /// 2-D SUMMA grid.
+    TwoD,
+    /// 3-D cube.
+    ThreeD,
+    /// 2.5-D Tesseract (`depth` stacked SUMMA grids).
+    TwoFiveD { depth: usize },
+    /// Data-parallel replicas around a tensor mesh, per stage.
+    Hybrid { replicas: usize, inner: HybridInner },
+}
+
+impl PipelineInner {
+    /// The stand-alone parallelism this inner mesh corresponds to.
+    pub fn as_parallelism(&self) -> Parallelism {
+        match self {
+            PipelineInner::OneD => Parallelism::OneD,
+            PipelineInner::TwoD => Parallelism::TwoD,
+            PipelineInner::ThreeD => Parallelism::ThreeD,
+            PipelineInner::TwoFiveD { depth } => Parallelism::TwoFiveD { depth: *depth },
+            PipelineInner::Hybrid { replicas, inner } => {
+                Parallelism::Hybrid { replicas: *replicas, inner: *inner }
+            }
+        }
+    }
+}
+
 /// Which parallelism a model/run uses; carried through configs and the CLI.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Parallelism {
@@ -230,6 +264,11 @@ pub enum Parallelism {
     /// Data-parallel outer group of `replicas` around an inner tensor mesh
     /// (the inner mesh uses the run's `edge` parameter).
     Hybrid { replicas: usize, inner: HybridInner },
+    /// Inter-layer (pipeline) parallelism: the layer stack splits into
+    /// `stages` contiguous stages, each run on its own copy of the inner
+    /// mesh, streaming `micro_batches` micro-batches through a GPipe-style
+    /// schedule (bubble fraction `(s−1)/(m+s−1)`).
+    Pipeline { stages: usize, micro_batches: usize, inner: PipelineInner },
 }
 
 impl Parallelism {
@@ -245,6 +284,9 @@ impl Parallelism {
             Parallelism::TwoFiveD { depth } => edge * edge * depth,
             Parallelism::Hybrid { replicas, inner } => {
                 replicas * inner.as_parallelism().world_size(edge)
+            }
+            Parallelism::Pipeline { stages, inner, .. } => {
+                stages * inner.as_parallelism().world_size(edge)
             }
         }
     }
@@ -275,6 +317,12 @@ impl Parallelism {
                 }
                 inner.as_parallelism().edge_for_world(world / replicas)
             }
+            Parallelism::Pipeline { stages, inner, .. } => {
+                if *stages == 0 || world % stages != 0 {
+                    return None;
+                }
+                inner.as_parallelism().edge_for_world(world / stages)
+            }
         }
     }
 
@@ -286,11 +334,12 @@ impl Parallelism {
             Parallelism::ThreeD => "3d",
             Parallelism::TwoFiveD { .. } => "2.5d",
             Parallelism::Hybrid { .. } => "hybrid",
+            Parallelism::Pipeline { .. } => "pipeline",
         }
     }
 
     /// Human description of the device mesh at a given edge, e.g. `8x8`,
-    /// `4x4x4`, `4x4x2` (2.5-D), `2x(4x4)` (hybrid).
+    /// `4x4x4`, `4x4x2` (2.5-D), `2x(4x4)` (hybrid), `2pp(4x4)` (pipeline).
     pub fn mesh_desc(&self, edge: usize) -> String {
         match self {
             Parallelism::Seq => "1".to_string(),
@@ -300,6 +349,9 @@ impl Parallelism {
             Parallelism::TwoFiveD { depth } => format!("{edge}x{edge}x{depth}"),
             Parallelism::Hybrid { replicas, inner } => {
                 format!("{replicas}x({})", inner.as_parallelism().mesh_desc(edge))
+            }
+            Parallelism::Pipeline { stages, inner, .. } => {
+                format!("{stages}pp({})", inner.as_parallelism().mesh_desc(edge))
             }
         }
     }
@@ -313,7 +365,12 @@ impl Parallelism {
         }
         match self {
             Parallelism::TwoFiveD { depth }
-            | Parallelism::Hybrid { inner: HybridInner::TwoFiveD { depth }, .. } => {
+            | Parallelism::Hybrid { inner: HybridInner::TwoFiveD { depth }, .. }
+            | Parallelism::Pipeline { inner: PipelineInner::TwoFiveD { depth }, .. }
+            | Parallelism::Pipeline {
+                inner: PipelineInner::Hybrid { inner: HybridInner::TwoFiveD { depth }, .. },
+                ..
+            } => {
                 *depth = d;
                 Ok(())
             }
@@ -328,11 +385,42 @@ impl Parallelism {
             return Err("hybrid replicas must be >= 1".into());
         }
         match self {
-            Parallelism::Hybrid { replicas, .. } => {
+            Parallelism::Hybrid { replicas, .. }
+            | Parallelism::Pipeline { inner: PipelineInner::Hybrid { replicas, .. }, .. } => {
                 *replicas = r;
                 Ok(())
             }
             _ => Err("replicas only applies to hybrid kinds".into()),
+        }
+    }
+
+    /// Override the pipeline stage count — shared by `--stages` and the
+    /// `[parallel] stages` TOML key.
+    pub fn set_stages(&mut self, s: usize) -> Result<(), String> {
+        if s == 0 {
+            return Err("pipeline stages must be >= 1".into());
+        }
+        match self {
+            Parallelism::Pipeline { stages, .. } => {
+                *stages = s;
+                Ok(())
+            }
+            _ => Err("stages only applies to pipeline kinds".into()),
+        }
+    }
+
+    /// Override the pipeline micro-batch count — shared by
+    /// `--micro-batches` and the `[parallel] micro_batches` TOML key.
+    pub fn set_micro_batches(&mut self, m: usize) -> Result<(), String> {
+        if m == 0 {
+            return Err("pipeline micro_batches must be >= 1".into());
+        }
+        match self {
+            Parallelism::Pipeline { micro_batches, .. } => {
+                *micro_batches = m;
+                Ok(())
+            }
+            _ => Err("micro_batches only applies to pipeline kinds".into()),
         }
     }
 
@@ -354,6 +442,33 @@ impl Parallelism {
             "hybrid2.5d" => Some(Parallelism::Hybrid {
                 replicas: 2,
                 inner: HybridInner::TwoFiveD { depth: 2 },
+            }),
+            // Pipeline defaults: 2 stages, 4 micro-batches; `[parallel]
+            // stages`/`micro_batches` (or --stages/--micro-batches) override.
+            "pipeline" | "pp" | "pipeline1d" => Some(Parallelism::Pipeline {
+                stages: 2,
+                micro_batches: 4,
+                inner: PipelineInner::OneD,
+            }),
+            "pipeline2d" => Some(Parallelism::Pipeline {
+                stages: 2,
+                micro_batches: 4,
+                inner: PipelineInner::TwoD,
+            }),
+            "pipeline3d" => Some(Parallelism::Pipeline {
+                stages: 2,
+                micro_batches: 4,
+                inner: PipelineInner::ThreeD,
+            }),
+            "pipeline2.5d" => Some(Parallelism::Pipeline {
+                stages: 2,
+                micro_batches: 4,
+                inner: PipelineInner::TwoFiveD { depth: 2 },
+            }),
+            "pipelinehybrid" | "pipelinehybrid2d" => Some(Parallelism::Pipeline {
+                stages: 2,
+                micro_batches: 4,
+                inner: PipelineInner::Hybrid { replicas: 2, inner: HybridInner::TwoD },
             }),
             _ => None,
         }
@@ -443,6 +558,47 @@ pub fn plan_candidates(world: usize) -> Vec<PlanCandidate> {
         });
     if let Some(h) = hybrid {
         out.push(h);
+    }
+    // Pipeline: smallest stage count s ≥ 2 dividing world whose per-stage
+    // world `world / s` decomposes as an inner mesh, preferring 2-D, then
+    // the largest 2.5-D grid, then 3-D, then 1-D. Canonical micro-batch
+    // count 4 (bubble fraction (s−1)/(m+s−1) = 1/5 at s = 2).
+    let pipeline = (2..=world / 2).filter(|s| world % s == 0).find_map(|s| {
+        let iw = world / s;
+        if iw < 2 {
+            return None;
+        }
+        let inner = Parallelism::TwoD
+            .edge_for_world(iw)
+            .filter(|q| *q >= 2)
+            .map(|q| (PipelineInner::TwoD, q))
+            .or_else(|| {
+                // Largest p ≥ 2 with p² | iw and depth ≥ 2.
+                let mut best = None;
+                for p in 2..=iw {
+                    if p * p > iw {
+                        break;
+                    }
+                    if iw % (p * p) == 0 && iw / (p * p) >= 2 {
+                        best = Some((PipelineInner::TwoFiveD { depth: iw / (p * p) }, p));
+                    }
+                }
+                best
+            })
+            .or_else(|| {
+                Parallelism::ThreeD
+                    .edge_for_world(iw)
+                    .filter(|p| *p >= 2)
+                    .map(|p| (PipelineInner::ThreeD, p))
+            })
+            .or(Some((PipelineInner::OneD, iw)));
+        inner.map(|(inner, edge)| PlanCandidate {
+            par: Parallelism::Pipeline { stages: s, micro_batches: 4, inner },
+            edge,
+        })
+    });
+    if let Some(p) = pipeline {
+        out.push(p);
     }
     out
 }
@@ -557,7 +713,7 @@ mod tests {
     fn plan_candidates_cover_all_kinds_at_64() {
         let cands = plan_candidates(64);
         let names: Vec<&str> = cands.iter().map(|c| c.par.name()).collect();
-        for want in ["seq", "1d", "2d", "3d", "2.5d", "hybrid"] {
+        for want in ["seq", "1d", "2d", "3d", "2.5d", "hybrid", "pipeline"] {
             assert!(names.contains(&want), "missing {want} in {names:?}");
         }
         for c in &cands {
@@ -565,14 +721,85 @@ mod tests {
                 assert_eq!(c.world(), 64, "{:?}", c.par);
             }
         }
-        // Canonical picks: the largest 2.5-D grid and the smallest square
-        // hybrid replica group.
+        // Canonical picks: the largest 2.5-D grid, the smallest square
+        // hybrid replica group, and a 2-stage pipeline around the largest
+        // per-stage 2.5-D grid (PP × Tesseract at equal world size).
         assert!(cands
             .contains(&PlanCandidate { par: Parallelism::TwoFiveD { depth: 4 }, edge: 4 }));
         assert!(cands.contains(&PlanCandidate {
             par: Parallelism::Hybrid { replicas: 4, inner: HybridInner::TwoD },
             edge: 4,
         }));
+        assert!(cands.contains(&PlanCandidate {
+            par: Parallelism::Pipeline {
+                stages: 2,
+                micro_batches: 4,
+                inner: PipelineInner::TwoFiveD { depth: 2 },
+            },
+            edge: 4,
+        }));
+    }
+
+    #[test]
+    fn pipeline_world_size_edge_and_knobs() {
+        let pp = Parallelism::Pipeline {
+            stages: 2,
+            micro_batches: 4,
+            inner: PipelineInner::OneD,
+        };
+        assert_eq!(pp.world_size(2), 4);
+        assert_eq!(pp.edge_for_world(4), Some(2));
+        assert_eq!(pp.edge_for_world(5), None);
+        assert_eq!(pp.name(), "pipeline");
+        assert_eq!(pp.mesh_desc(2), "2pp(2)");
+        let pp2d = Parallelism::Pipeline {
+            stages: 2,
+            micro_batches: 4,
+            inner: PipelineInner::TwoD,
+        };
+        assert_eq!(pp2d.world_size(2), 8);
+        assert_eq!(pp2d.mesh_desc(4), "2pp(4x4)");
+        let deep = Parallelism::Pipeline {
+            stages: 4,
+            micro_batches: 8,
+            inner: PipelineInner::Hybrid { replicas: 2, inner: HybridInner::TwoD },
+        };
+        assert_eq!(deep.world_size(2), 4 * 2 * 4);
+        assert_eq!(deep.mesh_desc(2), "4pp(2x(2x2))");
+        assert_eq!(Parallelism::parse("pipeline"), Some(pp));
+        assert_eq!(Parallelism::parse("pp"), Some(pp));
+        assert_eq!(Parallelism::parse("pipeline2d"), Some(pp2d));
+        let mut p = pp;
+        p.set_stages(4).unwrap();
+        p.set_micro_batches(8).unwrap();
+        assert_eq!(
+            p,
+            Parallelism::Pipeline { stages: 4, micro_batches: 8, inner: PipelineInner::OneD }
+        );
+        assert!(p.set_stages(0).is_err());
+        assert!(Parallelism::TwoD.set_stages(2).is_err());
+        assert!(Parallelism::TwoD.set_micro_batches(2).is_err());
+        // The replica/depth knobs reach through the pipeline wrapper.
+        let mut ph = Parallelism::parse("pipelinehybrid").unwrap();
+        ph.set_replicas(4).unwrap();
+        assert_eq!(
+            ph,
+            Parallelism::Pipeline {
+                stages: 2,
+                micro_batches: 4,
+                inner: PipelineInner::Hybrid { replicas: 4, inner: HybridInner::TwoD },
+            }
+        );
+        let mut pt = Parallelism::parse("pipeline2.5d").unwrap();
+        pt.set_depth(4).unwrap();
+        assert_eq!(
+            pt,
+            Parallelism::Pipeline {
+                stages: 2,
+                micro_batches: 4,
+                inner: PipelineInner::TwoFiveD { depth: 4 },
+            }
+        );
     }
 
     #[test]

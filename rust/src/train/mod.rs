@@ -16,10 +16,39 @@ use crate::config::{CubicConfig, ModelConfig};
 use crate::model::{core_bwd, core_fwd, BlockTensors, ParEnv};
 use crate::ops;
 use crate::optim::{lr_at, Optimizer};
+use crate::parallel::pipeline::{pipeline_core_step, Pipeline};
 use crate::rng::{Xoshiro256, Zipf};
 use crate::tensor::Tensor;
+use crate::topology::Parallelism;
 use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
 use std::path::Path;
+
+/// Exact integer → tensor encoding for checkpoint/donation metadata: the
+/// two 32-bit halves of the value travel bit-for-bit as f32 payloads
+/// (`from_bits`), so counters above 2^24 — where an `as f32` cast starts
+/// rounding to even — survive the round-trip exactly. Safe because every
+/// consumer (the checkpoint serializer, the virtual transport) copies raw
+/// lane bytes and never does arithmetic on them.
+pub fn encode_u64(v: u64) -> Tensor {
+    Tensor::from_vec(&[2], vec![f32::from_bits(v as u32), f32::from_bits((v >> 32) as u32)])
+}
+
+/// Inverse of [`encode_u64`], looked up by `key` with typed errors: a
+/// missing tensor and a wrong-arity tensor (including the empty tensor a
+/// truncation bug could produce) both name the offending key instead of
+/// panicking on an out-of-bounds index.
+pub fn decode_u64(map: &HashMap<String, Tensor>, key: &str) -> Result<u64> {
+    let t = map.get(key).ok_or_else(|| anyhow!("checkpoint missing {key}"))?;
+    let d = t.data();
+    if d.len() != 2 {
+        bail!(
+            "checkpoint tensor {key}: expected 2 bit-half lanes, got {} — corrupt metadata",
+            d.len()
+        );
+    }
+    Ok(d[0].to_bits() as u64 | (d[1].to_bits() as u64) << 32)
+}
 
 /// Synthetic char-level corpus with learnable structure: a fixed random
 /// first-order Markov chain over the vocabulary (Zipfian stationary flavor).
@@ -230,7 +259,18 @@ impl TrainerRank {
     pub fn new(cfg: &CubicConfig, rank: usize) -> TrainerRank {
         let env = ParEnv::new(cfg.parallelism, cfg.edge, rank);
         let dense = crate::model::init_dense_blocks(&cfg.model, cfg.train.seed);
-        let blocks = env.shard_blocks(&dense);
+        // Pipelined ranks hold only their stage's contiguous layer slice
+        // (sharded by the inner mesh); everyone else holds every layer.
+        // The full stack is initialised either way so layer `l`'s weights
+        // are identical across topologies (the parity pin depends on it).
+        let blocks = match cfg.parallelism {
+            Parallelism::Pipeline { stages, micro_batches, inner } => {
+                let pipe = Pipeline::for_kind(stages, micro_batches, inner, cfg.edge, rank);
+                let range = pipe.layer_range(cfg.model.layers);
+                dense[range].iter().map(|b| env.ops().shard_block(b)).collect()
+            }
+            _ => env.shard_blocks(&dense),
+        };
         // Boundary layers: identical init on every rank.
         let mut brng = Xoshiro256::seed_from_u64(cfg.train.seed ^ 0xB0DA0);
         let emb = Embedding::init(&cfg.model, &mut brng);
@@ -273,6 +313,9 @@ impl TrainerRank {
 
     /// One full training step; returns the loss.
     pub fn step(&mut self, ep: &mut Endpoint, step: usize) -> f32 {
+        if matches!(self.cfg.parallelism, Parallelism::Pipeline { .. }) {
+            return self.step_pipelined(ep, step);
+        }
         let m = &self.cfg.model;
         let rows = m.batch * m.seq;
         let (tokens, targets) = self.corpus.batch(m.batch, m.seq, step as u64);
@@ -303,7 +346,54 @@ impl TrainerRank {
         // gradients themselves are already valid — tickets are clock-only).
         ep.join_all();
 
-        // Optimizer.
+        self.apply_update(step, &block_grads, &d_table, &d_pos, &head_grads);
+        loss
+    }
+
+    /// One pipelined training step: same boundary layers and optimizer as
+    /// [`TrainerRank::step`], with the core driven by
+    /// [`pipeline_core_step`] over this rank's stage slice. The head/loss
+    /// runs replicated on every rank from the relayed full output, so the
+    /// returned loss — and the boundary-layer updates — are bit-identical
+    /// across ranks, exactly as in the unpipelined path.
+    fn step_pipelined(&mut self, ep: &mut Endpoint, step: usize) -> f32 {
+        let Parallelism::Pipeline { stages, micro_batches, inner } = self.cfg.parallelism else {
+            unreachable!("step_pipelined outside a pipeline config");
+        };
+        let pipe = Pipeline::for_kind(stages, micro_batches, inner, self.cfg.edge, self.rank);
+        let m = &self.cfg.model;
+        let (tokens, targets) = self.corpus.batch(m.batch, m.seq, step as u64);
+
+        let x_global = self.emb.fwd(&tokens, m.seq);
+        let head = &self.head;
+        let eps = m.eps;
+        let mut loss = 0.0f32;
+        let mut head_grads: Option<HeadGrads> = None;
+        let out = pipeline_core_step(ep, &pipe, &self.blocks, &x_global, m, &mut |_ep, y_full| {
+            let (l, dy, hg) = head.loss_and_grads(y_full, &targets, eps);
+            loss = l;
+            head_grads = Some(hg);
+            dy
+        });
+        let head_grads = head_grads.expect("pipeline head closure runs exactly once");
+
+        // Boundary backward from the relayed full embedding gradient.
+        let (d_table, d_pos) = self.emb.bwd(&tokens, m.seq, &out.dx_full);
+
+        ep.join_all();
+        self.apply_update(step, &out.grads, &d_table, &d_pos, &head_grads);
+        loss
+    }
+
+    /// The optimizer tail shared by the plain and pipelined steps.
+    fn apply_update(
+        &mut self,
+        step: usize,
+        block_grads: &[BlockTensors],
+        d_table: &Tensor,
+        d_pos: &Tensor,
+        head_grads: &HeadGrads,
+    ) {
         let lr = lr_at(&self.cfg.train, step);
         let mut pairs: Vec<(&mut Tensor, &Tensor)> = Vec::new();
         for (b, g) in self.blocks.iter_mut().zip(block_grads.iter()) {
@@ -311,15 +401,14 @@ impl TrainerRank {
         }
         self.opt_core.step(&mut pairs, lr);
         let mut bpairs: Vec<(&mut Tensor, &Tensor)> = vec![
-            (&mut self.emb.table, &d_table),
-            (&mut self.emb.pos, &d_pos),
+            (&mut self.emb.table, d_table),
+            (&mut self.emb.pos, d_pos),
             (&mut self.head.ln_g, &head_grads.ln_g),
             (&mut self.head.ln_b, &head_grads.ln_b),
             (&mut self.head.w, &head_grads.w),
             (&mut self.head.b, &head_grads.b),
         ];
         self.opt_emb.step(&mut bpairs, lr);
-        loss
     }
 
     /// Run the configured number of steps.
@@ -387,13 +476,16 @@ impl TrainerRank {
             }
             if let Some(dir) = dir {
                 if ckpt_every > 0 && (s + 1) % ckpt_every == 0 && s + 1 < end {
-                    self.save_checkpoint(dir, s + 1, &losses)
-                        .expect("periodic checkpoint save failed");
+                    if let Err(e) = self.save_checkpoint(dir, s + 1, &losses) {
+                        return Self::save_failed(self, e, losses, step_virtual_times);
+                    }
                 }
             }
         }
         if let Some(dir) = dir {
-            self.save_checkpoint(dir, end, &losses).expect("final checkpoint save failed");
+            if let Err(e) = self.save_checkpoint(dir, end, &losses) {
+                return Self::save_failed(self, e, losses, step_virtual_times);
+            }
         }
         RankOutcome {
             trainer: Some(self),
@@ -404,22 +496,41 @@ impl TrainerRank {
         }
     }
 
+    /// A checkpoint save hit an IO error. The write protocol is
+    /// temp-file-then-rename, so the failed save published nothing and the
+    /// trainer state is still valid — surface a typed, retryable outcome
+    /// instead of panicking the rank thread.
+    fn save_failed(
+        trainer: Box<Self>,
+        err: anyhow::Error,
+        losses: Vec<f32>,
+        step_virtual_times: Vec<f64>,
+    ) -> RankOutcome {
+        let rank = trainer.rank;
+        RankOutcome {
+            trainer: Some(trainer),
+            completed: false,
+            losses,
+            step_virtual_times,
+            error: Some(CommError::Checkpoint { rank, msg: format!("{err:#}") }),
+        }
+    }
+
     /// Persist this rank's full training state (model shards, optimizer
     /// state, progress) as one crash-consistent file. Replicated state
     /// (embedding, head, their optimizer, the loss history) is stored only
     /// in rank 0's file; every rank reads it back from there.
     pub fn save_checkpoint(&self, dir: &Path, steps_done: usize, losses: &[f32]) -> Result<()> {
         let core_state = self.opt_core.state_tensors();
-        let core_t = Tensor::from_vec(&[1], vec![self.opt_core.timestep() as f32]);
-        let emb_t = Tensor::from_vec(&[1], vec![self.opt_emb.timestep() as f32]);
-        let steps_t = Tensor::from_vec(&[1], vec![steps_done as f32]);
-        let losses_t = Tensor::from_vec(&[losses.len().max(1)], {
-            let mut v = losses.to_vec();
-            if v.is_empty() {
-                v.push(0.0);
-            }
-            v
-        });
+        // Progress counters are stored exactly ([`encode_u64`]): an
+        // `as f32` cast would silently round them past 2^24 steps.
+        let core_t = encode_u64(self.opt_core.timestep());
+        let emb_t = encode_u64(self.opt_emb.timestep());
+        let steps_t = encode_u64(steps_done as u64);
+        // Only rank 0 persists the loss history, and only when non-empty —
+        // the loader treats absence as "no history yet".
+        let losses_t = (self.rank == 0 && !losses.is_empty())
+            .then(|| Tensor::from_vec(&[losses.len()], losses.to_vec()));
         let mut extra: Vec<(String, &Tensor)> = Vec::new();
         for (i, t) in core_state.iter().enumerate() {
             extra.push((format!("opt.core.{i}"), t));
@@ -438,8 +549,8 @@ impl TrainerRank {
                 extra.push((format!("opt.emb.{i}"), t));
             }
             extra.push(("opt.emb.t".into(), &emb_t));
-            if !losses.is_empty() {
-                extra.push(("meta.losses".into(), &losses_t));
+            if let Some(lt) = &losses_t {
+                extra.push(("meta.losses".into(), lt));
             }
         }
         checkpoint::save_rank(dir, self.rank, &self.blocks, &extra)
@@ -454,12 +565,7 @@ impl TrainerRank {
         rank: usize,
         dir: &Path,
     ) -> Result<(Box<TrainerRank>, usize, Vec<f32>)> {
-        let scalar = |map: &std::collections::HashMap<String, Tensor>, key: &str| -> Result<f32> {
-            map.get(key)
-                .ok_or_else(|| anyhow!("checkpoint missing {key}"))
-                .map(|t| t.data()[0])
-        };
-        let assign = |map: &std::collections::HashMap<String, Tensor>,
+        let assign = |map: &HashMap<String, Tensor>,
                       key: &str,
                       slot: &mut Tensor|
          -> Result<()> {
@@ -476,10 +582,10 @@ impl TrainerRank {
         for (i, slot) in tr.opt_core.state_tensors_mut().into_iter().enumerate() {
             assign(&own, &format!("opt.core.{i}"), slot)?;
         }
-        tr.opt_core.set_timestep(scalar(&own, "opt.core.t")? as u64);
-        let steps_done = scalar(&own, "meta.steps_done")? as usize;
+        tr.opt_core.set_timestep(decode_u64(&own, "opt.core.t")?);
+        let steps_done = decode_u64(&own, "meta.steps_done")? as usize;
         let zero = checkpoint::read_tensors(&dir.join("rank-0.bin"))?;
-        let steps0 = scalar(&zero, "meta.steps_done")? as usize;
+        let steps0 = decode_u64(&zero, "meta.steps_done")? as usize;
         if steps0 != steps_done {
             bail!("checkpoint shards disagree on progress: rank {rank} at {steps_done}, rank 0 at {steps0}");
         }
@@ -492,7 +598,7 @@ impl TrainerRank {
         for (i, slot) in tr.opt_emb.state_tensors_mut().into_iter().enumerate() {
             assign(&zero, &format!("opt.emb.{i}"), slot)?;
         }
-        tr.opt_emb.set_timestep(scalar(&zero, "opt.emb.t")? as u64);
+        tr.opt_emb.set_timestep(decode_u64(&zero, "opt.emb.t")?);
         let losses: Vec<f32> = zero
             .get("meta.losses")
             .map(|t| t.data().to_vec())
@@ -583,10 +689,13 @@ impl TrainerRank {
             ep.send(to, tag, t);
             tag += 1;
         }
-        let meta = Tensor::from_vec(
-            &[2],
-            vec![self.opt_core.timestep() as f32, self.opt_emb.timestep() as f32],
-        );
+        // Timesteps travel as u64 bit-halves (same rationale as the
+        // checkpoint metadata — exact past 2^24).
+        let meta = Tensor::from_vec(&[4], {
+            let mut v = encode_u64(self.opt_core.timestep()).data().to_vec();
+            v.extend_from_slice(encode_u64(self.opt_emb.timestep()).data());
+            v
+        });
         ep.send(to, tag, &meta);
         tag += 1;
         let lt = Tensor::from_vec(&[losses.len().max(1)], {
@@ -610,8 +719,10 @@ impl TrainerRank {
             tag += 1;
         }
         let meta = ep.recv(from, tag);
-        self.opt_core.set_timestep(meta.data()[0] as u64);
-        self.opt_emb.set_timestep(meta.data()[1] as u64);
+        let md = meta.data();
+        assert_eq!(md.len(), 4, "donation meta must carry two u64s as f32 bit-halves");
+        self.opt_core.set_timestep(md[0].to_bits() as u64 | (md[1].to_bits() as u64) << 32);
+        self.opt_emb.set_timestep(md[2].to_bits() as u64 | (md[3].to_bits() as u64) << 32);
         tag += 1;
         let lt = ep.recv(from, tag);
         let losses: Vec<f32> = if steps_done == 0 {
@@ -687,6 +798,138 @@ mod tests {
         assert_eq!(dt.at2(5, 0), 1.0);
         assert_eq!(dt.at2(0, 0), 0.0);
         assert_eq!(dp.at2(0, 0), 2.0); // two rows at position 0
+    }
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("cubic-train-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn u64_metadata_encoding_is_exact() {
+        for v in [0u64, 1, (1 << 24) - 1, 1 << 24, (1 << 24) + 1, (1 << 42) + 12345, u64::MAX] {
+            let mut map = HashMap::new();
+            map.insert("k".to_string(), encode_u64(v));
+            assert_eq!(decode_u64(&map, "k").unwrap(), v, "value {v}");
+        }
+        // The bug this encoding replaces: an `as f32` cast rounds past 2^24.
+        assert_ne!(((1u64 << 24) + 1) as f32 as u64, (1 << 24) + 1);
+        // Typed errors name the offending key instead of panicking.
+        let mut map = HashMap::new();
+        let err = decode_u64(&map, "opt.core.t").unwrap_err().to_string();
+        assert!(err.contains("opt.core.t"), "{err}");
+        map.insert("opt.core.t".to_string(), Tensor::from_vec(&[0], Vec::new()));
+        let err = decode_u64(&map, "opt.core.t").unwrap_err().to_string();
+        assert!(err.contains("opt.core.t") && err.contains("bit-half"), "{err}");
+        map.insert("opt.core.t".to_string(), Tensor::from_vec(&[1], vec![3.0]));
+        let err = decode_u64(&map, "opt.core.t").unwrap_err().to_string();
+        assert!(err.contains("got 1"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_metadata_survives_2p24_steps() {
+        // Regression for the f32 counter bug: progress counters above 2^24
+        // must round-trip through a checkpoint file exactly.
+        let cfg = CubicConfig {
+            parallelism: Parallelism::Seq,
+            edge: 1,
+            ..CubicConfig::default()
+        };
+        let mut tr = TrainerRank::new(&cfg, 0);
+        let big_core = (1u64 << 33) + 7;
+        let big_emb = (1u64 << 24) + 1;
+        tr.opt_core.set_timestep(big_core);
+        tr.opt_emb.set_timestep(big_emb);
+        let dir = tmpdir("big-steps");
+        let steps_done = (1usize << 24) + 3;
+        tr.save_checkpoint(&dir, steps_done, &[]).unwrap();
+        let own = checkpoint::read_tensors(&dir.join("rank-0.bin")).unwrap();
+        assert_eq!(decode_u64(&own, "opt.core.t").unwrap(), big_core);
+        assert_eq!(decode_u64(&own, "opt.emb.t").unwrap(), big_emb);
+        assert_eq!(decode_u64(&own, "meta.steps_done").unwrap(), steps_done as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_checkpoint_round_trips_exact_timesteps() {
+        let cfg = CubicConfig {
+            parallelism: Parallelism::Seq,
+            edge: 1,
+            ..CubicConfig::default()
+        };
+        let mut tr = TrainerRank::new(&cfg, 0);
+        tr.opt_core.set_timestep((1u64 << 30) + 5);
+        tr.opt_emb.set_timestep((1u64 << 24) + 1);
+        let dir = tmpdir("load-roundtrip");
+        tr.save_checkpoint(&dir, 2, &[1.5, 1.25]).unwrap();
+        let (tr2, steps, losses) = TrainerRank::load_checkpoint(&cfg, 0, &dir).unwrap();
+        assert_eq!(steps, 2);
+        assert_eq!(losses, vec![1.5, 1.25]);
+        assert_eq!(tr2.opt_core.timestep(), (1u64 << 30) + 5);
+        assert_eq!(tr2.opt_emb.timestep(), (1u64 << 24) + 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nonzero_rank_checkpoint_has_no_loss_placeholder() {
+        let cfg = CubicConfig {
+            parallelism: Parallelism::OneD,
+            edge: 2,
+            ..CubicConfig::default()
+        };
+        let dir = tmpdir("no-placeholder");
+        // Saving is IO-only — no endpoint needed.
+        for rank in 0..2 {
+            let tr = TrainerRank::new(&cfg, rank);
+            tr.save_checkpoint(&dir, 3, &[1.0, 0.9, 0.8]).unwrap();
+        }
+        let r0 = checkpoint::read_tensors(&dir.join("rank-0.bin")).unwrap();
+        assert!(r0.contains_key("meta.losses"));
+        let r1 = checkpoint::read_tensors(&dir.join("rank-1.bin")).unwrap();
+        assert!(
+            !r1.contains_key("meta.losses"),
+            "non-zero ranks must not write a loss placeholder"
+        );
+        assert_eq!(decode_u64(&r1, "meta.steps_done").unwrap(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+        // Rank 0 with an empty history writes no placeholder either — the
+        // loader treats absence as "no history yet".
+        let dir2 = tmpdir("no-history");
+        TrainerRank::new(&cfg, 0).save_checkpoint(&dir2, 0, &[]).unwrap();
+        let r0 = checkpoint::read_tensors(&dir2.join("rank-0.bin")).unwrap();
+        assert!(!r0.contains_key("meta.losses"));
+        std::fs::remove_dir_all(&dir2).ok();
+    }
+
+    #[test]
+    fn checkpoint_save_io_error_is_typed() {
+        use crate::comm::NetModel;
+        use crate::spmd::run_spmd;
+        // Route the checkpoint dir through a regular file: `create_dir_all`
+        // fails with NotADirectory even when running as root (permission
+        // bits would not stop root).
+        let blocker = tmpdir("io-blocker");
+        std::fs::create_dir_all(&blocker).unwrap();
+        let file = blocker.join("file");
+        std::fs::write(&file, b"not a directory").unwrap();
+        let dir = file.join("sub");
+        let cfg = CubicConfig {
+            parallelism: Parallelism::Seq,
+            edge: 1,
+            ..CubicConfig::default()
+        };
+        let outcomes = run_spmd(1, NetModel::zero(), move |rank, ep| {
+            let tr = Box::new(TrainerRank::new(&cfg, rank));
+            tr.run_supervised(ep, 0, 1, 0, Some(&dir), Vec::new(), Vec::new())
+        });
+        let out = &outcomes[0];
+        assert!(!out.completed);
+        assert!(out.trainer.is_some(), "state must survive a failed save");
+        assert_eq!(out.losses.len(), 1, "the step itself completed");
+        match &out.error {
+            Some(CommError::Checkpoint { rank: 0, msg }) => assert!(!msg.is_empty()),
+            other => panic!("expected typed checkpoint error, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&blocker).ok();
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use cubic::comm::NetModel;
 use cubic::config::{CubicConfig, ModelConfig, TrainConfig};
 use cubic::engine::{run_training, run_training_supervised, run_training_with_checkpoint};
-use cubic::topology::{HybridInner, Parallelism};
+use cubic::topology::{HybridInner, Parallelism, PipelineInner};
 use std::path::{Path, PathBuf};
 
 /// Every mesh kind at its smallest non-trivial extent (tiny model fits all).
@@ -22,12 +22,19 @@ fn all_kinds() -> Vec<(Parallelism, usize)> {
         (Parallelism::ThreeD, 2),
         (Parallelism::TwoFiveD { depth: 2 }, 2),
         (Parallelism::Hybrid { replicas: 2, inner: HybridInner::TwoD }, 2),
+        (Parallelism::Pipeline { stages: 2, micro_batches: 4, inner: PipelineInner::OneD }, 2),
     ]
 }
 
 fn base_cfg(par: Parallelism, edge: usize) -> CubicConfig {
+    // Pipeline points need the layer stack to divide across their stages;
+    // every other kind keeps the single-layer tiny model.
+    let layers = match par {
+        Parallelism::Pipeline { stages, .. } => stages,
+        _ => 1,
+    };
     CubicConfig {
-        model: ModelConfig { layers: 1, ..ModelConfig::tiny() },
+        model: ModelConfig { layers, ..ModelConfig::tiny() },
         train: TrainConfig { steps: 6, lr: 3e-3, warmup: 2, ckpt_every: 2, ..Default::default() },
         parallelism: par,
         edge,

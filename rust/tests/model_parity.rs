@@ -20,17 +20,24 @@ use cubic::parallel::{ops_for, ParallelOps};
 use cubic::rng::Xoshiro256;
 use cubic::spmd::run_spmd;
 use cubic::tensor::Tensor;
-use cubic::topology::{HybridInner, Parallelism};
+use cubic::topology::{HybridInner, Parallelism, PipelineInner};
 
 /// Every parallelism point the crate implements, with its test edge.
-const ALL_ENVS: [(Parallelism, usize); 6] = [
+const ALL_ENVS: [(Parallelism, usize); 7] = [
     (Parallelism::Seq, 1),
     (Parallelism::OneD, 4),
     (Parallelism::TwoD, 2),
     (Parallelism::ThreeD, 2),
     (Parallelism::TwoFiveD { depth: 2 }, 2),
     (Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD }, 2),
+    (PIPELINE_ENV.0, PIPELINE_ENV.1),
 ];
+
+/// The pipeline test point: 2 stages × 1-D p=2, 4 micro-batches (world 4).
+const PIPELINE_ENV: (Parallelism, usize) = (
+    Parallelism::Pipeline { stages: 2, micro_batches: 4, inner: PipelineInner::OneD },
+    2,
+);
 
 fn tiny() -> ModelConfig {
     ModelConfig { layers: 2, ..ModelConfig::tiny() }
@@ -91,6 +98,31 @@ fn run_par_net(
     let cfg2 = cfg.clone();
     let x = x.clone();
     let dy = dy.clone();
+    if let Parallelism::Pipeline { stages, micro_batches, inner } = par {
+        // Pipelined core: each rank holds its stage's layer slice and the
+        // schedule relays the full output/gradient, so y and dx come back
+        // global on every rank (with a 1-D inner the unpipelined run's
+        // activations are replicated-global too — directly comparable).
+        return run_spmd(world, net, move |rank, ep| {
+            let ops = cubic::parallel::pipeline::Pipeline::for_kind(
+                stages, micro_batches, inner, edge, rank,
+            );
+            let dense = model::init_dense_blocks(&cfg2, seed);
+            let range = ops.layer_range(cfg2.layers);
+            let blocks: Vec<BlockTensors> =
+                dense[range].iter().map(|b| ops.shard_block(b)).collect();
+            let out = cubic::parallel::pipeline::pipeline_core_step(
+                ep,
+                &ops,
+                &blocks,
+                &x,
+                &cfg2,
+                &mut |_ep, _y| dy.clone(),
+            );
+            ep.join_all();
+            (out.y_full, out.dx_full, out.grads)
+        });
+    }
     run_spmd(world, net, move |rank, ep| {
         let env = ParEnv::new(par, edge, rank);
         let dense = model::init_dense_blocks(&cfg2, seed);
@@ -171,18 +203,37 @@ fn check_matches_seq_reference(par: Parallelism, edge: usize) {
     // Every weight gradient of every layer reassembles to the dense
     // gradient under its stage layout. Pure tensor meshes tile each
     // weight exactly once; hybrid meshes hold one synced copy per
-    // data-parallel replica.
+    // data-parallel replica; pipeline stages each own a contiguous layer
+    // slice, so layer `l` assembles from its owning stage group alone
+    // under the inner spec.
+    let pipe_geom = if let Parallelism::Pipeline { stages, inner, .. } = par {
+        let iw = inner.as_parallelism().world_size(edge);
+        Some((
+            cfg.layers / stages,
+            iw,
+            ShardSpec::for_parallelism(inner.as_parallelism(), edge, 0),
+        ))
+    } else {
+        None
+    };
     for l in 0..cfg.layers {
+        let (gspec, group, li) = match &pipe_geom {
+            Some((per, iw, ispec)) => {
+                let k = l / per;
+                (ispec, k * iw..(k + 1) * iw, l - k * per)
+            }
+            None => (&spec0, 0..world, l),
+        };
         for (name, stage, wr, wc, get) in mats {
             let parts: Vec<Tensor> =
-                out.iter().map(|(_, _, g)| get(&g[l]).clone()).collect();
+                group.clone().map(|r| get(&out[r].2[li]).clone()).collect();
             let total: usize = parts.iter().map(|p| p.numel()).sum();
             assert_eq!(
                 total,
-                wr * wc * spec0.weight_replicas(),
+                wr * wc * gspec.weight_replicas(),
                 "{par:?} layer {l} {name} must tile (× replicas)"
             );
-            let got = spec0.assemble_weight(stage, &parts, wr, wc);
+            let got = gspec.assemble_weight(stage, &parts, wr, wc);
             let want = get(&g_ref[l]);
             assert!(
                 got.max_abs_diff(want) < TOL,
@@ -194,12 +245,12 @@ fn check_matches_seq_reference(par: Parallelism, edge: usize) {
         // spec prescribes.
         for (name, role, n, get) in vecs {
             let parts: Vec<Option<Tensor>> =
-                out.iter().map(|(_, _, g)| get(&g[l]).clone()).collect();
-            for (rank, p) in parts.iter().enumerate() {
+                group.clone().map(|r| get(&out[r].2[li]).clone()).collect();
+            for (rank, p) in group.clone().zip(parts.iter()) {
                 let owns = ShardSpec::for_parallelism(par, edge, rank).owns_vector(role);
                 assert_eq!(p.is_some(), owns, "{par:?} layer {l} {name} rank {rank}");
             }
-            let got = spec0.assemble_vector(role, &parts, n);
+            let got = gspec.assemble_vector(role, &parts, n);
             let want = get(&g_ref[l]).as_ref().unwrap();
             assert!(
                 got.max_abs_diff(want) < TOL,
@@ -243,6 +294,82 @@ fn new_leaf_hybrid_two_d_inner_matches_seq_reference() {
         Parallelism::Hybrid { replicas: 2, inner: HybridInner::TwoD },
         2,
     );
+}
+
+#[test]
+fn new_leaf_pipeline_matches_seq_reference() {
+    check_matches_seq_reference(PIPELINE_ENV.0, PIPELINE_ENV.1);
+}
+
+#[test]
+fn pipeline_is_bitwise_identical_to_unpipelined_inner() {
+    // The tentpole's headline numerics claim: Pipeline(s=2, m=4) around a
+    // 1-D p=2 inner produces BITWISE-identical output, input grads, and
+    // per-layer weight grads to the unpipelined 1-D run at the same global
+    // batch — micro-batching only reorders row-disjoint work, and the
+    // wgrad flush contracts over concatenated rows in full-batch order.
+    // Both CUBIC_OVERLAP legs are pinned by setting overlap directly.
+    let cfg = tiny();
+    let rows = cfg.batch * cfg.seq;
+    let x = randt(&[rows, cfg.hidden], 11);
+    let dy = randt(&[rows, cfg.hidden], 12);
+    let (par, edge) = PIPELINE_ENV;
+    let (stages, per) = (2usize, cfg.layers / 2);
+    for overlap in [false, true] {
+        let mut net = NetModel::zero();
+        net.overlap = overlap;
+        let piped = run_par_net(&cfg, par, edge, &x, &dy, 42, net.clone());
+        let flat = run_par_net(&cfg, Parallelism::OneD, 2, &x, &dy, 42, net);
+        assert_eq!(piped.len(), stages * 2);
+        for (rank, (y, dx, grads)) in piped.iter().enumerate() {
+            let inner_rank = rank % 2;
+            let stage = rank / 2;
+            let (fy, fdx, fgrads) = &flat[inner_rank];
+            // 1-D activations are replicated-global, so the pipeline's
+            // relayed y_full/dx_full must match them bit for bit.
+            assert_eq!(y.data(), fy.data(), "overlap={overlap} rank {rank} y");
+            assert_eq!(dx.data(), fdx.data(), "overlap={overlap} rank {rank} dx");
+            assert_eq!(grads.len(), per, "overlap={overlap} rank {rank} grads len");
+            for (li, g) in grads.iter().enumerate() {
+                let fg = &fgrads[stage * per + li];
+                for (name, get) in [
+                    ("w_qkv", (|b| &b.w_qkv) as MatGet),
+                    ("w_proj", |b| &b.w_proj),
+                    ("w_fc1", |b| &b.w_fc1),
+                    ("w_fc2", |b| &b.w_fc2),
+                ] {
+                    assert_eq!(
+                        get(g).data(),
+                        get(fg).data(),
+                        "overlap={overlap} rank {rank} local layer {li} {name}"
+                    );
+                }
+                for (name, get) in [
+                    ("ln1_g", (|b| &b.ln1_g) as VecGet),
+                    ("ln1_b", |b| &b.ln1_b),
+                    ("b_qkv", |b| &b.b_qkv),
+                    ("b_proj", |b| &b.b_proj),
+                    ("ln2_g", |b| &b.ln2_g),
+                    ("ln2_b", |b| &b.ln2_b),
+                    ("b_fc1", |b| &b.b_fc1),
+                    ("b_fc2", |b| &b.b_fc2),
+                ] {
+                    match (get(g), get(fg)) {
+                        (Some(a), Some(b)) => assert_eq!(
+                            a.data(),
+                            b.data(),
+                            "overlap={overlap} rank {rank} local layer {li} {name}"
+                        ),
+                        (None, None) => {}
+                        _ => panic!(
+                            "overlap={overlap} rank {rank} local layer {li} {name}: \
+                             ownership differs from unpipelined inner"
+                        ),
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[test]
@@ -480,7 +607,8 @@ fn in_flight_collective_buffers_steady_state_recycle() {
 fn training_loss_curves_identical_across_parallelisms() {
     // The whole-system invariant: training the same model+data under every
     // parallelism yields the same loss trajectory (to f32 noise).
-    let model = ModelConfig { layers: 1, ..ModelConfig::tiny() };
+    // Two layers so the pipeline point (2 stages) divides the stack.
+    let model = ModelConfig { layers: 2, ..ModelConfig::tiny() };
     let train = TrainConfig { steps: 6, lr: 1e-3, warmup: 2, ..Default::default() };
     let mk = |par, edge| CubicConfig {
         model: model.clone(),
