@@ -403,6 +403,109 @@ fn main() {
         write_json6();
         write_json7();
         write_json8();
+        write_json9();
+    }
+}
+
+/// PR-9 headline numbers: inference serving. Every mesh kind at 64 ranks
+/// serves the paper-shape model in phantom mode — KV-cached decode over the
+/// virtual clock — and the continuous-batching simulator replays a seeded
+/// open-loop Poisson trace at 0.5×/1×/2× the engine's measured service
+/// rate, recording tokens/sec/rank, per-rank KV bytes, and p50/p99 request
+/// latency per arrival rate. Deterministic for a given NetModel and seed
+/// (the CI smoke asserts two same-seed runs produce an identical trace).
+fn write_json9() {
+    use cubic::config::{ModelConfig, ServeConfig};
+    use cubic::costmodel::kv_cache_bytes_per_rank;
+    use cubic::engine::time_serve;
+    use cubic::topology::{HybridInner, Parallelism, PipelineInner};
+    let net = cubic::comm::NetModel::longhorn_v100();
+    let cases: [(&str, Parallelism, usize); 6] = [
+        ("1d", Parallelism::OneD, 64),
+        ("2d", Parallelism::TwoD, 8),
+        ("3d", Parallelism::ThreeD, 4),
+        ("2.5d", Parallelism::TwoFiveD { depth: 4 }, 4),
+        ("dp8x1d", Parallelism::Hybrid { replicas: 8, inner: HybridInner::OneD }, 8),
+        (
+            "pp4x2d",
+            Parallelism::Pipeline { stages: 4, micro_batches: 8, inner: PipelineInner::TwoD },
+            4,
+        ),
+    ];
+    let serve = ServeConfig {
+        slots: 64,
+        max_seq: 160,
+        prompt_len: 128,
+        gen_len: 32,
+        requests: 64,
+        arrival_rate: 0.0, // per-case sweep below
+        seed: 9,
+    };
+    let mut entries = Vec::new();
+    for (name, par, edge) in cases {
+        let world = par.world_size(edge);
+        let stages = match par {
+            Parallelism::Pipeline { stages, .. } => stages,
+            _ => 1,
+        };
+        // One layer per stage, matching the per-layer-stack convention of
+        // the training tables.
+        let cfg = ModelConfig { layers: stages, ..ModelConfig::paper(4096, 64) };
+        let m = time_serve(&cfg, &serve, par, edge, net.clone(), true, serve.seed)
+            .unwrap_or_else(|e| panic!("BENCH_PR9: {name} serve timing failed: {e}"));
+        let kv_bytes = cfg.layers as u64
+            * kv_cache_bytes_per_rank(
+                par,
+                edge,
+                0,
+                serve.slots as u64,
+                cfg.heads as u64,
+                (cfg.hidden / cfg.heads) as u64,
+                serve.max_seq as u64,
+            );
+        let service_rate =
+            serve.slots as f64 / (m.prefill_s + m.decode_total_s).max(1e-12);
+        let rates: Vec<String> = [0.5, 1.0, 2.0]
+            .iter()
+            .map(|mult| {
+                let rate = mult * service_rate;
+                let sv = ServeConfig { arrival_rate: rate, ..serve.clone() };
+                let sim = cubic::serve::simulate(&sv, m.prefill_s, &m.decode_step_s);
+                format!(
+                    "{{ \"rate_req_s\": {rate:.4}, \"p50_s\": {:.6}, \"p99_s\": {:.6}, \
+                     \"mean_s\": {:.6}, \"max_concurrent\": {} }}",
+                    sim.p50, sim.p99, sim.mean, sim.max_concurrent
+                )
+            })
+            .collect();
+        entries.push(format!(
+            "    \"{name}\": {{ \"mesh\": \"{}\", \"world\": {world}, \
+             \"tokens_per_sec_per_rank\": {:.2}, \"prefill_virtual_s\": {:.6}, \
+             \"decode_step_virtual_s\": {:.6}, \"kv_bytes_per_rank\": {kv_bytes}, \
+             \"rates\": [{}] }}",
+            par.mesh_desc(edge),
+            m.tokens_per_sec_per_rank,
+            m.prefill_s,
+            m.decode_total_s / serve.gen_len.max(1) as f64,
+            rates.join(", "),
+        ));
+    }
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR9.json");
+    let json = format!(
+        "{{\n  \"pr\": 9,\n  \"generated_by\": \"cargo bench --bench microbench\",\n  \
+         \"host\": \"virtual-clock phantom mode; deterministic for a given NetModel\",\n  \
+         \"model\": \"hidden 4096, 64-dim heads, seq window 160 (ModelConfig::paper), 1 layer per stage\",\n  \
+         \"serve_phantom\": {{\n{}\n  }},\n  \
+         \"note\": \"KV-cached serving at 64 ranks: 64 slots, prompt 128, gen 32, seeded \
+         open-loop Poisson arrivals replayed by the continuous-batching simulator at \
+         0.5x/1x/2x the measured service rate. tokens_per_sec_per_rank is decode-only \
+         steady state on the virtual clock; tests/serve_parity.rs pins decode bitwise \
+         against the full-sequence forward on every mesh kind.\"\n}}\n",
+        entries.join(",\n"),
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }
 

@@ -238,6 +238,202 @@ impl ModelConfig {
             }
         }
     }
+
+    /// Check a serving configuration against this model on `(par, edge)`.
+    ///
+    /// Beyond the head-divisor rule (the KV cache splits heads exactly like
+    /// training), serving adds two families of constraints:
+    ///
+    /// * **KV-cache shape**: `prompt_len + gen_len ≤ max_seq` — a sequence
+    ///   must fit the per-slot cache rows it reserves.
+    /// * **Slot divisibility**: the decode activation has `slots` rows, so
+    ///   every mesh's row split (and, for bitwise decode-vs-prefill parity,
+    ///   every reduction's chunking) must land on slot boundaries. Ring
+    ///   reductions over groups of ≤ 2 ranks are order-free (`a + b` is
+    ///   IEEE-commutative), so those groups impose no chunk-alignment
+    ///   condition; larger groups require slot-aligned chunks. For `Hybrid`
+    ///   this includes the replica batch split (`slots % replicas`, then
+    ///   the inner conditions at `slots / replicas`); for `Pipeline` the
+    ///   whole slot batch relays through each stage, so the inner
+    ///   conditions apply at the full `slots` (decode is not
+    ///   micro-batched) plus `layers % stages`.
+    pub fn validate_serve(
+        &self,
+        par: Parallelism,
+        edge: usize,
+        serve: &ServeConfig,
+    ) -> Result<(), String> {
+        if serve.slots == 0 {
+            return Err("serve slots must be >= 1".into());
+        }
+        if serve.max_seq == 0 {
+            return Err("serve max_seq must be >= 1".into());
+        }
+        if serve.prompt_len == 0 || serve.gen_len == 0 {
+            return Err("serve prompt_len and gen_len must be >= 1".into());
+        }
+        if serve.prompt_len + serve.gen_len > serve.max_seq {
+            return Err(format!(
+                "prompt_len {} + gen_len {} exceeds max_seq {} (KV-cache rows per slot)",
+                serve.prompt_len, serve.gen_len, serve.max_seq
+            ));
+        }
+        let div = crate::dist::ShardSpec::for_parallelism(par, edge, 0).head_divisor();
+        if self.heads % div != 0 {
+            return Err(format!(
+                "heads {} not divisible by head divisor {div} of the {} mesh ({})",
+                self.heads,
+                par.name(),
+                par.mesh_desc(edge),
+            ));
+        }
+        self.validate_serve_mesh(par, edge, serve.slots)
+    }
+
+    /// The recursive per-kind half of [`ModelConfig::validate_serve`]:
+    /// weight divisibility (same as training) + decode-slot alignment.
+    fn validate_serve_mesh(
+        &self,
+        par: Parallelism,
+        edge: usize,
+        slots: usize,
+    ) -> Result<(), String> {
+        let p = edge;
+        match par {
+            Parallelism::Seq => Ok(()),
+            Parallelism::OneD => {
+                if self.ffn % p != 0 || self.hidden % p != 0 {
+                    return Err(format!("hidden/ffn must divide P {p}"));
+                }
+                if slots % p != 0 {
+                    return Err(format!(
+                        "serve slots {slots} % P {p} != 0 (1-D all-reduce chunks must land \
+                         on slot boundaries for decode parity)"
+                    ));
+                }
+                Ok(())
+            }
+            Parallelism::TwoD => {
+                if self.hidden % (p * p) != 0 || self.ffn % (p * p) != 0 {
+                    return Err(format!("hidden/ffn must divide q² = {}", p * p));
+                }
+                if slots % p != 0 {
+                    return Err(format!("serve slots {slots} % q {p} != 0 (row split)"));
+                }
+                if p > 2 && slots % (p * p) != 0 {
+                    return Err(format!(
+                        "serve slots {slots} % q² {} != 0 (layernorm-stat reduction over \
+                         q > 2 ranks needs slot-aligned chunks)",
+                        p * p
+                    ));
+                }
+                Ok(())
+            }
+            Parallelism::ThreeD => {
+                if self.hidden % (p * p) != 0 || self.ffn % (p * p) != 0 {
+                    return Err(format!("hidden/ffn must divide p² = {}", p * p));
+                }
+                if slots % (p * p) != 0 {
+                    return Err(format!(
+                        "serve slots {slots} % p² {} != 0 (reduce-scatter row chunks)",
+                        p * p
+                    ));
+                }
+                if p > 2 && slots % (p * p * p) != 0 {
+                    return Err(format!(
+                        "serve slots {slots} % p³ {} != 0 (line reductions over p > 2 \
+                         ranks need slot-aligned chunks)",
+                        p * p * p
+                    ));
+                }
+                Ok(())
+            }
+            Parallelism::TwoFiveD { depth } => {
+                let d = depth;
+                if self.hidden % (p * p) != 0 || self.ffn % (p * p) != 0 {
+                    return Err(format!("hidden/ffn must divide p² = {}", p * p));
+                }
+                if self.hidden % (d * p) != 0 || self.ffn % (d * p) != 0 {
+                    return Err(format!("hidden/ffn must divide depth·p = {}", d * p));
+                }
+                if slots % p != 0 {
+                    return Err(format!("serve slots {slots} % p {p} != 0 (row split)"));
+                }
+                if p > 2 && slots % (p * p) != 0 {
+                    return Err(format!(
+                        "serve slots {slots} % p² {} != 0 (grid reductions over p > 2 \
+                         ranks need slot-aligned chunks)",
+                        p * p
+                    ));
+                }
+                if d > 2 && (slots / p) % d != 0 {
+                    return Err(format!(
+                        "serve slots/p {} % depth {d} != 0 (depth all-reduce over d > 2 \
+                         ranks needs slot-aligned chunks)",
+                        slots / p
+                    ));
+                }
+                Ok(())
+            }
+            Parallelism::Hybrid { replicas, inner } => {
+                if slots % replicas != 0 {
+                    return Err(format!(
+                        "serve slots {slots} % replicas {replicas} != 0 (batch admission \
+                         must split across replicas)"
+                    ));
+                }
+                self.validate_serve_mesh(inner.as_parallelism(), edge, slots / replicas)
+                    .map_err(|e| format!("inner {}: {e}", inner.as_parallelism().name()))
+            }
+            Parallelism::Pipeline { stages, inner, .. } => {
+                if self.layers % stages != 0 {
+                    return Err(format!(
+                        "layers {} % stages {} != 0 (stages own contiguous layer slices)",
+                        self.layers, stages
+                    ));
+                }
+                // The whole slot batch relays through every stage — decode
+                // is not micro-batched — so inner conditions see all slots.
+                self.validate_serve_mesh(inner.as_parallelism(), edge, slots)
+                    .map_err(|e| format!("inner {}: {e}", inner.as_parallelism().name()))
+            }
+        }
+    }
+}
+
+/// Inference-serving parameters: batch-slot grid, KV-cache extent, and the
+/// synthetic open-loop traffic the scheduler simulates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Concurrent batch slots (the decode grid's row count).
+    pub slots: usize,
+    /// KV rows reserved per slot — the hard per-sequence length cap.
+    pub max_seq: usize,
+    /// Padded prefill length; synthetic prompts draw from `[1, prompt_len]`.
+    pub prompt_len: usize,
+    /// Decode steps measured; synthetic generations draw from `[1, gen_len]`.
+    pub gen_len: usize,
+    /// Synthetic requests per simulated trace.
+    pub requests: usize,
+    /// Open-loop arrival rate (req/s of virtual time); 0 = auto-sweep
+    /// around the measured per-mesh service rate.
+    pub arrival_rate: f64,
+    /// Traffic seed (arrivals + ragged lengths).
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            slots: 4,
+            max_seq: 64,
+            prompt_len: 16,
+            gen_len: 16,
+            requests: 64,
+            arrival_rate: 0.0,
+            seed: 9,
+        }
+    }
 }
 
 /// Training loop hyper-parameters.
@@ -428,6 +624,8 @@ pub struct CubicConfig {
     pub overlap: bool,
     /// Deterministic fault injection + recovery budget (inactive default).
     pub faults: FaultConfig,
+    /// Inference-serving parameters (`cubic serve`; see the `serve` module).
+    pub serve: ServeConfig,
 }
 
 impl Default for CubicConfig {
@@ -441,6 +639,7 @@ impl Default for CubicConfig {
             threads: 0,
             overlap: true,
             faults: FaultConfig::default(),
+            serve: ServeConfig::default(),
         }
     }
 }
@@ -588,6 +787,21 @@ impl CubicConfig {
                 side(doc.get_int("faults", "delay_dst")),
                 extra,
             ));
+        }
+
+        set_usize!("serve", "slots", cfg.serve.slots);
+        set_usize!("serve", "max_seq", cfg.serve.max_seq);
+        set_usize!("serve", "prompt_len", cfg.serve.prompt_len);
+        set_usize!("serve", "gen_len", cfg.serve.gen_len);
+        set_usize!("serve", "requests", cfg.serve.requests);
+        if let Some(v) = doc.get_float("serve", "arrival_rate") {
+            if v < 0.0 {
+                return Err(ConfigError(format!("arrival_rate {v} < 0")));
+            }
+            cfg.serve.arrival_rate = v;
+        }
+        if let Some(v) = doc.get_int("serve", "seed") {
+            cfg.serve.seed = v as u64;
         }
         cfg.model
             .validate(cfg.parallelism, cfg.edge)
@@ -906,5 +1120,124 @@ max_recoveries = 2
         // Degenerate parameters are config errors, not panics.
         assert!(ModelConfig::tiny().validate(pp(0, 1), 2).is_err());
         assert!(ModelConfig::tiny().validate(pp(1, 0), 2).is_err());
+    }
+
+    #[test]
+    fn serve_config_validates_slot_alignment_per_kind() {
+        let m = ModelConfig::tiny(); // hidden 64, ffn 256, heads 4, layers 2
+        let sv = |slots: usize| ServeConfig { slots, ..ServeConfig::default() };
+        // Positive: the tiny model serves on all seven kinds at slots = 4.
+        let envs: [(Parallelism, usize); 7] = [
+            (Parallelism::Seq, 1),
+            (Parallelism::OneD, 4),
+            (Parallelism::TwoD, 2),
+            (Parallelism::ThreeD, 2),
+            (Parallelism::TwoFiveD { depth: 2 }, 2),
+            (Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD }, 2),
+            (
+                Parallelism::Pipeline {
+                    stages: 2,
+                    micro_batches: 4,
+                    inner: crate::topology::PipelineInner::OneD,
+                },
+                2,
+            ),
+        ];
+        for (par, edge) in envs {
+            m.validate_serve(par, edge, &sv(4))
+                .unwrap_or_else(|e| panic!("{}: {e}", par.name()));
+        }
+        // 1-D: decode rows must land on all-reduce chunk boundaries.
+        let err = m.validate_serve(Parallelism::OneD, 4, &sv(3)).unwrap_err();
+        assert!(err.contains("slots"), "{err}");
+        // 2-D at q = 4: q | slots alone is not enough — reductions over
+        // q > 2 ranks additionally need q² | slots for chunk alignment.
+        let mut wide = ModelConfig::tiny();
+        wide.hidden = 256;
+        wide.ffn = 1024;
+        wide.heads = 16;
+        let err = wide.validate_serve(Parallelism::TwoD, 4, &sv(4)).unwrap_err();
+        assert!(err.contains("q²"), "{err}");
+        assert!(wide.validate_serve(Parallelism::TwoD, 4, &sv(16)).is_ok());
+        // 3-D: reduce-scatter splits decode rows p² ways.
+        let err = m.validate_serve(Parallelism::ThreeD, 2, &sv(2)).unwrap_err();
+        assert!(err.contains("p²"), "{err}");
+        // Hybrid: batch admission must split across replicas.
+        let err = m
+            .validate_serve(
+                Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD },
+                2,
+                &sv(3),
+            )
+            .unwrap_err();
+        assert!(err.contains("replicas"), "{err}");
+        // Pipeline applies inner conditions at the FULL slot batch (decode
+        // is not micro-batched): 1-D inner at p = 4 rejects slots = 2 even
+        // though micro_batches would have split the training batch.
+        let pp1d = Parallelism::Pipeline {
+            stages: 2,
+            micro_batches: 4,
+            inner: crate::topology::PipelineInner::OneD,
+        };
+        let err = m.validate_serve(pp1d, 4, &sv(2)).unwrap_err();
+        assert!(err.contains("inner 1d"), "{err}");
+    }
+
+    #[test]
+    fn serve_config_rejects_kv_overflow_and_degenerate_shapes() {
+        let m = ModelConfig::tiny();
+        // A sequence must fit its per-slot KV rows.
+        let sv = ServeConfig { prompt_len: 40, gen_len: 32, ..ServeConfig::default() };
+        let err = m.validate_serve(Parallelism::Seq, 1, &sv).unwrap_err();
+        assert!(err.contains("max_seq"), "{err}");
+        let err = m
+            .validate_serve(Parallelism::Seq, 1, &ServeConfig { slots: 0, ..Default::default() })
+            .unwrap_err();
+        assert!(err.contains("slots"), "{err}");
+        assert!(m
+            .validate_serve(Parallelism::Seq, 1, &ServeConfig { max_seq: 0, ..Default::default() })
+            .is_err());
+        assert!(m
+            .validate_serve(Parallelism::Seq, 1, &ServeConfig { gen_len: 0, ..Default::default() })
+            .is_err());
+        // The KV cache splits heads exactly like training: 2.5-D at p = 2,
+        // depth = 4 splits heads 8 ways, which 4 heads cannot satisfy.
+        let err = m
+            .validate_serve(Parallelism::TwoFiveD { depth: 4 }, 2, &ServeConfig::default())
+            .unwrap_err();
+        assert!(err.contains("head divisor"), "{err}");
+    }
+
+    #[test]
+    fn serve_toml_round_trip() {
+        let text = r#"
+[serve]
+slots = 8
+max_seq = 128
+prompt_len = 32
+gen_len = 16
+requests = 100
+arrival_rate = 2.5
+seed = 42
+"#;
+        let cfg = CubicConfig::from_toml(text).unwrap();
+        assert_eq!(
+            cfg.serve,
+            ServeConfig {
+                slots: 8,
+                max_seq: 128,
+                prompt_len: 32,
+                gen_len: 16,
+                requests: 100,
+                arrival_rate: 2.5,
+                seed: 42,
+            }
+        );
+        assert!(CubicConfig::from_toml("[serve]\narrival_rate = -1.0").is_err());
+        assert_eq!(
+            CubicConfig::default().serve,
+            ServeConfig::default(),
+            "no [serve] section → defaults"
+        );
     }
 }

@@ -362,6 +362,118 @@ pub fn overlapped_step_time(t_join: f64, boundaries: &[(f64, f64)]) -> f64 {
     t_join + overlapped_exposed_comm(boundaries, t_join)
 }
 
+// --- inference serving (`crate::serve`) ---------------------------------
+
+/// **KV-cache bytes per rank per layer**: the serving-memory analogue of
+/// [`activation_bytes_per_rank`]. The cache holds K and V rows for every
+/// (local slot, local head) pair at the full `max_seq` extent, so per rank
+/// it is `2 · slots_loc · heads_loc · max_seq · head_dim · 4` — slots split
+/// by the mesh's activation-row division, heads by its column split
+/// (`ShardSpec::head_divisor`). Pinned bitwise against
+/// `attention::DecodeKv::nominal_bytes` for every mesh kind.
+pub fn kv_cache_bytes_per_rank(
+    par: crate::topology::Parallelism,
+    edge: usize,
+    rank: usize,
+    slots: u64,
+    heads: u64,
+    head_dim: u64,
+    max_seq: u64,
+) -> u64 {
+    let spec = crate::dist::ShardSpec::for_parallelism(par, edge, rank);
+    let slots_loc = spec.activation_rows(slots as usize) as u64;
+    let heads_loc = spec.local_heads(heads as usize) as u64;
+    2 * slots_loc * heads_loc * max_seq * head_dim * W
+}
+
+/// **Decode-step comm bytes per rank**: exact per-rank bytes sent by the
+/// four linears of each layer (qkv Expand, proj Reduce, fc1 Expand, fc2
+/// Reduce) during one decode step over a `slots`-row grid. The attention
+/// itself is communication-free at decode time — each rank holds the full
+/// KV history for its local (slot, head) pairs — so the linears are the
+/// whole per-layer traffic on every leaf. Hybrid recurses at the
+/// per-replica slot count (replica all-reduces only run on gradients);
+/// Pipeline recurses at the per-stage layer count and full slots, with the
+/// stage relay accounted separately by [`serve_relay_bytes_per_step`].
+pub fn decode_step_comm_bytes_per_rank(
+    par: crate::topology::Parallelism,
+    edge: u64,
+    slots: u64,
+    hidden: u64,
+    ffn: u64,
+    layers: u64,
+) -> u64 {
+    use crate::topology::Parallelism;
+    let p = edge;
+    // (n_in, n_out, stage) of the four linears of one block.
+    let linears =
+        [(hidden, 3 * hidden, TessStage::Expand), (hidden, hidden, TessStage::Reduce),
+         (hidden, ffn, TessStage::Expand), (ffn, hidden, TessStage::Reduce)];
+    match par {
+        Parallelism::Seq => 0,
+        // Column-parallel Expand moves nothing; each Reduce all-reduces its
+        // (slots, hidden) output.
+        Parallelism::OneD => layers * 2 * ring_all_reduce_bytes(p, slots * hidden),
+        Parallelism::TwoD => {
+            let per_layer: u64 = linears
+                .iter()
+                .map(|&(n, k, _)| {
+                    summa_nn_bytes_per_rank(p, (slots / p) * (n / p), (n / p) * (k / p))
+                })
+                .sum();
+            layers * per_layer
+        }
+        Parallelism::ThreeD => {
+            let per_layer: u64 = linears
+                .iter()
+                .map(|&(n, k, _)| mm3d_fwd_bytes_per_rank(p, slots, n, k))
+                .sum();
+            layers * per_layer
+        }
+        Parallelism::TwoFiveD { depth } => {
+            let per_layer: u64 = linears
+                .iter()
+                .map(|&(n, k, stage)| {
+                    mm25d_fwd_bytes_per_rank(p, depth as u64, slots, n, k, stage)
+                })
+                .sum();
+            layers * per_layer
+        }
+        Parallelism::Hybrid { replicas, inner } => decode_step_comm_bytes_per_rank(
+            inner.as_parallelism(),
+            edge,
+            slots / replicas as u64,
+            hidden,
+            ffn,
+            layers,
+        ),
+        Parallelism::Pipeline { stages, inner, .. } => decode_step_comm_bytes_per_rank(
+            inner.as_parallelism(),
+            edge,
+            slots,
+            hidden,
+            ffn,
+            layers / stages as u64,
+        ),
+    }
+}
+
+/// Per-rank bytes sent by the pipeline's serve relay during one prefill or
+/// decode step: interior stages forward their boundary activation shard of
+/// `local_elems` elements one hop up; the last stage fans the final hidden
+/// state out to the other `s − 1` stage groups (decode feeds it back as
+/// the next step's input on every stage). `last_stage` selects the role.
+pub fn serve_relay_bytes_per_step(s: u64, local_elems: u64, last_stage: bool) -> u64 {
+    if s <= 1 {
+        return 0;
+    }
+    if last_stage {
+        (s - 1) * local_elems * W
+    } else {
+        local_elems * W
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -730,5 +842,105 @@ mod tests {
             step_on < step_off,
             "overlapped {step_on} should beat serialized {step_off}"
         );
+    }
+
+    #[test]
+    fn kv_cache_bytes_match_decode_kv_nominal_every_kind() {
+        use crate::dist::ShardSpec;
+        use crate::model::attention::DecodeKv;
+        use crate::topology::{HybridInner, Parallelism, PipelineInner};
+        let (slots, heads, head_dim, max_seq) = (8usize, 8usize, 16usize, 32usize);
+        let envs: [(Parallelism, usize); 7] = [
+            (Parallelism::Seq, 1),
+            (Parallelism::OneD, 4),
+            (Parallelism::TwoD, 2),
+            (Parallelism::ThreeD, 2),
+            (Parallelism::TwoFiveD { depth: 2 }, 2),
+            (Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD }, 2),
+            (
+                Parallelism::Pipeline {
+                    stages: 2,
+                    micro_batches: 4,
+                    inner: PipelineInner::OneD,
+                },
+                2,
+            ),
+        ];
+        for (par, edge) in envs {
+            for rank in 0..par.world_size(edge) {
+                let spec = ShardSpec::for_parallelism(par, edge, rank);
+                // Build the cache exactly as `serve::build_kv` does — local
+                // slots from the activation-row division, local heads from
+                // the column split — and pin the closed form against it.
+                let kv = DecodeKv::new(
+                    spec.activation_rows(slots),
+                    spec.local_heads(heads),
+                    head_dim,
+                    max_seq,
+                    true,
+                );
+                assert_eq!(
+                    kv.nominal_bytes(),
+                    kv_cache_bytes_per_rank(
+                        par,
+                        edge,
+                        rank,
+                        slots as u64,
+                        heads as u64,
+                        head_dim as u64,
+                        max_seq as u64
+                    ),
+                    "{par:?} rank {rank}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_linear_bytes_match_engine_ledger_exactly() {
+        // Run the four decode linears of one layer in phantom mode on each
+        // leaf mesh and pin the measured per-rank bytes against the closed
+        // form — the serve analogue of the training matmul pins above.
+        use crate::config::ModelConfig;
+        use crate::dist::Stage;
+        use crate::parallel::{ops_for, ParallelOps};
+        use crate::topology::Parallelism;
+        let cfg = ModelConfig { hidden: 32, ffn: 64, heads: 4, ..ModelConfig::tiny() };
+        let slots = 8usize;
+        for (par, edge) in [
+            (Parallelism::Seq, 1),
+            (Parallelism::OneD, 4),
+            (Parallelism::TwoD, 2),
+            (Parallelism::ThreeD, 2),
+            (Parallelism::TwoFiveD { depth: 2 }, 2),
+        ] {
+            let world = par.world_size(edge);
+            let cfg2 = cfg.clone();
+            let measured =
+                run_spmd(world, NetModel::flat(0.0, 1e9, f64::INFINITY), move |rank, ep| {
+                    let ops = ops_for(par, edge, rank);
+                    let blk = ops.phantom_block(&cfg2);
+                    let (lr, lc) = ops.activation_shape(slots, cfg2.hidden);
+                    let x = Tensor::phantom(&[lr, lc]);
+                    let qkv = ops.linear_fwd(ep, &x, &blk.w_qkv, None, Stage::Expand);
+                    let attn = Tensor::phantom(&[lr, qkv.dims2().1 / 3]);
+                    let _ = ops.linear_fwd(ep, &attn, &blk.w_proj, None, Stage::Reduce);
+                    let h = ops.linear_fwd(ep, &x, &blk.w_fc1, None, Stage::Expand);
+                    let _ = ops.linear_fwd(ep, &h, &blk.w_fc2, None, Stage::Reduce);
+                    ep.join_all();
+                    ep.stats.bytes_sent
+                });
+            let want = decode_step_comm_bytes_per_rank(
+                par,
+                edge as u64,
+                slots as u64,
+                cfg.hidden as u64,
+                cfg.ffn as u64,
+                1,
+            );
+            for (rank, &got) in measured.iter().enumerate() {
+                assert_eq!(got, want, "{par:?} rank {rank}");
+            }
+        }
     }
 }

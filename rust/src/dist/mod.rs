@@ -857,6 +857,16 @@ impl ShardSpec {
         }
     }
 
+    /// Activation rows this rank holds out of `rows` global batch rows —
+    /// the row half of [`ShardSpec::activation_shape`], independent of the
+    /// column count. Serving sizes per-rank KV-cache pools from this (the
+    /// decode grid has one row per batch slot), and the cost model uses it
+    /// for KV-bytes-per-rank forms.
+    pub fn activation_rows(&self, rows: usize) -> usize {
+        // Column width never affects row sharding; 1 is a unit width.
+        self.activation_shape(rows, 1).0
+    }
+
     /// `(r0, c0, shard_rows, shard_cols)` of this rank's activation window
     /// in the global `(rows, cols)` matrix. Panics for replicated meshes
     /// (there is no window — the whole matrix is local).

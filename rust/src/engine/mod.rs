@@ -400,6 +400,30 @@ pub fn time_core_step(
     })
 }
 
+/// Time one serving window (full-batch prefill + `gen_len` decode steps)
+/// on the virtual-clock cluster — the inference analogue of
+/// [`time_core_step`].
+///
+/// Unlike `time_core_step` this *does* validate: serving shapes feed the
+/// KV-cache shard math and the decode-parity chunk-alignment rules, so a
+/// bad config must fail loudly here rather than deep in a collective
+/// (see [`crate::config::ModelConfig::validate_serve`]). `phantom` selects
+/// shape-only tensors with analytic compute charges; numerics paths use
+/// real tensors seeded by `seed`.
+pub fn time_serve(
+    cfg: &crate::config::ModelConfig,
+    serve: &crate::config::ServeConfig,
+    par: Parallelism,
+    edge: usize,
+    net: NetModel,
+    phantom: bool,
+    seed: u64,
+) -> Result<crate::serve::ServeMeasurement> {
+    cfg.validate_serve(par, edge, serve)
+        .map_err(|e| anyhow::anyhow!("invalid serve config: {e}"))?;
+    Ok(crate::serve::measure_serve(cfg, serve, par, edge, net, phantom, seed))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -512,6 +536,38 @@ mod tests {
                 "{par:?}: bwd/fwd ratio {ratio} out of range"
             );
         }
+    }
+
+    #[test]
+    fn time_serve_validates_then_times_phantom() {
+        let cfg = ModelConfig::tiny();
+        let serve = crate::config::ServeConfig {
+            slots: 4,
+            max_seq: 16,
+            prompt_len: 4,
+            gen_len: 4,
+            ..Default::default()
+        };
+        // Misaligned slot count fails loudly at the engine boundary.
+        let mut bad = serve.clone();
+        bad.slots = 3;
+        assert!(time_serve(&cfg, &bad, Parallelism::OneD, 4, NetModel::zero(), true, 1)
+            .is_err());
+        let m = time_serve(
+            &cfg,
+            &serve,
+            Parallelism::OneD,
+            4,
+            NetModel::longhorn_v100(),
+            true,
+            1,
+        )
+        .unwrap();
+        assert!(m.prefill_s > 0.0 && m.decode_total_s > 0.0);
+        assert_eq!(m.decode_step_s.len(), serve.gen_len);
+        assert!(m.tokens_per_sec_per_rank > 0.0);
+        // A decode step is far cheaper than the full prefill pass.
+        assert!(m.decode_step_s[0] < m.prefill_s, "{m:?}");
     }
 }
 

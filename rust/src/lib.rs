@@ -34,6 +34,7 @@ pub mod optim;
 pub mod parallel;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod spmd;
 pub mod tensor;
 pub mod topology;

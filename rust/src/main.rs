@@ -5,6 +5,7 @@
 //!   bench-table1  regenerate paper Table 1 (weak scaling)
 //!   bench-table2  regenerate paper Table 2 (strong scaling + headline)
 //!   plan          print the shard plan for a config (no execution)
+//!   serve         KV-cached decode + continuous batching (virtual clock)
 //!   artifacts     list + smoke-test the AOT artifact bundle
 //!   help          this text
 
@@ -48,6 +49,28 @@ COMMANDS
                   --world <n> — the cross-kind comparison table (every
                   parallelism kind decomposed at exactly n ranks, ranked
                   by phantom-mode step time)
+  serve           KV-cached autoregressive inference with continuous
+                  batching (see the serve module docs). Measures prefill +
+                  per-step decode cost on the virtual clock, then replays a
+                  seeded open-loop synthetic trace through the scheduler and
+                  reports tokens/sec/rank with p50/p99 latency.
+                    --world <n>              sweep every parallelism kind
+                                             decomposed at exactly n ranks
+                                             (phantom mode; paper-scale model)
+                    --phantom                shape-only tensors + analytic
+                                             compute charges (any world size)
+                    --slots <n>              concurrent batch slots (default:
+                                             world in sweep mode, else 4)
+                    --max-seq <n>            KV rows per slot (default 64)
+                    --prompt-len <n>         padded prefill length (default 16)
+                    --gen-len <n>            decode steps (default 16)
+                    --requests <n>           synthetic requests (default 64)
+                    --arrival-rate <f>       open-loop req/s of virtual time
+                                             (0 = auto-sweep 0.5/1/2 x the
+                                             measured service rate)
+                    --serve-seed <n>         traffic seed (default 9)
+                  also honors --model/--parallelism/--edge/--depth/--replicas/
+                  --stages (single-mesh mode when --world is absent)
   artifacts       list the AOT bundle and smoke-run one artifact
                     --dir <artifacts dir> (default ./artifacts)
   help            show this text
@@ -271,6 +294,127 @@ fn cmd_plan_world(world: usize, overlap: bool) -> Result<(), String> {
     Ok(())
 }
 
+/// `cubic serve`: measure one serving window per mesh on the virtual clock
+/// (prefill + `gen_len` decode steps), then replay a seeded open-loop trace
+/// through the continuous-batching scheduler at one or three arrival rates.
+/// With `--world N` every plan candidate at exactly `N` ranks is swept in
+/// phantom mode (invalid serve shapes are skipped with a note); without it
+/// the configured single parallelism runs, with real numerics unless
+/// `--phantom` is given.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    use cubic::metrics::{fmt_bytes, Table};
+    let world = args.get_usize("world", 0)?;
+    let sweep = world > 0;
+    let phantom = args.flag("phantom") || sweep;
+    let mut cfg = build_config(args)?;
+    cfg.serve.slots =
+        args.get_usize("slots", if sweep { world } else { cfg.serve.slots })?;
+    cfg.serve.max_seq = args.get_usize("max-seq", cfg.serve.max_seq)?;
+    cfg.serve.prompt_len = args.get_usize("prompt-len", cfg.serve.prompt_len)?;
+    cfg.serve.gen_len = args.get_usize("gen-len", cfg.serve.gen_len)?;
+    cfg.serve.requests = args.get_usize("requests", cfg.serve.requests)?;
+    cfg.serve.arrival_rate = args.get_f64("arrival-rate", cfg.serve.arrival_rate)?;
+    cfg.serve.seed = args.get_usize("serve-seed", cfg.serve.seed as usize)? as u64;
+    let mut net = NetModel::longhorn_v100();
+    net.set_overlap(cfg.overlap);
+    // Sweep mode probes the paper-scale model (the tiny default cannot
+    // split 64 ways); single-mesh mode serves the configured model.
+    let model = if sweep { cubic::config::ModelConfig::paper(4096, 16) } else { cfg.model.clone() };
+    let candidates: Vec<(Parallelism, usize)> = if sweep {
+        cubic::topology::plan_candidates(world).into_iter().map(|c| (c.par, c.edge)).collect()
+    } else {
+        vec![(cfg.parallelism, cfg.edge)]
+    };
+    println!(
+        "serve: slots {}, prompt {}, gen {}, max_seq {}, {} requests, seed {}{}",
+        cfg.serve.slots,
+        cfg.serve.prompt_len,
+        cfg.serve.gen_len,
+        cfg.serve.max_seq,
+        cfg.serve.requests,
+        cfg.serve.seed,
+        if phantom { " (phantom)" } else { "" },
+    );
+    let mut t = Table::new(&[
+        "Kind", "Mesh", "Ranks", "tok/s/rank", "KV/rank", "rate req/s", "p50(s)", "p99(s)",
+        "mean(s)",
+    ]);
+    let mut trace: Option<(String, f64, Vec<String>)> = None;
+    let mut any = false;
+    for (par, edge) in candidates {
+        // Pipeline stages each own a contiguous layer slice; the 1-layer
+        // paper probe cannot split, so give it one layer per stage.
+        let cfg_c = if let Parallelism::Pipeline { stages, .. } = par {
+            cubic::config::ModelConfig { layers: model.layers.max(stages), ..model.clone() }
+        } else {
+            model.clone()
+        };
+        if let Err(e) = cfg_c.validate_serve(par, edge, &cfg.serve) {
+            println!("  (skipping {} {}: {e})", par.name(), par.mesh_desc(edge));
+            continue;
+        }
+        let m = cubic::engine::time_serve(
+            &cfg_c, &cfg.serve, par, edge, net.clone(), phantom, cfg.train.seed,
+        )
+        .map_err(|e| e.to_string())?;
+        let w = par.world_size(edge);
+        let head_dim = cfg_c.hidden / cfg_c.heads;
+        let kv_bytes = cfg_c.layers as u64
+            * cubic::costmodel::kv_cache_bytes_per_rank(
+                par,
+                edge,
+                0,
+                cfg.serve.slots as u64,
+                cfg_c.heads as u64,
+                head_dim as u64,
+                cfg.serve.max_seq as u64,
+            );
+        // Open-loop rates: the user's, or a 0.5/1/2x sweep around the
+        // measured steady-state service rate of the slot grid.
+        let window = m.prefill_s + m.decode_total_s;
+        let service_rate = cfg.serve.slots as f64 / window.max(1e-12);
+        let rates: Vec<f64> = if cfg.serve.arrival_rate > 0.0 {
+            vec![cfg.serve.arrival_rate]
+        } else {
+            vec![0.5 * service_rate, service_rate, 2.0 * service_rate]
+        };
+        for rate in rates {
+            let sv = cubic::config::ServeConfig { arrival_rate: rate, ..cfg.serve.clone() };
+            let sim = cubic::serve::simulate(&sv, m.prefill_s, &m.decode_step_s);
+            t.row(&[
+                par.name().to_string(),
+                par.mesh_desc(edge),
+                w.to_string(),
+                format!("{:.1}", m.tokens_per_sec_per_rank),
+                fmt_bytes(kv_bytes),
+                format!("{rate:.2}"),
+                format!("{:.4}", sim.p50),
+                format!("{:.4}", sim.p99),
+                format!("{:.4}", sim.mean),
+            ]);
+            if trace.is_none() {
+                trace = Some((
+                    format!("{} {}", par.name(), par.mesh_desc(edge)),
+                    rate,
+                    sim.requests.iter().take(10).map(|r| r.trace_line()).collect(),
+                ));
+            }
+            any = true;
+        }
+    }
+    if !any {
+        return Err("no parallelism kind admits this serve config".into());
+    }
+    println!("{}", t.to_markdown());
+    if let Some((mesh, rate, lines)) = trace {
+        println!("request trace ({mesh}, rate {rate:.2} req/s, first {}):", lines.len());
+        for l in &lines {
+            println!("{l}");
+        }
+    }
+    Ok(())
+}
+
 fn cmd_artifacts(args: &Args) -> Result<(), String> {
     let dir = args.get("dir").unwrap_or_else(|| "artifacts".into());
     let rt = Runtime::load(&dir).map_err(|e| e.to_string())?;
@@ -334,6 +478,7 @@ fn main() {
             Ok(())
         }
         Some("plan") => cmd_plan(&args),
+        Some("serve") => cmd_serve(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("help") | None => {
             println!("{HELP}");

@@ -29,6 +29,149 @@ fn charge_mm(ep: &mut Endpoint, m: usize, n: usize, k: usize) {
     ep.charge_flops(2.0 * m as f64 * n as f64 * k as f64);
 }
 
+/// Per-layer KV cache for autoregressive decode: one append-only `(max_seq,
+/// head_dim)` K and V tensor per (local slot, local head), plus a per-slot
+/// fill length. This is the *only* state inference retains between tokens —
+/// no probs, no qkv stash, no backward plumbing (`AttnCache` stays a
+/// training-side type; see the serve-parity steady-state memory test).
+///
+/// Sharding falls out of the training layout: heads here are the rank's
+/// *local* heads (already validated by `ShardSpec::head_divisor`) and slots
+/// are the rank's local activation rows, so the cache is sharded exactly
+/// like the QKV activation it is harvested from.
+pub struct DecodeKv {
+    /// `k[slot * heads + head]` and likewise `v`, each `(max_seq, head_dim)`.
+    pub k: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    /// Tokens currently resident per local slot (`≤ max_seq`).
+    pub len: Vec<usize>,
+    pub slots: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+}
+
+impl DecodeKv {
+    /// Allocate an empty cache. `phantom` skips backing storage but keeps
+    /// the same length bookkeeping, so phantom decode charges use real
+    /// per-slot positions.
+    pub fn new(slots: usize, heads: usize, head_dim: usize, max_seq: usize, phantom: bool) -> Self {
+        let n = slots * heads;
+        let mk = || {
+            if phantom {
+                Tensor::phantom(&[max_seq, head_dim])
+            } else {
+                Tensor::zeros(&[max_seq, head_dim])
+            }
+        };
+        DecodeKv {
+            k: (0..n).map(|_| mk()).collect(),
+            v: (0..n).map(|_| mk()).collect(),
+            len: vec![0; slots],
+            slots,
+            heads,
+            head_dim,
+            max_seq,
+        }
+    }
+
+    /// Copy prefill K/V rows out of a forward QKV activation. `qkv` is the
+    /// local head-major shard `(slots · pad, 3·heads·head_dim)`; slot `s`
+    /// occupies rows `s·pad .. s·pad+pad` of which the first `lens[s]` are
+    /// real prompt tokens (the rest is ragged-batch padding, never cached).
+    pub fn harvest(&mut self, qkv: &Tensor, pad: usize, lens: &[usize]) {
+        assert_eq!(lens.len(), self.slots);
+        if qkv.is_phantom() {
+            self.len.copy_from_slice(lens);
+            return;
+        }
+        let hd = self.head_dim;
+        for s in 0..self.slots {
+            let l = lens[s];
+            assert!(l >= 1 && l <= pad && l <= self.max_seq, "prompt len {l} out of range");
+            for g in 0..self.heads {
+                let base = g * 3 * hd;
+                let idx = s * self.heads + g;
+                self.k[idx].set_block(0, 0, &qkv.block(s * pad, base + hd, l, hd));
+                self.v[idx].set_block(0, 0, &qkv.block(s * pad, base + 2 * hd, l, hd));
+            }
+            self.len[s] = l;
+        }
+    }
+
+    /// Free a finished slot mid-flight: the rows stay allocated (steady
+    /// state — no churn), the length resets so the next admitted sequence
+    /// starts fresh at row 0.
+    pub fn retire(&mut self, slot: usize) {
+        self.len[slot] = 0;
+    }
+
+    /// Resident cache bytes on this rank for this layer (full `max_seq`
+    /// extent — the allocation, not the fill). Pinned against
+    /// `costmodel::kv_cache_bytes_for` in its tests.
+    pub fn nominal_bytes(&self) -> u64 {
+        2 * (self.slots * self.heads) as u64 * (self.max_seq * self.head_dim) as u64 * 4
+    }
+}
+
+/// One decode step over the KV cache: `qkv` holds exactly one new token per
+/// local slot (`(slots, 3·heads·head_dim)`, same head-major layout as
+/// training). For each (slot, head) the new K/V row is appended *first* so
+/// the query attends to itself, then scores span the `len+1` resident rows —
+/// no causal mask needed, the cache prefix *is* the causal set. Bitwise
+/// equal to the corresponding row of a full-sequence `fwd` (pinned in
+/// tests/serve_parity.rs): same kernel, same score prefix, and the masked
+/// tail of the full forward softmaxes to exact `0.0` contributions.
+pub fn decode_fwd(
+    ep: &mut Endpoint,
+    qkv: &Tensor,
+    heads: usize,
+    head_dim: usize,
+    kv: &mut DecodeKv,
+) -> Tensor {
+    let (rows, cols) = qkv.dims2();
+    assert_eq!(rows, kv.slots, "decode rows {rows} != kv slots {}", kv.slots);
+    assert_eq!(heads, kv.heads);
+    assert_eq!(head_dim, kv.head_dim);
+    if qkv.is_phantom() {
+        // Same charges as the real loop below, from the real per-slot fill.
+        for s in 0..rows {
+            let l = (kv.len[s] + 1) as f64;
+            let (h, hd) = (heads as f64, head_dim as f64);
+            ep.charge_flops(2.0 * (2.0 * l * hd) * h);
+            ep.charge_memop(3.0 * (4.0 * l) * h);
+            kv.len[s] += 1;
+        }
+        return Tensor::phantom(&[rows, heads * head_dim]);
+    }
+    assert_eq!(cols, 3 * heads * head_dim, "qkv cols {cols} != 3·{heads}·{head_dim}");
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let mut out = Tensor::zeros(&[rows, heads * head_dim]);
+    for s in 0..rows {
+        let pos = kv.len[s];
+        assert!(pos < kv.max_seq, "KV overflow: slot {s} at {pos} of {}", kv.max_seq);
+        for g in 0..heads {
+            let base = g * 3 * head_dim;
+            let q = qkv.block(s, base, 1, head_dim);
+            let idx = s * heads + g;
+            kv.k[idx].set_block(pos, 0, &qkv.block(s, base + head_dim, 1, head_dim));
+            kv.v[idx].set_block(pos, 0, &qkv.block(s, base + 2 * head_dim, 1, head_dim));
+            // Views drop before the next append, so set_block stays in place.
+            let kview = kv.k[idx].block(0, 0, pos + 1, head_dim);
+            let vview = kv.v[idx].block(0, 0, pos + 1, head_dim);
+            charge_mm(ep, 1, pos + 1, head_dim);
+            let scores = q.matmul_nt(&kview).scale(scale);
+            ep.charge_memop(3.0 * scores.nominal_bytes() as f64);
+            let p = ops::softmax_rows(&scores);
+            charge_mm(ep, 1, head_dim, pos + 1);
+            let o = p.matmul(&vview);
+            out.set_block(s, g * head_dim, &o);
+        }
+        kv.len[s] += 1;
+    }
+    out
+}
+
 /// Analytic cost of this rank's attention shard, charged in phantom mode.
 /// Work is derived from the *shard width* (`qkv_cols/3` = local heads ×
 /// head_dim, fractional heads allowed — the paper's own Table configs split
@@ -236,6 +379,46 @@ mod tests {
         assert!(a.block(seq, 0, seq, hd).max_abs_diff(&b.block(seq, 0, seq, hd)) < 1e-6);
         // last row of chunk 0 did change
         assert!(a.block(seq - 1, 0, 1, hd).max_abs_diff(&b.block(seq - 1, 0, 1, hd)) > 1e-3);
+    }
+
+    #[test]
+    fn decode_rows_match_full_forward_rows_bitwise() {
+        // Harvest a 3-token prompt from a full forward's QKV, then decode
+        // tokens 3..seq one at a time feeding the same QKV rows; every
+        // decoded row must equal the full forward's row *bitwise*.
+        let (heads, hd, seq, prompt) = (2usize, 4usize, 8usize, 3usize);
+        let qkv = randt(&[seq, 3 * heads * hd], 7);
+        let (full, rows) = with_ep(move |ep| {
+            let full = fwd(ep, &qkv, heads, hd, seq).0;
+            let mut kv = DecodeKv::new(1, heads, hd, seq, false);
+            kv.harvest(&qkv, seq, &[prompt]);
+            let mut rows = Vec::new();
+            for t in prompt..seq {
+                let step = qkv.block(t, 0, 1, 3 * heads * hd);
+                rows.push(decode_fwd(ep, &step, heads, hd, &mut kv));
+            }
+            (full, rows)
+        });
+        for (i, r) in rows.iter().enumerate() {
+            let want = full.block(prompt + i, 0, 1, heads * hd);
+            assert_eq!(r.data(), want.data(), "decode row {} differs", prompt + i);
+        }
+    }
+
+    #[test]
+    fn retired_slot_restarts_fresh() {
+        let (heads, hd, seq) = (1usize, 4usize, 6usize);
+        let qkv = randt(&[1, 3 * heads * hd], 8);
+        let (a, b) = with_ep(move |ep| {
+            let mut kv = DecodeKv::new(1, heads, hd, seq, false);
+            let a = decode_fwd(ep, &qkv, heads, hd, &mut kv);
+            decode_fwd(ep, &qkv, heads, hd, &mut kv);
+            kv.retire(0);
+            assert_eq!(kv.len[0], 0);
+            let b = decode_fwd(ep, &qkv, heads, hd, &mut kv);
+            (a, b)
+        });
+        assert_eq!(a.data(), b.data(), "slot reuse after retire is not fresh");
     }
 
     #[test]

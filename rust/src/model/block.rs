@@ -23,9 +23,14 @@ use crate::parallel::ParallelOps;
 use crate::tensor::Tensor;
 
 /// One transformer block forward on this rank's shard.
-pub fn block_fwd(
+///
+/// Generic over `O: ParallelOps + ?Sized` (rather than taking `&dyn`
+/// directly) so the trait's provided `serve_*` methods can pass `self`
+/// through — `dyn ParallelOps` still satisfies the bound, so `&dyn` callers
+/// are unchanged.
+pub fn block_fwd<O: ParallelOps + ?Sized>(
     ep: &mut Endpoint,
-    ops: &dyn ParallelOps,
+    ops: &O,
     p: &BlockTensors,
     x: &Tensor,
     cfg: &ModelConfig,
@@ -71,6 +76,67 @@ pub fn block_fwd(
             fc1_act,
         },
     )
+}
+
+/// Prefill: one block forward over the padded prompt batch, harvesting the
+/// K/V rows into `kv` and **dropping every backward stash**. The forward is
+/// [`block_fwd`] verbatim (`cfg.seq` must equal the padded prompt length),
+/// so prefill activations are bitwise identical to training forward — the
+/// serve-parity pin rests on that. Ragged prompts: slot `s` holds `lens[s]`
+/// real tokens; padded rows are computed (causality keeps them out of every
+/// real row) but never cached.
+pub fn prefill_block_fwd<O: ParallelOps + ?Sized>(
+    ep: &mut Endpoint,
+    ops: &O,
+    p: &BlockTensors,
+    x: &Tensor,
+    cfg: &ModelConfig,
+    kv: &mut attention::DecodeKv,
+    lens: &[usize],
+) -> Tensor {
+    let (y, cache) = block_fwd(ep, ops, p, x, cfg);
+    kv.harvest(&cache.attn.qkv, cfg.seq, lens);
+    // `cache` (probs, qkv, layernorm stats, activations) drops here:
+    // inference retains only the KV rows just harvested.
+    y
+}
+
+/// One decode step through a block: one new token per local slot
+/// (`x: (slots_local, hidden_local)` in block-entry layout). Mirrors
+/// [`block_fwd`]'s float-op and charge sequence exactly — same layernorms,
+/// same `Expand`/`Reduce` linear pairing, same residual/gelu memops — with
+/// [`attention::decode_fwd`] over the KV cache in place of the full
+/// attention, and **no cache retained** beyond the appended K/V rows.
+pub fn decode_block_fwd<O: ParallelOps + ?Sized>(
+    ep: &mut Endpoint,
+    ops: &O,
+    p: &BlockTensors,
+    x: &Tensor,
+    cfg: &ModelConfig,
+    kv: &mut attention::DecodeKv,
+) -> Tensor {
+    let hd = cfg.hidden / cfg.heads;
+    let local_heads = ops.local_heads(cfg);
+
+    let (ln1, _xhat1, _istd1) =
+        ops.layernorm(ep, x, p.ln1_g.as_ref(), p.ln1_b.as_ref(), cfg.eps, cfg.hidden);
+
+    let qkv = ops.linear_fwd(ep, &ln1, &p.w_qkv, p.b_qkv.as_ref(), Stage::Expand);
+    let attn_out = attention::decode_fwd(ep, &qkv, local_heads, hd, kv);
+    let proj = ops.linear_fwd(ep, &attn_out, &p.w_proj, p.b_proj.as_ref(), Stage::Reduce);
+    let xa = x.add(&proj);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+
+    let (ln2, _xhat2, _istd2) =
+        ops.layernorm(ep, &xa, p.ln2_g.as_ref(), p.ln2_b.as_ref(), cfg.eps, cfg.hidden);
+
+    let fc1_pre = ops.linear_fwd(ep, &ln2, &p.w_fc1, p.b_fc1.as_ref(), Stage::Expand);
+    let fc1_act = gelu(&fc1_pre);
+    ep.charge_memop(2.0 * fc1_pre.nominal_bytes() as f64);
+    let fc2 = ops.linear_fwd(ep, &fc1_act, &p.w_fc2, p.b_fc2.as_ref(), Stage::Reduce);
+    let y = xa.add(&fc2);
+    ep.charge_memop(2.0 * x.nominal_bytes() as f64);
+    y
 }
 
 /// Block backward; returns `(dx, grads)`. Vector gradients come back with

@@ -73,7 +73,12 @@
 //!    block, trainer, engine and benches are already generic. If the mesh
 //!    has a nontrivial comm profile, mirror it in `crate::costmodel` and
 //!    pin the formula against the phantom-mode ledger like
-//!    `mm25d_fwd_bytes_match_engine_ledger_exactly` does.
+//!    `mm25d_fwd_bytes_match_engine_ledger_exactly` does. Inference comes
+//!    for free too: the provided `serve_prefill`/`serve_decode` methods
+//!    drive the same `linear_fwd`/`layernorm` kernels token-by-token, so a
+//!    new leaf only overrides them if it changes the *schedule* (pipeline
+//!    does); add the `(kind, edge)` pair to `tests/serve_parity.rs` and
+//!    the decode-vs-full-forward bitwise pin covers it.
 //!
 //! *Pipeline example* (the third worked example — a **schedule**
 //! wrapper): [`pipeline::Pipeline`] boxes an inner leaf built at rank
@@ -363,6 +368,57 @@ pub trait ParallelOps: Send + Sync {
     /// because both flow through the same `DenseBlock::shard`.
     fn phantom_block(&self, cfg: &ModelConfig) -> BlockTensors {
         DenseBlock::phantom(cfg).shard(self.spec())
+    }
+
+    // --- inference serving (see the "Serving model" docs in
+    //     `crate::serve`) ----------------------------------------------
+
+    /// Prefill the prompt batch through this rank's layer slice and
+    /// harvest the per-layer KV caches. `x` is the entry-layout shard of
+    /// the padded `(slots · cfg.seq, hidden)` prompt activation; `lens`
+    /// are this rank's *local* per-slot prompt lengths. The default runs
+    /// [`crate::model::block::prefill_block_fwd`] per layer — a plain
+    /// forward with the backward stash dropped — which is exactly right
+    /// for every tensor mesh; the pipeline wrapper overrides it with a
+    /// stage-relay schedule.
+    fn serve_prefill(
+        &self,
+        ep: &mut Endpoint,
+        blocks: &[BlockTensors],
+        x: &Tensor,
+        cfg: &ModelConfig,
+        lens: &[usize],
+        kv: &mut [crate::model::attention::DecodeKv],
+    ) -> Tensor {
+        assert_eq!(blocks.len(), kv.len());
+        let mut h = x.clone();
+        for (p, kvl) in blocks.iter().zip(kv.iter_mut()) {
+            h = crate::model::block::prefill_block_fwd(ep, self, p, &h, cfg, kvl, lens);
+        }
+        h
+    }
+
+    /// One decode step: `x` holds one new token per local slot in entry
+    /// layout (`(slots_local, hidden_local)`); returns the block-stack
+    /// output in the same layout, which *is* the next step's input —
+    /// autoregression never leaves the sharded domain. The default folds
+    /// [`crate::model::block::decode_block_fwd`] over this rank's layers;
+    /// the pipeline wrapper overrides it to relay the single-token
+    /// activation through the stage chain.
+    fn serve_decode(
+        &self,
+        ep: &mut Endpoint,
+        blocks: &[BlockTensors],
+        x: &Tensor,
+        cfg: &ModelConfig,
+        kv: &mut [crate::model::attention::DecodeKv],
+    ) -> Tensor {
+        assert_eq!(blocks.len(), kv.len());
+        let mut h = x.clone();
+        for (p, kvl) in blocks.iter().zip(kv.iter_mut()) {
+            h = crate::model::block::decode_block_fwd(ep, self, p, &h, cfg, kvl);
+        }
+        h
     }
 }
 

@@ -65,6 +65,19 @@ fn tag(kind: u64, u: usize) -> u64 {
     PIPE_TAG | (kind << 32) | u as u64
 }
 
+/// Tag namespace for the serving relay (prefill/decode stage hops + output
+/// fan-out) — disjoint from [`PIPE_TAG`] and the collective sequence tags.
+/// Fixed tags are safe across decode steps: p2p matching is FIFO per
+/// `(sender, tag)` and the serve schedule is strictly sequential per hop.
+pub const SERVE_TAG: u64 = 0x5EB0_0000_0000_0000;
+
+/// Kinds within [`SERVE_TAG`]: `0` prefill boundary hop, `1` prefill
+/// output fan-out, `2` decode boundary hop, `3` decode output fan-out.
+/// `u` is the receiving stage.
+fn serve_tag(kind: u64, u: usize) -> u64 {
+    SERVE_TAG | (kind << 32) | u as u64
+}
+
 /// `s` pipeline stages wrapping a boxed inner tensor-mesh leaf.
 ///
 /// All math delegates to the inner leaf (built with a rank base of
@@ -305,6 +318,76 @@ impl ParallelOps for Pipeline {
         let mut out = ep.pooled_tensor(&[rows, cols]);
         ispec.assemble_activation_into(&parts, rows, cols, &mut out);
         out
+    }
+
+    /// Serving relay: the whole slot batch moves through the stage chain
+    /// in one hop per stage — no micro-batching (a decode step is one
+    /// token per slot; slicing it would only add latency). The last stage
+    /// fans its output back to every stage so all ranks return the
+    /// block-stack output in inner-entry layout, keeping the
+    /// autoregressive feedback loop rank-local.
+    fn serve_prefill(
+        &self,
+        ep: &mut Endpoint,
+        blocks: &[BlockTensors],
+        x: &Tensor,
+        cfg: &ModelConfig,
+        lens: &[usize],
+        kv: &mut [crate::model::attention::DecodeKv],
+    ) -> Tensor {
+        self.serve_relay(ep, blocks, x, cfg, Some(lens), kv, 0)
+    }
+
+    fn serve_decode(
+        &self,
+        ep: &mut Endpoint,
+        blocks: &[BlockTensors],
+        x: &Tensor,
+        cfg: &ModelConfig,
+        kv: &mut [crate::model::attention::DecodeKv],
+    ) -> Tensor {
+        self.serve_relay(ep, blocks, x, cfg, None, kv, 2)
+    }
+}
+
+impl Pipeline {
+    /// Shared stage-relay schedule for [`ParallelOps::serve_prefill`]
+    /// (`kind = 0`, `lens = Some`) and [`ParallelOps::serve_decode`]
+    /// (`kind = 2`, `lens = None`).
+    fn serve_relay(
+        &self,
+        ep: &mut Endpoint,
+        blocks: &[BlockTensors],
+        x: &Tensor,
+        cfg: &ModelConfig,
+        lens: Option<&[usize]>,
+        kv: &mut [crate::model::attention::DecodeKv],
+        kind: u64,
+    ) -> Tensor {
+        assert_eq!(blocks.len(), kv.len());
+        let (s, iw, ir, stage) = (self.stages, self.inner_world, self.inner_rank, self.stage);
+        let mut h = if stage == 0 {
+            x.clone()
+        } else {
+            ep.recv((stage - 1) * iw + ir, serve_tag(kind, stage))
+        };
+        for (p, kvl) in blocks.iter().zip(kv.iter_mut()) {
+            h = match lens {
+                Some(lens) => {
+                    crate::model::block::prefill_block_fwd(ep, self, p, &h, cfg, kvl, lens)
+                }
+                None => crate::model::block::decode_block_fwd(ep, self, p, &h, cfg, kvl),
+            };
+        }
+        if stage + 1 < s {
+            ep.send_owned((stage + 1) * iw + ir, serve_tag(kind, stage + 1), h);
+            ep.recv((s - 1) * iw + ir, serve_tag(kind + 1, stage))
+        } else {
+            for k in 0..s - 1 {
+                ep.send(k * iw + ir, serve_tag(kind + 1, k), &h);
+            }
+            h
+        }
     }
 }
 

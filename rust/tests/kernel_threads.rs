@@ -299,6 +299,60 @@ fn concurrent_callers_both_lease_workers() {
 }
 
 #[test]
+fn concurrent_decode_and_prefill_callers_both_lease_workers() {
+    // The serving shape of the fair-share property (PR 9): a continuous
+    // batching engine keeps a latency-critical decode step (one row per
+    // slot — short m, wide n, all jc parallelism) in flight while a bulky
+    // prefill gemm for a newly admitted request runs beside it. Both
+    // callers must lease workers in the same round: if the prefill job
+    // could hog the pool, decode latency would absorb the whole prefill
+    // instead of sharing the budget. Same barrier/counter protocol as
+    // concurrent_callers_both_lease_workers, with the two callers running
+    // *different* shapes.
+    let kern = kernel::selected();
+    let shapes = [(8usize, 8 * NC, 128usize), (256, 128, 128)]; // decode, prefill
+    let rounds = 50usize;
+    let barrier = Arc::new(std::sync::Barrier::new(2));
+    let both_threaded = Arc::new(AtomicUsize::new(0));
+    let handles: Vec<_> = (0..2usize)
+        .map(|t| {
+            let barrier = Arc::clone(&barrier);
+            let both_threaded = Arc::clone(&both_threaded);
+            std::thread::spawn(move || {
+                let (m, n, k) = shapes[t];
+                let a = fill(500 + t as u64, m * k);
+                let b = fill(600 + t as u64, k * n);
+                let mut base = vec![0.0f32; m * n];
+                gemm_strided_t(kern, 1, m, n, k, &a, k, 1, &b, n, 1, &mut base);
+                for _ in 0..rounds {
+                    barrier.wait();
+                    let before = kernel::threads::threaded_jobs();
+                    barrier.wait();
+                    let mut c = vec![0.0f32; m * n];
+                    gemm_strided_t(kern, 4, m, n, k, &a, k, 1, &b, n, 1, &mut c);
+                    assert_eq!(
+                        c, base,
+                        "caller {t} ({m}x{n}x{k}): concurrent gemm must stay bit-exact"
+                    );
+                    barrier.wait();
+                    if kernel::threads::threaded_jobs() - before >= 2 {
+                        both_threaded.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(
+        both_threaded.load(Ordering::Relaxed) > 0,
+        "decode- and prefill-shaped callers never both ran threaded in {rounds} rounds — \
+         the fair-share split must hold for asymmetric job shapes too"
+    );
+}
+
+#[test]
 fn buffer_pool_survives_concurrent_acquire_drop_hammering() {
     // N threads share one BufferPool and hammer acquire/write/verify/drop
     // cycles. Invariants under the storm:

@@ -1,0 +1,267 @@
+//! Serving correctness: token-by-token KV-cached decode computes the SAME
+//! function as the full-sequence training forward — bitwise, per slot, per
+//! position — on every mesh kind and under both overlap schedules.
+//!
+//! Why bitwise is possible at all: prefill IS `block_fwd` (the training
+//! forward) with the backward stash dropped; the causal mask's `-1e9`
+//! makes future positions exact additive identities in the softmax (their
+//! probabilities underflow to +0.0), so a row's output depends only on
+//! rows ≤ it; and `ModelConfig::validate_serve`'s slot-divisibility rules
+//! make every ring reduction chunk land on whole slot windows in BOTH the
+//! padded prefill grid and the one-row-per-slot decode grid, so each
+//! output element is folded in the identical order in the two runs.
+
+use cubic::comm::NetModel;
+use cubic::config::{ModelConfig, ServeConfig};
+use cubic::model::{init_dense_blocks, BlockTensors};
+use cubic::parallel::{ops_for, pipeline::Pipeline, ParallelOps};
+use cubic::rng::Xoshiro256;
+use cubic::serve::build_kv;
+use cubic::spmd::run_spmd;
+use cubic::tensor::Tensor;
+use cubic::topology::{HybridInner, Parallelism, PipelineInner};
+
+/// Every parallelism point the crate implements, with its test edge
+/// (mirrors `model_parity::ALL_ENVS`).
+const ALL_ENVS: [(Parallelism, usize); 7] = [
+    (Parallelism::Seq, 1),
+    (Parallelism::OneD, 4),
+    (Parallelism::TwoD, 2),
+    (Parallelism::ThreeD, 2),
+    (Parallelism::TwoFiveD { depth: 2 }, 2),
+    (Parallelism::Hybrid { replicas: 2, inner: HybridInner::OneD }, 2),
+    (
+        Parallelism::Pipeline { stages: 2, micro_batches: 4, inner: PipelineInner::OneD },
+        2,
+    ),
+];
+
+fn tiny() -> ModelConfig {
+    ModelConfig { layers: 2, ..ModelConfig::tiny() }
+}
+
+fn randt(shape: &[usize], seed: u64) -> Tensor {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    Tensor::randn(shape, 0.5, &mut rng)
+}
+
+/// This rank's ops + real sharded layer slice (the serve engine's private
+/// `build_rank`, re-derived through public API for the test).
+fn build_rank(
+    par: Parallelism,
+    edge: usize,
+    rank: usize,
+    cfg: &ModelConfig,
+    seed: u64,
+) -> (Box<dyn ParallelOps>, Vec<BlockTensors>) {
+    let (ops, range): (Box<dyn ParallelOps>, std::ops::Range<usize>) = match par {
+        Parallelism::Pipeline { stages, micro_batches, inner } => {
+            let p = Pipeline::for_kind(stages, micro_batches, inner, edge, rank);
+            let r = p.layer_range(cfg.layers);
+            (Box::new(p), r)
+        }
+        _ => (ops_for(par, edge, rank), 0..cfg.layers),
+    };
+    let dense = init_dense_blocks(cfg, seed);
+    let blocks: Vec<BlockTensors> = dense[range].iter().map(|b| ops.shard_block(b)).collect();
+    (ops, blocks)
+}
+
+/// One parallelism point, one overlap schedule: run the full-sequence
+/// forward at `T = P + G` positions per slot, then prefill on the first
+/// `P` positions and teacher-force `G` decode steps over the remaining
+/// given input rows. Every prefill row and every decode row must equal
+/// the full forward's row at the same (slot, position) bitwise.
+fn check_decode_parity(par: Parallelism, edge: usize, overlap: bool) {
+    let cfg = tiny();
+    let slots = cfg.batch; // 4
+    let (pp, gg) = (8usize, 8usize);
+    let tt = pp + gg;
+    // The test points must actually satisfy the serve shape rules — the
+    // divisibility table is what makes the bitwise claim below true.
+    cfg.validate_serve(
+        par,
+        edge,
+        &ServeConfig {
+            slots,
+            max_seq: tt,
+            prompt_len: pp,
+            gen_len: gg,
+            requests: 1,
+            arrival_rate: 1.0,
+            seed: 1,
+        },
+    )
+    .unwrap_or_else(|e| panic!("{par:?}: {e}"));
+    let hidden = cfg.hidden;
+    // Global input: slot s owns rows [s·T, (s+1)·T).
+    let x = randt(&[slots * tt, hidden], 31);
+    let world = par.world_size(edge);
+    let mut net = NetModel::zero();
+    net.overlap = overlap;
+    let (cfg2, x2) = (cfg.clone(), x.clone());
+    let out = run_spmd(world, net, move |rank, ep| {
+        let (ops, blocks) = build_rank(par, edge, rank, &cfg2, 42);
+        let ops = ops.as_ref();
+        // Run A — the reference: one full-length prefill (== the training
+        // forward at seq T); its KV cache is filled but unused.
+        let cfg_full = ModelConfig { seq: tt, batch: slots, ..cfg2.clone() };
+        let mut kv_full = build_kv(ops, blocks.len(), &cfg2, slots, tt, false);
+        let slots_loc = kv_full[0].slots;
+        let xa = ops.scatter_activation(ep, &x2);
+        let y_full =
+            ops.serve_prefill(ep, &blocks, &xa, &cfg_full, &vec![tt; slots_loc], &mut kv_full);
+        // Run B — serving: prefill the first P positions of each slot…
+        let pre_parts: Vec<Tensor> =
+            (0..slots).map(|s| x2.block(s * tt, 0, pp, hidden)).collect();
+        let x_pre = Tensor::concat_rows(&pre_parts);
+        let cfg_pre = ModelConfig { seq: pp, batch: slots, ..cfg2.clone() };
+        let mut kv = build_kv(ops, blocks.len(), &cfg2, slots, tt, false);
+        let xb = ops.scatter_activation(ep, &x_pre);
+        let y_pre =
+            ops.serve_prefill(ep, &blocks, &xb, &cfg_pre, &vec![pp; slots_loc], &mut kv);
+        // …then decode the remaining G positions one token at a time,
+        // teacher-forced from the same global input rows the full forward
+        // saw.
+        let mut decode_outs = Vec::with_capacity(gg);
+        for g in 0..gg {
+            let pos = pp + g;
+            let step_parts: Vec<Tensor> =
+                (0..slots).map(|s| x2.block(s * tt + pos, 0, 1, hidden)).collect();
+            let x_step = Tensor::concat_rows(&step_parts);
+            let xg = ops.scatter_activation(ep, &x_step);
+            decode_outs.push(ops.serve_decode(ep, &blocks, &xg, &cfg2, &mut kv));
+        }
+        (y_full, y_pre, decode_outs, slots_loc)
+    });
+    assert_eq!(out.len(), world);
+    for (rank, (y_full, y_pre, douts, slots_loc)) in out.iter().enumerate() {
+        let (_, cols) = y_full.dims2();
+        assert_eq!(douts.len(), gg);
+        for s in 0..*slots_loc {
+            for p in 0..pp {
+                assert_eq!(
+                    y_pre.block(s * pp + p, 0, 1, cols).data(),
+                    y_full.block(s * tt + p, 0, 1, cols).data(),
+                    "{par:?} overlap={overlap} rank {rank} slot {s} prefill pos {p}"
+                );
+            }
+            for (g, yd) in douts.iter().enumerate() {
+                let pos = pp + g;
+                assert_eq!(
+                    yd.block(s, 0, 1, cols).data(),
+                    y_full.block(s * tt + pos, 0, 1, cols).data(),
+                    "{par:?} overlap={overlap} rank {rank} slot {s} decode pos {pos}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_matches_full_forward_every_kind_both_overlap() {
+    for (par, edge) in ALL_ENVS {
+        for overlap in [false, true] {
+            check_decode_parity(par, edge, overlap);
+        }
+    }
+}
+
+#[test]
+fn ragged_prompts_decode_matches_full_forward() {
+    // Continuous batching admits ragged prompt lengths into one padded
+    // prefill window: slot s holds `lens[s] ≤ P` real rows (the rest of
+    // its window is junk the causal mask keeps out of every used row).
+    // After harvest, one decode step at each slot's own depth must equal
+    // the full forward's row at position lens[s] — per-slot KV depths
+    // diverge, which the all-slots decode step has to handle.
+    let cfg = tiny();
+    let slots = cfg.batch; // 4
+    let pp = 8usize;
+    let win = pp + 1; // teacher-forced next token lives at index lens[s]
+    let lens = [3usize, 8, 1, 5];
+    let hidden = cfg.hidden;
+    let x = randt(&[slots * win, hidden], 33);
+    for (par, edge) in [(Parallelism::Seq, 1), (Parallelism::OneD, 4)] {
+        let world = par.world_size(edge);
+        let (cfg2, x2) = (cfg.clone(), x.clone());
+        let out = run_spmd(world, NetModel::zero(), move |rank, ep| {
+            let (ops, blocks) = build_rank(par, edge, rank, &cfg2, 42);
+            let ops = ops.as_ref();
+            // Reference: full forward over every slot's whole window.
+            let cfg_full = ModelConfig { seq: win, batch: slots, ..cfg2.clone() };
+            let mut kv_full = build_kv(ops, blocks.len(), &cfg2, slots, win, false);
+            let slots_loc = kv_full[0].slots;
+            let xa = ops.scatter_activation(ep, &x2);
+            let y_full =
+                ops.serve_prefill(ep, &blocks, &xa, &cfg_full, &vec![win; slots_loc], &mut kv_full);
+            // Serving: padded prefill with ragged lens, one decode step.
+            let pre_parts: Vec<Tensor> =
+                (0..slots).map(|s| x2.block(s * win, 0, pp, hidden)).collect();
+            let x_pre = Tensor::concat_rows(&pre_parts);
+            let cfg_pre = ModelConfig { seq: pp, batch: slots, ..cfg2.clone() };
+            let mut kv = build_kv(ops, blocks.len(), &cfg2, slots, win, false);
+            let xb = ops.scatter_activation(ep, &x_pre);
+            let _ = ops.serve_prefill(ep, &blocks, &xb, &cfg_pre, &lens.to_vec(), &mut kv);
+            let step_parts: Vec<Tensor> = (0..slots)
+                .map(|s| x2.block(s * win + lens[s], 0, 1, hidden))
+                .collect();
+            let x_step = Tensor::concat_rows(&step_parts);
+            let xg = ops.scatter_activation(ep, &x_step);
+            let yd = ops.serve_decode(ep, &blocks, &xg, &cfg2, &mut kv);
+            (y_full, yd)
+        });
+        for (rank, (y_full, yd)) in out.iter().enumerate() {
+            let (_, cols) = y_full.dims2();
+            for s in 0..slots {
+                assert_eq!(
+                    yd.block(s, 0, 1, cols).data(),
+                    y_full.block(s * win + lens[s], 0, 1, cols).data(),
+                    "{par:?} rank {rank} slot {s} (prompt len {})",
+                    lens[s]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_steady_state_no_alloc_growth() {
+    // Satellite: inference holds only KV — no backward stashes — and the
+    // decode loop's collective/boundary buffers recycle through the pool.
+    // After a one-step warmup, further decode steps must take every pooled
+    // buffer as a hit (0 misses ⇒ 0 steady-state allocation growth), the
+    // same counter pin the training boundary paths use.
+    let cfg = tiny();
+    let slots = cfg.batch;
+    let pp = 4usize;
+    let steps = 6usize;
+    let hidden = cfg.hidden;
+    let x = randt(&[slots * pp, hidden], 35);
+    let xd0 = randt(&[slots, hidden], 36);
+    let out = run_spmd(4, NetModel::zero(), move |rank, ep| {
+        let (ops, blocks) = build_rank(Parallelism::OneD, 4, rank, &cfg, 42);
+        let ops = ops.as_ref();
+        let max_seq = pp + steps + 2;
+        let mut kv = build_kv(ops, blocks.len(), &cfg, slots, max_seq, false);
+        let slots_loc = kv[0].slots;
+        let cfg_pre = ModelConfig { seq: pp, batch: slots, ..cfg.clone() };
+        let xb = ops.scatter_activation(ep, &x);
+        let _ = ops.serve_prefill(ep, &blocks, &xb, &cfg_pre, &vec![pp; slots_loc], &mut kv);
+        // Warmup decode step allocates the loop's buffers once…
+        let mut xd = ops.serve_decode(ep, &blocks, &xd0, &cfg, &mut kv);
+        let (h0, m0) = (ep.stats.pool_hits, ep.stats.pool_misses);
+        // …then the steady state must recycle (per-endpoint counters; the
+        // global metrics would race with parallel tests).
+        for _ in 0..steps {
+            xd = ops.serve_decode(ep, &blocks, &xd, &cfg, &mut kv);
+        }
+        (ep.stats.pool_hits - h0, ep.stats.pool_misses - m0)
+    });
+    for (rank, (_hits, misses)) in out.iter().enumerate() {
+        assert_eq!(
+            *misses, 0,
+            "rank {rank}: decode loop must not allocate pooled buffers after warmup"
+        );
+    }
+}
