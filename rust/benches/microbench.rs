@@ -22,10 +22,12 @@
 //!      same asserts, no JSON side effect).
 //! Side effect (full run only): rewrites `BENCH_PR2.json`,
 //! `BENCH_PR3.json`, `BENCH_PR5.json` (per-parallelism-kind phantom
-//! step time + comm volume at 64 ranks) and `BENCH_PR6.json` (overlap
-//! speedup + exposed-comm fraction per kind at 64 ranks) at the repo root
-//! with the headline numbers, and fills the previously-null measured
-//! fields of `BENCH_PR1.json` with the scalar-variant numbers.
+//! step time + comm volume at 64 ranks), `BENCH_PR6.json` (overlap
+//! speedup + exposed-comm fraction per kind at 64 ranks), and the later
+//! per-PR records (`BENCH_PR7..10.json`: fault-recovery cost, pipeline
+//! bubbles, serving throughput, ZeRO optimizer-memory savings) at the
+//! repo root with the headline numbers, and fills the previously-null
+//! measured fields of `BENCH_PR1.json` with the scalar-variant numbers.
 
 use cubic::collectives::all_reduce;
 use cubic::comm::{NetModel, World};
@@ -404,6 +406,73 @@ fn main() {
         write_json7();
         write_json8();
         write_json9();
+        write_json10();
+    }
+}
+
+/// PR-10 headline numbers: ZeRO optimizer-state sharding. For hybrid
+/// meshes at r ∈ {2, 4, 8} replicas of a 4×4 SUMMA grid this records the
+/// per-rank gradient + Adam-moment bytes at zero_stage ∈ {0, 1, 2} —
+/// computed from the *real* phantom shard shapes of the paper model, the
+/// same `param_numels` → `optimizer_bytes_per_rank` path `cubic plan`
+/// prints — plus the phantom step time, which ZeRO leaves unchanged
+/// (reduce-scatter + all-gather send exactly the bytes of the all-reduce
+/// they replace; bit-identity is pinned in tests/model_parity.rs).
+fn write_json10() {
+    use cubic::config::ModelConfig;
+    use cubic::costmodel::optimizer_bytes_per_rank;
+    use cubic::dist::ShardSpec;
+    use cubic::engine::time_core_step;
+    use cubic::model::DenseBlock;
+    use cubic::topology::{HybridInner, Parallelism};
+    let net = cubic::comm::NetModel::longhorn_v100();
+    let edge = 4; // 4×4 inner grid, 16 ranks per replica
+    let cfg = ModelConfig::paper(4096, 64);
+    let mut entries = Vec::new();
+    for r in [2usize, 4, 8] {
+        let par = Parallelism::Hybrid { replicas: r, inner: HybridInner::TwoD };
+        let world = par.world_size(edge);
+        // Shard shapes are identical across replicas; scan one replica's
+        // inner ranks for the worst-case rank (vector ownership varies).
+        let iw = world / r;
+        let max_opt = |stage: usize| -> u64 {
+            (0..iw)
+                .map(|rank| {
+                    let spec = ShardSpec::for_parallelism(par, edge, rank);
+                    let numels = DenseBlock::phantom(&cfg).shard(&spec).param_numels();
+                    optimizer_bytes_per_rank(&numels, r as u64, stage)
+                })
+                .max()
+                .unwrap()
+        };
+        let (z0, z1, z2) = (max_opt(0), max_opt(1), max_opt(2));
+        let t = time_core_step(&cfg, par, edge, net.clone())
+            .unwrap_or_else(|e| panic!("BENCH_PR10: r={r} hybrid timing failed: {e}"));
+        let step = t.forward_s + t.backward_s;
+        entries.push(format!(
+            "    \"r{r}x2d\": {{ \"mesh\": \"{}\", \"world\": {world}, \"replicas\": {r}, \
+             \"opt_bytes_per_rank_zero0\": {z0}, \"opt_bytes_per_rank_zero1\": {z1}, \
+             \"opt_bytes_per_rank_zero2\": {z2}, \"step_virtual_s\": {step:.6} }}",
+            par.mesh_desc(edge),
+        ));
+    }
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_PR10.json");
+    let json = format!(
+        "{{\n  \"pr\": 10,\n  \"generated_by\": \"cargo bench --bench microbench\",\n  \
+         \"host\": \"virtual-clock phantom mode; deterministic for a given NetModel\",\n  \
+         \"model\": \"hidden 4096, batch 64, seq 512, per layer (ModelConfig::paper)\",\n  \
+         \"zero_phantom_step\": {{\n{}\n  }},\n  \
+         \"note\": \"opt bytes = per-rank gradient + Adam moment residency from the real \
+         phantom shard shapes (worst rank of one replica group). zero1 partitions the \
+         moments 1/r, zero2 also partitions gradient residency; step_virtual_s is the \
+         same ZeRO on or off because reduce-scatter + all-gather is exactly the ring \
+         all-reduce's two phases at identical volume — the bitwise pin is \
+         tests/model_parity.rs::zero_training_is_bitwise_identical_to_replicated_hybrid.\"\n}}\n",
+        entries.join(",\n"),
+    );
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }
 

@@ -62,7 +62,16 @@ use crate::tensor::Tensor;
 /// (`n % g == 0`) produces zero-copy views of `t`'s buffer; the misaligned
 /// case materializes padded chunks in recycled pool buffers; phantom input
 /// produces phantom chunks.
-fn flat_chunks(ep: &mut Endpoint, t: &Tensor, g: usize) -> Vec<Tensor> {
+///
+/// These chunk boundaries are *the* deterministic partition map of the
+/// crate: [`all_reduce`] is exactly `flat_chunks` → [`reduce_scatter`] →
+/// [`all_gather_into`], so any caller that partitions a tensor with
+/// `flat_chunks(_, t, g)` and reduce-scatters the result obtains — bitwise —
+/// the `k`-th slice of the corresponding all-reduce. The ZeRO-style
+/// sharded-optimizer path in `parallel::hybrid` (see
+/// `Hybrid::with_zero_stage`) relies on this equality for its headline
+/// ZeRO-on ≡ ZeRO-off numerics pin.
+pub fn flat_chunks(ep: &mut Endpoint, t: &Tensor, g: usize) -> Vec<Tensor> {
     let n = t.numel();
     let chunk = n.div_ceil(g);
     if t.is_phantom() {
@@ -284,8 +293,10 @@ pub fn all_reduce(ep: &mut Endpoint, group: &[usize], t: &Tensor) -> Tensor {
 /// as [`all_gather`] — the per-chunk copy into its output slot is the
 /// mathematically required assembly work. Used by [`all_reduce`] so the
 /// output can live in a recycled pool buffer instead of a fresh
-/// concatenation.
-fn all_gather_into(ep: &mut Endpoint, group: &[usize], mine: Tensor, out: &mut [f32]) {
+/// concatenation, and by the ZeRO weight path in `train` to gather each
+/// replica's updated `flat_chunks` partition back into the full parameter
+/// buffer after a partitioned optimizer step.
+pub fn all_gather_into(ep: &mut Endpoint, group: &[usize], mine: Tensor, out: &mut [f32]) {
     let chunk = mine.numel();
     ring_gather(ep, group, mine, |origin, t| {
         let lo = (origin * chunk).min(out.len());

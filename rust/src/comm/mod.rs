@@ -88,6 +88,9 @@
 //! crash-consistent checkpoint, or — on `Hybrid(r, inner)` meshes with a
 //! healthy counterpart replica — **adopt** weights/optimizer state donated
 //! over the comm layer by the surviving replica (no disk round-trip).
+//! Exception: with `zero_stage ≥ 1` the survivor holds only its own `1/r`
+//! moment partition — the dead rank's partition died with it — so the
+//! engine skips donation and takes the checkpoint path instead.
 //! Faults never touch payload bytes, so a recovered run is bit-identical
 //! to the fault-free run; with no plan installed every path below is the
 //! exact legacy code path, clock included. ROADMAP item 4's real

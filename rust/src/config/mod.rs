@@ -610,6 +610,13 @@ pub struct CubicConfig {
     pub train: TrainConfig,
     pub parallelism: Parallelism,
     pub edge: usize,
+    /// ZeRO optimizer-state sharding stage on the hybrid replica axis
+    /// (0 = off, the replicated default). Stages 1 and 2 share one
+    /// execution path here — reduce-scattered gradients, `1/r`-partitioned
+    /// Adam moments, post-step weight all-gather — and are bit-identical to
+    /// stage 0; they differ only in the cost model's gradient-residency
+    /// accounting. Requires `Parallelism::Hybrid` when non-zero.
+    pub zero_stage: usize,
     /// Artifacts directory for the PJRT runtime (empty = native only).
     pub artifacts_dir: String,
     /// Cores for the multi-threaded gemm driver (0 = auto: available
@@ -635,6 +642,7 @@ impl Default for CubicConfig {
             train: TrainConfig::default(),
             parallelism: Parallelism::ThreeD,
             edge: 2,
+            zero_stage: 0,
             artifacts_dir: String::new(),
             threads: 0,
             overlap: true,
@@ -714,6 +722,11 @@ impl CubicConfig {
             let m = usize::try_from(m)
                 .map_err(|_| ConfigError(format!("micro_batches {m} < 1")))?;
             cfg.parallelism.set_micro_batches(m).map_err(ConfigError)?;
+        }
+        if let Some(z) = doc.get_int("parallel", "zero_stage") {
+            let z = usize::try_from(z)
+                .map_err(|_| ConfigError(format!("zero_stage {z} < 0")))?;
+            cfg.zero_stage = z;
         }
 
         set_usize!("train", "steps", cfg.train.steps);
@@ -806,7 +819,34 @@ impl CubicConfig {
         cfg.model
             .validate(cfg.parallelism, cfg.edge)
             .map_err(ConfigError)?;
+        cfg.validate_zero().map_err(ConfigError)?;
         Ok(cfg)
+    }
+
+    /// Validate the ZeRO knob against the parallelism: stages above 2 are
+    /// not implemented (stage 3 parameter sharding is a recorded follow-on),
+    /// and a non-zero stage needs a replica axis to partition over — i.e.
+    /// top-level [`Parallelism::Hybrid`]. Pipeline-wrapped hybrids are
+    /// rejected for now (the stage-local replica groups would each need
+    /// their own partition map).
+    pub fn validate_zero(&self) -> Result<(), String> {
+        if self.zero_stage == 0 {
+            return Ok(());
+        }
+        if self.zero_stage > 2 {
+            return Err(format!(
+                "zero_stage {} unsupported (stages 0-2; stage 3 parameter sharding is a follow-on)",
+                self.zero_stage
+            ));
+        }
+        match self.parallelism {
+            Parallelism::Hybrid { .. } => Ok(()),
+            p => Err(format!(
+                "zero_stage {} requires hybrid parallelism (got {})",
+                self.zero_stage,
+                p.name()
+            )),
+        }
     }
 }
 
@@ -1055,6 +1095,41 @@ max_recoveries = 2
         assert_eq!(cfg.parallelism.world_size(cfg.edge), 16);
         // Degenerate parameters are config errors, not panics.
         assert!(ModelConfig::tiny().validate(Parallelism::TwoFiveD { depth: 0 }, 2).is_err());
+    }
+
+    #[test]
+    fn zero_stage_toml_round_trip_and_validation() {
+        // Round-trip: [parallel] zero_stage reaches the config on a hybrid.
+        let cfg = CubicConfig::from_toml(
+            "[parallel]\nkind = \"hybrid2d\"\nedge = 2\nreplicas = 2\nzero_stage = 1\n\
+             [model]\npreset = \"charlm\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.zero_stage, 1);
+        let cfg = CubicConfig::from_toml(
+            "[parallel]\nkind = \"hybrid1d\"\nedge = 2\nreplicas = 2\nzero_stage = 2",
+        )
+        .unwrap();
+        assert_eq!(cfg.zero_stage, 2);
+        // Absent key = stage 0 (replicated default).
+        assert_eq!(CubicConfig::from_toml("[parallel]\nkind = \"3d\"").unwrap().zero_stage, 0);
+        // Rejections: non-hybrid parallelism, unimplemented stage 3,
+        // negative values — config errors, not panics or wraparounds.
+        assert!(CubicConfig::from_toml("[parallel]\nkind = \"3d\"\nzero_stage = 1").is_err());
+        assert!(CubicConfig::from_toml(
+            "[parallel]\nkind = \"hybrid1d\"\nedge = 2\nreplicas = 2\nzero_stage = 3"
+        )
+        .is_err());
+        assert!(CubicConfig::from_toml(
+            "[parallel]\nkind = \"hybrid1d\"\nedge = 2\nreplicas = 2\nzero_stage = -1"
+        )
+        .is_err());
+        // Pipeline-wrapped hybrids are not partitionable yet (follow-on).
+        assert!(CubicConfig::from_toml(
+            "[parallel]\nkind = \"pipeline\"\nedge = 2\nstages = 2\nmicro_batches = 2\n\
+             zero_stage = 1"
+        )
+        .is_err());
     }
 
     #[test]

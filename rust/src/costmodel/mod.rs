@@ -14,6 +14,67 @@
 //! [`crate::collectives`], and the unit tests pin them against the
 //! engine-measured ledger, so the asymptotic table above is enforced by
 //! CI rather than asserted in prose.
+//!
+//! # The memory model, worked at 64 ranks
+//!
+//! One transformer-scale linear layer `C(M,K) = A(M,N)·B(N,K)` with
+//! `M = 2048` activation rows, `N = 1024`, `K = 4096`, f32, Adam — plus the
+//! serving-side KV cache for `slots = 64`, `heads = 16`, `head_dim = 64`,
+//! `max_seq = 2048`. Every cell below comes from the *same* functions
+//! `cubic plan` calls ([`weight_bytes_per_rank`] and its per-mesh variants,
+//! [`adam_state_bytes_per_rank`] / [`zero_adam_state_bytes_per_rank`],
+//! [`grad_bytes_per_rank`], [`activation_bytes_per_rank`] variants,
+//! [`kv_cache_bytes_per_rank`]), and the doc-test underneath recomputes the
+//! 3-D and hybrid rows so the table cannot rot:
+//!
+//! | kind (64 ranks) | weights/rank | grads/rank | Adam moments/rank | acts/rank | KV/rank/layer |
+//! |---|---|---|---|---|---|
+//! | seq (1 rank, for scale) | 16 MiB | 16 MiB | 32 MiB | 8 MiB | 1 GiB |
+//! | 1-D, `P = 64` | 256 KiB | 256 KiB | 512 KiB | 8 MiB (replicated) | 16 MiB |
+//! | 2-D, `q = 8` | 256 KiB | 256 KiB | 512 KiB | 128 KiB | 16 MiB |
+//! | 3-D, `p = 4` | 256 KiB | 256 KiB | 512 KiB | 128 KiB | 16 MiB |
+//! | 2.5-D, `p = 4, d = 4` | 256 KiB | 256 KiB | 512 KiB | 512 KiB | 16 MiB |
+//! | hybrid `4×(4×4)`, ZeRO off | 1 MiB | 1 MiB | 2 MiB | 128 KiB | 16 MiB |
+//! | hybrid `4×(4×4)`, ZeRO 1 | 1 MiB | 1 MiB | **512 KiB** | 128 KiB | 16 MiB |
+//! | hybrid `4×(4×4)`, ZeRO 2 | 1 MiB | **256 KiB** | **512 KiB** | 128 KiB | 16 MiB |
+//! | pipeline `4pp(4×4)` | 256 KiB¹ | 256 KiB¹ | 512 KiB¹ | 512 KiB² | 16 MiB¹ |
+//!
+//! ¹ per layer of the *full* stack: a stage holds `1/s` of the layers, each
+//! sharded `1/iw` by its inner mesh ([`pipeline_weight_bytes_per_rank`]).
+//! ² the GPipe stash high-water mark — all micro-batches stay cached until
+//! the flush ([`pipeline_activation_bytes_per_rank`]).
+//!
+//! The story in one sentence: every pure tensor mesh lands on the same
+//! balanced `1/64` weight/optimizer split and differs only in activations,
+//! while the hybrid's `r = 4` replication costs `4×` on weights, grads and
+//! moments — and ZeRO stage 1/2 claws the moment (and grad) redundancy back
+//! to the tensor-mesh figure at **zero** extra communication volume
+//! (reduce-scatter + all-gather *is* the all-reduce it replaces, see
+//! [`crate::parallel::hybrid`]).
+//!
+//! ```
+//! use cubic::costmodel::*;
+//! use cubic::topology::{HybridInner, Parallelism};
+//! let (m, n, k) = (2048u64, 1024u64, 4096u64);
+//! // 3-D row: p = 4, world 64.
+//! assert_eq!(weight_bytes_per_rank(64, n, k, Approach::ThreeD), 256 * 1024);
+//! assert_eq!(adam_state_bytes_per_rank(&[n * k / 64]), 512 * 1024);
+//! assert_eq!(activation_bytes_per_rank(64, m, n, Approach::ThreeD), 128 * 1024);
+//! assert_eq!(
+//!     kv_cache_bytes_per_rank(Parallelism::ThreeD, 4, 0, 64, 16, 64, 2048),
+//!     16 * 1024 * 1024
+//! );
+//! // Hybrid row: r = 4 replicas of a 4×4 SUMMA grid (inner world 16).
+//! let local = [n * k / 16]; // this rank's weight-shard elements
+//! assert_eq!(hybrid_weight_bytes_per_rank(16, n, k), 1024 * 1024);
+//! assert_eq!(adam_state_bytes_per_rank(&local), 2 * 1024 * 1024); // ZeRO off
+//! assert_eq!(zero_adam_state_bytes_per_rank(&local, 4), 512 * 1024); // ZeRO 1/2
+//! assert_eq!(grad_bytes_per_rank(&local, 4, 0), 1024 * 1024); // stages 0-1
+//! assert_eq!(grad_bytes_per_rank(&local, 4, 2), 256 * 1024); // stage 2
+//! assert_eq!(hybrid_activation_bytes_per_rank(4, 16, m, n), 128 * 1024);
+//! let hybrid = Parallelism::Hybrid { replicas: 4, inner: HybridInner::TwoD };
+//! assert_eq!(kv_cache_bytes_per_rank(hybrid, 4, 0, 64, 16, 64, 2048), 16 * 1024 * 1024);
+//! ```
 
 use crate::comm::NetModel;
 
@@ -114,11 +175,17 @@ pub fn activation_bytes_per_rank(world: u64, m: u64, n: u64, approach: Approach)
     }
 }
 
+/// The paper's three distributed-matmul approaches plus the dense
+/// baseline, as a selector for the per-rank memory forms above.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Approach {
+    /// Dense single-device baseline (`P = 1`).
     Seq,
+    /// 1-D Megatron-style row/column parallelism \[17\].
     OneD,
+    /// 2-D SUMMA on a `q × q` grid \[21\].
     TwoD,
+    /// The paper's 3-D decomposition on a `p × p × p` cube.
     ThreeD,
 }
 
@@ -224,6 +291,54 @@ pub fn hybrid_weight_bytes_per_rank(inner_world: u64, n: u64, k: u64) -> u64 {
 /// `q²` for 2-D, `p³` for 3-D, `p²` for 2.5-D).
 pub fn hybrid_activation_bytes_per_rank(r: u64, inner_act_div: u64, m: u64, n: u64) -> u64 {
     m * n * W / (r * inner_act_div)
+}
+
+/// Per-rank **Adam moment** bytes for replicated (ZeRO-off) optimizer
+/// state: two f32 moments (`m`, `v`) per local parameter element.
+/// `local_param_numels` are the element counts of the parameters this rank
+/// stores — its *shard* shapes, not the dense model's.
+pub fn adam_state_bytes_per_rank(local_param_numels: &[u64]) -> u64 {
+    local_param_numels.iter().map(|&n| 2 * n * W).sum()
+}
+
+/// Per-rank Adam moment bytes under ZeRO stage ≥ 1: each of the `r`
+/// replicas keeps moments only for its owned `⌈n/r⌉` slice of every local
+/// parameter — the same padded chunk boundary as
+/// [`crate::collectives::flat_chunks`], which is exactly what
+/// [`crate::optim::Optimizer::new_partitioned`] allocates (pinned in the
+/// tests). Exactly `1/r` of [`adam_state_bytes_per_rank`] whenever `r`
+/// divides every parameter; the pad rounds *up* otherwise.
+pub fn zero_adam_state_bytes_per_rank(local_param_numels: &[u64], r: u64) -> u64 {
+    local_param_numels.iter().map(|&n| 2 * n.div_ceil(r) * W).sum()
+}
+
+/// Per-rank gradient bytes resident at the optimizer boundary. ZeRO
+/// stage ≥ 2 frees the full gradients once the reduce-scatter lands and
+/// keeps only the owned `⌈n/r⌉` chunks; stages 0–1 hold full local-shard
+/// gradients until the update.
+pub fn grad_bytes_per_rank(local_param_numels: &[u64], r: u64, zero_stage: usize) -> u64 {
+    if zero_stage >= 2 {
+        local_param_numels.iter().map(|&n| n.div_ceil(r) * W).sum()
+    } else {
+        local_param_numels.iter().map(|&n| n * W).sum()
+    }
+}
+
+/// Total per-rank optimizer-side bytes — resident gradients plus Adam
+/// moments — the `opt/rank` column of `cubic plan --world N`. With
+/// `zero_stage = 0` (or `r = 1`) this is the replicated figure; ZeRO
+/// divides the moment (stage ≥ 1) and gradient (stage ≥ 2) terms by `r`.
+/// The *step time* is unchanged either way: the reduce-scatter plus the
+/// post-step weight all-gather send exactly the bytes of the all-reduce
+/// they replace ([`ring_all_reduce_bytes`] is literally the sum of its two
+/// phases), so `plan` reuses the ZeRO-off timing for ZeRO rows.
+pub fn optimizer_bytes_per_rank(local_param_numels: &[u64], r: u64, zero_stage: usize) -> u64 {
+    let moments = if zero_stage >= 1 {
+        zero_adam_state_bytes_per_rank(local_param_numels, r)
+    } else {
+        adam_state_bytes_per_rank(local_param_numels)
+    };
+    grad_bytes_per_rank(local_param_numels, r, zero_stage) + moments
 }
 
 /// **Pipeline bubble fraction** of the GPipe flush schedule: with `s`
@@ -610,6 +725,59 @@ mod tests {
         assert_eq!(hshard.numel() as u64 * 4, hybrid_weight_bytes_per_rank(2, n, k));
         let (hr, hc) = hspec.activation_shape(m as usize, n as usize);
         assert_eq!((hr * hc) as u64 * 4, hybrid_activation_bytes_per_rank(2, 1, m, n));
+    }
+
+    #[test]
+    fn zero_optimizer_state_bytes_shrink_by_exactly_one_rth() {
+        // Acceptance pin: the closed forms must match the bytes the *real*
+        // partitioned optimizer allocates, and shrink by exactly 1/r vs
+        // replication when r divides every parameter.
+        use crate::config::{OptimizerKind, TrainConfig};
+        use crate::optim::Optimizer;
+        let shapes: Vec<Vec<usize>> = vec![
+            vec![64, 96],
+            vec![32, 64],
+            vec![64, 128],
+            vec![128, 64],
+            vec![64],
+            vec![64],
+        ];
+        let numels: Vec<u64> =
+            shapes.iter().map(|s| s.iter().product::<usize>() as u64).collect();
+        let cfg = TrainConfig { optimizer: OptimizerKind::Adam, ..TrainConfig::default() };
+        let full = Optimizer::new(&cfg, &shapes);
+        let full_bytes: u64 =
+            full.state_tensors().iter().map(|t| t.numel() as u64 * 4).sum();
+        assert_eq!(full_bytes, adam_state_bytes_per_rank(&numels));
+        for r in [2usize, 4, 8] {
+            for idx in 0..r {
+                let part = Optimizer::new_partitioned(&cfg, &shapes, r, idx);
+                let part_bytes: u64 =
+                    part.state_tensors().iter().map(|t| t.numel() as u64 * 4).sum();
+                assert_eq!(part_bytes, zero_adam_state_bytes_per_rank(&numels, r as u64));
+                assert_eq!(part_bytes * r as u64, full_bytes, "exact 1/{r} shrink");
+            }
+        }
+        // Non-divisible parameter: the pad rounds up to ceil(7/2) = 4
+        // moment pairs per replica (the flat_chunks boundary).
+        let part = Optimizer::new_partitioned(&cfg, &[vec![7usize]], 2, 1);
+        let part_bytes: u64 =
+            part.state_tensors().iter().map(|t| t.numel() as u64 * 4).sum();
+        assert_eq!(part_bytes, zero_adam_state_bytes_per_rank(&[7], 2));
+        assert_eq!(part_bytes, 2 * 4 * 4);
+        // The composite plan column decomposes as documented.
+        assert_eq!(
+            optimizer_bytes_per_rank(&numels, 4, 0),
+            grad_bytes_per_rank(&numels, 4, 0) + adam_state_bytes_per_rank(&numels)
+        );
+        assert_eq!(
+            optimizer_bytes_per_rank(&numels, 4, 1),
+            grad_bytes_per_rank(&numels, 4, 0) + zero_adam_state_bytes_per_rank(&numels, 4)
+        );
+        assert_eq!(
+            optimizer_bytes_per_rank(&numels, 4, 2),
+            grad_bytes_per_rank(&numels, 4, 2) + zero_adam_state_bytes_per_rank(&numels, 4)
+        );
     }
 
     #[test]

@@ -86,8 +86,11 @@ use crate::topology::{Axis, Coord, Cube, HybridInner, Mesh, Parallelism, Pipelin
 /// gather `B` along `b`, reduce-scatter the output along `c`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Dirs {
+    /// Axis the `A` operand is gathered along.
     pub a: Axis,
+    /// Axis the `B` operand is gathered along.
     pub b: Axis,
+    /// Axis the output partials are reduce-scattered along.
     pub c: Axis,
 }
 
@@ -152,7 +155,9 @@ impl Split {
 /// `crate::parallel::threed::Layout3DExt`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Layout3D {
+    /// How the row dimension is split across cube axes.
     pub row: Split,
+    /// How the column dimension is split across cube axes.
     pub col: Split,
 }
 
@@ -272,10 +277,12 @@ impl Layout3D {
 /// `coord(c)·(n/p) + coord(b)·(n/p²)`; everyone else owns nothing.
 #[derive(Clone, Copy, Debug)]
 pub struct DiagVec3D {
+    /// The direction triple whose `a == c` diagonal owns the chunks.
     pub dirs: Dirs,
 }
 
 impl DiagVec3D {
+    /// Diagonal storage under the given direction triple.
     pub fn for_dirs(dirs: Dirs) -> DiagVec3D {
         DiagVec3D { dirs }
     }
@@ -599,20 +606,25 @@ pub fn mesh_for_pipeline_inner(inner: PipelineInner, edge: usize) -> MeshSpec {
 /// the model code.
 #[derive(Clone, Debug)]
 pub struct ShardSpec {
+    /// The mesh every rank of this parallelism agrees on.
     pub mesh: MeshSpec,
+    /// This rank's flat index on the mesh.
     pub rank: usize,
 }
 
 impl ShardSpec {
+    /// The dense single-device spec (the parity reference).
     pub fn seq() -> ShardSpec {
         ShardSpec { mesh: MeshSpec::Point, rank: 0 }
     }
 
+    /// 1-D (Megatron) spec over a `world`-rank line.
     pub fn oned(world: usize, rank: usize) -> ShardSpec {
         assert!(rank < world);
         ShardSpec { mesh: MeshSpec::Line(world), rank }
     }
 
+    /// 2-D (SUMMA) spec on a `q × q` grid.
     pub fn twod(q: usize, rank: usize) -> ShardSpec {
         let mesh = Mesh::new(q);
         assert!(rank < mesh.size());
@@ -624,6 +636,7 @@ impl ShardSpec {
         Self::threed_with_dirs(p, rank, Dirs::canonical())
     }
 
+    /// 3-D spec on a `p³` cube with explicit block-entry directions.
     pub fn threed_with_dirs(p: usize, rank: usize, d0: Dirs) -> ShardSpec {
         d0.assert_distinct();
         let cube = Cube::new(p);
@@ -688,6 +701,8 @@ impl ShardSpec {
         }
     }
 
+    /// The [`Parallelism`] kind this spec describes (inverse of
+    /// [`ShardSpec::for_parallelism`]).
     pub fn kind(&self) -> Parallelism {
         match &self.mesh {
             MeshSpec::Point => Parallelism::Seq,
@@ -734,6 +749,7 @@ impl ShardSpec {
         }
     }
 
+    /// Total ranks on the mesh.
     pub fn world(&self) -> usize {
         self.mesh.world()
     }
@@ -1325,7 +1341,9 @@ impl ShardSpec {
 /// knowing which parallelism produced it.
 #[derive(Clone, Debug)]
 pub struct DistTensor {
+    /// This rank's shard.
     pub local: Tensor,
+    /// The layout that places the shard in the global tensor.
     pub spec: ShardSpec,
 }
 

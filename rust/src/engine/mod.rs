@@ -234,8 +234,13 @@ pub fn run_training_supervised(
             continue;
         }
 
-        if survivors_hold_state {
+        if survivors_hold_state && cfg.zero_stage == 0 {
             // Crashes with survivors: try replica donation on Hybrid meshes.
+            // Under ZeRO the dead rank's optimizer-moment partition died
+            // with it — no single surviving replica holds the full state a
+            // donation needs (reassembling it would take the whole replica
+            // group), so recovery falls through to the checkpoint Restore
+            // path below.
             if let Parallelism::Hybrid { replicas, .. } = cfg.parallelism {
                 let iw = world / replicas;
                 let mut donors: HashMap<usize, usize> = HashMap::new(); // crashed -> donor

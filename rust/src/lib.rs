@@ -6,7 +6,7 @@
 //! models, implemented alongside the 1-D (Megatron [17]) and 2-D
 //! (Optimus/SUMMA [21]) baselines the paper compares against.
 //!
-//! The stack has three layers (see `DESIGN.md`):
+//! The stack has three layers (see `ARCHITECTURE.md` for the full map):
 //!
 //! * **L3 (this crate)** — the coordinator: process topology, collective
 //!   communication, the 1-D/2-D/3-D parallel linear algebra (the paper's
@@ -18,19 +18,29 @@
 //!
 //! Python never runs at train time: the [`runtime`] module loads the AOT
 //! artifacts through the PJRT C API and executes them from Rust.
+//!
+//! The whole-repo architecture book — the layer map, all seven parallelism
+//! kinds with their per-rank memory and communication formulas in one
+//! table, the bitwise-determinism contract, and the "adding a parallelism"
+//! walkthrough — is `ARCHITECTURE.md` at the repository root. Start there;
+//! the module docs below are the per-subsystem deep dives it links to.
 
 pub mod bench;
 pub mod cli;
 pub mod collectives;
 pub mod comm;
 pub mod config;
+#[deny(missing_docs)]
 pub mod costmodel;
+#[deny(missing_docs)]
 pub mod dist;
 pub mod engine;
 pub mod metrics;
 pub mod model;
 pub mod ops;
+#[deny(missing_docs)]
 pub mod optim;
+#[deny(missing_docs)]
 pub mod parallel;
 pub mod rng;
 pub mod runtime;

@@ -33,6 +33,9 @@ COMMANDS
                     --edge <n>               topology edge (default 2)
                     --depth <n>              2.5-D depth layers (default 2)
                     --replicas <n>           hybrid data-parallel replicas (default 2)
+                    --zero-stage <0|1|2>     ZeRO optimizer-state sharding over the
+                                             hybrid replicas (default 0 = replicated;
+                                             numerics bit-identical either way)
                     --stages <n>             pipeline stages (default 2)
                     --micro-batches <n>      pipeline micro-batches (default 4)
                     --model tiny|charlm|large100m (default tiny)
@@ -48,7 +51,9 @@ COMMANDS
   plan            print the per-rank shard plan for a config, or — with
                   --world <n> — the cross-kind comparison table (every
                   parallelism kind decomposed at exactly n ranks, ranked
-                  by phantom-mode step time)
+                  by phantom-mode step time; the opt/rank memory column
+                  includes a hybrid+zero1 candidate showing the ZeRO
+                  optimizer-state saving at identical step time)
   serve           KV-cached autoregressive inference with continuous
                   batching (see the serve module docs). Measures prefill +
                   per-step decode cost on the virtual clock, then replays a
@@ -109,6 +114,9 @@ fn build_config(args: &Args) -> Result<CubicConfig, String> {
         let r: usize = r.parse().map_err(|e| format!("--replicas {r:?}: {e}"))?;
         cfg.parallelism.set_replicas(r).map_err(|e| format!("--replicas: {e}"))?;
     }
+    if let Some(z) = args.get("zero-stage") {
+        cfg.zero_stage = z.parse().map_err(|e| format!("--zero-stage {z:?}: {e}"))?;
+    }
     if let Some(s) = args.get("stages") {
         let s: usize = s.parse().map_err(|e| format!("--stages {s:?}: {e}"))?;
         cfg.parallelism.set_stages(s).map_err(|e| format!("--stages: {e}"))?;
@@ -146,6 +154,7 @@ fn build_config(args: &Args) -> Result<CubicConfig, String> {
     cfg.model
         .validate(cfg.parallelism, cfg.edge)
         .map_err(|e| format!("invalid config: {e}"))?;
+    cfg.validate_zero().map_err(|e| format!("invalid config: {e}"))?;
     Ok(cfg)
 }
 
@@ -195,6 +204,13 @@ fn cmd_plan(args: &Args) -> Result<(), String> {
     }
     let cfg = build_config(args)?;
     println!("plan for {}", describe(&cfg));
+    if cfg.zero_stage > 0 {
+        println!(
+            "zero stage {}: optimizer state partitioned 1/{} across the replica group",
+            cfg.zero_stage,
+            cfg.parallelism.data_replicas(),
+        );
+    }
     let world = cfg.parallelism.world_size(cfg.edge);
     let rows = cfg.model.batch * cfg.model.seq;
     for rank in 0..world {
@@ -233,10 +249,10 @@ fn cmd_plan_world(world: usize, overlap: bool) -> Result<(), String> {
         if net.overlap { " (deferred grad syncs hidden behind compute)" } else { "" },
     );
     let mut t = Table::new(&[
-        "Kind", "Mesh", "Ranks", "weights/rank", "acts/rank", "comm bytes/rank",
+        "Kind", "Mesh", "Ranks", "weights/rank", "opt/rank", "acts/rank", "comm bytes/rank",
         "exposed comm", "bubble", "virtual step",
     ]);
-    let mut rows_out: Vec<(f64, [String; 9])> = Vec::new();
+    let mut rows_out: Vec<(f64, [String; 10])> = Vec::new();
     for cand in cubic::topology::plan_candidates(world) {
         let (par, edge) = (cand.par, cand.edge);
         // Pipeline rows need one layer per stage (the single-layer paper
@@ -251,11 +267,18 @@ fn cmd_plan_world(world: usize, overlap: bool) -> Result<(), String> {
             continue;
         }
         let w = par.world_size(edge);
+        let r = par.data_replicas() as u64;
         let mut w_max = 0usize;
         let mut a_max = 0usize;
+        let mut o_max = 0u64; // optimizer bytes (grads + Adam moments), replicated
+        let mut oz_max = 0u64; // same under ZeRO stage 1
         for rank in 0..w {
             let env = ParEnv::new(par, edge, rank);
-            w_max = w_max.max(env.phantom_block(&cfg_c).numel() * 4);
+            let block = env.phantom_block(&cfg_c);
+            w_max = w_max.max(block.numel() * 4);
+            let numels = block.param_numels();
+            o_max = o_max.max(cubic::costmodel::optimizer_bytes_per_rank(&numels, r, 0));
+            oz_max = oz_max.max(cubic::costmodel::optimizer_bytes_per_rank(&numels, r, 1));
             let (ar, ac) = env.activation_shape(rows, cfg_c.hidden);
             a_max = a_max.max(ar * ac * 4);
         }
@@ -270,20 +293,29 @@ fn cmd_plan_world(world: usize, overlap: bool) -> Result<(), String> {
         } else {
             "-".to_string()
         };
-        rows_out.push((
-            step,
-            [
-                par.name().to_string(),
-                par.mesh_desc(edge),
-                w.to_string(),
-                fmt_bytes(w_max as u64),
-                fmt_bytes(a_max as u64),
-                fmt_bytes(timing.metrics.total_bytes / w.max(1) as u64),
-                format!("{:.4}s", timing.metrics.exposed_comm_time),
-                bubble,
-                format!("{step:.4}s"),
-            ],
-        ));
+        let cells = [
+            par.name().to_string(),
+            par.mesh_desc(edge),
+            w.to_string(),
+            fmt_bytes(w_max as u64),
+            fmt_bytes(o_max),
+            fmt_bytes(a_max as u64),
+            fmt_bytes(timing.metrics.total_bytes / w.max(1) as u64),
+            format!("{:.4}s", timing.metrics.exposed_comm_time),
+            bubble,
+            format!("{step:.4}s"),
+        ];
+        if matches!(par, Parallelism::Hybrid { .. }) {
+            // The ZeRO stage-1 candidate: identical timing (the grad
+            // reduce-scatter plus the post-step weight all-gather send
+            // exactly the bytes of the all-reduce they replace), 1/r the
+            // optimizer-moment memory.
+            let mut zcells = cells.clone();
+            zcells[0] = "hybrid+zero1".to_string();
+            zcells[4] = fmt_bytes(oz_max);
+            rows_out.push((step, zcells));
+        }
+        rows_out.push((step, cells));
     }
     // Fastest mesh first — the documented ranking.
     rows_out.sort_by(|a, b| a.0.total_cmp(&b.0));

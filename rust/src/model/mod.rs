@@ -1,12 +1,12 @@
 //! The Transformer model, parameterized by parallelism — *once*.
 //!
 //! One set of *global* parameters (deterministically initialized from a
-//! seed) can be sharded onto any of the six execution modes — `Seq`
+//! seed) can be sharded onto any of the seven execution modes — `Seq`
 //! (dense single device), `1-D` (Megatron), `2-D` (Optimus/SUMMA), the
-//! paper's `3-D`, the Tesseract-style `2.5-D`, and the hybrid
-//! data×tensor mesh — and every mode computes the *same function* to
-//! float tolerance, which is what the cross-parallelism parity tests in
-//! `rust/tests/` pin down.
+//! paper's `3-D`, the Tesseract-style `2.5-D`, the hybrid data×tensor
+//! mesh, and the pipeline wrapper — and every mode computes the *same
+//! function* to float tolerance, which is what the cross-parallelism
+//! parity tests in `rust/tests/` pin down.
 //!
 //! Since the `ParallelOps` redesign there is exactly **one** transformer
 //! block ([`block::block_fwd`] / [`block::block_bwd`]), written against
@@ -102,6 +102,30 @@ impl BlockTensors {
                 (None, None) => {}
                 _ => panic!("param/grad ownership mismatch"),
             }
+        }
+        out
+    }
+
+    /// Per-parameter element counts in [`BlockTensors::pairs_mut`] order
+    /// (weights first, then present vectors) — the `local_param_numels`
+    /// input of the `costmodel` optimizer-memory forms, so `plan` and the
+    /// benches size ZeRO partitions from the same enumeration the trainer
+    /// optimizes over.
+    pub fn param_numels(&self) -> Vec<u64> {
+        let mut out = vec![
+            self.w_qkv.numel() as u64,
+            self.w_proj.numel() as u64,
+            self.w_fc1.numel() as u64,
+            self.w_fc2.numel() as u64,
+        ];
+        for t in [
+            &self.ln1_g, &self.ln1_b, &self.b_qkv, &self.b_proj, &self.ln2_g, &self.ln2_b,
+            &self.b_fc1, &self.b_fc2,
+        ]
+        .into_iter()
+        .flatten()
+        {
+            out.push(t.numel() as u64);
         }
         out
     }

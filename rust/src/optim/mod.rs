@@ -6,6 +6,25 @@
 //! a purely local optimizer step keeps the distributed model consistent.
 //! This is asserted end-to-end by the cross-parallelism training parity
 //! test in `rust/tests/`.
+//!
+//! ## Partitioned (ZeRO stage 1/2) mode
+//!
+//! Under `Hybrid(r, inner)` data parallelism the local shards above are
+//! additionally *replicated* `r` times — and so are the optimizer moments,
+//! which for Adam are 2× the parameter bytes. [`Optimizer::new_partitioned`]
+//! removes that redundancy (ZeRO, arXiv:1910.02054): each replica keeps
+//! moments only for its owned `1/r` slice of every parameter, described by a
+//! [`ParamPartition`] map whose chunk boundaries are exactly the
+//! `ceil(n/r)` cuts of [`crate::collectives::flat_chunks`]. The gradient
+//! arriving at [`Optimizer::step`] is then the reduce-scattered chunk (not
+//! the full tensor), the update touches only `param[offset .. offset+len]`,
+//! and the trainer all-gathers the updated slices back
+//! ([`crate::collectives::all_gather_into`]) before the next forward.
+//! Because Adam/SGD updates are elementwise and the reduce-scatter performs
+//! the same chunked ring reduction the all-reduce would, the partitioned
+//! path is **bit-identical** to the replicated one — pinned by the
+//! `partitioned_adam_matches_full_adam_*` tests below and end-to-end by the
+//! hybrid ZeRO parity tests in `rust/tests/model_parity.rs`.
 
 use crate::config::{OptimizerKind, TrainConfig};
 use crate::tensor::Tensor;
@@ -61,9 +80,50 @@ pub fn local_sq_norm(grads: &[&Tensor]) -> f32 {
         .sum()
 }
 
-/// Optimizer state for one ordered parameter list. The parameter order must
-/// be identical every step (it is: `BlockTensors::pairs_mut` is stable).
-pub enum Optimizer {
+/// One parameter's owned span under a ZeRO-style partition over `r`
+/// data-parallel replicas: the flat slice `[offset, offset + len)` of the
+/// full parameter that this replica updates, with moment tensors of length
+/// `padded = ceil(numel / r)` (the last chunk's `len` may fall short of
+/// `padded`; the pad positions carry zero gradient by construction and
+/// never touch the parameter).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParamPartition {
+    /// First owned flat element of the full parameter (`index * padded`).
+    pub offset: usize,
+    /// Number of valid owned elements (`min(padded, numel - offset)`).
+    pub len: usize,
+    /// Chunk length `ceil(numel / replicas)` — the state-tensor size and
+    /// the reduce-scatter chunk size.
+    pub padded: usize,
+}
+
+/// Build the per-parameter partition map for replica `index` of `replicas`.
+///
+/// The chunk boundaries are exactly the `ceil(n/r)` zero-padded cuts of
+/// [`crate::collectives::flat_chunks`] — the deterministic partition
+/// contract that makes the reduce-scattered gradient chunk bitwise equal to
+/// the corresponding slice of the all-reduced gradient.
+pub fn zero_partition(
+    param_shapes: &[Vec<usize>],
+    replicas: usize,
+    index: usize,
+) -> Vec<ParamPartition> {
+    assert!(replicas >= 1 && index < replicas, "replica {index} of {replicas}");
+    param_shapes
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            let padded = n.div_ceil(replicas);
+            let offset = (index * padded).min(n);
+            let len = ((index + 1) * padded).min(n).saturating_sub(offset);
+            ParamPartition { offset, len, padded }
+        })
+        .collect()
+}
+
+/// Which optimizer algorithm an [`Optimizer`] runs, with its state tensors
+/// (full-shape when replicated, `[padded]` chunks when partitioned).
+enum OptState {
     Sgd {
         momentum: f32,
         velocity: Vec<Tensor>,
@@ -79,44 +139,109 @@ pub enum Optimizer {
     },
 }
 
+/// Optimizer state for one ordered parameter list. The parameter order must
+/// be identical every step (it is: `BlockTensors::pairs_mut` is stable).
+///
+/// Two modes share every code path below:
+/// * **replicated** ([`Optimizer::new`]) — state tensors match the
+///   parameter shapes, gradients arrive full-shape;
+/// * **partitioned** ([`Optimizer::new_partitioned`], ZeRO stage 1/2) —
+///   state tensors are `[ceil(n/r)]` chunks, gradients arrive as this
+///   replica's reduce-scattered chunk, and only the owned slice of each
+///   parameter is updated.
+pub struct Optimizer {
+    kind: OptState,
+    partition: Option<Vec<ParamPartition>>,
+}
+
 impl Optimizer {
+    /// Replicated-state optimizer: one state tensor per parameter, shaped
+    /// like the parameter.
     pub fn new(cfg: &TrainConfig, param_shapes: &[Vec<usize>]) -> Optimizer {
+        Optimizer { kind: Self::state_for(cfg, param_shapes), partition: None }
+    }
+
+    /// Partitioned-state optimizer (ZeRO stage 1/2): replica `index` of
+    /// `replicas` keeps moments only for its [`zero_partition`] slice of
+    /// every parameter, shrinking per-rank optimizer-state memory by
+    /// exactly `ceil(n/r)/n` per parameter (`1/r` when `r | n`).
+    pub fn new_partitioned(
+        cfg: &TrainConfig,
+        param_shapes: &[Vec<usize>],
+        replicas: usize,
+        index: usize,
+    ) -> Optimizer {
+        let partition = zero_partition(param_shapes, replicas, index);
+        let chunk_shapes: Vec<Vec<usize>> =
+            partition.iter().map(|p| vec![p.padded]).collect();
+        Optimizer {
+            kind: Self::state_for(cfg, &chunk_shapes),
+            partition: Some(partition),
+        }
+    }
+
+    fn state_for(cfg: &TrainConfig, shapes: &[Vec<usize>]) -> OptState {
         match cfg.optimizer {
-            OptimizerKind::Sgd => Optimizer::Sgd {
+            OptimizerKind::Sgd => OptState::Sgd {
                 momentum: 0.9,
-                velocity: param_shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+                velocity: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
             },
-            OptimizerKind::Adam => Optimizer::Adam {
+            OptimizerKind::Adam => OptState::Adam {
                 beta1: cfg.adam_beta1,
                 beta2: cfg.adam_beta2,
                 eps: 1e-8,
                 weight_decay: cfg.weight_decay,
                 t: 0,
-                m: param_shapes.iter().map(|s| Tensor::zeros(s)).collect(),
-                v: param_shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+                m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+                v: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
             },
         }
     }
 
+    /// The partition map when this optimizer runs in ZeRO mode (`None` for
+    /// replicated state). The trainer uses it to all-gather updated weight
+    /// slices after [`Optimizer::step`].
+    pub fn partition(&self) -> Option<&[ParamPartition]> {
+        self.partition.as_deref()
+    }
+
     /// Apply one update to `pairs` (param, grad) with learning rate `lr`.
+    ///
+    /// Replicated mode: `grad` is full-shape and the whole parameter is
+    /// updated. Partitioned mode: `grad` is this replica's reduce-scattered
+    /// `[padded]` chunk and only `param[offset .. offset+len]` is updated —
+    /// elementwise identical arithmetic, so the two modes agree bitwise on
+    /// the owned slice.
     pub fn step(&mut self, pairs: &mut [(&mut Tensor, &Tensor)], lr: f32) {
-        match self {
-            Optimizer::Sgd { momentum, velocity } => {
+        let partition = self.partition.as_deref();
+        // (owned start, owned len) in the full parameter for pair k; the
+        // grad/state index of element j is `j` in partitioned mode (chunk
+        // coordinates) and `offset + j == j` in replicated mode (offset 0).
+        let span = |k: usize, pd_len: usize| match partition {
+            Some(parts) => {
+                let p = parts[k];
+                (p.offset, p.len)
+            }
+            None => (0usize, pd_len),
+        };
+        match &mut self.kind {
+            OptState::Sgd { momentum, velocity } => {
                 assert_eq!(pairs.len(), velocity.len(), "param count changed");
-                for ((p, g), vel) in pairs.iter_mut().zip(velocity.iter_mut()) {
+                for (k, (p, g)) in pairs.iter_mut().enumerate() {
                     if p.is_phantom() || g.is_phantom() {
                         continue;
                     }
                     let gd = g.data();
-                    let vd = vel.data_mut();
+                    let vd = velocity[k].data_mut();
                     let pd = p.data_mut();
-                    for i in 0..pd.len() {
+                    let (off, len) = span(k, pd.len());
+                    for i in 0..len {
                         vd[i] = *momentum * vd[i] + gd[i];
-                        pd[i] -= lr * vd[i];
+                        pd[off + i] -= lr * vd[i];
                     }
                 }
             }
-            Optimizer::Adam { beta1, beta2, eps, weight_decay, t, m, v } => {
+            OptState::Adam { beta1, beta2, eps, weight_decay, t, m, v } => {
                 assert_eq!(pairs.len(), m.len(), "param count changed");
                 *t += 1;
                 let b1t = 1.0 - (*beta1).powi(*t as i32);
@@ -130,13 +255,14 @@ impl Optimizer {
                     let pd = p.data_mut();
                     // split borrows: v after m
                     let vd = v[k].data_mut();
-                    for i in 0..pd.len() {
-                        let gi = gd[i] + *weight_decay * pd[i];
+                    let (off, len) = span(k, pd.len());
+                    for i in 0..len {
+                        let gi = gd[i] + *weight_decay * pd[off + i];
                         md[i] = *beta1 * md[i] + (1.0 - *beta1) * gi;
                         vd[i] = *beta2 * vd[i] + (1.0 - *beta2) * gi * gi;
                         let mhat = md[i] / b1t;
                         let vhat = vd[i] / b2t;
-                        pd[i] -= lr * mhat / (vhat.sqrt() + *eps);
+                        pd[off + i] -= lr * mhat / (vhat.sqrt() + *eps);
                     }
                 }
             }
@@ -145,33 +271,36 @@ impl Optimizer {
 
     /// The optimizer's state tensors in a stable order (Sgd: velocities;
     /// Adam: all first moments, then all second moments). Checkpointing
-    /// and replica donation serialize exactly this sequence.
+    /// and replica donation serialize exactly this sequence. In partitioned
+    /// mode these are the `[padded]` chunks — each rank checkpoints only
+    /// its own slice, and a restore rebuilds the same shapes from the same
+    /// config, so the round-trip needs no special casing.
     pub fn state_tensors(&self) -> Vec<&Tensor> {
-        match self {
-            Optimizer::Sgd { velocity, .. } => velocity.iter().collect(),
-            Optimizer::Adam { m, v, .. } => m.iter().chain(v.iter()).collect(),
+        match &self.kind {
+            OptState::Sgd { velocity, .. } => velocity.iter().collect(),
+            OptState::Adam { m, v, .. } => m.iter().chain(v.iter()).collect(),
         }
     }
 
     /// Mutable view of [`Optimizer::state_tensors`], same order.
     pub fn state_tensors_mut(&mut self) -> Vec<&mut Tensor> {
-        match self {
-            Optimizer::Sgd { velocity, .. } => velocity.iter_mut().collect(),
-            Optimizer::Adam { m, v, .. } => m.iter_mut().chain(v.iter_mut()).collect(),
+        match &mut self.kind {
+            OptState::Sgd { velocity, .. } => velocity.iter_mut().collect(),
+            OptState::Adam { m, v, .. } => m.iter_mut().chain(v.iter_mut()).collect(),
         }
     }
 
     /// Adam's bias-correction timestep (0 for Sgd, which has none).
     pub fn timestep(&self) -> u64 {
-        match self {
-            Optimizer::Sgd { .. } => 0,
-            Optimizer::Adam { t, .. } => *t,
+        match &self.kind {
+            OptState::Sgd { .. } => 0,
+            OptState::Adam { t, .. } => *t,
         }
     }
 
     /// Restore the bias-correction timestep (no-op for Sgd).
     pub fn set_timestep(&mut self, new_t: u64) {
-        if let Optimizer::Adam { t, .. } = self {
+        if let OptState::Adam { t, .. } = &mut self.kind {
             *t = new_t;
         }
     }
@@ -269,6 +398,131 @@ mod tests {
         assert!(lr_at(&cfg, 109) >= 0.1 - 1e-6);
         // Monotone decay after warmup.
         assert!(lr_at(&cfg, 30) > lr_at(&cfg, 80));
+    }
+
+    /// Test-local mirror of `collectives::flat_chunks` boundaries: chunk
+    /// `k` of `t` under an `r`-way partition, zero-padded to `ceil(n/r)`.
+    fn chunk_of(t: &Tensor, r: usize, k: usize) -> Tensor {
+        let n = t.numel();
+        let padded = n.div_ceil(r);
+        let mut v = vec![0.0f32; padded];
+        let lo = (k * padded).min(n);
+        let hi = ((k + 1) * padded).min(n);
+        v[..hi - lo].copy_from_slice(&t.data()[lo..hi]);
+        Tensor::from_vec(&[padded], v)
+    }
+
+    #[test]
+    fn zero_partition_boundaries() {
+        // Divisible: exact 1/r chunks.
+        let p = zero_partition(&[vec![8], vec![2, 3]], 2, 1);
+        assert_eq!(p[0], ParamPartition { offset: 4, len: 4, padded: 4 });
+        assert_eq!(p[1], ParamPartition { offset: 3, len: 3, padded: 3 });
+        // Padded boundary: n = 7, r = 2 → chunks of 4; the tail owner holds
+        // 3 valid elements and one pad slot.
+        let p = zero_partition(&[vec![7]], 2, 0);
+        assert_eq!(p[0], ParamPartition { offset: 0, len: 4, padded: 4 });
+        let p = zero_partition(&[vec![7]], 2, 1);
+        assert_eq!(p[0], ParamPartition { offset: 4, len: 3, padded: 4 });
+        // More replicas than elements: trailing replicas own empty spans.
+        let p = zero_partition(&[vec![3]], 4, 3);
+        assert_eq!(p[0], ParamPartition { offset: 3, len: 0, padded: 1 });
+        // r = 1 degenerates to the full parameter.
+        let p = zero_partition(&[vec![5]], 1, 0);
+        assert_eq!(p[0], ParamPartition { offset: 0, len: 5, padded: 5 });
+    }
+
+    #[test]
+    fn partitioned_adam_matches_full_adam_bitwise() {
+        // r partitioned optimizers, each updating its owned slice of a
+        // shared parameter set, must reproduce the replicated Adam update
+        // bitwise — across divisible AND padded (n % r != 0) param counts.
+        let cfg = TrainConfig::default();
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for shapes in [
+            vec![vec![8], vec![2, 3]], // 8 % 2 == 0, 6 % 2 == 0
+            vec![vec![7]],             // padded boundary
+            vec![vec![5], vec![3, 3]], // both padded
+        ] {
+            let r = 2;
+            let grads: Vec<Tensor> =
+                shapes.iter().map(|s| Tensor::randn(s, 1.0, &mut rng)).collect();
+            let mut full: Vec<Tensor> = shapes.iter().map(|s| Tensor::ones(s)).collect();
+            let mut part: Vec<Tensor> = shapes.iter().map(|s| Tensor::ones(s)).collect();
+            let mut opt_full = Optimizer::new(&cfg, &shapes);
+            let mut opts: Vec<Optimizer> =
+                (0..r).map(|k| Optimizer::new_partitioned(&cfg, &shapes, r, k)).collect();
+            for _ in 0..4 {
+                let mut pairs: Vec<(&mut Tensor, &Tensor)> =
+                    full.iter_mut().zip(grads.iter()).collect();
+                opt_full.step(&mut pairs, 1e-2);
+                for (k, opt) in opts.iter_mut().enumerate() {
+                    let chunks: Vec<Tensor> =
+                        grads.iter().map(|g| chunk_of(g, r, k)).collect();
+                    let mut pairs: Vec<(&mut Tensor, &Tensor)> =
+                        part.iter_mut().zip(chunks.iter()).collect();
+                    opt.step(&mut pairs, 1e-2);
+                }
+                for (f, p) in full.iter().zip(part.iter()) {
+                    assert_eq!(f.data(), p.data(), "shapes {shapes:?}");
+                }
+            }
+            // Per-rank optimizer-state memory is exactly Σ 2·ceil(n/r) f32s.
+            let want: usize =
+                shapes.iter().map(|s| 2 * s.iter().product::<usize>().div_ceil(r)).sum();
+            for opt in &opts {
+                let got: usize = opt.state_tensors().iter().map(|t| t.numel()).sum();
+                assert_eq!(got, want);
+            }
+        }
+    }
+
+    #[test]
+    fn partitioned_sgd_matches_full_sgd_bitwise() {
+        let cfg = TrainConfig { optimizer: OptimizerKind::Sgd, ..Default::default() };
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let shapes = vec![vec![7], vec![4]];
+        let r = 3;
+        let grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::randn(s, 1.0, &mut rng)).collect();
+        let mut full: Vec<Tensor> = shapes.iter().map(|s| Tensor::ones(s)).collect();
+        let mut part: Vec<Tensor> = shapes.iter().map(|s| Tensor::ones(s)).collect();
+        let mut opt_full = Optimizer::new(&cfg, &shapes);
+        let mut opts: Vec<Optimizer> =
+            (0..r).map(|k| Optimizer::new_partitioned(&cfg, &shapes, r, k)).collect();
+        for _ in 0..3 {
+            let mut pairs: Vec<(&mut Tensor, &Tensor)> =
+                full.iter_mut().zip(grads.iter()).collect();
+            opt_full.step(&mut pairs, 0.1);
+            for (k, opt) in opts.iter_mut().enumerate() {
+                let chunks: Vec<Tensor> = grads.iter().map(|g| chunk_of(g, r, k)).collect();
+                let mut pairs: Vec<(&mut Tensor, &Tensor)> =
+                    part.iter_mut().zip(chunks.iter()).collect();
+                opt.step(&mut pairs, 0.1);
+            }
+        }
+        for (f, p) in full.iter().zip(part.iter()) {
+            assert_eq!(f.data(), p.data());
+        }
+    }
+
+    #[test]
+    fn single_replica_partition_is_a_bitwise_noop() {
+        // r = 1: the "partition" is the whole parameter; the partitioned
+        // optimizer must be indistinguishable from the replicated one.
+        let cfg = TrainConfig::default();
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let g = Tensor::randn(&[2, 3], 1.0, &mut rng);
+        // The r=1 grad "chunk" is the flat view of the same data.
+        let g_flat = Tensor::from_vec(&[6], g.data().to_vec());
+        let mut p1 = Tensor::ones(&[2, 3]);
+        let mut p2 = Tensor::ones(&[2, 3]);
+        let mut o1 = Optimizer::new(&cfg, &[vec![2, 3]]);
+        let mut o2 = Optimizer::new_partitioned(&cfg, &[vec![2, 3]], 1, 0);
+        for _ in 0..6 {
+            o1.step(&mut [(&mut p1, &g)], 1e-2);
+            o2.step(&mut [(&mut p2, &g_flat)], 1e-2);
+        }
+        assert_eq!(p1.data(), p2.data());
     }
 
     #[test]

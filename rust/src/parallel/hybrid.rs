@@ -30,8 +30,22 @@
 //! of stalling the compute timeline. Every inner-mesh collective delegated
 //! below stays blocking — those sit on the critical path (see the overlap
 //! notes in each leaf module).
+//!
+//! **ZeRO (stage 1/2).** With [`Hybrid::with_zero_stage`] the weight-grad
+//! sync becomes a **reduce-scatter**: each replica keeps only its owned
+//! `ceil(n/r)` gradient chunk (the [`crate::collectives::flat_chunks`]
+//! boundaries), feeds it to a partitioned optimizer
+//! ([`crate::optim::Optimizer::new_partitioned`]), and the trainer
+//! all-gathers the updated weight slices back before the next forward.
+//! Since `all_reduce` *is* reduce-scatter + all-gather on those exact chunk
+//! boundaries, the chunk this path returns is bitwise equal to the
+//! corresponding slice of the all-reduced gradient — same ring, same fold
+//! order — which is what makes ZeRO-on numerics bit-identical to ZeRO-off
+//! (pinned in `rust/tests/model_parity.rs`). Communication volume is
+//! unchanged (RS + the trainer's later AG = the all-reduce's two phases);
+//! only the `2/r` optimizer-moment memory and the grad residency shrink.
 
-use crate::collectives::all_reduce;
+use crate::collectives::{all_reduce, flat_chunks, reduce_scatter};
 use crate::comm::Endpoint;
 use crate::dist::{mesh_for_inner, ShardSpec, Stage};
 use crate::parallel::{oned::Ctx1D, threed::Ctx3D, twod::Ctx2D, twofived::Ctx25D, ParallelOps};
@@ -44,6 +58,10 @@ pub struct Hybrid {
     /// The ranks holding this rank's inner position on every replica,
     /// ordered by replica — the gradient all-reduce group.
     replica_group: Vec<usize>,
+    /// ZeRO stage (0 = off): `>= 1` switches [`Hybrid::grad_sync`] from
+    /// all-reduce to reduce-scatter, returning this replica's owned
+    /// gradient chunk for a partitioned optimizer.
+    zero_stage: usize,
     spec: ShardSpec,
 }
 
@@ -88,11 +106,34 @@ impl Hybrid {
         };
         let replica_group = (0..replicas).map(|k| base + k * iw + inner_rank).collect();
         let spec = ShardSpec::hybrid(replicas, mesh_for_inner(inner, edge), rank);
-        Hybrid { inner: inner_ops, replica_group, spec }
+        Hybrid { inner: inner_ops, replica_group, zero_stage: 0, spec }
     }
 
+    /// Enable ZeRO stage 1/2 on the replica axis (builder style; stage 0
+    /// is the replicated default). The caller (the trainer) must pair this
+    /// with a partitioned optimizer and a post-step weight all-gather —
+    /// `grad_sync` then returns `ceil(n/r)` chunks, not full tensors.
+    pub fn with_zero_stage(mut self, stage: usize) -> Hybrid {
+        self.zero_stage = stage;
+        self
+    }
+
+    /// Number of data-parallel replicas `r` (= the replica group size).
     pub fn replicas(&self) -> usize {
         self.replica_group.len()
+    }
+
+    /// The configured ZeRO stage (0 when the replicated all-reduce path is
+    /// active).
+    pub fn zero_stage(&self) -> usize {
+        self.zero_stage
+    }
+
+    /// The ordered gradient-sync group: the ranks holding this rank's
+    /// inner-mesh position on each replica, ordered by replica index — so
+    /// group order *is* ZeRO partition order.
+    pub fn replica_group(&self) -> &[usize] {
+        &self.replica_group
     }
 
     /// Sum a weight/vector gradient over the replica group — the one piece
@@ -107,7 +148,20 @@ impl Hybrid {
     /// finished tickets between layers and the trainer's
     /// [`Endpoint::join_all`] at the optimizer boundary catches the rest.
     /// With `CUBIC_OVERLAP=0` this is exactly the old blocking all-reduce.
+    ///
+    /// Under ZeRO (`zero_stage >= 1`) the all-reduce is cut at its midpoint:
+    /// only the reduce-scatter phase runs, and the returned tensor is this
+    /// replica's fully reduced `ceil(n/r)` chunk — bitwise the slice the
+    /// all-reduce would have produced, at half the sync's wire bytes (the
+    /// other half moves later as the trainer's weight all-gather).
     fn grad_sync(&self, ep: &mut Endpoint, g: &Tensor) -> Tensor {
+        if self.zero_stage >= 1 {
+            let (chunk, _ticket) = ep.defer(|ep| {
+                let contrib = flat_chunks(ep, g, self.replica_group.len());
+                reduce_scatter(ep, &self.replica_group, contrib)
+            });
+            return chunk;
+        }
         let (summed, _ticket) = ep.defer(|ep| all_reduce(ep, &self.replica_group, g));
         summed
     }
@@ -336,6 +390,56 @@ mod tests {
             .collect();
         let y = DistTensor::assemble_activation(&parts, m, n);
         assert!(y.max_abs_diff(&y_ref) < 1e-3, "{}", y.max_abs_diff(&y_ref));
+    }
+
+    #[test]
+    fn zero_grad_sync_chunks_equal_all_reduce_slices_bitwise() {
+        // Run the same linear backward with ZeRO off (all-reduced full
+        // grads) and on (reduce-scattered chunks): each rank's chunk must
+        // be the bitwise slice of the full synced gradient that its replica
+        // index owns — the partition contract the ZeRO loss-parity pin
+        // rests on.
+        let (r, e) = (2usize, 2usize);
+        let world = r * e;
+        let (m, n, k) = (8usize, 16usize, 32usize);
+        let x = randt(&[m, n], 1);
+        let w = randt(&[n, k], 2);
+        let dy = randt(&[m, k], 3);
+        let run = |zero: usize| {
+            let (x2, wc, dy2) = (x.clone(), w.clone(), dy.clone());
+            run_spmd(world, NetModel::zero(), move |rank, ep| {
+                let ops =
+                    Hybrid::for_kind(r, HybridInner::OneD, e, rank).with_zero_stage(zero);
+                let xl = ops.scatter_activation(ep, &x2);
+                let dyl = {
+                    let full = ops.scatter_activation(ep, &dy2);
+                    let (rows, cols) = full.dims2();
+                    full.block(0, (rank % e) * (cols / e), rows, cols / e).compact()
+                };
+                let ws = ops.spec().shard_weight(Stage::Expand, &wc);
+                ops.linear_bwd(ep, &dyl, &xl, &ws, Stage::Expand)
+            })
+        };
+        let full = run(0);
+        let zero = run(1);
+        for rank in 0..world {
+            let replica = rank / e;
+            for (got, want) in [
+                (&zero[rank].1, &full[rank].1),
+                (zero[rank].2.as_ref().unwrap(), full[rank].2.as_ref().unwrap()),
+            ] {
+                let nfull = want.numel();
+                let padded = nfull.div_ceil(r);
+                let lo = (replica * padded).min(nfull);
+                let hi = ((replica + 1) * padded).min(nfull);
+                assert_eq!(got.numel(), padded, "rank {rank}: chunk shape");
+                assert_eq!(
+                    &got.data()[..hi - lo],
+                    &want.data()[lo..hi],
+                    "rank {rank}: chunk must be the owned all-reduce slice"
+                );
+            }
+        }
     }
 
     #[test]

@@ -26,7 +26,10 @@
 //! against `&dyn ParallelOps` only; `crate::model::ParEnv` is the thin
 //! boxed dispatcher that picks the implementation at run time. Every
 //! implementation is verified shard-for-shard against the dense reference
-//! by `rust/tests/model_parity.rs` — one generic test over all six kinds.
+//! by `rust/tests/model_parity.rs` — one generic test over all seven kinds.
+//! The whole-repo view — layer map, per-mesh memory/comm formulas, the
+//! determinism contract — lives in `ARCHITECTURE.md` at the repo root;
+//! this module doc stays the authority on the leaf-writing workflow.
 //!
 //! ## Adding a new parallelism
 //!
@@ -298,6 +301,7 @@ pub trait ParallelOps: Send + Sync {
 
     // --- provided: layout plumbing derived from the spec -------------
 
+    /// The parallelism point this context implements.
     fn kind(&self) -> Parallelism {
         self.spec().kind()
     }

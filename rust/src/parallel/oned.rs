@@ -30,12 +30,15 @@ use crate::tensor::Tensor;
 /// Per-rank context: the ordered tensor-parallel group and this rank's
 /// position in it.
 pub struct Ctx1D {
+    /// Global ranks of the tensor-parallel line, in order.
     pub group: Vec<usize>,
+    /// This rank's position in `group`.
     pub pos: usize,
     spec: ShardSpec,
 }
 
 impl Ctx1D {
+    /// Context for `rank` of a stand-alone `world`-rank line (base 0).
     pub fn new(world: usize, rank: usize) -> Self {
         Self::with_base(world, rank, 0)
     }
@@ -53,6 +56,7 @@ impl Ctx1D {
         }
     }
 
+    /// Ranks in the line.
     pub fn world(&self) -> usize {
         self.group.len()
     }

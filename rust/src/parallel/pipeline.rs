@@ -147,18 +147,22 @@ impl Pipeline {
         }
     }
 
+    /// This rank's stage index.
     pub fn stage(&self) -> usize {
         self.stage
     }
 
+    /// Total pipeline stages `s`.
     pub fn stages(&self) -> usize {
         self.stages
     }
 
+    /// Micro-batches `m` streamed through the pipeline per step.
     pub fn micro_batches(&self) -> usize {
         self.micro_batches
     }
 
+    /// Ranks in one stage group (the inner mesh's world).
     pub fn inner_world(&self) -> usize {
         self.inner_world
     }

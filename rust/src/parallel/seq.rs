@@ -21,6 +21,7 @@ pub struct Seq {
 }
 
 impl Seq {
+    /// The single-device context (rank 0 of a one-rank world).
     pub fn new() -> Seq {
         Seq { spec: ShardSpec::seq() }
     }

@@ -43,18 +43,23 @@ use crate::topology::{Coord, Cube};
 /// functions below take explicit `dirs` and ignore `d0` — they are the
 /// paper's raw Algorithms 1–8; `d0` only anchors the [`ParallelOps`] view.
 pub struct Ctx3D {
+    /// The `p³` cube geometry.
     pub cube: Cube,
+    /// This rank's cube coordinate.
     pub coord: Coord,
+    /// The block-entry direction triple layers are staged under.
     pub d0: Dirs,
     base: usize,
     spec: ShardSpec,
 }
 
 impl Ctx3D {
+    /// Context for `rank` under the canonical direction triple (base 0).
     pub fn new(cube: Cube, rank: usize) -> Self {
         Self::with_dirs(cube, rank, Dirs::canonical())
     }
 
+    /// Context for `rank` under an explicit direction triple (base 0).
     pub fn with_dirs(cube: Cube, rank: usize, d0: Dirs) -> Self {
         Self::with_dirs_base(cube, rank, d0, 0)
     }
@@ -70,6 +75,7 @@ impl Ctx3D {
         Ctx3D { cube, coord, d0, base, spec }
     }
 
+    /// The cube edge `p`.
     pub fn p(&self) -> usize {
         self.cube.edge()
     }

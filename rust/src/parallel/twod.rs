@@ -35,14 +35,18 @@ use crate::topology::Mesh;
 /// into the global rank space (0 for the stand-alone 2-D leaf; the 2.5-D
 /// Tesseract and hybrid wrappers embed grids at non-zero bases).
 pub struct Ctx2D {
+    /// The `q × q` mesh geometry.
     pub mesh: Mesh,
+    /// This rank's mesh row.
     pub row: usize,
+    /// This rank's mesh column.
     pub col: usize,
     base: usize,
     spec: ShardSpec,
 }
 
 impl Ctx2D {
+    /// Context for `rank` of a stand-alone grid (base 0).
     pub fn new(mesh: Mesh, rank: usize) -> Self {
         Self::with_base(mesh, rank, 0)
     }
@@ -56,6 +60,7 @@ impl Ctx2D {
         Ctx2D { mesh, row, col, base, spec }
     }
 
+    /// The mesh edge `q`.
     pub fn q(&self) -> usize {
         self.mesh.edge()
     }

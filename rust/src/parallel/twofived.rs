@@ -56,6 +56,7 @@ pub struct Ctx25D {
 }
 
 impl Ctx25D {
+    /// Context for `rank` of a stand-alone `p²·depth` Tesseract (base 0).
     pub fn new(p: usize, depth: usize, rank: usize) -> Self {
         Self::with_base(p, depth, rank, 0)
     }
@@ -74,10 +75,12 @@ impl Ctx25D {
         Ctx25D { grid, layer, depth, grid_rank, base, spec }
     }
 
+    /// The SUMMA grid edge `p`.
     pub fn p(&self) -> usize {
         self.grid.q()
     }
 
+    /// Stacked grid layers `d`.
     pub fn depth(&self) -> usize {
         self.depth
     }

@@ -378,6 +378,19 @@ impl Parallelism {
         }
     }
 
+    /// Data-parallel replica count of the *top-level* mesh: `r` for
+    /// [`Parallelism::Hybrid`], 1 for every other kind — the divisor ZeRO
+    /// (`[parallel] zero_stage` / `--zero-stage`) partitions optimizer
+    /// state by. Pipeline-wrapped hybrids report 1 here: their stage-local
+    /// replica groups are not ZeRO-partitionable yet (config rejects the
+    /// combination).
+    pub fn data_replicas(&self) -> usize {
+        match self {
+            Parallelism::Hybrid { replicas, .. } => *replicas,
+            _ => 1,
+        }
+    }
+
     /// Override the hybrid replica count — shared by `--replicas` and the
     /// `[parallel] replicas` TOML key.
     pub fn set_replicas(&mut self, r: usize) -> Result<(), String> {

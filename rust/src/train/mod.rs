@@ -10,12 +10,14 @@
 
 pub mod checkpoint;
 
+use crate::collectives::all_gather_into;
 use crate::comm::fault::{catch_comm, CommError};
 use crate::comm::Endpoint;
 use crate::config::{CubicConfig, ModelConfig};
 use crate::model::{core_bwd, core_fwd, BlockTensors, ParEnv};
 use crate::ops;
 use crate::optim::{lr_at, Optimizer};
+use crate::parallel::hybrid::Hybrid;
 use crate::parallel::pipeline::{pipeline_core_step, Pipeline};
 use crate::rng::{Xoshiro256, Zipf};
 use crate::tensor::Tensor;
@@ -222,6 +224,11 @@ pub struct TrainerRank {
     pub head: Head,
     opt_core: Optimizer,
     opt_emb: Optimizer,
+    /// ZeRO (stage ≥ 1) only: this rank's replica group, ordered by replica
+    /// index — the group the updated weight slices are all-gathered over
+    /// after each optimizer step. `None` when ZeRO is off (replicated
+    /// optimizer, no post-step gather).
+    zero_group: Option<Vec<usize>>,
     corpus: MarkovCorpus,
     cfg: CubicConfig,
 }
@@ -257,7 +264,25 @@ const DONATE_TAG: u64 = 0xD0A7_0000_0000_0000;
 
 impl TrainerRank {
     pub fn new(cfg: &CubicConfig, rank: usize) -> TrainerRank {
-        let env = ParEnv::new(cfg.parallelism, cfg.edge, rank);
+        // ZeRO (stage 1/2): swap the hybrid leaf's grad all-reduce for
+        // reduce-scatter and remember the replica group for the post-step
+        // weight all-gather. Config validation guarantees zero_stage > 0
+        // only appears with top-level Hybrid parallelism.
+        let zero = (cfg.zero_stage >= 1).then(|| {
+            let Parallelism::Hybrid { replicas, inner } = cfg.parallelism else {
+                panic!("zero_stage {} requires Hybrid parallelism", cfg.zero_stage)
+            };
+            let iw = inner.as_parallelism().world_size(cfg.edge);
+            let group: Vec<usize> = (0..replicas).map(|k| k * iw + rank % iw).collect();
+            (replicas, rank / iw, group, inner)
+        });
+        let env = match &zero {
+            Some((replicas, _, _, inner)) => ParEnv::from_ops(Box::new(
+                Hybrid::for_kind(*replicas, *inner, cfg.edge, rank)
+                    .with_zero_stage(cfg.zero_stage),
+            )),
+            None => ParEnv::new(cfg.parallelism, cfg.edge, rank),
+        };
         let dense = crate::model::init_dense_blocks(&cfg.model, cfg.train.seed);
         // Pipelined ranks hold only their stage's contiguous layer slice
         // (sharded by the inner mesh); everyone else holds every layer.
@@ -287,7 +312,12 @@ impl TrainerRank {
                 }
             }
         }
-        let opt_core = Optimizer::new(&cfg.train, &shapes);
+        let opt_core = match &zero {
+            Some((replicas, replica, _, _)) => {
+                Optimizer::new_partitioned(&cfg.train, &shapes, *replicas, *replica)
+            }
+            None => Optimizer::new(&cfg.train, &shapes),
+        };
         let emb_shapes = vec![
             emb.table.shape().to_vec(),
             emb.pos.shape().to_vec(),
@@ -306,6 +336,7 @@ impl TrainerRank {
             head,
             opt_core,
             opt_emb,
+            zero_group: zero.map(|(_, _, group, _)| group),
             corpus,
             cfg: cfg.clone(),
         }
@@ -346,7 +377,7 @@ impl TrainerRank {
         // gradients themselves are already valid — tickets are clock-only).
         ep.join_all();
 
-        self.apply_update(step, &block_grads, &d_table, &d_pos, &head_grads);
+        self.apply_update(ep, step, &block_grads, &d_table, &d_pos, &head_grads);
         loss
     }
 
@@ -381,13 +412,22 @@ impl TrainerRank {
         let (d_table, d_pos) = self.emb.bwd(&tokens, m.seq, &out.dx_full);
 
         ep.join_all();
-        self.apply_update(step, &out.grads, &d_table, &d_pos, &head_grads);
+        self.apply_update(ep, step, &out.grads, &d_table, &d_pos, &head_grads);
         loss
     }
 
     /// The optimizer tail shared by the plain and pipelined steps.
+    ///
+    /// Under ZeRO (`zero_group` set) the core gradients arriving here are
+    /// this replica's reduce-scattered `ceil(n/r)` chunks, the optimizer
+    /// updates only the owned weight slice, and the updated slices are
+    /// all-gathered back over the replica group as deferred collectives —
+    /// the weights are bitwise complete immediately (data moves eagerly),
+    /// while the gather's clock cost overlaps the next step's compute and
+    /// is retired by its `join_all`.
     fn apply_update(
         &mut self,
+        ep: &mut Endpoint,
         step: usize,
         block_grads: &[BlockTensors],
         d_table: &Tensor,
@@ -400,6 +440,25 @@ impl TrainerRank {
             pairs.extend(b.pairs_mut(g));
         }
         self.opt_core.step(&mut pairs, lr);
+        if let Some(group) = &self.zero_group {
+            // Rebuild each full parameter from the per-replica updated
+            // slices. Group order is replica order is partition order, so
+            // replica j's chunk lands at flat offset j·padded — exactly the
+            // span its optimizer updated. Our own chunk round-trips as a
+            // bitwise copy.
+            let parts = self.opt_core.partition().expect("ZeRO trainer has a partitioned optimizer");
+            for (k, (p, _)) in pairs.iter_mut().enumerate() {
+                if p.is_phantom() {
+                    continue;
+                }
+                let part = parts[k];
+                let mut mine = vec![0.0f32; part.padded];
+                mine[..part.len]
+                    .copy_from_slice(&p.data()[part.offset..part.offset + part.len]);
+                let mine = Tensor::from_vec(&[part.padded], mine);
+                let _ = ep.defer(|ep| all_gather_into(ep, group, mine, p.data_mut()));
+            }
+        }
         let mut bpairs: Vec<(&mut Tensor, &Tensor)> = vec![
             (&mut self.emb.table, d_table),
             (&mut self.emb.pos, d_pos),

@@ -131,6 +131,38 @@ fn hybrid_replica_donation_recovers_without_checkpoints() {
     assert_eq!(rec.recoveries, 1);
 }
 
+/// Under ZeRO the surviving replica does NOT hold the dead rank's Adam
+/// moment partition, so replica donation is off the table: the engine
+/// must fall back to the checkpoint Restore path — and still land on a
+/// loss curve bit-identical to the fault-free ZeRO run (which is itself
+/// bit-identical to ZeRO-off, pinned in `model_parity`).
+#[test]
+fn zero_crash_recovers_from_checkpoint_not_donation() {
+    let par = Parallelism::Hybrid { replicas: 2, inner: HybridInner::TwoD };
+    let mut cfg = base_cfg(par, 2);
+    cfg.zero_stage = 1;
+    let world = par.world_size(2);
+    let clean = run_training(&cfg, net(true)).unwrap();
+
+    let mut faulty = cfg.clone();
+    faulty.faults.seed = 5;
+    // Same crash point as the donation test: rank 1 entering step 3, one
+    // step past the step-2 checkpoint boundary.
+    faulty.faults.crash = Some((1, 3));
+    let dir = tmp_dir("zero-crash");
+    let rec = run_training_with_checkpoint(&faulty, net(true), &dir).unwrap();
+    assert_eq!(rec.losses, clean.losses, "ZeRO restore must replay bit-identically");
+    assert_eq!(rec.recoveries, 1);
+    assert!(
+        rec.metrics.virtual_time > clean.metrics.virtual_time,
+        "checkpoint replay must cost virtual time (donation would too, but \
+         this pins that SOME recovery work happened)"
+    );
+    // The checkpoint dir holds a file per rank — restore was possible.
+    assert_eq!(read_rank_files(&dir, world).len(), world);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Without a checkpoint dir or a replica, a crash falls back to a fresh
 /// restart from step 0 — and still converges to the identical curve.
 #[test]
